@@ -1,0 +1,20 @@
+//! Multi-adapter serving (paper §6.2): router + dynamic batcher + engine
+//! serving requests across many S²FT adapters with adapter-affinity
+//! batching and scatter_add switches.
+//!
+//! Run: `cargo run --release --example multi_adapter_serving`
+//! Env: ADAPTERS (default 6), REQUESTS (default 48), MAX_BATCH (default 8)
+
+use anyhow::Result;
+
+fn env(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let adapters = env("ADAPTERS", 6);
+    let requests = env("REQUESTS", 48);
+    let max_batch = env("MAX_BATCH", 8);
+    println!("multi-adapter serving demo: {adapters} adapters, {requests} requests, max batch {max_batch}");
+    repro::serve::demo("artifacts", "small", None, adapters, requests, max_batch)
+}

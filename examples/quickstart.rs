@@ -1,0 +1,92 @@
+//! Quickstart: the full S²FT lifecycle end-to-end on the `small` model.
+//!
+//!   1. pre-train the base LM on the synthetic corpus (full FT),
+//!   2. fine-tune with S²FT on the arithmetic suite (partial backprop),
+//!   3. merge, extract the adapter, evaluate ID + OOD accuracy,
+//!   4. demonstrate fuse/unfuse via scatter_add.
+//!
+//! Run: `cargo run --release --example quickstart` (artifacts required).
+//! Set QUICKSTART_STEPS to shrink/grow the budget.
+
+use anyhow::Result;
+
+use repro::adapter::S2ftAdapter;
+use repro::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
+use repro::experiments::common::{evaluate_suite, finetune, pretrain};
+use repro::runtime::Runtime;
+use repro::train::GenModel;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("QUICKSTART_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. pre-train
+    println!("\n[1/4] pre-training `small` for {steps} steps on the synthetic corpus");
+    let base = pretrain(&rt, "small", steps, 42, true)?;
+
+    // 2. S²FT fine-tune
+    println!("\n[2/4] S²FT fine-tuning on the arithmetic mixture ({steps} steps)");
+    let examples = finetune_examples("arithmetic", 2000, 7);
+    let trainer = finetune(&rt, "small", "s2ft", &base, &examples, steps, 11)?;
+    println!(
+        "  tail loss {:.4}, {:.1} ms/step, trainable state only {:.2} MB of {:.2} MB",
+        trainer.metrics.tail_loss(10),
+        trainer.metrics.ms_per_step(),
+        trainer.opt_bytes() as f64 / 2e6, // m+v => /2 for one copy
+        trainer.state_bytes() as f64 / 1e6,
+    );
+
+    // 3. merge + evaluate
+    println!("\n[3/4] merging and evaluating");
+    let merged = trainer.merged_params(&rt)?;
+    let model = GenModel::new(&rt, "small", merged.clone())?;
+    let (rows, avg) = evaluate_suite(&model, &ARITHMETIC, 16, 1)?;
+    for (name, acc) in &rows {
+        println!("  {name:>10}: {acc:5.1}%");
+    }
+    println!("  arithmetic avg: {avg:.1}%");
+    let (_, cs_avg) = evaluate_suite(&model, &COMMONSENSE, 16, 1)?;
+    println!("  commonsense (far-OOD retention): {cs_avg:.1}%");
+
+    // 4. adapter extraction + switch
+    println!("\n[4/4] adapter lifecycle");
+    let mm = rt.artifacts.model("small")?;
+    let method = mm.method("s2ft")?;
+    let adapter = S2ftAdapter::extract(mm, method, &trainer.perms, &base, &merged)?;
+    println!(
+        "  extracted adapter: {:.1} KB (vs {:.1} MB full model) across {} layers",
+        adapter.bytes() as f64 / 1e3,
+        mm.param_count as f64 * 4.0 / 1e6,
+        adapter.layers.len()
+    );
+    let mut live = base.clone();
+    let t0 = std::time::Instant::now();
+    adapter.apply(&mut live)?;
+    let fuse_us = t0.elapsed().as_micros();
+    let t1 = std::time::Instant::now();
+    adapter.remove(&mut live)?;
+    println!(
+        "  fuse {} µs / unfuse {} µs (scatter_add over selected rows only)",
+        fuse_us,
+        t1.elapsed().as_micros()
+    );
+    for (k, v) in &live {
+        let a = v.as_f32()?;
+        let b = base[k].as_f32()?;
+        let max_diff = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        // float add-then-subtract is not bitwise identity; 1e-6 abs is
+        // exact restoration at f32 precision for these magnitudes
+        assert!(max_diff < 1e-6, "unfuse drifted on {k}: {max_diff}");
+    }
+    println!("  base weights restored after unfuse (f32-exact) ✓");
+    println!("\nquickstart complete.");
+    Ok(())
+}

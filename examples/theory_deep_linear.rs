@@ -1,0 +1,51 @@
+//! Deep-linear-network theory playground (paper §4 / App. F).
+//!
+//! Sweeps the fine-tuning-task shift and the LoRA rank / S²FT sparsity to
+//! show where the generalization separation of Theorem 4.2 opens up, and
+//! verifies both bounds numerically on every instance.
+//!
+//! Run: `cargo run --release --example theory_deep_linear`
+
+use repro::theory::{compare, Config};
+
+fn main() {
+    let dims = vec![24, 64, 64, 48];
+    println!("deep linear net {dims:?}, fine-tuning layer 2; OOD = pre-training task");
+    println!(
+        "{:>6} {:>4} {:>10} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "shift", "r", "E_od(pre)", "od(LoRA)", "od(S2FT)", "LoRA-bound", "F.15-bound", "ok?"
+    );
+    let mut checks = 0;
+    let mut held = 0;
+    for shift in [0.5f32, 1.0, 2.0, 4.0] {
+        for r in [1usize, 2, 4] {
+            let cfg = Config {
+                dims: dims.clone(),
+                layer: 2,
+                task_shift: shift,
+                ood_noise: 0.3,
+                shift_rank: 8,
+                seed: 3,
+            };
+            let rep = compare(&cfg, r);
+            let f15 = rep.od_pre + 3.0 * rep.proj_shift_sq;
+            let ok = rep.od_s2ft <= f15 * 1.15 && rep.od_lora >= 0.3 * rep.label_shift_sq;
+            checks += 1;
+            held += ok as usize;
+            println!(
+                "{:>6.1} {:>4} {:>10.2} {:>10.2} {:>10.2} {:>12.2} {:>12.2} {:>8}",
+                shift,
+                r,
+                rep.od_pre,
+                rep.od_lora,
+                rep.od_s2ft,
+                rep.label_shift_sq,
+                f15,
+                if ok { "✓" } else { "✗" }
+            );
+        }
+    }
+    println!("\nbounds held on {held}/{checks} instances");
+    println!("reading: LoRA's OOD risk tracks the label shift (forgetting);");
+    println!("S²FT's stays pinned near E_od(pre) + the small projected-shift term.");
+}

@@ -1,0 +1,334 @@
+"""AOT pipeline: lower every (model, method) step to HLO text + meta.json.
+
+Interchange format is HLO *text* (NOT ``lowered.compiler_ir("hlo")`` protos
+or ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the rust ``xla``
+0.1.6 crate links) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all under ``artifacts/``), per model ``M`` with default batch
+``BxT`` and method ``m``:
+
+  init_M.hlo.txt               (seed:i32) -> base params
+  fwd_M_BxT.hlo.txt            (base..., tokens) -> logits
+  eval_M_BxT.hlo.txt           (base..., tokens, targets, mask) -> (loss, ncorrect)
+  prepare_M_m_BxT.hlo.txt      (base..., seed, calib tok/tgt/mask) -> (trn..., frz..., perms...)
+  train_M_m_BxT.hlo.txt        (trn..., frz..., m..., v..., step, tok, tgt, mask, aux...)
+                               -> (trn..., m..., v..., loss)
+  merge_M_m.hlo.txt            (trn..., frz..., perms...) -> base params
+
+``meta.json`` records every artifact's exact input/output tensor order,
+shapes and dtypes plus the per-method layouts, so the rust coordinator is
+fully self-describing (python never runs on the request path).
+
+Usage: python -m compile.aot --out ../artifacts [--models tiny,small]
+       [--methods s2ft,lora] [--fig5] [--sweeps BxT,BxT]
+"""
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import MODELS, ModelConfig, MethodConfig, default_methods, config_dict
+from . import model as M
+from .permute import coupled_structures
+
+F32, I32 = "f32", "i32"
+
+# Default (batch, seq) per model; seq is capped by cfg.seq_len (RoPE tables).
+DEFAULT_BATCH = {"tiny": (2, 32), "small": (8, 64), "base": (4, 128)}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the default printer elides big
+    # constant tensors (RoPE tables, causal masks) as "...", which the text
+    # parser then reads back as garbage — silently corrupting numerics.
+    return comp.as_hlo_text(True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def named(d: Dict[str, tuple], dtype=jnp.float32) -> List[Tuple[str, object]]:
+    return [(k, spec(v, dtype)) for k, v in sorted(d.items())]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.meta: Dict[str, dict] = {"models": {}, "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs: List[Tuple[str, object]],
+             out_names: List[str]):
+        """Lower fn(*specs) and write HLO text + record the interface."""
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        # keep_unused=True: the recorded interface must match the compiled
+        # parameter list exactly (e.g. calib inputs are unused under S2FT-R
+        # and would otherwise be DCE'd, shifting every later argument).
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *[s for _, s in in_specs])
+        flat, _ = jax.tree_util.tree_flatten(outs)
+        assert len(flat) == len(out_names), (name, len(flat), len(out_names))
+        self.meta["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                [n, list(s.shape), _dt(s.dtype)] for n, s in in_specs
+            ],
+            "outputs": [
+                [n, list(s.shape), _dt(s.dtype)] for n, s in zip(out_names, flat)
+            ],
+        }
+        print(f"  wrote {name}.hlo.txt ({len(text)//1024}KB, "
+              f"{len(in_specs)} in / {len(out_names)} out)")
+
+    def save_meta(self):
+        path = os.path.join(self.out_dir, "meta.json")
+        with open(path, "w") as f:
+            json.dump(self.meta, f, indent=1)
+        print(f"  wrote meta.json ({os.path.getsize(path)//1024}KB)")
+
+
+def _dt(dtype) -> str:
+    s = jnp.dtype(dtype).name
+    return {"float32": F32, "int32": I32}[s]
+
+
+def emit_model(em: Emitter, cfg: ModelConfig, methods: Dict[str, MethodConfig],
+               batches: List[Tuple[int, int]]):
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.2f}M params, "
+          f"batches {batches}, methods {list(methods)}")
+    base_shapes = M.param_shapes(cfg)
+    base_in = named(base_shapes)
+    base_names = [n for n, _ in base_in]
+
+    mm: dict = {
+        **config_dict(cfg, methods),
+        "batches": [list(b) for b in batches],
+        "base_params": [[k, list(v)] for k, v in sorted(base_shapes.items())],
+        "coupled": coupled_structures(cfg.n_layers),
+    }
+    em.meta["models"][cfg.name] = mm
+
+    # init
+    em.emit(
+        f"init_{cfg.name}",
+        lambda seed: tuple(
+            M.init_params(cfg, jax.random.fold_in(jax.random.PRNGKey(7),
+                                                  jnp.asarray(seed, jnp.uint32)))[k]
+            for k in base_names
+        ),
+        [("seed", spec((), jnp.int32))],
+        base_names,
+    )
+
+    for (B, T) in batches:
+        bt = f"{B}x{T}"
+        tok = ("tokens", spec((B, T), jnp.int32))
+        tgt = ("targets", spec((B, T), jnp.int32))
+        msk = ("loss_mask", spec((B, T), jnp.float32))
+
+        def fwd_fn(*args):
+            base = dict(zip(base_names, args[: len(base_names)]))
+            return (M.forward_base(cfg, base, args[-1]),)
+
+        em.emit(f"fwd_{cfg.name}_{bt}", fwd_fn, base_in + [tok], ["logits"])
+
+        def eval_fn(*args):
+            base = dict(zip(base_names, args[: len(base_names)]))
+            tokens, targets, mask = args[-3], args[-2], args[-1]
+            logits = M.forward_base(cfg, base, tokens)
+            loss = M.ce_loss(logits, targets, mask)
+            pred = jnp.argmax(logits, axis=-1)
+            ncorrect = ((pred == targets) * mask).sum()
+            return (loss, ncorrect)
+
+        em.emit(f"eval_{cfg.name}_{bt}", eval_fn, base_in + [tok, tgt, msk],
+                ["loss", "ncorrect"])
+
+    for mname, mcfg in methods.items():
+        emit_method(em, cfg, mname, mcfg, batches, base_in, base_names)
+
+
+def emit_method(em: Emitter, cfg: ModelConfig, mname: str, mcfg: MethodConfig,
+                batches, base_in, base_names):
+    trn_s, frz_s, perm_s, aux_s = M.method_layout(cfg, mcfg)
+    opt_s = M.opt_state_shapes(cfg, mcfg)
+    trn_in, frz_in = named(trn_s), named(frz_s)
+    perm_in = named(perm_s, jnp.int32)
+    trn_names = [n for n, _ in trn_in]
+    frz_names = [n for n, _ in frz_in]
+    perm_names = [n for n, _ in perm_in]
+    opt_in = named(opt_s)
+    opt_names = [n for n, _ in opt_in]
+    aux_in = [
+        (k, spec(v, jnp.float32)) for k, v in sorted(aux_s.items())
+    ]
+    aux_names = [n for n, _ in aux_in]
+
+    em.meta["models"][cfg.name]["methods"][mname].update({
+        "trainable": [[k, list(v)] for k, v in sorted(trn_s.items())],
+        "frozen": [[k, list(v)] for k, v in sorted(frz_s.items())],
+        "perms": [[k, list(v)] for k, v in sorted(perm_s.items())],
+        "aux": [[k, list(v)] for k, v in sorted(aux_s.items())],
+        "opt": [[k, list(v)] for k, v in sorted(opt_s.items())],
+        "trainable_params": sum(
+            int(jnp.prod(jnp.array(v or (1,)))) for v in trn_s.values()
+        ),
+    })
+
+    # merge (batch-independent)
+    def merge_fn(*args):
+        i = 0
+        trn = dict(zip(trn_names, args[i : i + len(trn_names)])); i += len(trn_names)
+        frz = dict(zip(frz_names, args[i : i + len(frz_names)])); i += len(frz_names)
+        perms = dict(zip(perm_names, args[i : i + len(perm_names)]))
+        merged = M.merge_method(cfg, mcfg, trn, frz, perms)
+        return tuple(merged[k] for k in base_names)
+
+    em.emit(f"merge_{cfg.name}_{mname}", merge_fn, trn_in + frz_in + perm_in,
+            base_names)
+
+    for (B, T) in batches:
+        bt = f"{B}x{T}"
+        tok = ("tokens", spec((B, T), jnp.int32))
+        tgt = ("targets", spec((B, T), jnp.int32))
+        msk = ("loss_mask", spec((B, T), jnp.float32))
+
+        def prep_fn(*args):
+            base = dict(zip(base_names, args[: len(base_names)]))
+            seed, tokens, targets, mask = args[-4:]
+            trn, frz, perms = M.prepare_method(cfg, mcfg, base, seed, tokens,
+                                               targets, mask)
+            return tuple(
+                [trn[k] for k in trn_names]
+                + [frz[k] for k in frz_names]
+                + [perms[k] for k in perm_names]
+            )
+
+        em.emit(
+            f"prepare_{cfg.name}_{mname}_{bt}",
+            prep_fn,
+            base_in + [("seed", spec((), jnp.int32)), tok, tgt, msk],
+            trn_names + frz_names + perm_names,
+        )
+
+        def train_fn(*args):
+            i = 0
+            trn = dict(zip(trn_names, args[i : i + len(trn_names)])); i += len(trn_names)
+            frz = dict(zip(frz_names, args[i : i + len(frz_names)])); i += len(frz_names)
+            om = dict(zip(opt_names, args[i : i + len(opt_names)])); i += len(opt_names)
+            ov = dict(zip(opt_names, args[i : i + len(opt_names)])); i += len(opt_names)
+            step, tokens, targets, mask = args[i : i + 4]; i += 4
+            aux = dict(zip(aux_names, args[i:]))
+            nt, nm, nv, loss = M.train_step(cfg, mcfg, trn, frz, om, ov, step,
+                                            tokens, targets, mask, aux)
+            return tuple(
+                [nt[k] for k in trn_names]
+                + [nm[k] for k in opt_names]
+                + [nv[k] for k in opt_names]
+                + [loss]
+            )
+
+        em.emit(
+            f"train_{cfg.name}_{mname}_{bt}",
+            train_fn,
+            trn_in + frz_in
+            + [(f"m.{n}", s) for n, s in opt_in]
+            + [(f"v.{n}", s) for n, s in opt_in]
+            + [("step", spec((), jnp.float32)), tok, tgt, msk]
+            + aux_in,
+            [f"new.{n}" for n in trn_names]
+            + [f"new_m.{n}" for n in opt_names]
+            + [f"new_v.{n}" for n in opt_names]
+            + ["loss"],
+        )
+
+
+def experiment_extras(cfg: ModelConfig) -> Dict[str, MethodConfig]:
+    """Extra method variants for the paper's sweeps (model 'small'):
+
+    * fig2 — SpFT/LoRA at trainable ratios p ~ {10%, 1%, 0.1%}
+    * fig4 — S2FT with the whole budget on a single projection type
+    * tab4 — S2FT selection strategies {W,A,S,G} x {Large,Small}
+    """
+    d, k = cfg.d_model, cfg.d_ff
+    linear_params = cfg.n_layers * (4 * d * d + 3 * d * k)
+    per_rank = cfg.n_layers * (2 * d + k + d)  # lora params per unit rank on (wo, wd)
+    out: Dict[str, MethodConfig] = {}
+    # fig2 ratio sweep
+    for tag, ratio in (("p10", 0.10), ("p1", 0.01), ("p01", 0.001)):
+        out[f"spft-{tag}"] = MethodConfig("spft", spft_ratio=ratio)
+        r = max(1, round(ratio * linear_params / per_rank))
+        out[f"lora-{tag}"] = MethodConfig("lora", rank=r)
+    # fig4 single-component budgets (parameter-matched to the default s2ft)
+    budget = 16 * per_rank / cfg.n_layers  # params per layer (lora r=16 equiv)
+    comp_params = {"wq": d * d, "wk": d * d, "wv": d * d, "wo": d * d,
+                   "wu": d * k, "wg": d * k, "wd": k * d}
+    for proj, size in comp_params.items():
+        out[f"s2ft-{proj[1]}only"] = MethodConfig(
+            "s2ft", s2ft_fractions={proj: round(budget / size, 4)})
+    # tab4 selection strategies
+    frac = default_methods(cfg)["s2ft"].s2ft_fractions
+    for strat in "wasg":
+        for small in (True, False):
+            tag = f"s2ft-{strat}{'S' if small else 'L'}"
+            out[tag] = MethodConfig("s2ft", s2ft_fractions=frac, selection=strat,
+                                    select_small=small)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small,base")
+    ap.add_argument("--methods", default=None,
+                    help="comma list; default = all for tiny/small, core for base")
+    ap.add_argument("--sweeps", default=None,
+                    help="extra BxT batches, e.g. 1x128,4x256 (applied to all models)")
+    ap.add_argument("--fig5", action="store_true",
+                    help="emit the Fig5 efficiency sweep for model 'base'")
+    ap.add_argument("--extras", action="store_true",
+                    help="emit the fig2/fig4/tab4 method variants for model 'small'")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    core = ["fullft", "lora", "s2ft"]
+    for mn in args.models.split(","):
+        cfg = MODELS[mn]
+        methods = default_methods(cfg)
+        if args.methods:
+            methods = {k: v for k, v in methods.items() if k in args.methods.split(",")}
+        elif mn == "base":
+            methods = {k: v for k, v in methods.items() if k in core}
+        if args.extras and mn == "small":
+            methods.update(experiment_extras(cfg))
+        batches = [DEFAULT_BATCH[mn]]
+        if args.sweeps:
+            batches += [tuple(map(int, s.split("x"))) for s in args.sweeps.split(",")]
+        if args.fig5 and mn == "base":
+            # seq capped at 256 on this single-core testbed; the latency /
+            # memory scaling shape is already visible at 2 x 2 shapes.
+            for b in (1, 4):
+                for t in (128, 256):
+                    if (b, t) not in batches:
+                        batches.append((b, t))
+        emit_model(em, cfg, methods, batches)
+    em.save_meta()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Model / method configurations shared by the AOT pipeline.
+
+Every named config here corresponds to a family of HLO artifacts in
+``artifacts/`` and is mirrored in ``meta.json`` so the rust coordinator is
+fully self-describing at runtime (no python on the request path).
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder-only transformer dimensions."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = 261  # 256 bytes + PAD/BOS/EOS/SEP/UNK
+    seq_len: int = 64
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff
+        norms = self.n_layers * 2 * self.d_model + self.d_model
+        return self.vocab * self.d_model + self.n_layers * per_layer + norms
+
+
+@dataclass(frozen=True)
+class MethodConfig:
+    """Fine-tuning method parameterization.
+
+    ``method`` is one of: fullft, lora, dora, spft, lisa, galore, s2ft.
+    For s2ft, ``s2ft_fractions`` maps projection name -> fraction of
+    channels/heads trainable (the paper's default budget goes to ``wo`` and
+    ``wd``); ``selection`` picks the strategy (r/w/a/s/g) and ``select_small``
+    flips largest/smallest ranking (Table 4).
+    """
+
+    method: str
+    # s2ft
+    s2ft_fractions: Dict[str, float] = field(default_factory=dict)
+    selection: str = "r"  # r | w | a | s | g
+    select_small: bool = True
+    use_pallas: bool = False
+    # lora / dora / galore
+    rank: int = 16
+    lora_alpha: float = 32.0
+    lora_targets: List[str] = field(default_factory=lambda: ["wo", "wd"])
+    # spft
+    spft_ratio: float = 0.01
+    # optimizer
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def tag(self) -> str:
+        """Short unique tag used in artifact filenames."""
+        t = self.method
+        if self.method == "s2ft":
+            if self.selection != "r":
+                t += f"-{self.selection}{'S' if self.select_small else 'L'}"
+            if self.use_pallas:
+                t += "-pallas"
+            # non-default projection budget (Fig 4 ablation)
+            keys = sorted(self.s2ft_fractions)
+            if keys and keys != ["wd", "wo"]:
+                t += "-" + "".join(k[1] for k in keys)
+        return t
+
+
+MODELS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=4, d_ff=176, seq_len=32),
+    "small": ModelConfig("small", d_model=256, n_layers=4, n_heads=8, d_ff=704, seq_len=64),
+    "base": ModelConfig("base", d_model=512, n_layers=6, n_heads=8, d_ff=1376, seq_len=128),
+}
+
+# Default per-method configs; experiments override via aot.py flags.
+def default_methods(model: ModelConfig) -> Dict[str, MethodConfig]:
+    # Parameter-matched budgets (paper keeps ~LoRA's trainable count):
+    # lora rank 16 on (wo, wd) trains r*(d+d) + r*(k+d) params per layer.
+    # s2ft fraction f trains f*d*d (wo rows) + f*k*d (wd rows) per layer.
+    d, k = model.d_model, model.d_ff
+    r = 16
+    lora_params = r * (2 * d) + r * (k + d)
+    f = lora_params / (d * d + k * d)
+    frac = {"wo": round(f, 4), "wd": round(f, 4)}
+    return {
+        "fullft": MethodConfig("fullft", lr=2e-4),
+        "lora": MethodConfig("lora", rank=r),
+        "dora": MethodConfig("dora", rank=r),
+        "spft": MethodConfig("spft", spft_ratio=round(f, 4)),
+        "lisa": MethodConfig("lisa", lr=2e-4),
+        "galore": MethodConfig("galore", rank=r, lr=2e-4),
+        "s2ft": MethodConfig("s2ft", s2ft_fractions=frac),
+        "s2ft-pallas": MethodConfig("s2ft", s2ft_fractions=frac, use_pallas=True),
+    }
+
+
+def config_dict(model: ModelConfig, methods: Dict[str, MethodConfig]) -> dict:
+    return {
+        "model": asdict(model),
+        "param_count": model.param_count(),
+        "methods": {k: asdict(v) for k, v in methods.items()},
+    }

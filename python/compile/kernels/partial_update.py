@@ -1,0 +1,207 @@
+"""L1 Pallas kernels: the S2FT partial back-propagation hot path.
+
+The paper's efficiency contribution (Sec. 3.3) is that after co-permuting
+the coupled structures, the trainable channels form a *contiguous leading
+block* of the weight matrix, so both the forward GEMM and the
+trainable-slice weight gradient are plain dense tiled matmuls — no sparse
+ops anywhere. We express that as a single tiled Pallas matmul kernel used
+three ways:
+
+  forward :  y    = x @ [w_t; w_f]           full grid
+  dx      :  dx   = dy @ W^T                 full grid
+  dw_t    :  dw_t = x[:, :s]^T @ dy          grid restricted to s rows
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the BlockSpec tiles are
+MXU-shaped (up to 128x128); the dw_t grid covers ceil(s/Tm) instead of
+ceil(K/Tm) row tiles, so backward compute and VMEM traffic scale with the
+sparsity level exactly like the paper's CUDA implementation.
+
+Kernels MUST run with interpret=True here: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes; clamped per-dimension (shapes are padded up to tile
+# multiples so arbitrary problem sizes are supported).
+TILE_M = 64
+TILE_N = 64
+TILE_K = 64
+
+
+def _tile(dim: int, t: int) -> int:
+    """Largest tile <= t; degenerate dims get a unit tile."""
+    return max(1, min(dim, t))
+
+
+def _pad_to(x, m_mult, n_mult):
+    m, n = x.shape
+    pm = (-m) % m_mult
+    pn = (-n) % n_mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Tiled matmul body accumulating into the revisited output tile.
+
+    The output BlockSpec maps every k-step of the grid to the same (i, j)
+    tile, so the tile stays resident in VMEM across the contraction loop
+    (standard Pallas accumulation pattern — no scratch needed).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul(x, w, tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K):
+    """Tiled Pallas GEMM: (M, K) @ (K, N) -> (M, N), any f32 shapes.
+
+    Shapes are zero-padded to tile multiples; padding contributes zeros to
+    the accumulator, so the unpadded slice of the result is exact.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    tm, tn, tk = _tile(m, tm), _tile(n, tn), _tile(k, tk)
+    xp = _pad_to(x.astype(jnp.float32), tm, tk)
+    wp = _pad_to(w.astype(jnp.float32), tk, tn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // tm, np_ // tn, kp // tk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# S2FT partitioned linear layer with partial back-propagation.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def s2ft_linear(x, w_t, w_f):
+    """y = x @ [w_t; w_f] with gradients only for (x, w_t).
+
+    This is the two-line partial-backprop patch of paper Sec. 3.3 expressed
+    as a custom VJP: the saved residual for the weight gradient is only the
+    trainable slice of the activation, and the dw GEMM covers only the
+    trainable rows.
+    """
+    return matmul(x, jnp.concatenate([w_t, w_f], axis=0))
+
+
+def _s2ft_fwd(x, w_t, w_f):
+    y = s2ft_linear(x, w_t, w_f)
+    # Save only what partial backprop needs: the trainable activation slice
+    # for dw_t, and both weight pieces for dx (`setup_context` analogue).
+    s = w_t.shape[0]
+    return y, (x[:, :s], w_t, w_f)
+
+
+def _s2ft_bwd(res, dy):
+    x_t, w_t, w_f = res
+    w = jnp.concatenate([w_t, w_f], axis=0)
+    dx = matmul(dy, w.T)
+    dw_t = matmul(x_t.T, dy)  # grid restricted to s rows: the paper's saving
+    return dx, dw_t, jnp.zeros_like(w_f)
+
+
+s2ft_linear.defvjp(_s2ft_fwd, _s2ft_bwd)
+
+
+def s2ft_linear_nd(x, w_t, w_f):
+    """s2ft_linear for (..., K) activations (flattens leading dims)."""
+    lead = x.shape[:-1]
+    y = s2ft_linear(x.reshape(-1, x.shape[-1]), w_t, w_f)
+    return y.reshape(*lead, y.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# XLA-native partial back-propagation (no Pallas) — same contract.
+#
+# Why this exists: differentiating `x @ concat([w_t, w_f])` makes JAX emit
+# the FULL weight-gradient GEMM and then slice out the trainable rows — XLA
+# does not push the slice into the dot, so the paper's backward saving
+# silently evaporates. These custom VJPs apply the slice *before* the dW
+# GEMM (the §3.3 "two-line patch"), for both row-split (wo/wd) and
+# column-split (wq/wk/wv/wu/wg) coupled structures.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def s2ft_row_linear(x, w_t, w_f):
+    """y = x @ [w_t; w_f] (row split), grads only for (x, w_t). x: (..., K)."""
+    return x @ jnp.concatenate([w_t, w_f], axis=0)
+
+
+def _row_fwd(x, w_t, w_f):
+    s = w_t.shape[0]
+    return s2ft_row_linear(x, w_t, w_f), (x[..., :s], w_t, w_f)
+
+
+def _row_bwd(res, dy):
+    x_t, w_t, w_f = res
+    w = jnp.concatenate([w_t, w_f], axis=0)
+    dx = dy @ w.T
+    # contract all leading dims: dw_t = x_tᵀ · dy over only the s rows
+    xt2 = x_t.reshape(-1, x_t.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    dw_t = xt2.T @ dy2
+    return dx, dw_t, jnp.zeros_like(w_f)
+
+
+s2ft_row_linear.defvjp(_row_fwd, _row_bwd)
+
+
+@jax.custom_vjp
+def s2ft_col_linear(x, w_t, w_f):
+    """y = x @ [w_t | w_f] (column split), grads only for (x, w_t)."""
+    return x @ jnp.concatenate([w_t, w_f], axis=1)
+
+
+def _col_fwd(x, w_t, w_f):
+    return s2ft_col_linear(x, w_t, w_f), (x, w_t, w_f)
+
+
+def _col_bwd(res, dy):
+    x, w_t, w_f = res
+    s = w_t.shape[1]
+    w = jnp.concatenate([w_t, w_f], axis=1)
+    dx = dy @ w.T
+    x2 = x.reshape(-1, x.shape[-1])
+    dy_t = dy[..., :s].reshape(-1, s)  # slice BEFORE the dW GEMM
+    dw_t = x2.T @ dy_t
+    return dx, dw_t, jnp.zeros_like(w_f)
+
+
+s2ft_col_linear.defvjp(_col_fwd, _col_bwd)
+
+
+def vmem_bytes(tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K) -> int:
+    """Estimated VMEM working set per grid step (x, w, out tiles, f32).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf for the TPU roofline estimate:
+    3 tiles resident + 2x for double buffering of the streamed inputs.
+    """
+    return 4 * (tm * tk + tk * tn + tm * tn) + 4 * (tm * tk + tk * tn)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (and under the
+hypothesis shape/dtype sweep in ``python/tests/test_kernel.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain dense GEMM oracle: (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def s2ft_linear_ref(x, w_t, w_f):
+    """Forward of an S2FT-partitioned linear layer.
+
+    The coupled structure has been co-permuted so the ``s`` trainable
+    channels are the leading rows of the weight: W = [w_t; w_f] with
+    w_t: (s, N) trainable and w_f: (K - s, N) frozen. x: (M, K).
+    """
+    w = jnp.concatenate([w_t, w_f], axis=0)
+    return matmul_ref(x, w)
+
+
+def s2ft_linear_grads_ref(x, w_t, w_f, dy):
+    """Reference partial back-propagation (paper Sec. 3.3).
+
+    Returns (dx, dw_t): the input gradient needs the full weight, but the
+    weight gradient is computed *only* for the trainable slice —
+    dw_t = x[:, :s]^T @ dy. No gradient exists for w_f.
+    """
+    s = w_t.shape[0]
+    w = jnp.concatenate([w_t, w_f], axis=0)
+    dx = matmul_ref(dy, w.T)
+    dw_t = matmul_ref(x[:, :s].T, dy)
+    return dx, dw_t
+
+
+def lora_linear_ref(x, w, a, b, scale):
+    """LoRA-adapted linear: y = x @ (W + scale * A @ B)."""
+    return matmul_ref(x, w) + scale * matmul_ref(matmul_ref(x, a), b)

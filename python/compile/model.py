@@ -1,0 +1,598 @@
+"""L2: LLaMA-style transformer + every fine-tuning method in the paper.
+
+Build-time JAX only — this module is lowered by ``aot.py`` to HLO text and
+never imported at runtime. The rust coordinator sees, per (model, method):
+
+  prepare : (base params..., seed, calib tokens/targets/mask)
+            -> (trainable..., frozen..., perms...)
+  train   : (trainable..., frozen..., m..., v..., step, tokens, targets,
+             loss_mask, aux...) -> (new trainable..., new m..., new v..., loss)
+  merge   : (trainable..., frozen..., perms...) -> (base params...)
+  forward : (base params..., tokens) -> logits          [shared, base layout]
+  init    : (seed,) -> (base params...)                  [random init]
+
+All dict-of-arrays interfaces are flattened in sorted-key order; meta.json
+(written by aot.py) records names/shapes/dtypes so rust is self-describing.
+
+Methods: fullft, lora, dora, spft (unstructured masked deltas), lisa
+(per-step layer freezing), galore (low-rank gradient projection + projected
+optimizer state), s2ft (the paper: trainable-first co-permutation + partial
+back-propagation; optional Pallas hot path).
+"""
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, MethodConfig
+from . import selection as sel
+from .kernels.partial_update import s2ft_col_linear, s2ft_linear_nd, s2ft_row_linear
+
+Params = Dict[str, jnp.ndarray]
+
+# Projections whose trainable slice is a row block (axis 0) vs column block.
+ROW_SPLIT = ("wo", "wd")
+MHA_PROJS = ("wq", "wk", "wv", "wo")
+FFN_PROJS = ("wu", "wg", "wd")
+
+
+# --------------------------------------------------------------------------
+# Base model
+# --------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Ordered (sorted-key) base parameter layout."""
+    d, k, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes: Dict[str, Tuple[int, ...]] = {"embed": (v, d), "norm_f": (d,)}
+    for i in range(cfg.n_layers):
+        shapes[f"L{i}.wq"] = (d, d)
+        shapes[f"L{i}.wk"] = (d, d)
+        shapes[f"L{i}.wv"] = (d, d)
+        shapes[f"L{i}.wo"] = (d, d)
+        shapes[f"L{i}.wu"] = (d, k)
+        shapes[f"L{i}.wg"] = (d, k)
+        shapes[f"L{i}.wd"] = (k, d)
+        shapes[f"L{i}.norm1"] = (d,)
+        shapes[f"L{i}.norm2"] = (d,)
+    return dict(sorted(shapes.items()))
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Scaled-gaussian init (GPT-2 style; residual projections down-scaled)."""
+    shapes = param_shapes(cfg)
+    params: Params = {}
+    keys = jax.random.split(key, len(shapes))
+    resid_scale = 1.0 / np.sqrt(2 * cfg.n_layers)
+    for (name, shape), k in zip(shapes.items(), keys):
+        if name.endswith(("norm1", "norm2", "norm_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("wo", "wd")):
+                std *= resid_scale
+            params[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def rms_norm(x, g, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return g * x * jax.lax.rsqrt(var + eps)
+
+
+def rope_tables(cfg: ModelConfig, t: int):
+    hd = cfg.head_dim
+    pos = np.arange(t)[:, None]
+    freqs = cfg.rope_theta ** (-np.arange(0, hd, 2) / hd)[None, :]
+    ang = pos * freqs  # (T, hd/2)
+    return jnp.asarray(np.cos(ang), jnp.float32), jnp.asarray(np.sin(ang), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, h, hd) — rotate (even, odd) pairs."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, :, None, :], sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """q/k/v: (B, T, d) -> (B, T, d), causal with RoPE."""
+    B, T, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = rope_tables(cfg, T)
+    q = apply_rope(q.reshape(B, T, h, hd), cos, sin)
+    k = apply_rope(k.reshape(B, T, h, hd), cos, sin)
+    v = v.reshape(B, T, h, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    mask = np.tril(np.ones((T, T), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(B, T, d)
+
+
+def forward_intermediates(cfg: ModelConfig, linear, weights: Params, tokens):
+    """Shared forward skeleton.
+
+    ``linear(name, x)`` resolves a projection application — this is the
+    method-injection point (lora path, s2ft concat/pallas, plain matmul).
+    ``weights`` only needs embed/norm tensors. Returns logits plus the
+    coupled-structure intermediate activations used by selection A/S/G.
+    """
+    inter: Dict[str, jnp.ndarray] = {}
+    h = weights["embed"][tokens]
+    for i in range(cfg.n_layers):
+        x = rms_norm(h, weights[f"L{i}.norm1"], cfg.norm_eps)
+        q = linear(f"L{i}.wq", x)
+        k = linear(f"L{i}.wk", x)
+        v = linear(f"L{i}.wv", x)
+        a = _attention(cfg, q, k, v)
+        inter[f"L{i}.mha_act"] = a
+        h = h + linear(f"L{i}.wo", a)
+        x = rms_norm(h, weights[f"L{i}.norm2"], cfg.norm_eps)
+        u = linear(f"L{i}.wu", x)
+        g = linear(f"L{i}.wg", x)
+        act = u * jax.nn.silu(g)
+        inter[f"L{i}.ffn_act"] = act
+        h = h + linear(f"L{i}.wd", act)
+    h = rms_norm(h, weights["norm_f"], cfg.norm_eps)
+    logits = h @ weights["embed"].T
+    return logits, inter
+
+
+def forward_base(cfg: ModelConfig, weights: Params, tokens):
+    """Forward in base layout (serving path after adapter merge)."""
+    linear = lambda name, x: x @ weights[name]
+    return forward_intermediates(cfg, linear, weights, tokens)[0]
+
+
+def ce_loss(logits, targets, loss_mask):
+    """Masked next-token cross entropy (mean over unmasked positions)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -(ll * loss_mask).sum() / jnp.maximum(loss_mask.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Method layouts: which tensors are trainable / frozen / perms / aux
+# --------------------------------------------------------------------------
+
+
+def s2ft_counts(cfg: ModelConfig, m: MethodConfig) -> Dict[str, int]:
+    counts = sel.budget_to_counts(m.s2ft_fractions, cfg.d_ff, cfg.n_heads)
+    heads = {c for p, c in counts.items() if p in MHA_PROJS and c > 0}
+    chans = {c for p, c in counts.items() if p in FFN_PROJS and c > 0}
+    if len(heads) > 1 or len(chans) > 1:
+        raise ValueError("budgets must agree within a coupled structure")
+    return {p: c for p, c in counts.items() if c > 0}
+
+
+def method_layout(cfg: ModelConfig, m: MethodConfig):
+    """Return (trainable, frozen, perm, aux) shape dicts for a method."""
+    base = param_shapes(cfg)
+    hd = cfg.head_dim
+    trn: Dict[str, tuple] = {}
+    frz: Dict[str, tuple] = {}
+    perms: Dict[str, tuple] = {}
+    aux: Dict[str, tuple] = {}
+    if m.method in ("fullft", "lisa", "galore"):
+        trn = dict(base)
+        if m.method == "lisa":
+            aux["layer_mask"] = (cfg.n_layers + 1,)
+        if m.method == "galore":
+            aux["proj_seed"] = ()
+    elif m.method in ("lora", "dora"):
+        frz = dict(base)
+        for i in range(cfg.n_layers):
+            for p in m.lora_targets:
+                din, dout = base[f"L{i}.{p}"]
+                trn[f"L{i}.{p}.a"] = (din, m.rank)
+                trn[f"L{i}.{p}.b"] = (m.rank, dout)
+                if m.method == "dora":
+                    trn[f"L{i}.{p}.m"] = (dout,)
+    elif m.method == "spft":
+        frz = dict(base)
+        for i in range(cfg.n_layers):
+            for p in MHA_PROJS + FFN_PROJS:
+                shape = base[f"L{i}.{p}"]
+                trn[f"L{i}.{p}.delta"] = shape
+                frz[f"L{i}.{p}.mask"] = shape
+    elif m.method == "s2ft":
+        frz = dict(base)
+        counts = s2ft_counts(cfg, m)
+        for i in range(cfg.n_layers):
+            for p, c in counts.items():
+                del frz[f"L{i}.{p}"]
+                din, dout = base[f"L{i}.{p}"]
+                rows = c * hd if p in MHA_PROJS else c
+                if p in ROW_SPLIT:
+                    trn[f"L{i}.{p}_t"] = (rows, dout)
+                    frz[f"L{i}.{p}_f"] = (din - rows, dout)
+                else:
+                    trn[f"L{i}.{p}_t"] = (din, rows)
+                    frz[f"L{i}.{p}_f"] = (din, dout - rows)
+            if any(p in counts for p in MHA_PROJS):
+                perms[f"L{i}.head_perm"] = (cfg.n_heads,)
+            if any(p in counts for p in FFN_PROJS):
+                perms[f"L{i}.chan_perm"] = (cfg.d_ff,)
+    else:
+        raise ValueError(f"unknown method {m.method!r}")
+    return (
+        dict(sorted(trn.items())),
+        dict(sorted(frz.items())),
+        dict(sorted(perms.items())),
+        dict(sorted(aux.items())),
+    )
+
+
+# --------------------------------------------------------------------------
+# Method forward
+# --------------------------------------------------------------------------
+
+
+def make_linear(cfg: ModelConfig, m: MethodConfig, trainable: Params, frozen: Params):
+    """Build the ``linear(name, x)`` resolver for a method."""
+    scale = m.lora_alpha / m.rank
+
+    def linear(name, x):
+        if m.method in ("fullft", "lisa", "galore"):
+            return x @ trainable[name]
+        if m.method in ("lora", "dora"):
+            w = frozen[name]
+            if f"{name}.a" not in trainable:
+                return x @ w
+            a, b = trainable[f"{name}.a"], trainable[f"{name}.b"]
+            if m.method == "lora":
+                return x @ w + scale * ((x @ a) @ b)
+            w_eff = w + scale * (a @ b)
+            col_norm = jnp.linalg.norm(w_eff, axis=0, keepdims=True)
+            w_eff = trainable[f"{name}.m"][None, :] * w_eff / (col_norm + 1e-6)
+            return x @ w_eff
+        if m.method == "spft":
+            w = frozen[name]
+            if f"{name}.delta" in trainable:
+                w = w + frozen[f"{name}.mask"] * trainable[f"{name}.delta"]
+            return x @ w
+        if m.method == "s2ft":
+            if f"{name}_t" not in trainable:
+                return x @ frozen[name]
+            wt, wf = trainable[f"{name}_t"], frozen[f"{name}_f"]
+            proj = name.split(".")[-1]
+            # Partial back-propagation (paper §3.3): the custom VJPs slice
+            # the activation/cotangent BEFORE the dW GEMM so the weight
+            # gradient covers only the trainable block. Plain concat would
+            # make XLA compute the full dW and slice afterwards.
+            if proj in ROW_SPLIT:
+                if m.use_pallas:
+                    return s2ft_linear_nd(x, wt, wf)
+                return s2ft_row_linear(x, wt, wf)
+            return s2ft_col_linear(x, wt, wf)
+        raise ValueError(m.method)
+
+    return linear
+
+
+def forward_method(cfg: ModelConfig, m: MethodConfig, trainable, frozen, tokens):
+    getw = {**frozen, **trainable}  # embed / norms resolve from either
+    linear = make_linear(cfg, m, trainable, frozen)
+    return forward_intermediates(cfg, linear, getw, tokens)[0]
+
+
+# --------------------------------------------------------------------------
+# Prepare: base layout -> method layout (its own AOT executable)
+# --------------------------------------------------------------------------
+
+
+def prepare_method(cfg: ModelConfig, m: MethodConfig, base: Params, seed,
+                   calib_tokens, calib_targets, calib_mask):
+    """Split base params into (trainable, frozen, perms) for a method.
+
+    ``seed`` is a scalar int32 (random selection / masks / lora init);
+    calibration inputs drive selection strategies A/S/G and are DCE'd
+    otherwise.
+    """
+    key = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(key, jnp.asarray(seed, jnp.uint32))
+    trn: Params = {}
+    frz: Params = {}
+    perms: Params = {}
+    if m.method in ("fullft", "lisa", "galore"):
+        trn = dict(base)
+    elif m.method in ("lora", "dora"):
+        frz = dict(base)
+        ks = jax.random.split(key, cfg.n_layers * len(m.lora_targets))
+        idx = 0
+        for i in range(cfg.n_layers):
+            for p in m.lora_targets:
+                din, dout = base[f"L{i}.{p}"].shape
+                trn[f"L{i}.{p}.a"] = 0.02 * jax.random.normal(ks[idx], (din, m.rank))
+                trn[f"L{i}.{p}.b"] = jnp.zeros((m.rank, dout), jnp.float32)
+                if m.method == "dora":
+                    trn[f"L{i}.{p}.m"] = jnp.linalg.norm(base[f"L{i}.{p}"], axis=0)
+                idx += 1
+    elif m.method == "spft":
+        frz = dict(base)
+        names = [f"L{i}.{p}" for i in range(cfg.n_layers) for p in MHA_PROJS + FFN_PROJS]
+        ks = jax.random.split(key, len(names))
+        for name, k in zip(names, ks):
+            shape = base[name].shape
+            frz[f"{name}.mask"] = jax.random.bernoulli(k, m.spft_ratio, shape).astype(
+                jnp.float32
+            )
+            trn[f"{name}.delta"] = jnp.zeros(shape, jnp.float32)
+    elif m.method == "s2ft":
+        frz = dict(base)
+        counts = s2ft_counts(cfg, m)
+        mha_count = next((c for p, c in counts.items() if p in MHA_PROJS), 0)
+        ffn_count = next((c for p, c in counts.items() if p in FFN_PROJS), 0)
+        inter: Dict[str, jnp.ndarray] = {}
+        grads: Params = {}
+        if m.selection in ("a", "s"):
+            linear = lambda name, x: x @ base[name]
+            _, inter = forward_intermediates(cfg, linear, base, calib_tokens)
+        if m.selection == "g":
+            gnames = [f"L{i}.{p}" for i in range(cfg.n_layers) for p in ("wo", "wd")]
+
+            def loss_of(sub: Params):
+                w = {**base, **sub}
+                linear = lambda name, x: x @ w[name]
+                logits, _ = forward_intermediates(cfg, linear, w, calib_tokens)
+                return ce_loss(logits, calib_targets, calib_mask)
+
+            grads = jax.grad(loss_of)({n: base[n] for n in gnames})
+        ks = jax.random.split(key, cfg.n_layers * 2)
+        for i in range(cfg.n_layers):
+            head_perm = chan_perm = None
+            if mha_count > 0:
+                head_perm = _select_perm_mha(cfg, m, base, i, mha_count, inter, grads,
+                                             ks[2 * i])
+                perms[f"L{i}.head_perm"] = head_perm
+            if ffn_count > 0:
+                chan_perm = _select_perm_ffn(cfg, m, base, i, ffn_count, inter, grads,
+                                             ks[2 * i + 1])
+                perms[f"L{i}.chan_perm"] = chan_perm
+            _split_layer(cfg, m, base, i, counts, head_perm, chan_perm, trn, frz)
+    else:
+        raise ValueError(m.method)
+    return (
+        dict(sorted(trn.items())),
+        dict(sorted(frz.items())),
+        dict(sorted(perms.items())),
+    )
+
+
+def _select_perm_mha(cfg, m, base, i, count, inter, grads, key):
+    n_heads = cfg.n_heads
+    if m.selection == "r":
+        idx = jnp.sort(jax.random.permutation(key, n_heads)[:count])
+    else:
+        if m.selection == "w":
+            score = sel.weight_score_heads(base[f"L{i}.wo"], n_heads)
+        elif m.selection in ("a", "s"):
+            score = sel.head_score_from_channels(
+                sel.activation_score(inter[f"L{i}.mha_act"]), n_heads
+            )
+            if m.selection == "s":
+                score = score * sel.weight_score_heads(base[f"L{i}.wo"], n_heads)
+        else:  # g
+            score = sel.head_score_from_channels(
+                sel.gradient_score(grads[f"L{i}.wo"], axis=0), n_heads
+            )
+        idx = sel.topk_indices(score, count, m.select_small)
+    rest = _complement(idx, n_heads)
+    return jnp.concatenate([idx, rest]).astype(jnp.int32)
+
+
+def _select_perm_ffn(cfg, m, base, i, count, inter, grads, key):
+    k = cfg.d_ff
+    if m.selection == "r":
+        idx = jnp.sort(jax.random.permutation(key, k)[:count])
+    else:
+        if m.selection == "w":
+            score = sel.weight_score_ffn(base[f"L{i}.wu"], base[f"L{i}.wg"],
+                                         base[f"L{i}.wd"])
+        elif m.selection in ("a", "s"):
+            score = sel.activation_score(inter[f"L{i}.ffn_act"])
+            if m.selection == "s":
+                score = score * sel.weight_score_ffn(
+                    base[f"L{i}.wu"], base[f"L{i}.wg"], base[f"L{i}.wd"]
+                )
+        else:  # g
+            score = sel.gradient_score(grads[f"L{i}.wd"], axis=0)
+        idx = sel.topk_indices(score, count, m.select_small)
+    rest = _complement(idx, k)
+    return jnp.concatenate([idx, rest]).astype(jnp.int32)
+
+
+def _complement(idx, total):
+    """Indices of [0, total) not in idx, ascending (XLA-friendly)."""
+    marker = jnp.zeros((total,), jnp.int32).at[idx].set(1)
+    order = jnp.argsort(marker, stable=True)  # zeros (unselected) first
+    rest = order[: total - idx.shape[0]]
+    return jnp.sort(rest).astype(jnp.int32)
+
+
+def _split_layer(cfg, m, base, i, counts, head_perm, chan_perm, trn, frz):
+    """Co-permute layer i and split target projections into (_t, _f)."""
+    hd = cfg.head_dim
+    if head_perm is not None:
+        eperm = (head_perm[:, None] * hd + jnp.arange(hd)[None, :]).reshape(-1)
+        mats = {
+            "wq": base[f"L{i}.wq"][:, eperm],
+            "wk": base[f"L{i}.wk"][:, eperm],
+            "wv": base[f"L{i}.wv"][:, eperm],
+            "wo": base[f"L{i}.wo"][eperm, :],
+        }
+        for p in MHA_PROJS:
+            _stash(f"L{i}.{p}", p, mats[p], counts.get(p, 0) * hd, trn, frz)
+    if chan_perm is not None:
+        mats = {
+            "wu": base[f"L{i}.wu"][:, chan_perm],
+            "wg": base[f"L{i}.wg"][:, chan_perm],
+            "wd": base[f"L{i}.wd"][chan_perm, :],
+        }
+        for p in FFN_PROJS:
+            _stash(f"L{i}.{p}", p, mats[p], counts.get(p, 0), trn, frz)
+
+
+def _stash(name, p, w, rows, trn, frz):
+    if rows == 0:
+        frz[name] = w
+        return
+    del frz[name]
+    if p in ROW_SPLIT:
+        trn[f"{name}_t"] = w[:rows]
+        frz[f"{name}_f"] = w[rows:]
+    else:
+        trn[f"{name}_t"] = w[:, :rows]
+        frz[f"{name}_f"] = w[:, rows:]
+
+
+# --------------------------------------------------------------------------
+# Merge: method layout -> base layout
+# --------------------------------------------------------------------------
+
+
+def merge_method(cfg: ModelConfig, m: MethodConfig, trainable: Params,
+                 frozen: Params, perms: Params) -> Params:
+    scale = m.lora_alpha / m.rank
+    base = param_shapes(cfg)
+    out: Params = {}
+    if m.method in ("fullft", "lisa", "galore"):
+        return {k: trainable[k] for k in base}
+    if m.method in ("lora", "dora"):
+        for name in base:
+            w = frozen[name]
+            if f"{name}.a" in trainable:
+                w_eff = w + scale * (trainable[f"{name}.a"] @ trainable[f"{name}.b"])
+                if m.method == "dora":
+                    col_norm = jnp.linalg.norm(w_eff, axis=0, keepdims=True)
+                    w_eff = trainable[f"{name}.m"][None, :] * w_eff / (col_norm + 1e-6)
+                w = w_eff
+            out[name] = w
+        return out
+    if m.method == "spft":
+        for name in base:
+            w = frozen[name]
+            if f"{name}.delta" in trainable:
+                w = w + frozen[f"{name}.mask"] * trainable[f"{name}.delta"]
+            out[name] = w
+        return out
+    if m.method == "s2ft":
+        hd = cfg.head_dim
+        for name in base:
+            if name in frozen:
+                out[name] = frozen[name]
+        for i in range(cfg.n_layers):
+            head_perm = perms.get(f"L{i}.head_perm")
+            chan_perm = perms.get(f"L{i}.chan_perm")
+            if head_perm is not None:
+                eperm = (head_perm[:, None] * hd + jnp.arange(hd)[None, :]).reshape(-1)
+                inv = jnp.argsort(eperm)
+                for p in MHA_PROJS:
+                    w = _unsplit(f"L{i}.{p}", p, trainable, frozen)
+                    out[f"L{i}.{p}"] = w[inv, :] if p in ROW_SPLIT else w[:, inv]
+            if chan_perm is not None:
+                inv = jnp.argsort(chan_perm)
+                for p in FFN_PROJS:
+                    w = _unsplit(f"L{i}.{p}", p, trainable, frozen)
+                    out[f"L{i}.{p}"] = w[inv, :] if p in ROW_SPLIT else w[:, inv]
+        return {k: out[k] for k in base}
+    raise ValueError(m.method)
+
+
+def _unsplit(name, p, trainable, frozen):
+    if f"{name}_t" in trainable:
+        axis = 0 if p in ROW_SPLIT else 1
+        return jnp.concatenate([trainable[f"{name}_t"], frozen[f"{name}_f"]], axis=axis)
+    return frozen[name]
+
+
+# --------------------------------------------------------------------------
+# AdamW train step with method-specific gradient transforms
+# --------------------------------------------------------------------------
+
+
+def _galore_proj(key, din, r):
+    """Fixed JL-style projection, regenerated in-graph from the seed."""
+    return jax.random.normal(key, (din, r), jnp.float32) / np.sqrt(r)
+
+
+def opt_state_shapes(cfg: ModelConfig, m: MethodConfig) -> Dict[str, tuple]:
+    """Adam m/v shapes: trainable shapes, except galore's projected space."""
+    trn, _, _, _ = method_layout(cfg, m)
+    if m.method != "galore":
+        return trn
+    out = {}
+    for name, shape in trn.items():
+        if len(shape) == 2 and min(shape) > m.rank:
+            out[name] = (m.rank, shape[1]) if shape[0] >= shape[1] else (shape[0], m.rank)
+        else:
+            out[name] = shape
+    return out
+
+
+def train_step(cfg: ModelConfig, m: MethodConfig, trainable: Params, frozen: Params,
+               opt_m: Params, opt_v: Params, step, tokens, targets, loss_mask,
+               aux: Params):
+    """One AdamW step. Returns (new_trainable, new_m, new_v, loss)."""
+
+    def loss_fn(tr):
+        logits = forward_method(cfg, m, tr, frozen, tokens)
+        return ce_loss(logits, targets, loss_mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+
+    if m.method == "lisa":
+        lm = aux["layer_mask"]
+
+        def mask_of(name):
+            if name.startswith("L"):
+                return lm[int(name[1 : name.index(".")])]
+            return lm[cfg.n_layers]
+
+        grads = {k: g * mask_of(k) for k, g in grads.items()}
+
+    t = step + 1.0
+    b1, b2, lr, eps, wd = m.beta1, m.beta2, m.lr, m.eps, m.weight_decay
+    new_t, new_m, new_v = {}, {}, {}
+    for name, g in grads.items():
+        p, mm, vv = trainable[name], opt_m[name], opt_v[name]
+        if m.method == "galore" and g.ndim == 2 and min(g.shape) > m.rank:
+            pk = jax.random.fold_in(jax.random.PRNGKey(1), _stable_hash(name))
+            pk = jax.random.fold_in(pk, jnp.asarray(aux["proj_seed"], jnp.uint32))
+            if g.shape[0] >= g.shape[1]:
+                proj = _galore_proj(pk, g.shape[0], m.rank)  # (din, r)
+                gp = proj.T @ g
+                mm, vv, upd_p = _adam(gp, mm, vv, b1, b2, eps, t)
+                upd = proj @ upd_p
+            else:
+                proj = _galore_proj(pk, g.shape[1], m.rank)  # (dout, r)
+                gp = g @ proj
+                mm, vv, upd_p = _adam(gp, mm, vv, b1, b2, eps, t)
+                upd = upd_p @ proj.T
+        else:
+            mm, vv, upd = _adam(g, mm, vv, b1, b2, eps, t)
+        new_t[name] = p - lr * (upd + wd * p)
+        new_m[name] = mm
+        new_v[name] = vv
+    return new_t, new_m, new_v, loss
+
+
+def _adam(g, mm, vv, b1, b2, eps, t):
+    mm = b1 * mm + (1 - b1) * g
+    vv = b2 * vv + (1 - b2) * g * g
+    mh = mm / (1 - b1**t)
+    vh = vv / (1 - b2**t)
+    return mm, vv, mh / (jnp.sqrt(vh) + eps)
+
+
+def _stable_hash(name: str) -> int:
+    h = 2166136261
+    for ch in name.encode():
+        h = ((h ^ ch) * 16777619) & 0x7FFFFFFF
+    return h

@@ -1,0 +1,107 @@
+"""Coupled-structure discovery and co-permutation (paper Sec. 3.1-3.2).
+
+A *coupled structure* is a pair (W1, W2) of weight sets connected by an
+intermediate activation whose channel order is private to the pair, so both
+sides can be co-permuted without changing the module output:
+
+  MHA : W1 = (wq, wk, wv) columns grouped by head, W2 = wo rows grouped by
+        head; the activation is softmax(QK^T)V. Head blocks are the unit.
+  FFN : W1 = (wu, wg) columns, W2 = wd rows; the activation is
+        U(x) * SiLU(G(x)). Single channels are the unit.
+
+Weight convention throughout: y = x @ W with W shaped (d_in, d_out), so
+"channel c of the FFN" is column c of wu/wg and row c of wd; "head h of the
+MHA" is column block h of wq/wk/wv and row block h of wo.
+
+``co_permute_*`` return permuted copies plus the permutation used
+(trainable-first order); ``invert_permutation`` undoes it. The rust
+``sparsity`` module mirrors these index conventions for adapter extraction.
+"""
+
+from typing import Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def trainable_first_permutation(selected: Sequence[int], total: int) -> np.ndarray:
+    """Permutation placing ``selected`` (in given order) first, rest after.
+
+    Returns ``perm`` such that new[i] = old[perm[i]].
+    """
+    selected = list(selected)
+    sel_set = set(selected)
+    assert len(sel_set) == len(selected), "duplicate selection"
+    assert all(0 <= c < total for c in selected), "selection out of range"
+    rest = [c for c in range(total) if c not in sel_set]
+    return np.array(selected + rest, dtype=np.int32)
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm), dtype=perm.dtype)
+    return inv
+
+
+def expand_head_perm(head_perm: np.ndarray, head_dim: int) -> np.ndarray:
+    """Expand a head-level permutation to element level (blocks of head_dim)."""
+    base = head_perm.astype(np.int64) * head_dim
+    return (base[:, None] + np.arange(head_dim)[None, :]).reshape(-1).astype(np.int32)
+
+
+def co_permute_ffn(
+    wu: jnp.ndarray, wg: jnp.ndarray, wd: jnp.ndarray, selected: Sequence[int]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Co-permute the FFN coupled structure so selected channels lead.
+
+    wu, wg: (d, k) — columns permuted; wd: (k, d) — rows permuted.
+    The module output x -> (U(x)*SiLU(G(x))) @ D is invariant.
+    """
+    k = wd.shape[0]
+    perm = trainable_first_permutation(selected, k)
+    return wu[:, perm], wg[:, perm], wd[perm, :], perm
+
+
+def co_permute_mha(
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    selected_heads: Sequence[int],
+    n_heads: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Co-permute the MHA coupled structure so selected heads lead.
+
+    wq/wk/wv: (d, d) columns grouped by head (permuted);
+    wo: (d, d) rows grouped by head (permuted). Attention is computed
+    per-head, so reordering heads consistently preserves the output.
+    """
+    d = wo.shape[0]
+    head_dim = d // n_heads
+    hperm = trainable_first_permutation(selected_heads, n_heads)
+    eperm = expand_head_perm(hperm, head_dim)
+    return wq[:, eperm], wk[:, eperm], wv[:, eperm], wo[eperm, :], hperm
+
+
+def coupled_structures(n_layers: int) -> Dict[str, dict]:
+    """Static description of every coupled structure in the model.
+
+    This is the dependency-graph result of paper Eq. (1)-(2) specialized to
+    the LLaMA block; emitted into meta.json so the rust side can reason
+    about adapters without re-deriving it.
+    """
+    out = {}
+    for i in range(n_layers):
+        out[f"L{i}.mha"] = {
+            "w1": [f"L{i}.wq", f"L{i}.wk", f"L{i}.wv"],
+            "w2": [f"L{i}.wo"],
+            "unit": "head",
+            "activation": "softmax(QK^T)V",
+        }
+        out[f"L{i}.ffn"] = {
+            "w1": [f"L{i}.wu", f"L{i}.wg"],
+            "w2": [f"L{i}.wd"],
+            "unit": "channel",
+            "activation": "U(x)*SiLU(G(x))",
+        }
+    return out

@@ -1,0 +1,156 @@
+"""Channel / head selection strategies for the S2FT family (Sec. 3.2, D).
+
+Five strategies, each choosing which FFN channels (rows of wd) and MHA
+heads (row blocks of wo) become trainable:
+
+  r : S2FT-R  — uniform random (the paper's default / fair baseline)
+  w : S2FT-W  — by weight magnitude  ||W_c||_2
+  a : S2FT-A  — by activation magnitude ||A_c||_2 on a calibration batch
+  s : S2FT-S  — by ||W_c||_2 * ||A_c||_2
+  g : S2FT-G  — by gradient magnitude ||G_c||_2 on a calibration batch
+
+``select_small=True`` picks the smallest-scoring units (the paper finds
+smallest-activation channels hold the least task-specific knowledge and are
+the best place to inject new skills — Table 4).
+
+Scores are computed with jnp so the whole selection can run inside the AOT
+``prepare`` executable when a calibration batch is an input; for random
+selection we thread an explicit seed.
+"""
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def topk_indices(scores: jnp.ndarray, s: int, smallest: bool) -> jnp.ndarray:
+    """Indices of the s largest (or smallest) scores, ascending order."""
+    key = -scores if not smallest else scores
+    idx = jnp.argsort(key)[:s]
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def random_indices(rng: np.random.Generator, total: int, s: int) -> np.ndarray:
+    return np.sort(rng.choice(total, size=s, replace=False)).astype(np.int32)
+
+
+# --- score functions -------------------------------------------------------
+
+
+def weight_score_ffn(wu, wg, wd) -> jnp.ndarray:
+    """Per-channel weight magnitude across the coupled FFN structure."""
+    return (
+        jnp.linalg.norm(wu, axis=0)
+        + jnp.linalg.norm(wg, axis=0)
+        + jnp.linalg.norm(wd, axis=1)
+    )
+
+
+def weight_score_heads(wo, n_heads: int) -> jnp.ndarray:
+    d = wo.shape[0]
+    return jnp.linalg.norm(wo.reshape(n_heads, d // n_heads * wo.shape[1]), axis=1)
+
+
+def activation_score(acts: jnp.ndarray) -> jnp.ndarray:
+    """||A_c||_2 per channel; acts: (..., channels) calibration activations."""
+    flat = acts.reshape(-1, acts.shape[-1])
+    return jnp.linalg.norm(flat, axis=0)
+
+
+def head_score_from_channels(chan_scores: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    return chan_scores.reshape(n_heads, -1).sum(axis=1)
+
+
+def gradient_score(grad: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """||G_c||_2 per channel of a weight gradient (Galore-style: computed
+    layerwise on the calibration batch and immediately discarded)."""
+    other = tuple(i for i in range(grad.ndim) if i != axis)
+    return jnp.sqrt((grad**2).sum(axis=other))
+
+
+# --- end-to-end selection --------------------------------------------------
+
+
+def select_ffn_channels(
+    strategy: str,
+    smallest: bool,
+    s: int,
+    wu,
+    wg,
+    wd,
+    acts=None,
+    grad_wd=None,
+    rng: np.random.Generator | None = None,
+) -> np.ndarray:
+    """Pick s FFN channels of one layer according to ``strategy``."""
+    k = wd.shape[0]
+    if s >= k:
+        return np.arange(k, dtype=np.int32)
+    if strategy == "r":
+        assert rng is not None
+        return random_indices(rng, k, s)
+    if strategy == "w":
+        score = weight_score_ffn(wu, wg, wd)
+    elif strategy == "a":
+        assert acts is not None, "S2FT-A needs calibration activations"
+        score = activation_score(acts)
+    elif strategy == "s":
+        assert acts is not None
+        score = weight_score_ffn(wu, wg, wd) * activation_score(acts)
+    elif strategy == "g":
+        assert grad_wd is not None, "S2FT-G needs calibration gradients"
+        score = gradient_score(grad_wd, axis=0)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return np.asarray(topk_indices(score, s, smallest))
+
+
+def select_mha_heads(
+    strategy: str,
+    smallest: bool,
+    s_heads: int,
+    wo,
+    n_heads: int,
+    acts=None,
+    grad_wo=None,
+    rng: np.random.Generator | None = None,
+) -> np.ndarray:
+    """Pick s_heads attention heads of one layer according to ``strategy``."""
+    if s_heads >= n_heads:
+        return np.arange(n_heads, dtype=np.int32)
+    if strategy == "r":
+        assert rng is not None
+        return random_indices(rng, n_heads, s_heads)
+    if strategy == "w":
+        score = weight_score_heads(wo, n_heads)
+    elif strategy in ("a", "s"):
+        assert acts is not None
+        score = head_score_from_channels(activation_score(acts), n_heads)
+        if strategy == "s":
+            score = score * weight_score_heads(wo, n_heads)
+    elif strategy == "g":
+        assert grad_wo is not None
+        score = head_score_from_channels(gradient_score(grad_wo, axis=0), n_heads)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return np.asarray(topk_indices(score, s_heads, smallest))
+
+
+def budget_to_counts(fractions: Dict[str, float], d_ff: int, n_heads: int) -> Dict[str, int]:
+    """Convert per-projection fractions into integer unit counts.
+
+    wo budget is in heads (rounded, >=1 if fraction > 0); wd/wu/wg budgets
+    are in channels; wq/wk/wv select heads like wo (used by the Fig 4
+    component ablation).
+    """
+    counts = {}
+    for proj, f in fractions.items():
+        if proj in ("wo", "wq", "wk", "wv"):
+            counts[proj] = max(1, round(f * n_heads)) if f > 0 else 0
+        elif proj in ("wd", "wu", "wg"):
+            counts[proj] = max(1, round(f * d_ff)) if f > 0 else 0
+        else:
+            raise ValueError(f"unknown projection {proj!r}")
+    return counts

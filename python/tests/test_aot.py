@@ -1,0 +1,161 @@
+"""AOT pipeline: HLO text artifacts round-trip through the XLA CPU client.
+
+This exercises the same interchange path rust uses (HLO text -> parse ->
+compile -> execute), so a failure here localizes bridge bugs before
+touching rust.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+from jax._src.interpreters import mlir as jmlir
+from jax._src.lib.mlir import ir
+from jaxlib._jax import DeviceList
+
+from compile import model as M
+from compile.configs import MODELS, default_methods
+from compile.aot import to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "meta.json"))
+
+
+def execute_hlo_text(text: str, args):
+    """Parse HLO text and execute on the CPU PJRT client (rust-equivalent)."""
+    hm = xc._xla.hlo_module_from_text(text)
+    mlir_bc = xc._xla.mlir.hlo_to_stablehlo(hm.as_serialized_hlo_module_proto())
+    with jmlir.make_ir_context():
+        mod = ir.Module.parse(mlir_bc)
+        backend = jax.devices()[0].client
+        exe = backend.compile_and_load(mod, DeviceList(tuple(jax.devices())))
+        out = exe.execute_sharded([jnp.asarray(a) for a in args])
+        return [np.asarray(a[0]) for a in out.disassemble_into_single_device_arrays()]
+
+
+def test_to_hlo_text_roundtrip_numerics():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(s, s))
+    assert "ENTRY" in text
+    x = np.array([[1, 2], [3, 4]], np.float32)
+    y = np.ones((2, 2), np.float32)
+    (got,) = execute_hlo_text(text, [x, y])
+    np.testing.assert_allclose(got, x @ y + 2.0)
+
+
+def test_hlo_text_parses_for_pallas_lowering():
+    """interpret=True Pallas lowers to plain HLO the 0.5.1 parser accepts."""
+    from compile.kernels.partial_update import matmul
+
+    def fn(x, y):
+        return (matmul(x, y),)
+
+    s = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(s, s))
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 8)).astype(np.float32)
+    y = rng.standard_normal((8, 8)).astype(np.float32)
+    (got,) = execute_hlo_text(text, [x, y])
+    np.testing.assert_allclose(got, x @ y, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+def test_meta_json_schema():
+    meta = json.load(open(os.path.join(ART, "meta.json")))
+    assert "models" in meta and "artifacts" in meta
+    assert "tiny" in meta["models"]
+    tiny = meta["models"]["tiny"]
+    assert tiny["param_count"] == MODELS["tiny"].param_count()
+    for mname, m in tiny["methods"].items():
+        for sect in ("trainable", "frozen", "perms", "aux", "opt"):
+            assert sect in m, (mname, sect)
+    for aname, art in meta["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, art["file"])), aname
+        for n, shape, dt in art["inputs"] + art["outputs"]:
+            assert dt in ("f32", "i32")
+            assert isinstance(shape, list)
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+@pytest.mark.parametrize("method", ["s2ft", "s2ft-pallas", "lora", "fullft"])
+def test_train_artifact_matches_eager(method):
+    """Execute train_tiny_* via the HLO-text path and compare against the
+    eager train_step — the definitive L2<->artifact check."""
+    meta = json.load(open(os.path.join(ART, "meta.json")))
+    name = f"train_tiny_{method}_2x32"
+    if name not in meta["artifacts"]:
+        pytest.skip(f"{name} not built")
+    art = meta["artifacts"][name]
+    text = open(os.path.join(ART, art["file"])).read()
+
+    cfg = MODELS["tiny"]
+    mc = default_methods(cfg)[method]
+    base = M.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (2, 32), 0, cfg.vocab).astype(jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((2, 32), jnp.float32)
+    trn, frz, perms = M.prepare_method(cfg, mc, base, jnp.int32(5), tokens,
+                                       targets, mask)
+    oshapes = M.opt_state_shapes(cfg, mc)
+    om = {k: jnp.zeros(v, jnp.float32) for k, v in oshapes.items()}
+    ov = {k: jnp.zeros(v, jnp.float32) for k, v in oshapes.items()}
+
+    nt, nm, nv, loss = M.train_step(cfg, mc, trn, frz, om, ov, jnp.float32(0),
+                                    tokens, targets, mask, {})
+
+    pools = dict(trn)
+    pools.update(frz)
+    pools.update({f"m.{k}": v for k, v in om.items()})
+    pools.update({f"v.{k}": v for k, v in ov.items()})
+    pools["step"] = jnp.float32(0)
+    pools["tokens"], pools["targets"], pools["loss_mask"] = tokens, targets, mask
+    args = [np.asarray(pools[n]) for n, _, _ in art["inputs"]]
+    outs = execute_hlo_text(text, args)
+    out_names = [n for n, _, _ in art["outputs"]]
+    got_loss = float(outs[out_names.index("loss")])
+    np.testing.assert_allclose(got_loss, float(loss), rtol=1e-4, atol=1e-5)
+    k0 = sorted(trn)[0]
+    got0 = outs[out_names.index(f"new.{k0}")]
+    np.testing.assert_allclose(got0, np.asarray(nt[k0]), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.skipif(not _have_artifacts(), reason="run `make artifacts` first")
+def test_prepare_then_merge_artifacts_roundtrip():
+    """prepare -> merge through the artifacts reproduces the base params."""
+    meta = json.load(open(os.path.join(ART, "meta.json")))
+    pname, mname = "prepare_tiny_s2ft_2x32", "merge_tiny_s2ft"
+    if pname not in meta["artifacts"]:
+        pytest.skip("tiny s2ft artifacts not built")
+    cfg = MODELS["tiny"]
+    base = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((2, 32), jnp.int32)
+    mask = jnp.ones((2, 32), jnp.float32)
+
+    part = meta["artifacts"][pname]
+    pools = dict(base)
+    pools.update({"seed": jnp.int32(5), "tokens": tokens, "targets": tokens,
+                  "loss_mask": mask})
+    args = [np.asarray(pools[n]) for n, _, _ in part["inputs"]]
+    pouts = execute_hlo_text(open(os.path.join(ART, part["file"])).read(), args)
+    pout_names = [n for n, _, _ in part["outputs"]]
+
+    mart = meta["artifacts"][mname]
+    by_name = dict(zip(pout_names, pouts))
+    margs = [by_name[n] for n, _, _ in mart["inputs"]]
+    mouts = execute_hlo_text(open(os.path.join(ART, mart["file"])).read(), margs)
+    mout_names = [n for n, _, _ in mart["outputs"]]
+    for n, got in zip(mout_names, mouts):
+        np.testing.assert_allclose(got, np.asarray(base[n]), rtol=2e-4, atol=2e-4,
+                                   err_msg=n)

@@ -1,0 +1,100 @@
+"""Config invariants: parameter matching across methods and sweep variants."""
+
+import numpy as np
+import pytest
+
+from compile.configs import MODELS, MethodConfig, default_methods
+from compile import model as M
+from compile.aot import experiment_extras
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_model_dims_consistent(name):
+    cfg = MODELS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert cfg.head_dim * cfg.n_heads == cfg.d_model
+    assert cfg.param_count() > 0
+    shapes = M.param_shapes(cfg)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == cfg.param_count()
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_s2ft_budget_parameter_matched_to_lora(name):
+    """The paper keeps S2FT's trainable count comparable to LoRA's."""
+    cfg = MODELS[name]
+    methods = default_methods(cfg)
+    counts = {}
+    for tag in ("lora", "s2ft"):
+        trn, _, _, _ = M.method_layout(cfg, methods[tag])
+        counts[tag] = sum(int(np.prod(s)) for s in trn.values())
+    ratio = counts["s2ft"] / counts["lora"]
+    assert 0.5 < ratio < 2.0, counts
+
+
+def test_method_tags_unique():
+    cfg = MODELS["small"]
+    methods = dict(default_methods(cfg))
+    methods.update(experiment_extras(cfg))
+    assert len(methods) == len(set(methods))
+    # every extra variant produces a valid layout
+    for tag, mc in methods.items():
+        trn, frz, perms, aux = M.method_layout(cfg, mc)
+        assert trn, tag
+        total = sum(int(np.prod(s)) for s in trn.values())
+        assert total > 0, tag
+
+
+def test_fig2_ratio_sweep_spans_decades():
+    cfg = MODELS["small"]
+    extras = experiment_extras(cfg)
+    linear = cfg.n_layers * (4 * cfg.d_model**2 + 3 * cfg.d_model * cfg.d_ff)
+
+    def tensor_ratio(tag):
+        trn, _, _, _ = M.method_layout(cfg, extras[tag])
+        return sum(int(np.prod(s)) for s in trn.values()) / linear
+
+    # LoRA's ranks track the requested decades
+    l10, l1, l01 = (tensor_ratio(f"lora-{t}") for t in ("p10", "p1", "p01"))
+    assert 0.05 < l10 < 0.2
+    assert 0.005 < l1 < 0.02
+    assert l01 < 0.005
+    # SpFT's *effective* ratio is the bernoulli mask density (the delta
+    # tensors are full-size — unstructured sparsity cannot shrink its
+    # storage, which is exactly the paper's efficiency complaint)
+    assert extras["spft-p10"].spft_ratio == pytest.approx(0.10)
+    assert extras["spft-p1"].spft_ratio == pytest.approx(0.01)
+    assert extras["spft-p01"].spft_ratio == pytest.approx(0.001)
+    assert tensor_ratio("spft-p10") == pytest.approx(1.0)
+
+
+def test_fig4_components_parameter_matched():
+    cfg = MODELS["small"]
+    extras = experiment_extras(cfg)
+    sizes = {}
+    for proj in "qkvougd":
+        tag = f"s2ft-{proj}only"
+        trn, _, _, _ = M.method_layout(cfg, extras[tag])
+        sizes[tag] = sum(int(np.prod(s)) for s in trn.values())
+    lo, hi = min(sizes.values()), max(sizes.values())
+    # head/channel rounding allows some slack but budgets stay comparable
+    assert hi / lo < 2.5, sizes
+
+
+def test_tab4_strategy_variants_cover_all():
+    cfg = MODELS["small"]
+    extras = experiment_extras(cfg)
+    for strat in "wasg":
+        for side in "SL":
+            tag = f"s2ft-{strat}{side}"
+            assert tag in extras, tag
+            assert extras[tag].selection == strat
+            assert extras[tag].select_small == (side == "S")
+
+
+def test_method_tag_roundtrip():
+    m = MethodConfig("s2ft", s2ft_fractions={"wo": 0.1, "wd": 0.1},
+                     selection="a", select_small=True)
+    assert m.tag() == "s2ft-aS"
+    m2 = MethodConfig("s2ft", s2ft_fractions={"wd": 0.1}, use_pallas=True)
+    assert "pallas" in m2.tag()

@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+The hypothesis sweep drives shapes/tile sizes; assert_allclose against the
+oracle is THE correctness signal for the kernel that every train artifact
+embeds (s2ft-pallas variants).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import partial_update as pk
+from compile.kernels import ref
+
+RTOL = ATOL = 2e-4
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 97),
+    k=st.integers(1, 97),
+    n=st.integers(1, 97),
+    tile=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, tile, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = pk.matmul(jnp.asarray(x), jnp.asarray(w), tm=tile, tn=tile, tk=tile)
+    np.testing.assert_allclose(np.asarray(got), ref.matmul_ref(x, w),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(2, 96),
+    n=st.integers(1, 64),
+    frac=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_s2ft_linear_forward(m, k, n, frac, seed):
+    rng = np.random.default_rng(seed)
+    s = max(1, min(k - 1, int(frac * k)))
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    wt, wf = jnp.asarray(w[:s]), jnp.asarray(w[s:])
+    got = pk.s2ft_linear(jnp.asarray(x), wt, wf)
+    want = ref.s2ft_linear_ref(jnp.asarray(x), wt, wf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 48),
+    k=st.integers(4, 80),
+    n=st.integers(2, 48),
+    frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_s2ft_linear_partial_backprop(m, k, n, frac, seed):
+    """The custom VJP computes dx and dw_t exactly (and nothing for w_f)."""
+    rng = np.random.default_rng(seed)
+    s = max(1, min(k - 1, int(frac * k)))
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    dy = rand(rng, m, n)
+    wt, wf = jnp.asarray(w[:s]), jnp.asarray(w[s:])
+    xj = jnp.asarray(x)
+
+    def f(x_, wt_, wf_):
+        return (pk.s2ft_linear(x_, wt_, wf_) * jnp.asarray(dy)).sum()
+
+    dx, dwt, dwf = jax.grad(f, argnums=(0, 1, 2))(xj, wt, wf)
+    dx_r, dwt_r = ref.s2ft_linear_grads_ref(xj, wt, wf, jnp.asarray(dy))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(dwt), np.asarray(dwt_r), rtol=RTOL, atol=ATOL)
+    # partial backprop: the frozen slice receives an exactly-zero cotangent
+    assert np.all(np.asarray(dwf) == 0.0)
+
+
+def test_s2ft_linear_nd_shapes():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 5, 24)
+    w = rand(rng, 24, 12)
+    out = pk.s2ft_linear_nd(jnp.asarray(x), jnp.asarray(w[:7]), jnp.asarray(w[7:]))
+    assert out.shape == (2, 5, 12)
+    want = x.reshape(-1, 24) @ w
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 12), want,
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_rejects_bad_contraction():
+    with pytest.raises(AssertionError):
+        pk.matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+
+
+def test_vmem_estimate_positive_and_mxu_sized():
+    # 128x128 f32 tiles: 3 resident + 2 double-buffered < 16MB VMEM
+    b = pk.vmem_bytes(128, 128, 128)
+    assert 0 < b < 16 * 2**20
+
+
+def test_matmul_inside_jit():
+    """Raw kernel composes with jit (autodiff goes through s2ft_linear's
+    custom VJP — the accumulation grid itself is not transposable)."""
+    rng = np.random.default_rng(3)
+    x, w = rand(rng, 9, 17), rand(rng, 17, 5)
+
+    @jax.jit
+    def f(x_, w_):
+        return pk.matmul(x_, w_)
+
+    got = f(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=RTOL, atol=ATOL)
+
+
+def test_grad_via_custom_vjp_inside_jit():
+    """jit(grad(s2ft_linear)) — the exact composition aot.py lowers."""
+    rng = np.random.default_rng(4)
+    x, w = rand(rng, 9, 17), rand(rng, 17, 5)
+    wt, wf = jnp.asarray(w[:6]), jnp.asarray(w[6:])
+
+    @jax.jit
+    def g(x_, wt_):
+        return jax.grad(lambda a, b: pk.s2ft_linear(a, b, wf).sum(),
+                        argnums=(0, 1))(x_, wt_)
+
+    dx, dwt = g(jnp.asarray(x), wt)
+    np.testing.assert_allclose(np.asarray(dx), np.ones((9, 5)) @ w.T,
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(dwt), x[:, :6].T @ np.ones((9, 5)),
+                               rtol=RTOL, atol=ATOL)

@@ -1,0 +1,98 @@
+"""Permutation invariance of coupled structures (paper Sec. 3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import permute as P
+from compile import model as M
+from compile.configs import MODELS
+
+
+def test_trainable_first_permutation_basic():
+    perm = P.trainable_first_permutation([3, 1], 5)
+    assert perm.tolist() == [3, 1, 0, 2, 4]
+    inv = P.invert_permutation(perm)
+    assert np.array_equal(perm[inv], np.arange(5))
+    assert np.array_equal(inv[perm], np.arange(5))
+
+
+@settings(max_examples=25, deadline=None)
+@given(total=st.integers(2, 64), seed=st.integers(0, 10**6))
+def test_permutation_roundtrip(total, seed):
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(1, total))
+    selected = rng.choice(total, s, replace=False).tolist()
+    perm = P.trainable_first_permutation(selected, total)
+    assert sorted(perm.tolist()) == list(range(total))
+    assert perm[:s].tolist() == selected
+    inv = P.invert_permutation(perm)
+    x = rng.standard_normal(total)
+    np.testing.assert_array_equal(x[perm][inv], x)
+
+
+def test_expand_head_perm():
+    e = P.expand_head_perm(np.array([2, 0, 1], np.int32), 2)
+    assert e.tolist() == [4, 5, 0, 1, 2, 3]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_ffn_co_permutation_invariance(seed):
+    """U(x)*SiLU(G(x)) @ D is invariant under channel co-permutation."""
+    rng = np.random.default_rng(seed)
+    d, k, n = 8, 12, 6
+    wu = rng.standard_normal((d, k)).astype(np.float32)
+    wg = rng.standard_normal((d, k)).astype(np.float32)
+    wd = rng.standard_normal((k, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    s = int(rng.integers(1, k))
+    selected = rng.choice(k, s, replace=False).tolist()
+    wu2, wg2, wd2, perm = P.co_permute_ffn(jnp.asarray(wu), jnp.asarray(wg),
+                                           jnp.asarray(wd), selected)
+
+    def ffn(wu_, wg_, wd_):
+        act = (x @ np.asarray(wu_)) * jax.nn.silu(x @ np.asarray(wg_))
+        return np.asarray(act) @ np.asarray(wd_)
+
+    np.testing.assert_allclose(ffn(wu, wg, wd), ffn(wu2, wg2, wd2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_mha_co_permutation_invariance_full_model(seed):
+    """Whole-model check: permuting heads+channels of every layer leaves
+    the logits unchanged (the property S2FT's prepare step relies on)."""
+    cfg = MODELS["tiny"]
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    base = M.init_params(cfg, key)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    ref_logits = M.forward_base(cfg, base, tokens)
+
+    permuted = dict(base)
+    for i in range(cfg.n_layers):
+        heads = rng.permutation(cfg.n_heads)[: cfg.n_heads // 2].tolist()
+        wq, wk, wv, wo, _ = P.co_permute_mha(
+            base[f"L{i}.wq"], base[f"L{i}.wk"], base[f"L{i}.wv"],
+            base[f"L{i}.wo"], heads, cfg.n_heads,
+        )
+        permuted.update({f"L{i}.wq": wq, f"L{i}.wk": wk, f"L{i}.wv": wv,
+                         f"L{i}.wo": wo})
+        chans = rng.permutation(cfg.d_ff)[: cfg.d_ff // 3].tolist()
+        wu, wg, wd, _ = P.co_permute_ffn(
+            permuted[f"L{i}.wu"], permuted[f"L{i}.wg"], permuted[f"L{i}.wd"], chans
+        )
+        permuted.update({f"L{i}.wu": wu, f"L{i}.wg": wg, f"L{i}.wd": wd})
+    got = M.forward_base(cfg, permuted, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_coupled_structures_inventory():
+    c = P.coupled_structures(3)
+    assert len(c) == 6
+    assert c["L1.mha"]["w2"] == ["L1.wo"]
+    assert c["L2.ffn"]["w1"] == ["L2.wu", "L2.wg"]

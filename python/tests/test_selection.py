@@ -1,0 +1,108 @@
+"""Selection strategies (S2FT-R/W/A/S/G) unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import selection as sel
+
+
+def test_topk_largest_and_smallest():
+    scores = jnp.asarray([3.0, 1.0, 4.0, 1.5, 5.0])
+    assert sel.topk_indices(scores, 2, smallest=False).tolist() == [2, 4]
+    assert sel.topk_indices(scores, 2, smallest=True).tolist() == [1, 3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(total=st.integers(1, 100), seed=st.integers(0, 10**6))
+def test_random_indices_valid(total, seed):
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(1, total + 1))
+    idx = sel.random_indices(rng, total, s)
+    assert len(idx) == s
+    assert len(set(idx.tolist())) == s
+    assert idx.tolist() == sorted(idx.tolist())
+    assert all(0 <= i < total for i in idx)
+
+
+def test_weight_score_ffn_shape():
+    d, k = 6, 10
+    rng = np.random.default_rng(0)
+    score = sel.weight_score_ffn(
+        jnp.asarray(rng.standard_normal((d, k)), ),
+        jnp.asarray(rng.standard_normal((d, k))),
+        jnp.asarray(rng.standard_normal((k, d))),
+    )
+    assert score.shape == (k,)
+    assert np.all(np.asarray(score) > 0)
+
+
+def test_activation_score_identifies_hot_channel():
+    acts = np.ones((4, 7, 5), np.float32) * 0.01
+    acts[..., 3] = 10.0
+    score = sel.activation_score(jnp.asarray(acts))
+    assert int(np.argmax(np.asarray(score))) == 3
+    # smallest-activation selection avoids the hot channel (paper Table 4)
+    idx = sel.topk_indices(score, 4, smallest=True)
+    assert 3 not in idx.tolist()
+
+
+def test_head_score_from_channels():
+    chan = jnp.asarray(np.array([1, 1, 5, 5, 0, 0], np.float32))
+    hs = sel.head_score_from_channels(chan, 3)
+    assert np.asarray(hs).tolist() == [2.0, 10.0, 0.0]
+
+
+def test_gradient_score_axes():
+    g = np.zeros((4, 3), np.float32)
+    g[2, :] = 3.0
+    s0 = sel.gradient_score(jnp.asarray(g), axis=0)  # per-row
+    assert s0.shape == (4,)
+    assert int(np.argmax(np.asarray(s0))) == 2
+
+
+def test_select_ffn_channels_strategies():
+    rng = np.random.default_rng(1)
+    d, k = 8, 16
+    wu = jnp.asarray(rng.standard_normal((d, k)).astype(np.float32))
+    wg = jnp.asarray(rng.standard_normal((d, k)).astype(np.float32))
+    wd = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    acts = jnp.asarray(rng.standard_normal((3, 5, k)).astype(np.float32))
+    grad = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    for strat in "rwasg":
+        idx = sel.select_ffn_channels(strat, True, 4, wu, wg, wd, acts=acts,
+                                      grad_wd=grad, rng=rng)
+        assert len(idx) == 4 and len(set(idx.tolist())) == 4
+
+    with pytest.raises(ValueError):
+        sel.select_ffn_channels("x", True, 4, wu, wg, wd, rng=rng)
+
+
+def test_select_mha_heads_strategies():
+    rng = np.random.default_rng(2)
+    d, h = 16, 4
+    wo = jnp.asarray(rng.standard_normal((d, d)).astype(np.float32))
+    acts = jnp.asarray(rng.standard_normal((2, 3, d)).astype(np.float32))
+    grad = jnp.asarray(rng.standard_normal((d, d)).astype(np.float32))
+    for strat in "rwasg":
+        idx = sel.select_mha_heads(strat, False, 2, wo, h, acts=acts,
+                                   grad_wo=grad, rng=rng)
+        assert len(idx) == 2 and all(0 <= i < h for i in idx.tolist())
+
+
+def test_select_full_budget_returns_all():
+    rng = np.random.default_rng(3)
+    wd = jnp.zeros((5, 4))
+    idx = sel.select_ffn_channels("r", True, 5, jnp.zeros((4, 5)), jnp.zeros((4, 5)),
+                                  wd, rng=rng)
+    assert idx.tolist() == [0, 1, 2, 3, 4]
+
+
+def test_budget_to_counts():
+    c = sel.budget_to_counts({"wo": 0.25, "wd": 0.1}, d_ff=100, n_heads=8)
+    assert c == {"wo": 2, "wd": 10}
+    c = sel.budget_to_counts({"wo": 0.01}, d_ff=100, n_heads=8)
+    assert c["wo"] == 1  # nonzero fraction floors at one head
+    with pytest.raises(ValueError):
+        sel.budget_to_counts({"bogus": 0.5}, 10, 2)

@@ -1,0 +1,82 @@
+//! L3 coordinator micro-benchmarks: the pure-rust hot paths that must
+//! never bottleneck serving — batcher decisions, adapter store switches,
+//! tokenizer, batch construction, JSON parse of meta.json.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use repro::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use repro::data::{supervised_batch, Example, Tokenizer};
+use repro::runtime::Tensor;
+use repro::serve::AdapterBatcher;
+use repro::util::bench::{black_box, BenchSuite};
+use repro::util::json::Json;
+use repro::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("coordinator");
+
+    // batcher decision latency at queue depth 256 over 32 adapters
+    suite.bench("batcher/decide_depth256", || {
+        let mut b: AdapterBatcher<u32> = AdapterBatcher::new(8, Duration::from_millis(5));
+        for i in 0..256u32 {
+            b.push(format!("a{}", i % 32), i);
+        }
+        while b.next_batch().is_some() {}
+        black_box(b.len());
+    });
+
+    // adapter switch through the store (small-model-like geometry)
+    let d = 256usize;
+    let n_layers = 4usize;
+    let mut rng = Rng::seed(1);
+    let mk_adapter = |rng: &mut Rng| {
+        let layers = (0..n_layers)
+            .map(|_| S2ftLayerDelta {
+                wo_rows: rng.choose(d, 32),
+                wo_delta: (0..32 * d).map(|_| rng.normal_f32()).collect(),
+                wd_rows: rng.choose(704, 22),
+                wd_delta: (0..22 * d).map(|_| rng.normal_f32()).collect(),
+            })
+            .collect();
+        AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d })
+    };
+    let mut store = AdapterStore::new();
+    for i in 0..16 {
+        store.insert(format!("a{i}"), mk_adapter(&mut rng));
+    }
+    let mut params: HashMap<String, Tensor> = HashMap::new();
+    for i in 0..n_layers {
+        params.insert(format!("L{i}.wo"), Tensor::zeros(vec![d, d]));
+        params.insert(format!("L{i}.wd"), Tensor::zeros(vec![704, d]));
+    }
+    let snapshot = params.clone();
+    let mut flip = 0usize;
+    suite.bench("store/switch_16_adapters", || {
+        flip += 1;
+        store
+            .switch_to(&format!("a{}", flip % 16), &mut params, &snapshot)
+            .unwrap();
+    });
+
+    // tokenizer + batch building (the router-side per-request cost)
+    let tk = Tokenizer;
+    let examples: Vec<Example> = (0..8)
+        .map(|i| Example {
+            prompt: format!("q: is entity{i} blue and big and living in the cave?"),
+            answer: "yes".into(),
+        })
+        .collect();
+    suite.bench("data/supervised_batch_8x64", || {
+        black_box(supervised_batch(&tk, &examples, 8, 64));
+    });
+
+    // meta.json parse (startup cost)
+    if let Ok(text) = std::fs::read_to_string("artifacts/meta.json") {
+        suite.bench("json/parse_meta", || {
+            black_box(Json::parse(&text).unwrap());
+        });
+    }
+
+    suite.save();
+}

@@ -1,0 +1,61 @@
+//! Figure 5 (bench form): end-to-end train-step latency per method on the
+//! `small` model through the full PJRT stack. The `repro experiment fig5`
+//! harness covers the `base`-model sweep with memory accounting; this
+//! bench gives tight per-step latency distributions for regressions.
+
+use repro::data::{lm_batch, pretrain_corpus, Tokenizer};
+use repro::runtime::{Runtime, Tensor};
+use repro::train::Trainer;
+use repro::util::bench::BenchSuite;
+use repro::util::rng::Rng;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping fig5_training bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let model = "small";
+    let mm = rt.artifacts.model(model).expect("small model meta");
+    let (b, t) = mm.default_batch();
+    let init = rt.load(&format!("init_{model}")).expect("init artifact");
+    let outs = init.run(&[Tensor::scalar_i32(1)]).expect("init run");
+    let base: std::collections::HashMap<String, Tensor> = init
+        .spec
+        .outputs
+        .iter()
+        .map(|s| s.name.clone())
+        .zip(outs)
+        .collect();
+
+    let tk = Tokenizer;
+    let corpus = pretrain_corpus(3, 200_000);
+    let mut suite = BenchSuite::new("fig5_training").slow();
+    println!("Fig 5 (bench): one optimizer step, model=small {b}x{t}\n");
+    for method in ["fullft", "lora", "dora", "spft", "lisa", "galore", "s2ft", "s2ft-pallas"] {
+        if mm.methods.get(method).is_none() {
+            continue;
+        }
+        let mut rng = Rng::seed(5);
+        let calib = lm_batch(&tk, &corpus, &mut rng, b, t);
+        let mut trainer = match Trainer::new(&rt, model, method, &base, 3, &calib) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("  {method}: {e:#}");
+                continue;
+            }
+        };
+        // compile + warm
+        let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+        trainer.train_step(&batch).expect("warmup step");
+        suite.bench(&format!("train_step/{method}"), || {
+            let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+            trainer.train_step(&batch).expect("train step");
+        });
+        rt.evict(&format!("train_{model}_{method}_{b}x{t}"));
+    }
+    println!("\nPaper shape: s2ft < lora/dora < fullft in step latency.");
+    suite.save();
+}

@@ -1,0 +1,60 @@
+//! Figure 6a/b: adapter-switch latency on a single linear layer.
+//!
+//! LoRA switch = ΔW GEMM (k×r @ r×d) + dense add — O(r·d·k), quadratic in
+//! the layer dimension. S²FT switch = scatter_add over s rows — O(s·d),
+//! near-constant in k. Sweep the base dimension as the paper does
+//! (sparsity 32 vs rank 16). The "CPU / IO-bound" panel (6b) is modeled by
+//! also reporting bytes touched per switch.
+
+use repro::linalg::Mat;
+use repro::sparsity::{scatter_add_rows, scatter_sub_rows};
+use repro::util::bench::{black_box, BenchSuite};
+use repro::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig6_switch");
+    let rank = 16usize;
+    let sparsity = 32usize;
+    println!("Fig 6a/b: adapter switch on one (d x d) layer; LoRA r={rank}, S2FT s={sparsity}\n");
+
+    for d in [512usize, 1024, 2048, 4096] {
+        let mut rng = Rng::seed(d as u64);
+        let mut w = Mat::randn(d, d, &mut rng);
+        // LoRA factors
+        let a = Mat::randn(d, rank, &mut rng);
+        let b = Mat::randn(rank, d, &mut rng).scale(1e-3);
+        // S2FT delta
+        let rows = rng.choose(d, sparsity);
+        let delta: Vec<f32> = (0..sparsity * d).map(|_| rng.normal_f32() * 1e-3).collect();
+
+        suite.bench(&format!("lora_switch/d={d}"), || {
+            // fuse: ΔW = A@B, W += ΔW ; unfuse: W -= ΔW
+            let dw = a.matmul(&b);
+            for (x, y) in w.data.iter_mut().zip(&dw.data) {
+                *x += *y;
+            }
+            for (x, y) in w.data.iter_mut().zip(&dw.data) {
+                *x -= *y;
+            }
+            black_box(w.data[0]);
+        });
+
+        suite.bench(&format!("s2ft_switch/d={d}"), || {
+            scatter_add_rows(&mut w.data, d, &rows, &delta);
+            scatter_sub_rows(&mut w.data, d, &rows, &delta);
+            black_box(w.data[0]);
+        });
+
+        // IO model (Fig 6b): bytes written per switch
+        let lora_bytes = 2 * d * d * 4;
+        let s2ft_bytes = 2 * sparsity * d * 4;
+        println!(
+            "   d={d}: bytes touched per switch  lora {:>12}  s2ft {:>10}  ({}x less IO)",
+            lora_bytes,
+            s2ft_bytes,
+            lora_bytes / s2ft_bytes
+        );
+    }
+    println!("\nPaper shape: LoRA scales ~quadratically with d; S²FT stays near-constant.");
+    suite.save();
+}

@@ -1,0 +1,375 @@
+//! Adapter lifecycle (paper §6.2): S²FT weight deltas decompose into
+//! `ΔW = U Vᵀ` with `U` a column-selection matrix, so an adapter is just
+//! `(row indices, dense delta rows)` per layer. This enables:
+//!
+//! * **extraction** — diff merged vs base weights at the selected rows,
+//! * **switch** — fuse/unfuse via `scatter_add` (O(s·d), no GEMM; Fig 6a/b),
+//! * **fusion** — weighted combination of adapters (Table 5),
+//! * **parallelism** — batched multi-adapter serving on a single layer
+//!   (Fig 6c), implemented in [`parallel`].
+
+pub mod parallel;
+mod persist;
+mod store;
+
+pub use persist::{load_adapter, save_adapter};
+pub use store::{AdapterStore, AnyAdapter};
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+use crate::runtime::{MethodMeta, ModelMeta, Tensor};
+use crate::sparsity;
+
+/// Per-layer S²FT delta: element-level row indices + dense delta rows.
+#[derive(Debug, Clone, Default)]
+pub struct S2ftLayerDelta {
+    /// row indices into wo (element level, head blocks) — may be empty
+    pub wo_rows: Vec<usize>,
+    /// (wo_rows.len(), d_model) row-major
+    pub wo_delta: Vec<f32>,
+    /// row indices into wd (channel level)
+    pub wd_rows: Vec<usize>,
+    /// (wd_rows.len(), d_model) row-major
+    pub wd_delta: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct S2ftAdapter {
+    pub layers: Vec<S2ftLayerDelta>,
+    pub d_model: usize,
+}
+
+impl S2ftAdapter {
+    /// Extract from base + fine-tuned (merged) weights using the prepare
+    /// permutations. Only the selected rows can differ; we assert that by
+    /// construction of the trainer and store exactly those rows.
+    pub fn extract(
+        mm: &ModelMeta,
+        method: &MethodMeta,
+        perms: &HashMap<String, Tensor>,
+        base: &HashMap<String, Tensor>,
+        merged: &HashMap<String, Tensor>,
+    ) -> Result<S2ftAdapter> {
+        let d = mm.dims.d_model;
+        let hd = mm.head_dim();
+        let counts = s2ft_counts(mm, method);
+        let mut layers = Vec::with_capacity(mm.dims.n_layers);
+        for i in 0..mm.dims.n_layers {
+            let mut delta = S2ftLayerDelta::default();
+            if let (Some(heads), Some(perm)) =
+                (counts.get("wo"), perms.get(&format!("L{i}.head_perm")))
+            {
+                let sel = sparsity::selected_units(perm.as_i32()?, *heads);
+                delta.wo_rows = sparsity::expand_head_perm(&sel, hd);
+                delta.wo_delta = diff_rows(
+                    base[&format!("L{i}.wo")].as_f32()?,
+                    merged[&format!("L{i}.wo")].as_f32()?,
+                    d,
+                    &delta.wo_rows,
+                );
+            }
+            if let (Some(chans), Some(perm)) =
+                (counts.get("wd"), perms.get(&format!("L{i}.chan_perm")))
+            {
+                delta.wd_rows = sparsity::selected_units(perm.as_i32()?, *chans);
+                delta.wd_delta = diff_rows(
+                    base[&format!("L{i}.wd")].as_f32()?,
+                    merged[&format!("L{i}.wd")].as_f32()?,
+                    d,
+                    &delta.wd_rows,
+                );
+            }
+            layers.push(delta);
+        }
+        Ok(S2ftAdapter { layers, d_model: d })
+    }
+
+    /// Fuse into base-layout weights in place (scatter_add — Fig 6a).
+    pub fn apply(&self, params: &mut HashMap<String, Tensor>) -> Result<()> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if !l.wo_rows.is_empty() {
+                let w = params
+                    .get_mut(&format!("L{i}.wo"))
+                    .ok_or_else(|| anyhow!("missing L{i}.wo"))?;
+                sparsity::scatter_add_rows(w.as_f32_mut()?, self.d_model, &l.wo_rows, &l.wo_delta);
+            }
+            if !l.wd_rows.is_empty() {
+                let w = params
+                    .get_mut(&format!("L{i}.wd"))
+                    .ok_or_else(|| anyhow!("missing L{i}.wd"))?;
+                sparsity::scatter_add_rows(w.as_f32_mut()?, self.d_model, &l.wd_rows, &l.wd_delta);
+            }
+        }
+        Ok(())
+    }
+
+    /// Unfuse (scatter_sub) — the adapter-switch "unload" half.
+    pub fn remove(&self, params: &mut HashMap<String, Tensor>) -> Result<()> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if !l.wo_rows.is_empty() {
+                let w = params.get_mut(&format!("L{i}.wo")).unwrap();
+                sparsity::scatter_sub_rows(w.as_f32_mut()?, self.d_model, &l.wo_rows, &l.wo_delta);
+            }
+            if !l.wd_rows.is_empty() {
+                let w = params.get_mut(&format!("L{i}.wd")).unwrap();
+                sparsity::scatter_sub_rows(w.as_f32_mut()?, self.d_model, &l.wd_rows, &l.wd_delta);
+            }
+        }
+        Ok(())
+    }
+
+    /// Weighted fusion of adapters (Table 5). Deltas are combined over the
+    /// union of rows; overlapping rows interfere (the paper's point about
+    /// overlapped vs non-overlapped selection).
+    pub fn fuse(adapters: &[(&S2ftAdapter, f32)]) -> Result<S2ftAdapter> {
+        let first = adapters.first().ok_or_else(|| anyhow!("no adapters"))?;
+        let d = first.0.d_model;
+        let n_layers = first.0.layers.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let mut wo: HashMap<usize, Vec<f32>> = HashMap::new();
+            let mut wd: HashMap<usize, Vec<f32>> = HashMap::new();
+            for (a, w) in adapters {
+                let l = &a.layers[i];
+                accumulate(&mut wo, &l.wo_rows, &l.wo_delta, d, *w);
+                accumulate(&mut wd, &l.wd_rows, &l.wd_delta, d, *w);
+            }
+            layers.push(S2ftLayerDelta {
+                wo_rows: sorted_keys(&wo),
+                wo_delta: flatten(&wo),
+                wd_rows: sorted_keys(&wd),
+                wd_delta: flatten(&wd),
+            });
+        }
+        Ok(S2ftAdapter { layers, d_model: d })
+    }
+
+    /// Fraction of selected rows shared with another adapter (0 = fully
+    /// non-overlapping, the Table 5 "non-overlap" regime).
+    pub fn overlap_with(&self, other: &S2ftAdapter) -> f64 {
+        let mut shared = 0usize;
+        let mut total = 0usize;
+        for (a, b) in self.layers.iter().zip(&other.layers) {
+            let bs: std::collections::HashSet<_> = b.wd_rows.iter().collect();
+            shared += a.wd_rows.iter().filter(|r| bs.contains(r)).count();
+            total += a.wd_rows.len();
+            let bo: std::collections::HashSet<_> = b.wo_rows.iter().collect();
+            shared += a.wo_rows.iter().filter(|r| bo.contains(r)).count();
+            total += a.wo_rows.len();
+        }
+        shared as f64 / total.max(1) as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.wo_delta.len() + l.wd_delta.len()) * 4 + (l.wo_rows.len() + l.wd_rows.len()) * 8)
+            .sum()
+    }
+}
+
+fn accumulate(
+    acc: &mut HashMap<usize, Vec<f32>>,
+    rows: &[usize],
+    delta: &[f32],
+    d: usize,
+    w: f32,
+) {
+    for (k, &r) in rows.iter().enumerate() {
+        let entry = acc.entry(r).or_insert_with(|| vec![0.0; d]);
+        for (dst, &src) in entry.iter_mut().zip(&delta[k * d..(k + 1) * d]) {
+            *dst += w * src;
+        }
+    }
+}
+
+fn sorted_keys(m: &HashMap<usize, Vec<f32>>) -> Vec<usize> {
+    let mut k: Vec<usize> = m.keys().copied().collect();
+    k.sort_unstable();
+    k
+}
+
+fn flatten(m: &HashMap<usize, Vec<f32>>) -> Vec<f32> {
+    let mut out = Vec::with_capacity(m.len() * m.values().next().map_or(0, |v| v.len()));
+    for k in sorted_keys(m) {
+        out.extend_from_slice(&m[&k]);
+    }
+    out
+}
+
+fn diff_rows(base: &[f32], merged: &[f32], cols: usize, rows: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows.len() * cols);
+    for &r in rows {
+        for j in 0..cols {
+            out.push(merged[r * cols + j] - base[r * cols + j]);
+        }
+    }
+    out
+}
+
+/// Mirror of python `selection.budget_to_counts` for wo/wd.
+pub fn s2ft_counts(mm: &ModelMeta, method: &MethodMeta) -> HashMap<String, usize> {
+    let mut out = HashMap::new();
+    for (proj, f) in &method.s2ft_fractions {
+        let c = match proj.as_str() {
+            "wo" | "wq" | "wk" | "wv" => {
+                if *f > 0.0 {
+                    ((f * mm.dims.n_heads as f64).round() as usize).max(1)
+                } else {
+                    0
+                }
+            }
+            _ => {
+                if *f > 0.0 {
+                    ((f * mm.dims.d_ff as f64).round() as usize).max(1)
+                } else {
+                    0
+                }
+            }
+        };
+        if c > 0 {
+            out.insert(proj.clone(), c);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// LoRA adapters (baseline for Fig 6 / Table 5)
+// ---------------------------------------------------------------------------
+
+/// Per-layer LoRA factors for one target projection set (wo + wd).
+#[derive(Debug, Clone)]
+pub struct LoraLayerDelta {
+    pub wo_a: Mat,
+    pub wo_b: Mat,
+    pub wd_a: Mat,
+    pub wd_b: Mat,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoraAdapter {
+    pub layers: Vec<LoraLayerDelta>,
+    pub scale: f32,
+}
+
+impl LoraAdapter {
+    /// Extract A/B factors from a lora/dora trainer pool.
+    pub fn from_pool(
+        mm: &ModelMeta,
+        method: &MethodMeta,
+        pool: impl Fn(&str) -> Result<Tensor>,
+    ) -> Result<LoraAdapter> {
+        let mut layers = Vec::new();
+        for i in 0..mm.dims.n_layers {
+            let get = |name: &str| -> Result<Mat> {
+                let t = pool(name)?;
+                Ok(Mat::from_vec(t.shape[0], t.shape[1], t.as_f32()?.to_vec()))
+            };
+            layers.push(LoraLayerDelta {
+                wo_a: get(&format!("L{i}.wo.a"))?,
+                wo_b: get(&format!("L{i}.wo.b"))?,
+                wd_a: get(&format!("L{i}.wd.a"))?,
+                wd_b: get(&format!("L{i}.wd.b"))?,
+            });
+        }
+        Ok(LoraAdapter {
+            layers,
+            scale: (method.lora_alpha / method.rank.max(1) as f64) as f32,
+        })
+    }
+
+    /// Fuse into base weights: requires the ΔW = scale·A·B GEMM per layer
+    /// (the quadratic cost Fig 6a measures, vs S²FT's scatter_add).
+    pub fn apply(&self, params: &mut HashMap<String, Tensor>) -> Result<()> {
+        for (i, l) in self.layers.iter().enumerate() {
+            for (name, a, b) in
+                [("wo", &l.wo_a, &l.wo_b), ("wd", &l.wd_a, &l.wd_b)]
+            {
+                let dw = a.matmul(b).scale(self.scale);
+                let w = params.get_mut(&format!("L{i}.{name}")).unwrap();
+                let wd = w.as_f32_mut()?;
+                for (dst, &src) in wd.iter_mut().zip(&dw.data) {
+                    *dst += src;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                (l.wo_a.data.len() + l.wo_b.data.len() + l.wd_a.data.len() + l.wd_b.data.len()) * 4
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_adapter(rows: Vec<usize>, d: usize, val: f32) -> S2ftAdapter {
+        let n = rows.len();
+        S2ftAdapter {
+            layers: vec![S2ftLayerDelta {
+                wo_rows: vec![],
+                wo_delta: vec![],
+                wd_rows: rows,
+                wd_delta: vec![val; n * d],
+            }],
+            d_model: d,
+        }
+    }
+
+    #[test]
+    fn apply_remove_roundtrip() {
+        let d = 4;
+        let mut params = HashMap::new();
+        params.insert("L0.wo".to_string(), Tensor::zeros(vec![d, d]));
+        params.insert("L0.wd".to_string(), Tensor::zeros(vec![6, d]));
+        let a = tiny_adapter(vec![1, 4], d, 0.5);
+        a.apply(&mut params).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[d], 0.5);
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 0.0);
+        a.remove(&mut params).unwrap();
+        assert!(params["L0.wd"].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fusion_union_and_overlap() {
+        let d = 3;
+        let a = tiny_adapter(vec![0, 1], d, 1.0);
+        let b = tiny_adapter(vec![1, 2], d, 1.0);
+        let fused = S2ftAdapter::fuse(&[(&a, 0.5), (&b, 0.5)]).unwrap();
+        assert_eq!(fused.layers[0].wd_rows, vec![0, 1, 2]);
+        // overlapping row 1 got both halves, rows 0/2 got one half
+        let delta = &fused.layers[0].wd_delta;
+        assert_eq!(delta[0], 0.5); // row0
+        assert_eq!(delta[d], 1.0); // row1 (0.5+0.5)
+        assert_eq!(delta[2 * d], 0.5); // row2
+        assert!((a.overlap_with(&b) - 0.5).abs() < 1e-9);
+        assert_eq!(a.overlap_with(&a), 1.0);
+    }
+
+    #[test]
+    fn counts_mirror_python() {
+        // craft a minimal ModelMeta via parse
+        let meta_text = r#"{
+          "models": {"x": {"model": {"name":"x","d_model":8,"n_layers":1,"n_heads":4,"d_ff":10,"vocab":261,"seq_len":8},
+            "param_count": 1, "methods": {"s2ft": {"method":"s2ft","s2ft_fractions":{"wo":0.25,"wd":0.1}}},
+            "batches": [[1,8]], "base_params": []}},
+          "artifacts": {}
+        }"#;
+        let meta = crate::runtime::Meta::parse(meta_text).unwrap();
+        let mm = &meta.models["x"];
+        let counts = s2ft_counts(mm, &mm.methods["s2ft"]);
+        assert_eq!(counts["wo"], 1);
+        assert_eq!(counts["wd"], 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Adapter persistence: compact on-disk format for S²FT adapters.
+//!
+//! An S²FT adapter is tiny (s·d floats + row ids per layer), so thousands
+//! can live on disk next to one base checkpoint — the storage story of
+//! paper §6.2. Format: little-endian binary with a JSON header.
+//!
+//! layout: "S2FT" magic | u32 header_len | header json | per-layer blobs
+//! (wo_rows u32s, wo_delta f32s, wd_rows u32s, wd_delta f32s).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::{S2ftAdapter, S2ftLayerDelta};
+
+const MAGIC: &[u8; 4] = b"S2FT";
+
+pub fn save_adapter(path: impl AsRef<Path>, adapter: &S2ftAdapter) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("d_model", Json::num(adapter.d_model as f64)),
+        ("n_layers", Json::num(adapter.layers.len() as f64)),
+        (
+            "layer_shapes",
+            Json::Arr(
+                adapter
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Json::Arr(vec![
+                            Json::num(l.wo_rows.len() as f64),
+                            Json::num(l.wd_rows.len() as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for l in &adapter.layers {
+        for &r in &l.wo_rows {
+            f.write_all(&(r as u32).to_le_bytes())?;
+        }
+        for &v in &l.wo_delta {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for &r in &l.wd_rows {
+            f.write_all(&(r as u32).to_le_bytes())?;
+        }
+        for &v in &l.wd_delta {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_adapter(path: impl AsRef<Path>) -> Result<S2ftAdapter> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() < 8 || &bytes[..4] != MAGIC {
+        bail!("not an S2FT adapter file");
+    }
+    let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let header = Json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)?;
+    if header.num_or("version", 0.0) as u32 != 1 {
+        bail!("unsupported adapter version");
+    }
+    let d = header.get("d_model")?.as_usize()?;
+    let shapes = header.get("layer_shapes")?.as_arr()?;
+    let mut off = 8 + hlen;
+    let mut layers = Vec::with_capacity(shapes.len());
+    let mut take_u32s = |bytes: &[u8], off: &mut usize, n: usize| -> Result<Vec<usize>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if *off + 4 > bytes.len() {
+                bail!("truncated adapter file");
+            }
+            out.push(u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()) as usize);
+            *off += 4;
+        }
+        Ok(out)
+    };
+    let take_f32s = |bytes: &[u8], off: &mut usize, n: usize| -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if *off + 4 > bytes.len() {
+                bail!("truncated adapter file");
+            }
+            out.push(f32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()));
+            *off += 4;
+        }
+        Ok(out)
+    };
+    for s in shapes {
+        let a = s.as_arr()?;
+        let (n_wo, n_wd) = (a[0].as_usize()?, a[1].as_usize()?);
+        let wo_rows = take_u32s(&bytes, &mut off, n_wo)?;
+        let wo_delta = take_f32s(&bytes, &mut off, n_wo * d)?;
+        let wd_rows = take_u32s(&bytes, &mut off, n_wd)?;
+        let wd_delta = take_f32s(&bytes, &mut off, n_wd * d)?;
+        layers.push(S2ftLayerDelta { wo_rows, wo_delta, wd_rows, wd_delta });
+    }
+    if off != bytes.len() {
+        bail!("trailing bytes in adapter file");
+    }
+    Ok(S2ftAdapter { layers, d_model: d })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(seed: u64) -> S2ftAdapter {
+        let mut rng = Rng::seed(seed);
+        let d = 16;
+        let layers = (0..3)
+            .map(|_| {
+                let s = 1 + rng.below(3);
+                let c = 1 + rng.below(4);
+                S2ftLayerDelta {
+                    wo_rows: rng.choose(d, s),
+                    wo_delta: (0..s * d).map(|_| rng.normal_f32()).collect(),
+                    wd_rows: rng.choose(24, c),
+                    wd_delta: (0..c * d).map(|_| rng.normal_f32()).collect(),
+                }
+            })
+            .collect();
+        S2ftAdapter { layers, d_model: d }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = std::env::temp_dir().join(format!("adapter_{}", std::process::id()));
+        let path = dir.join("a.s2ft");
+        let a = sample(1);
+        save_adapter(&path, &a).unwrap();
+        let b = load_adapter(&path).unwrap();
+        assert_eq!(a.d_model, b.d_model);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.wo_rows, y.wo_rows);
+            assert_eq!(x.wo_delta, y.wo_delta);
+            assert_eq!(x.wd_rows, y.wd_rows);
+            assert_eq!(x.wd_delta, y.wd_delta);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("adapter_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.s2ft");
+        std::fs::write(&path, b"NOPE1234").unwrap();
+        assert!(load_adapter(&path).is_err());
+        // truncated real file
+        let a = sample(2);
+        save_adapter(&path, &a).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load_adapter(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,178 @@
+//! Adapter store: holds many fine-tuned adapters in memory, tracks which
+//! one is fused into the live weights, and implements the four-step
+//! switch (unfuse old, unload, load, fuse new) from paper §6.2.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Tensor;
+
+use super::{LoraAdapter, S2ftAdapter};
+
+pub enum AnyAdapter {
+    S2ft(S2ftAdapter),
+    Lora(LoraAdapter),
+}
+
+impl AnyAdapter {
+    pub fn bytes(&self) -> usize {
+        match self {
+            AnyAdapter::S2ft(a) => a.bytes(),
+            AnyAdapter::Lora(a) => a.bytes(),
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct AdapterStore {
+    adapters: HashMap<String, AnyAdapter>,
+    /// id currently fused into the live weights (if any)
+    active: Option<String>,
+    pub switches: usize,
+}
+
+impl AdapterStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, id: impl Into<String>, adapter: AnyAdapter) {
+        self.adapters.insert(id.into(), adapter);
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    pub fn active(&self) -> Option<&str> {
+        self.active.as_deref()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.adapters.values().map(|a| a.bytes()).sum()
+    }
+
+    /// Switch the live weights to `id` (no-op if already active).
+    ///
+    /// S²FT switch cost is two scatter_adds over s·d elements per layer;
+    /// a LoRA switch costs a ΔW GEMM per target — the Fig 6a comparison.
+    /// LoRA adapters cannot be *unfused* exactly here (we'd have to keep
+    /// ΔW around), so the store snapshots base weights for them.
+    pub fn switch_to(
+        &mut self,
+        id: &str,
+        params: &mut HashMap<String, Tensor>,
+        base_snapshot: &HashMap<String, Tensor>,
+    ) -> Result<()> {
+        if self.active.as_deref() == Some(id) {
+            return Ok(());
+        }
+        // unfuse current
+        if let Some(cur) = self.active.take() {
+            match self.adapters.get(&cur) {
+                Some(AnyAdapter::S2ft(a)) => a.remove(params)?,
+                Some(AnyAdapter::Lora(_)) => {
+                    // restore touched weights from the snapshot
+                    for (k, v) in base_snapshot {
+                        if k.ends_with(".wo") || k.ends_with(".wd") {
+                            params.insert(k.clone(), v.clone());
+                        }
+                    }
+                }
+                None => {}
+            }
+        }
+        let adapter = self
+            .adapters
+            .get(id)
+            .ok_or_else(|| anyhow!("adapter {id:?} not in store"))?;
+        match adapter {
+            AnyAdapter::S2ft(a) => a.apply(params)?,
+            AnyAdapter::Lora(a) => a.apply(params)?,
+        }
+        self.active = Some(id.to_string());
+        self.switches += 1;
+        Ok(())
+    }
+
+    /// Unfuse whatever is active, restoring pristine base weights.
+    pub fn deactivate(
+        &mut self,
+        params: &mut HashMap<String, Tensor>,
+        base_snapshot: &HashMap<String, Tensor>,
+    ) -> Result<()> {
+        if let Some(cur) = self.active.take() {
+            match self.adapters.get(&cur) {
+                Some(AnyAdapter::S2ft(a)) => a.remove(params)?,
+                Some(AnyAdapter::Lora(_)) => {
+                    for (k, v) in base_snapshot {
+                        if k.ends_with(".wo") || k.ends_with(".wd") {
+                            params.insert(k.clone(), v.clone());
+                        }
+                    }
+                }
+                None => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::S2ftLayerDelta;
+
+    fn adapter(val: f32) -> AnyAdapter {
+        AnyAdapter::S2ft(S2ftAdapter {
+            layers: vec![S2ftLayerDelta {
+                wo_rows: vec![],
+                wo_delta: vec![],
+                wd_rows: vec![0],
+                wd_delta: vec![val; 4],
+            }],
+            d_model: 4,
+        })
+    }
+
+    fn base() -> HashMap<String, Tensor> {
+        let mut p = HashMap::new();
+        p.insert("L0.wo".to_string(), Tensor::zeros(vec![4, 4]));
+        p.insert("L0.wd".to_string(), Tensor::zeros(vec![4, 4]));
+        p
+    }
+
+    #[test]
+    fn switch_sequence_restores_weights() {
+        let snapshot = base();
+        let mut params = base();
+        let mut store = AdapterStore::new();
+        store.insert("a", adapter(1.0));
+        store.insert("b", adapter(2.0));
+
+        store.switch_to("a", &mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 1.0);
+        store.switch_to("b", &mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 2.0);
+        assert_eq!(store.switches, 2);
+        // switching to the active id is free
+        store.switch_to("b", &mut params, &snapshot).unwrap();
+        assert_eq!(store.switches, 2);
+        store.deactivate(&mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 0.0);
+        assert!(store.active().is_none());
+    }
+
+    #[test]
+    fn missing_adapter_errors() {
+        let snapshot = base();
+        let mut params = base();
+        let mut store = AdapterStore::new();
+        assert!(store.switch_to("nope", &mut params, &snapshot).is_err());
+    }
+}

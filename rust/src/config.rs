@@ -1,0 +1,164 @@
+//! Run configuration for the `repro` launcher (JSON files in `configs/`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Training/fine-tuning run description.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model config name from meta.json (tiny | small | base).
+    pub model: String,
+    /// Method tag (fullft | lora | dora | spft | lisa | galore | s2ft | s2ft-pallas).
+    pub method: String,
+    /// Data source: "corpus" (LM pre-training), or a task suite
+    /// ("arithmetic" | "commonsense" | "instruct").
+    pub data: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub artifacts: String,
+    /// Optional checkpoint directory for the final merged weights.
+    pub save_to: Option<String>,
+    /// Optional base-layout checkpoint to start from (else the init
+    /// artifact seeds fresh weights).
+    pub init_from: Option<String>,
+    /// Learning-rate warmup steps applied on the rust side via loss_mask
+    /// scaling? No — lr is baked into the artifact; kept for bookkeeping.
+    pub notes: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            method: "s2ft".into(),
+            data: "corpus".into(),
+            steps: 300,
+            seed: 42,
+            log_every: 10,
+            artifacts: "artifacts".into(),
+            save_to: None,
+            init_from: None,
+            notes: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = TrainConfig::default();
+        Ok(Self {
+            model: j.get("model")?.as_str()?.to_string(),
+            method: j.get("method")?.as_str()?.to_string(),
+            data: j.str_or("data", &d.data),
+            steps: j.num_or("steps", d.steps as f64) as usize,
+            seed: j.num_or("seed", d.seed as f64) as u64,
+            log_every: j.num_or("log_every", d.log_every as f64) as usize,
+            artifacts: j.str_or("artifacts", &d.artifacts),
+            save_to: j.opt("save_to").and_then(|v| v.as_str().ok()).map(String::from),
+            init_from: j.opt("init_from").and_then(|v| v.as_str().ok()).map(String::from),
+            notes: j.str_or("notes", ""),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("data", Json::str(self.data.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("artifacts", Json::str(self.artifacts.clone())),
+        ])
+    }
+}
+
+/// Serving run description.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub artifacts: String,
+    /// Base-layout weights checkpoint directory.
+    pub weights: Option<String>,
+    /// Max requests batched per engine iteration.
+    pub max_batch: usize,
+    /// Batching window.
+    pub window_ms: u64,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            model: "small".into(),
+            artifacts: "artifacts".into(),
+            weights: None,
+            max_batch: 8,
+            window_ms: 5,
+            max_new_tokens: 8,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = ServeConfig::default();
+        Ok(Self {
+            model: j.str_or("model", &d.model),
+            artifacts: j.str_or("artifacts", &d.artifacts),
+            weights: j.opt("weights").and_then(|v| v.as_str().ok()).map(String::from),
+            max_batch: j.num_or("max_batch", d.max_batch as f64) as usize,
+            window_ms: j.num_or("window_ms", d.window_ms as f64) as u64,
+            max_new_tokens: j.num_or("max_new_tokens", d.max_new_tokens as f64) as usize,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_config_defaults() {
+        let j = Json::parse(r#"{"model":"tiny","method":"s2ft"}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.steps, 300);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.artifacts, "artifacts");
+        assert_eq!(c.data, "corpus");
+    }
+
+    #[test]
+    fn train_config_roundtrip() {
+        let j = Json::parse(r#"{"model":"small","method":"lora","steps":10,"seed":1}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.model, "small");
+        assert_eq!(c2.steps, 10);
+    }
+
+    #[test]
+    fn serve_config_defaults() {
+        let j = Json::parse(r#"{"model":"small"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.window_ms, 5);
+    }
+}

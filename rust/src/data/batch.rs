@@ -1,0 +1,171 @@
+//! Batch construction: task examples / corpus text -> (tokens, targets,
+//! loss_mask) tensors shaped for a given artifact batch (B, T).
+
+use super::tasks::Example;
+use super::tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Tensor,
+    pub targets: Tensor,
+    pub loss_mask: Tensor,
+}
+
+impl Batch {
+    /// Number of loss-bearing tokens.
+    pub fn answer_tokens(&self) -> usize {
+        self.loss_mask
+            .as_f32()
+            .map(|m| m.iter().filter(|&&x| x > 0.0).count())
+            .unwrap_or(0)
+    }
+}
+
+/// Layout of one supervised row: `BOS prompt SEP answer EOS PAD...`
+/// Loss is applied only where the *target* is an answer token (or EOS),
+/// i.e. supervised positions are SEP..answer_end-1 in input coordinates.
+pub fn encode_example(tk: &Tokenizer, ex: &Example, t: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let mut seq = vec![BOS];
+    seq.extend(tk.encode(&ex.prompt));
+    seq.push(SEP);
+    let ans_start = seq.len();
+    seq.extend(tk.encode(&ex.answer));
+    seq.push(EOS);
+    seq.truncate(t + 1);
+    // inputs are seq[..-1], targets are seq[1..]
+    let mut tokens: Vec<i32> = seq[..seq.len() - 1].to_vec();
+    let mut targets: Vec<i32> = seq[1..].to_vec();
+    let mut mask = vec![0.0f32; tokens.len()];
+    for (i, m) in mask.iter_mut().enumerate() {
+        // target position i supervises seq[i+1]
+        if i + 1 >= ans_start {
+            *m = 1.0;
+        }
+    }
+    while tokens.len() < t {
+        tokens.push(PAD);
+        targets.push(PAD);
+        mask.push(0.0);
+    }
+    (tokens, targets, mask)
+}
+
+/// Build a supervised batch from examples (padding rows repeat the last
+/// example with zero loss-mask so accuracy counting is unaffected).
+pub fn supervised_batch(tk: &Tokenizer, examples: &[Example], b: usize, t: usize) -> Batch {
+    assert!(!examples.is_empty());
+    let mut tokens = Vec::with_capacity(b * t);
+    let mut targets = Vec::with_capacity(b * t);
+    let mut mask = Vec::with_capacity(b * t);
+    for i in 0..b {
+        let (tok, tgt, m) = if i < examples.len() {
+            encode_example(tk, &examples[i], t)
+        } else {
+            let (tok, tgt, _) = encode_example(tk, examples.last().unwrap(), t);
+            (tok, tgt, vec![0.0; t])
+        };
+        tokens.extend(tok);
+        targets.extend(tgt);
+        mask.extend(m);
+    }
+    Batch {
+        tokens: Tensor::i32(vec![b, t], tokens),
+        targets: Tensor::i32(vec![b, t], targets),
+        loss_mask: Tensor::f32(vec![b, t], mask),
+    }
+}
+
+/// Language-model batch over corpus text: contiguous byte windows with
+/// loss over every position.
+pub fn lm_batch(tk: &Tokenizer, corpus: &str, rng: &mut Rng, b: usize, t: usize) -> Batch {
+    let bytes = tk.encode(corpus);
+    assert!(bytes.len() > t + 1, "corpus shorter than one window");
+    let mut tokens = Vec::with_capacity(b * t);
+    let mut targets = Vec::with_capacity(b * t);
+    for _ in 0..b {
+        let start = rng.below(bytes.len() - t - 1);
+        tokens.extend(&bytes[start..start + t]);
+        targets.extend(&bytes[start + 1..start + t + 1]);
+    }
+    Batch {
+        tokens: Tensor::i32(vec![b, t], tokens),
+        targets: Tensor::i32(vec![b, t], targets),
+        loss_mask: Tensor::f32(vec![b, t], vec![1.0; b * t]),
+    }
+}
+
+/// Prompt-only row for generation: `BOS prompt SEP PAD...`; returns the
+/// position of the first generated token (index of SEP in inputs + 1).
+pub fn encode_prompt(tk: &Tokenizer, prompt: &str, t: usize) -> (Vec<i32>, usize) {
+    let mut seq = vec![BOS];
+    seq.extend(tk.encode(prompt));
+    seq.push(SEP);
+    seq.truncate(t);
+    let gen_pos = seq.len();
+    let mut tokens = seq;
+    while tokens.len() < t {
+        tokens.push(PAD);
+    }
+    (tokens, gen_pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_example_layout() {
+        let tk = Tokenizer;
+        let ex = Example { prompt: "q: 1+1 =".into(), answer: "2".into() };
+        let (tok, tgt, mask) = encode_example(&tk, &ex, 24);
+        assert_eq!(tok.len(), 24);
+        assert_eq!(tok[0], BOS);
+        let sep_pos = tok.iter().position(|&t| t == SEP).unwrap();
+        // the answer token '2' is the target at sep position
+        assert_eq!(tgt[sep_pos], b'2' as i32);
+        assert_eq!(mask[sep_pos], 1.0);
+        assert_eq!(tgt[sep_pos + 1], EOS);
+        assert_eq!(mask[sep_pos + 1], 1.0);
+        // prompt positions carry no loss
+        assert!(mask[..sep_pos].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn supervised_batch_pads_rows() {
+        let tk = Tokenizer;
+        let ex = Example { prompt: "p".into(), answer: "a".into() };
+        let b = supervised_batch(&tk, &[ex], 3, 16);
+        assert_eq!(b.tokens.shape, vec![3, 16]);
+        // only the real row carries loss
+        let m = b.loss_mask.as_f32().unwrap();
+        assert!(m[..16].iter().any(|&x| x > 0.0));
+        assert!(m[16..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn lm_batch_shifts_by_one() {
+        let tk = Tokenizer;
+        let corpus = "abcdefghijklmnopqrstuvwxyz".repeat(4);
+        let mut rng = Rng::seed(0);
+        let b = lm_batch(&tk, &corpus, &mut rng, 2, 8);
+        let tok = b.tokens.as_i32().unwrap();
+        let tgt = b.targets.as_i32().unwrap();
+        for row in 0..2 {
+            for i in 0..7 {
+                assert_eq!(tok[row * 8 + i + 1], tgt[row * 8 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_prompt_gen_pos() {
+        let tk = Tokenizer;
+        let (tok, pos) = encode_prompt(&tk, "hi", 8);
+        assert_eq!(tok[0], BOS);
+        assert_eq!(tok[3], SEP);
+        assert_eq!(pos, 4);
+        assert_eq!(tok[4], PAD);
+    }
+}

@@ -1,0 +1,90 @@
+//! Data substrate: tokenizer, synthetic world, pre-training corpus and
+//! the three task suites the experiments fine-tune/evaluate on.
+
+pub mod batch;
+pub mod tasks;
+pub mod tokenizer;
+pub mod world;
+
+pub use batch::{lm_batch, supervised_batch, Batch};
+pub use tasks::{
+    suite, Difficulty, Example, Split, Task, ARITHMETIC, ARITH_FT, COMMONSENSE, INSTRUCT,
+};
+pub use tokenizer::Tokenizer;
+pub use world::World;
+
+use crate::util::rng::Rng;
+
+/// Build the pre-training corpus: world facts + counting/arithmetic
+/// statements, shuffled deterministically.
+///
+/// This is the "pre-trained knowledge" the paper's generalization
+/// experiments measure forgetting against (DESIGN.md §2).
+pub fn pretrain_corpus(seed: u64, approx_bytes: usize) -> String {
+    let world = World::canonical();
+    let mut rng = Rng::seed(seed);
+    let mut statements = world.fact_statements();
+    // arithmetic statements: sums/differences/products over small ints
+    for a in 0..25i64 {
+        for b in 0..25i64 {
+            statements.push(format!("{} + {} = {}.", a, b, a + b));
+            if a >= b {
+                statements.push(format!("{} - {} = {}.", a, b, a - b));
+            }
+            if a < 13 && b < 13 {
+                statements.push(format!("{} * {} = {}.", a, b, a * b));
+            }
+        }
+    }
+    let mut out = String::with_capacity(approx_bytes + 256);
+    while out.len() < approx_bytes {
+        out.push_str(statements[rng.below(statements.len())].as_str());
+        out.push(' ');
+    }
+    out
+}
+
+/// Mixed fine-tuning set for a suite (train split), with the arithmetic
+/// suite drawing only from the Math10K-analogue mixture.
+pub fn finetune_examples(suite_name: &str, n: usize, seed: u64) -> Vec<Example> {
+    let world = World::canonical();
+    let mut rng = Rng::seed(seed);
+    let tasks = suite(suite_name).unwrap_or(&COMMONSENSE);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let task = if suite_name == "arithmetic" {
+            &tasks[ARITH_FT[rng.below(ARITH_FT.len())]]
+        } else {
+            &tasks[rng.below(tasks.len())]
+        };
+        out.push(task.sample(&world, &mut rng, Split::Train));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_requested_size_and_facts() {
+        let c = pretrain_corpus(0, 10_000);
+        assert!(c.len() >= 10_000);
+        assert!(c.contains(" = "));
+        assert!(c.contains("can"));
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        assert_eq!(pretrain_corpus(1, 2000), pretrain_corpus(1, 2000));
+        assert_ne!(pretrain_corpus(1, 2000), pretrain_corpus(2, 2000));
+    }
+
+    #[test]
+    fn finetune_arithmetic_only_uses_ft_mixture() {
+        let ex = finetune_examples("arithmetic", 100, 3);
+        assert_eq!(ex.len(), 100);
+        // MultiArith prompts "q: (a + b) * c" never appear in the FT mixture
+        assert!(ex.iter().all(|e| !e.prompt.starts_with("q: (")));
+    }
+}

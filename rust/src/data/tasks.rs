@@ -1,0 +1,463 @@
+//! Task suites mirroring the paper's evaluation structure (DESIGN.md §2):
+//!
+//! * `commonsense` — 8 subtasks (BoolQ/PIQA/SIQA/HellaSwag/WinoGrande/
+//!   ARC-e/ARC-c/OBQA analogues) over the synthetic world.
+//! * `arithmetic` — 7 subtasks (MultiArith/GSM8K/AddSub/AQuA/SingleEq/
+//!   SVAMP/MAWPS analogues); the fine-tuning set (Math10K analogue) draws
+//!   from GSM8K+AQuA+MAWPS only, so MultiArith/AddSub/SingleEq/SVAMP are
+//!   near-OOD exactly as in the paper's App. C.
+//! * `instruct` — 8 MT-Bench-like categories.
+//!
+//! Train/test disjointness: entity-based questions split by entity index
+//! parity; numeric questions split by operand parity. A model can only be
+//! correct on test items via the *rule*, not memorization.
+
+use super::world::{World, GOALS};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub prompt: String,
+    pub answer: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Difficulty {
+    Easy,
+    Hard,
+}
+
+/// A named subtask generator.
+pub struct Task {
+    pub name: &'static str,
+    pub difficulty: Difficulty,
+    gen: fn(&World, &mut Rng, Split) -> Example,
+}
+
+impl Task {
+    pub fn sample(&self, world: &World, rng: &mut Rng, split: Split) -> Example {
+        (self.gen)(world, rng, split)
+    }
+
+    pub fn batch(&self, world: &World, rng: &mut Rng, split: Split, n: usize) -> Vec<Example> {
+        (0..n).map(|_| self.sample(world, rng, split)).collect()
+    }
+}
+
+/// Pick an entity index respecting the split (even=train, odd=test).
+fn split_entity(world: &World, rng: &mut Rng, split: Split) -> usize {
+    let n = world.entities.len();
+    let base = rng.below(n / 2) * 2;
+    match split {
+        Split::Train => base,
+        Split::Test => base + 1,
+    }
+}
+
+/// Pick a small operand respecting the split (even=train, odd=test).
+fn split_num(rng: &mut Rng, split: Split, lo: i64, hi: i64) -> i64 {
+    let v = rng.range(lo, hi);
+    let v = v - (v & 1);
+    match split {
+        Split::Train => v,
+        Split::Test => v + 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Commonsense suite
+// ---------------------------------------------------------------------------
+
+fn boolq(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    let truth = rng.bool(0.5);
+    let color = if truth {
+        e.color
+    } else {
+        super::world::COLORS[(super::world::COLORS.iter().position(|c| *c == e.color).unwrap()
+            + 1 + rng.below(4))
+            % super::world::COLORS.len()]
+    };
+    Example {
+        prompt: format!("q: is {} {}?", e.name, color),
+        answer: (if truth { "yes" } else { "no" }).into(),
+    }
+}
+
+fn piqa(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let (goal, kind) = GOALS[rng.below(GOALS.len())];
+    // candidates: one entity of the right kind, one wrong
+    let right: Vec<usize> = (0..w.entities.len())
+        .filter(|&i| w.entities[i].kind == kind && matches_split(i, split))
+        .collect();
+    let wrong: Vec<usize> = (0..w.entities.len())
+        .filter(|&i| w.entities[i].kind != kind && matches_split(i, split))
+        .collect();
+    if right.is_empty() || wrong.is_empty() {
+        return piqa(w, rng, flip(split)); // degenerate world corner
+    }
+    let r = right[rng.below(right.len())];
+    let wr = wrong[rng.below(wrong.len())];
+    let r_first = rng.bool(0.5);
+    let (a, b) = if r_first { (r, wr) } else { (wr, r) };
+    Example {
+        prompt: format!(
+            "q: to {} pick {} or {}?",
+            goal, w.entities[a].name, w.entities[b].name
+        ),
+        answer: w.entities[r].name.clone(),
+    }
+}
+
+fn siqa(w: &World, rng: &mut Rng, split: Split) -> Example {
+    // social-interaction analogue: who lives with whom (same place)
+    let i = split_entity(w, rng, split);
+    let e = &w.entities[i];
+    Example {
+        prompt: format!("q: where does {} live?", e.name),
+        answer: e.place.to_string(),
+    }
+}
+
+fn hellaswag(w: &World, rng: &mut Rng, split: Split) -> Example {
+    // continuation: "X is a bird. X can ..." -> ability completion
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("q: {} is a {}. {} can", e.name, e.kind, e.name),
+        answer: World::ability_of(e.kind).to_string(),
+    }
+}
+
+fn winogrande(w: &World, rng: &mut Rng, split: Split) -> Example {
+    // pronoun resolution by size: "the big one" among two entities
+    let mut i = split_entity(w, rng, split);
+    let mut j = split_entity(w, rng, split);
+    let mut guard = 0;
+    while (w.entities[j].size == w.entities[i].size || j == i) && guard < 64 {
+        j = split_entity(w, rng, split);
+        guard += 1;
+    }
+    if w.entities[i].size == w.entities[j].size {
+        i = 0;
+        j = 1;
+    }
+    let big_first = size_rank(w.entities[i].size) > size_rank(w.entities[j].size);
+    let bigger = if big_first { i } else { j };
+    Example {
+        prompt: format!(
+            "q: {} is {} and {} is {}. which is bigger?",
+            w.entities[i].name, w.entities[i].size, w.entities[j].name, w.entities[j].size
+        ),
+        answer: w.entities[bigger].name.clone(),
+    }
+}
+
+fn arc_easy(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("q: what kind is {}?", e.name),
+        answer: e.kind.to_string(),
+    }
+}
+
+fn arc_challenge(w: &World, rng: &mut Rng, split: Split) -> Example {
+    // two-hop: entity -> kind -> ability
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("q: what can {} do?", e.name),
+        answer: World::ability_of(e.kind).to_string(),
+    }
+}
+
+fn obqa(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    // open-book: goal -> needed kind (rule recall)
+    let _ = split;
+    let (goal, kind) = GOALS[rng.below(GOALS.len())];
+    Example {
+        prompt: format!("q: what kind do you need to {}?", goal),
+        answer: kind.to_string(),
+    }
+}
+
+fn size_rank(s: &str) -> usize {
+    match s {
+        "small" => 0,
+        "big" => 1,
+        _ => 2,
+    }
+}
+
+fn matches_split(i: usize, split: Split) -> bool {
+    (i % 2 == 0) == (split == Split::Train)
+}
+
+fn flip(s: Split) -> Split {
+    match s {
+        Split::Train => Split::Test,
+        Split::Test => Split::Train,
+    }
+}
+
+pub const COMMONSENSE: [Task; 8] = [
+    Task { name: "BoolQ", difficulty: Difficulty::Easy, gen: boolq },
+    Task { name: "PIQA", difficulty: Difficulty::Easy, gen: piqa },
+    Task { name: "SIQA", difficulty: Difficulty::Easy, gen: siqa },
+    Task { name: "HellaSwag", difficulty: Difficulty::Easy, gen: hellaswag },
+    Task { name: "Wino", difficulty: Difficulty::Hard, gen: winogrande },
+    Task { name: "ARC-e", difficulty: Difficulty::Easy, gen: arc_easy },
+    Task { name: "ARC-c", difficulty: Difficulty::Hard, gen: arc_challenge },
+    Task { name: "OBQA", difficulty: Difficulty::Easy, gen: obqa },
+];
+
+// ---------------------------------------------------------------------------
+// Arithmetic suite
+// ---------------------------------------------------------------------------
+
+fn multiarith(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let a = split_num(rng, split, 2, 10);
+    let b = rng.range(2, 10);
+    let c = rng.range(2, 6);
+    Example {
+        prompt: format!("q: ({} + {}) * {} =", a, b, c),
+        answer: ((a + b) * c).to_string(),
+    }
+}
+
+fn gsm8k(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    // two-step word problem
+    let a = split_num(rng, split, 4, 20);
+    let b = rng.range(2, a.max(3));
+    let c = rng.range(2, 8);
+    Example {
+        prompt: format!(
+            "q: sam has {} nuts, eats {} and finds {} more. how many nuts?",
+            a, b, c
+        ),
+        answer: (a - b + c).to_string(),
+    }
+}
+
+fn addsub(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let a = split_num(rng, split, 2, 50);
+    let b = rng.range(1, a.max(2));
+    if rng.bool(0.5) {
+        Example { prompt: format!("q: {} + {} =", a, b), answer: (a + b).to_string() }
+    } else {
+        Example { prompt: format!("q: {} - {} =", a, b), answer: (a - b).to_string() }
+    }
+}
+
+fn aqua(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    // multiple choice
+    let a = split_num(rng, split, 2, 20);
+    let b = rng.range(2, 20);
+    let sum = a + b;
+    let correct = rng.below(3);
+    let opts: Vec<i64> = (0..3)
+        .map(|i| if i == correct { sum } else { sum + 1 + i as i64 })
+        .collect();
+    Example {
+        prompt: format!(
+            "q: {} + {} = ? (a) {} (b) {} (c) {}",
+            a, b, opts[0], opts[1], opts[2]
+        ),
+        answer: ["a", "b", "c"][correct].to_string(),
+    }
+}
+
+fn singleeq(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let x = split_num(rng, split, 1, 30);
+    let a = rng.range(1, 30);
+    Example { prompt: format!("q: x + {} = {}. x =", a, x + a), answer: x.to_string() }
+}
+
+fn svamp(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    // reworded add/sub word problem (structure variation)
+    let a = split_num(rng, split, 2, 40);
+    let b = rng.range(1, a.max(2));
+    Example {
+        prompt: format!("q: there were {} cups. {} broke. cups left =", a, b),
+        answer: (a - b).to_string(),
+    }
+}
+
+fn mawps(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let a = split_num(rng, split, 2, 12);
+    let b = rng.range(2, 12);
+    Example { prompt: format!("q: {} * {} =", a, b), answer: (a * b).to_string() }
+}
+
+/// Order matters: `ARITH_FT` below indexes into this list.
+pub const ARITHMETIC: [Task; 7] = [
+    Task { name: "MultiArith", difficulty: Difficulty::Easy, gen: multiarith },
+    Task { name: "GSM8K", difficulty: Difficulty::Hard, gen: gsm8k },
+    Task { name: "AddSub", difficulty: Difficulty::Easy, gen: addsub },
+    Task { name: "AQuA", difficulty: Difficulty::Hard, gen: aqua },
+    Task { name: "SingleEq", difficulty: Difficulty::Easy, gen: singleeq },
+    Task { name: "SVAMP", difficulty: Difficulty::Hard, gen: svamp },
+    Task { name: "MAWPS", difficulty: Difficulty::Easy, gen: mawps },
+];
+
+/// The Math10K-analogue fine-tuning mixture: GSM8K + AQuA + MAWPS
+/// (indices into [`ARITHMETIC`]); the other four tasks are near-OOD.
+pub const ARITH_FT: [usize; 3] = [1, 3, 6];
+
+// ---------------------------------------------------------------------------
+// Instruction-following suite (MT-Bench-like categories)
+// ---------------------------------------------------------------------------
+
+fn inst_writing(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("write {} in caps:", e.name),
+        answer: e.name.to_uppercase(),
+    }
+}
+
+fn inst_roleplay(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("you are {}. say your color:", e.name),
+        answer: e.color.to_string(),
+    }
+}
+
+fn inst_reasoning(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let a = split_num(rng, split, 1, 40);
+    let b = rng.range(1, 40);
+    Example {
+        prompt: format!("which is larger, {} or {}?", a, b),
+        answer: a.max(b).to_string(),
+    }
+}
+
+fn inst_code(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!("print('{}') outputs:", e.name),
+        answer: e.name.clone(),
+    }
+}
+
+fn inst_math(_w: &World, rng: &mut Rng, split: Split) -> Example {
+    let a = split_num(rng, split, 1, 20);
+    let b = rng.range(1, 20);
+    Example { prompt: format!("{} + {} =", a, b), answer: (a + b).to_string() }
+}
+
+fn inst_extraction(w: &World, rng: &mut Rng, split: Split) -> Example {
+    let e = &w.entities[split_entity(w, rng, split)];
+    Example {
+        prompt: format!(
+            "record: name={} color={} place={}. extract color:",
+            e.name, e.color, e.place
+        ),
+        answer: e.color.to_string(),
+    }
+}
+
+fn inst_stem(w: &World, rng: &mut Rng, split: Split) -> Example {
+    arc_challenge(w, rng, split)
+}
+
+fn inst_humanities(w: &World, rng: &mut Rng, split: Split) -> Example {
+    siqa(w, rng, split)
+}
+
+pub const INSTRUCT: [Task; 8] = [
+    Task { name: "Writing", difficulty: Difficulty::Easy, gen: inst_writing },
+    Task { name: "Roleplay", difficulty: Difficulty::Easy, gen: inst_roleplay },
+    Task { name: "Reasoning", difficulty: Difficulty::Hard, gen: inst_reasoning },
+    Task { name: "Code", difficulty: Difficulty::Easy, gen: inst_code },
+    Task { name: "Math", difficulty: Difficulty::Hard, gen: inst_math },
+    Task { name: "Extraction", difficulty: Difficulty::Easy, gen: inst_extraction },
+    Task { name: "STEM", difficulty: Difficulty::Hard, gen: inst_stem },
+    Task { name: "Humanities", difficulty: Difficulty::Easy, gen: inst_humanities },
+];
+
+/// Look up a suite by name.
+pub fn suite(name: &str) -> Option<&'static [Task]> {
+    match name {
+        "commonsense" => Some(&COMMONSENSE),
+        "arithmetic" => Some(&ARITHMETIC),
+        "instruct" => Some(&INSTRUCT),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_consistent_examples() {
+        let w = World::canonical();
+        let mut rng = Rng::seed(1);
+        for task in COMMONSENSE.iter().chain(&ARITHMETIC).chain(&INSTRUCT) {
+            for split in [Split::Train, Split::Test] {
+                for _ in 0..20 {
+                    let ex = task.sample(&w, &mut rng, split);
+                    assert!(!ex.prompt.is_empty(), "{}", task.name);
+                    assert!(!ex.answer.is_empty(), "{}", task.name);
+                    assert!(ex.answer.len() <= 12, "{}: {:?}", task.name, ex.answer);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint_for_entity_tasks() {
+        let w = World::canonical();
+        let mut rng = Rng::seed(2);
+        // arc_easy asks about an entity; train and test entities must differ
+        let train: std::collections::HashSet<String> = (0..200)
+            .map(|_| arc_easy(&w, &mut rng, Split::Train).prompt)
+            .collect();
+        let test: std::collections::HashSet<String> = (0..200)
+            .map(|_| arc_easy(&w, &mut rng, Split::Test).prompt)
+            .collect();
+        assert!(train.is_disjoint(&test));
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        let w = World::canonical();
+        let mut rng = Rng::seed(3);
+        for _ in 0..100 {
+            let ex = multiarith(&w, &mut rng, Split::Train);
+            // parse "(a + b) * c ="
+            let nums: Vec<i64> = ex
+                .prompt
+                .split(|c: char| !c.is_ascii_digit())
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            assert_eq!(
+                ((nums[0] + nums[1]) * nums[2]).to_string(),
+                ex.answer
+            );
+        }
+    }
+
+    #[test]
+    fn math_ft_mixture_indices_valid() {
+        for &i in &ARITH_FT {
+            assert!(i < ARITHMETIC.len());
+        }
+        assert_eq!(ARITHMETIC[ARITH_FT[0]].name, "GSM8K");
+    }
+
+    #[test]
+    fn suite_lookup() {
+        assert_eq!(suite("commonsense").unwrap().len(), 8);
+        assert_eq!(suite("arithmetic").unwrap().len(), 7);
+        assert_eq!(suite("instruct").unwrap().len(), 8);
+        assert!(suite("nope").is_none());
+    }
+}

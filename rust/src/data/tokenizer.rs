@@ -1,0 +1,60 @@
+//! Byte-level tokenizer: 256 raw bytes + 5 specials (vocab 261, matching
+//! `ModelConfig.vocab` on the python side).
+
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+pub const SEP: i32 = 259;
+pub const UNK: i32 = 260;
+pub const VOCAB: usize = 261;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode stopping at the first EOS/PAD.
+    pub fn decode_until_eos(&self, tokens: &[i32]) -> String {
+        let end = tokens
+            .iter()
+            .position(|&t| t == EOS || t == PAD)
+            .unwrap_or(tokens.len());
+        self.decode(&tokens[..end])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer;
+        let toks = tk.encode("7 + 5 = 12");
+        assert_eq!(tk.decode(&toks), "7 + 5 = 12");
+        assert!(toks.iter().all(|&t| t < 256));
+    }
+
+    #[test]
+    fn decode_skips_specials_and_stops_at_eos() {
+        let tk = Tokenizer;
+        let mut toks = tk.encode("ab");
+        toks.push(EOS);
+        toks.extend(tk.encode("junk"));
+        assert_eq!(tk.decode_until_eos(&toks), "ab");
+        let with_specials = vec![BOS, 104, 105, SEP];
+        assert_eq!(tk.decode(&with_specials), "hi");
+    }
+}

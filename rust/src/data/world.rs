@@ -1,0 +1,143 @@
+//! The synthetic world: a fixed fact base shared by the pre-training
+//! corpus and every downstream task suite.
+//!
+//! This replaces the paper's "pre-trained knowledge" (DESIGN.md §2): the
+//! base model is pre-trained on statements generated from these facts, so
+//! fine-tuning methods can *forget* them — which is exactly the axis the
+//! paper's generalization experiments (Fig 2, Tables 1-3) measure.
+
+use crate::util::rng::Rng;
+
+pub const WORLD_SEED: u64 = 0x57_4F_52_4C_44; // "WORLD"
+
+#[derive(Debug, Clone)]
+pub struct Entity {
+    pub name: String,
+    pub color: &'static str,
+    pub kind: &'static str,
+    pub size: &'static str,
+    pub place: &'static str,
+}
+
+pub const COLORS: [&str; 6] = ["red", "blue", "green", "gold", "gray", "pink"];
+pub const KINDS: [&str; 6] = ["bird", "fish", "tool", "gem", "tree", "robot"];
+pub const SIZES: [&str; 3] = ["small", "big", "huge"];
+pub const PLACES: [&str; 5] = ["cave", "lake", "hill", "barn", "dome"];
+
+/// kind -> ability (category-level rules, used by arc-style questions)
+pub const ABILITIES: [(&str, &str); 6] = [
+    ("bird", "fly"),
+    ("fish", "swim"),
+    ("tool", "cut"),
+    ("gem", "shine"),
+    ("tree", "grow"),
+    ("robot", "compute"),
+];
+
+/// goal -> correct tool kind (piqa-style physical commonsense)
+pub const GOALS: [(&str, &str); 5] = [
+    ("cross the lake", "fish"),
+    ("reach the sky", "bird"),
+    ("split a log", "tool"),
+    ("light the cave", "gem"),
+    ("solve a puzzle", "robot"),
+];
+
+#[derive(Debug, Clone)]
+pub struct World {
+    pub entities: Vec<Entity>,
+}
+
+impl World {
+    /// The canonical world: deterministic, identical for corpus + tasks.
+    pub fn canonical() -> World {
+        World::generate(WORLD_SEED, 40)
+    }
+
+    pub fn generate(seed: u64, n: usize) -> World {
+        let mut rng = Rng::seed(seed);
+        let consonants = ["b", "d", "f", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"];
+        let vowels = ["a", "e", "i", "o", "u"];
+        let mut entities = Vec::with_capacity(n);
+        let mut used = std::collections::HashSet::new();
+        while entities.len() < n {
+            let name = format!(
+                "{}{}{}{}{}",
+                rng.pick(&consonants),
+                rng.pick(&vowels),
+                rng.pick(&consonants),
+                rng.pick(&vowels),
+                rng.pick(&consonants),
+            );
+            if !used.insert(name.clone()) {
+                continue;
+            }
+            entities.push(Entity {
+                name,
+                color: COLORS[rng.below(COLORS.len())],
+                kind: KINDS[rng.below(KINDS.len())],
+                size: SIZES[rng.below(SIZES.len())],
+                place: PLACES[rng.below(PLACES.len())],
+            });
+        }
+        World { entities }
+    }
+
+    pub fn ability_of(kind: &str) -> &'static str {
+        ABILITIES.iter().find(|(k, _)| *k == kind).map(|(_, a)| *a).unwrap()
+    }
+
+    pub fn entity(&self, rng: &mut Rng) -> &Entity {
+        &self.entities[rng.below(self.entities.len())]
+    }
+
+    /// All declarative fact statements (the pre-training corpus source).
+    pub fn fact_statements(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for e in &self.entities {
+            out.push(format!("{} is {}.", e.name, e.color));
+            out.push(format!("{} is a {}.", e.name, e.kind));
+            out.push(format!("{} is {}.", e.name, e.size));
+            out.push(format!("{} lives in the {}.", e.name, e.place));
+        }
+        for (kind, ability) in ABILITIES {
+            out.push(format!("every {} can {}.", kind, ability));
+        }
+        for (goal, kind) in GOALS {
+            out.push(format!("to {} you need a {}.", goal, kind));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_world_is_stable() {
+        let a = World::canonical();
+        let b = World::canonical();
+        assert_eq!(a.entities.len(), b.entities.len());
+        for (x, y) in a.entities.iter().zip(&b.entities) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.color, y.color);
+        }
+    }
+
+    #[test]
+    fn names_unique_and_pronounceable() {
+        let w = World::canonical();
+        let names: std::collections::HashSet<_> = w.entities.iter().map(|e| &e.name).collect();
+        assert_eq!(names.len(), w.entities.len());
+        assert!(w.entities.iter().all(|e| e.name.len() == 5));
+    }
+
+    #[test]
+    fn fact_statements_cover_entities() {
+        let w = World::canonical();
+        let facts = w.fact_statements();
+        assert!(facts.len() >= w.entities.len() * 4);
+        assert!(facts.iter().any(|f| f.contains("can fly")));
+    }
+}

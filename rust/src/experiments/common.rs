@@ -1,0 +1,184 @@
+//! Shared harness plumbing for the paper-reproduction experiments.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::data::{supervised_batch, Batch, Example, Split, Task, Tokenizer, World};
+use crate::runtime::{Runtime, Tensor};
+use crate::train::{task_accuracy, GenModel, Trainer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Write an experiment result JSON under results/.
+pub fn save_result(name: &str, value: &Json) {
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}.json");
+    match std::fs::write(&path, value.to_string_pretty()) {
+        Ok(()) => println!("saved {path}"),
+        Err(e) => eprintln!("could not save {path}: {e}"),
+    }
+}
+
+/// Initialize base params from the init artifact.
+pub fn init_params(rt: &Runtime, model: &str, seed: i32) -> Result<HashMap<String, Tensor>> {
+    let init = rt.load(&format!("init_{model}"))?;
+    let outs = init.run(&[Tensor::scalar_i32(seed)])?;
+    Ok(init
+        .spec
+        .outputs
+        .iter()
+        .map(|s| s.name.clone())
+        .zip(outs)
+        .collect())
+}
+
+/// Pre-train `model` on the synthetic corpus for `steps` full-FT steps,
+/// returning base-layout weights. This is the stand-in for the paper's
+/// pre-trained LLaMA checkpoints (DESIGN.md §2).
+pub fn pretrain(
+    rt: &Runtime,
+    model: &str,
+    steps: usize,
+    seed: u64,
+    log: bool,
+) -> Result<HashMap<String, Tensor>> {
+    let base = init_params(rt, model, seed as i32)?;
+    let (b, t) = rt.artifacts.model(model)?.default_batch();
+    let tk = Tokenizer;
+    let corpus = crate::data::pretrain_corpus(seed, 200_000);
+    let mut rng = Rng::seed(seed ^ 0x9E37);
+    let calib = crate::data::lm_batch(&tk, &corpus, &mut rng, b, t);
+    let mut trainer = Trainer::new(rt, model, "fullft", &base, seed, &calib)?;
+    for step in 0..steps {
+        let batch = crate::data::lm_batch(&tk, &corpus, &mut rng, b, t);
+        let loss = trainer.train_step(&batch)?;
+        if log && (step % 25 == 0 || step + 1 == steps) {
+            println!(
+                "  pretrain[{model}] step {step:>4}  loss {loss:.4}  ({:.0} tok/s)",
+                trainer.metrics.tokens_per_sec()
+            );
+        }
+    }
+    trainer.merged_params(rt)
+}
+
+/// Load the cached pre-trained checkpoint, or pre-train and cache it.
+/// Every accuracy experiment shares this base model.
+pub fn pretrained_cached(
+    rt: &Runtime,
+    model: &str,
+    steps: usize,
+    seed: u64,
+) -> Result<HashMap<String, Tensor>> {
+    let dir = format!("checkpoints/pretrain_{model}_{steps}_{seed}");
+    if let Ok(params) = crate::train::load_params(&dir) {
+        println!("  loaded pre-trained base from {dir}");
+        return Ok(params);
+    }
+    println!("  pre-training {model} for {steps} steps (cached to {dir})...");
+    let params = pretrain(rt, model, steps, seed, true)?;
+    crate::train::save_params(&dir, &params)?;
+    Ok(params)
+}
+
+/// Fine-tune `method` on a task example stream; returns the trainer.
+pub fn finetune(
+    rt: &Runtime,
+    model: &str,
+    method: &str,
+    base: &HashMap<String, Tensor>,
+    examples: &[Example],
+    steps: usize,
+    seed: u64,
+) -> Result<Trainer> {
+    let (b, t) = rt.artifacts.model(model)?.default_batch();
+    let tk = Tokenizer;
+    let calib = batch_at(&tk, examples, 0, b, t);
+    let mut trainer = Trainer::new(rt, model, method, base, seed, &calib)?;
+    for step in 0..steps {
+        let batch = batch_at(&tk, examples, step * b, b, t);
+        trainer.train_step(&batch)?;
+    }
+    Ok(trainer)
+}
+
+/// Cyclic mini-batch over an example list.
+pub fn batch_at(tk: &Tokenizer, examples: &[Example], offset: usize, b: usize, t: usize) -> Batch {
+    let chunk: Vec<Example> = (0..b)
+        .map(|i| examples[(offset + i) % examples.len()].clone())
+        .collect();
+    supervised_batch(tk, &chunk, b, t)
+}
+
+/// Per-subtask test accuracy (the paper's table row), returning
+/// `(name, accuracy%)` pairs plus the average.
+pub fn evaluate_suite(
+    model: &GenModel,
+    tasks: &[Task],
+    n_per_task: usize,
+    seed: u64,
+) -> Result<(Vec<(String, f64)>, f64)> {
+    let world = World::canonical();
+    let mut rows = Vec::with_capacity(tasks.len());
+    let mut sum = 0.0;
+    for task in tasks {
+        let mut rng = Rng::seed(seed ^ fxhash(task.name));
+        let examples = task.batch(&world, &mut rng, Split::Test, n_per_task);
+        let acc = task_accuracy(model, &examples)? * 100.0;
+        sum += acc;
+        rows.push((task.name.to_string(), acc));
+    }
+    Ok((rows.clone(), sum / tasks.len() as f64))
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Render an accuracy table like the paper's (methods x subtasks + Avg).
+pub fn print_table(title: &str, subtask_names: &[String], rows: &[(String, Vec<f64>, f64)]) {
+    println!("\n=== {title} ===");
+    print!("{:<14}", "Method");
+    for n in subtask_names {
+        print!("{:>11}", truncate(n, 10));
+    }
+    println!("{:>8}", "Avg");
+    for (method, accs, avg) in rows {
+        print!("{:<14}", method);
+        for a in accs {
+            print!("{:>11.1}", a);
+        }
+        println!("{:>8.1}", avg);
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    s.chars().take(n).collect()
+}
+
+/// Rows -> results JSON.
+pub fn table_json(subtasks: &[String], rows: &[(String, Vec<f64>, f64)]) -> Json {
+    Json::obj(vec![
+        ("subtasks", Json::arr_str(subtasks.to_vec())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(m, accs, avg)| {
+                        Json::obj(vec![
+                            ("method", Json::str(m.clone())),
+                            ("accs", Json::arr_f64(accs.iter().copied())),
+                            ("avg", Json::num(*avg)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

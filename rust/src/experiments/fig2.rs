@@ -1,0 +1,120 @@
+//! Figure 2: memorization vs generalization of SpFT / LoRA / Full FT at
+//! trainable-parameter ratios p ∈ {10%, 1%, 0.1%}.
+//!
+//! Protocol (App. C analogue): fine-tune the pre-trained small model on
+//! the Math10K-analogue mixture, then report
+//!   * final training loss (memorization),
+//!   * easy-math accuracy (near-OOD: MultiArith/AddSub/SingleEq/MAWPS),
+//!   * hard-math accuracy (GSM8K/AQuA/SVAMP),
+//!   * commonsense accuracy (far OOD).
+
+use anyhow::Result;
+
+use crate::data::{finetune_examples, Difficulty, Split, Tokenizer, World, ARITHMETIC, COMMONSENSE};
+use crate::runtime::Runtime;
+use crate::train::{task_accuracy, GenModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::common::{finetune, pretrained_cached, print_table, save_result, table_json};
+
+const MODEL: &str = "small";
+
+pub fn run_fig2(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 150, 12) };
+    let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
+    let examples = finetune_examples("arithmetic", 2000, 7);
+
+    let methods = [
+        ("FullFT", "fullft"),
+        ("SpFT p=10%", "spft-p10"),
+        ("SpFT p=1%", "spft-p1"),
+        ("SpFT p=.1%", "spft-p01"),
+        ("LoRA p=10%", "lora-p10"),
+        ("LoRA p=1%", "lora-p1"),
+        ("LoRA p=.1%", "lora-p01"),
+    ];
+
+    let world = World::canonical();
+    let subtasks = vec![
+        "TrainLoss".to_string(),
+        "EasyMath".to_string(),
+        "HardMath".to_string(),
+        "Commonsense".to_string(),
+    ];
+    let filter = std::env::var("REPRO_METHODS").ok();
+    let mut rows = Vec::new();
+    for (label, tag) in methods {
+        if filter.as_ref().is_some_and(|f| !f.split(',').any(|x| x.trim() == tag)) {
+            continue;
+        }
+        if rt.artifacts.model(MODEL)?.methods.get(tag).is_none() {
+            println!("  (skipping {label}: artifact variant {tag} not built — `make artifacts`)");
+            continue;
+        }
+        println!("fig2: fine-tuning {label} ({tag}) for {ft_steps} steps...");
+        let trainer = finetune(&rt, MODEL, tag, &base, &examples, ft_steps, 11)?;
+        let train_loss = trainer.metrics.tail_loss(10) as f64;
+        let merged = trainer.merged_params(&rt)?;
+        let model = GenModel::new(&rt, MODEL, merged)?;
+
+        let acc_of = |tasks: &[&crate::data::Task]| -> Result<f64> {
+            let mut sum = 0.0;
+            for t in tasks {
+                let mut rng = Rng::seed(0xF162 ^ t.name.len() as u64);
+                let ex = t.batch(&world, &mut rng, Split::Test, n_eval);
+                sum += task_accuracy(&model, &ex)? * 100.0;
+            }
+            Ok(sum / tasks.len() as f64)
+        };
+        let easy: Vec<&crate::data::Task> =
+            ARITHMETIC.iter().filter(|t| t.difficulty == Difficulty::Easy).collect();
+        let hard: Vec<&crate::data::Task> =
+            ARITHMETIC.iter().filter(|t| t.difficulty == Difficulty::Hard).collect();
+        let cs: Vec<&crate::data::Task> = COMMONSENSE.iter().collect();
+        let vals = vec![train_loss, acc_of(&easy)?, acc_of(&hard)?, acc_of(&cs)?];
+        let avg = (vals[1] + vals[2] + vals[3]) / 3.0;
+        rows.push((label.to_string(), vals, avg));
+        let _ = Tokenizer; // (tokenizer lives inside helpers)
+    }
+    // merge rows from earlier chunked invocations
+    let mut merged: Vec<(String, Vec<f64>, f64)> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string("results/fig2.json") {
+        if let Ok(js) = crate::util::json::Json::parse(&prev) {
+            if let Some(prows) = js.opt("rows").and_then(|r| r.as_arr().ok()) {
+                for pr in prows {
+                    if let (Ok(m), Ok(avg)) = (
+                        pr.get("method").and_then(|v| v.as_str().map(String::from)),
+                        pr.get("avg").and_then(|v| v.as_f64()),
+                    ) {
+                        let accs: Vec<f64> = pr
+                            .get("accs")
+                            .ok()
+                            .and_then(|v| v.as_arr().ok())
+                            .map(|a| a.iter().filter_map(|x| x.as_f64().ok()).collect())
+                            .unwrap_or_default();
+                        if !rows.iter().any(|(n, _, _)| *n == m) {
+                            merged.push((m, accs, avg));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    merged.extend(rows);
+    let order: Vec<&str> = methods.iter().map(|(l, _)| *l).collect();
+    merged.sort_by_key(|(n, _, _)| order.iter().position(|o| o == n).unwrap_or(usize::MAX));
+    print_table(
+        "Figure 2: memorization (train loss ↓) vs generalization (acc % ↑)",
+        &subtasks,
+        &merged,
+    );
+    println!("\nExpected shape (paper): SpFT ≥ FullFT ≥ LoRA on far-OOD; loss ↑ as p ↓.");
+    save_result("fig2", &table_json(&subtasks, &merged));
+    Ok(())
+}
+
+// Silence unused-import lint when quick paths skip branches.
+#[allow(unused)]
+fn _t(_: Json) {}

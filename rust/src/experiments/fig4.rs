@@ -1,0 +1,73 @@
+//! Figure 4: which Transformer component should carry the fine-tuning
+//! budget? One S²FT run per projection (Q/K/V/O/U/G/D), parameter-matched.
+
+use anyhow::Result;
+
+use crate::data::{finetune_examples, COMMONSENSE};
+use crate::runtime::Runtime;
+use crate::train::GenModel;
+
+use super::common::{evaluate_suite, finetune, pretrained_cached, save_result};
+use crate::util::json::Json;
+
+const MODEL: &str = "small";
+
+pub fn run_fig4(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 150, 16) };
+    let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
+    let examples = finetune_examples("commonsense", 2000, 19);
+
+    let components = [
+        ("Query", "s2ft-qonly"),
+        ("Key", "s2ft-konly"),
+        ("Value", "s2ft-vonly"),
+        ("Output", "s2ft-oonly"),
+        ("Up", "s2ft-uonly"),
+        ("Gate", "s2ft-gonly"),
+        ("Down", "s2ft-donly"),
+    ];
+    println!("\n=== Figure 4: component ablation (commonsense avg acc %) ===");
+    let filter = std::env::var("REPRO_METHODS").ok();
+    let mut records = Vec::new();
+    for (label, tag) in components {
+        if filter.as_ref().is_some_and(|f| !f.split(',').any(|x| x.trim() == tag)) {
+            continue;
+        }
+        if rt.artifacts.model(MODEL)?.methods.get(tag).is_none() {
+            println!("  (skipping {label}: {tag} not built)");
+            continue;
+        }
+        let trainer = finetune(&rt, MODEL, tag, &base, &examples, ft_steps, 23)?;
+        let model = GenModel::new(&rt, MODEL, trainer.merged_params(&rt)?)?;
+        let (_, avg) = evaluate_suite(&model, &COMMONSENSE, n_eval, 0xF4)?;
+        println!("{label:>8}: {avg:5.1}%   (train loss {:.3})", trainer.metrics.tail_loss(10));
+        records.push(Json::obj(vec![
+            ("component", Json::str(label)),
+            ("avg_acc", Json::num(avg)),
+            ("train_loss", Json::num(trainer.metrics.tail_loss(10) as f64)),
+        ]));
+    }
+    println!("Expected shape (paper): Output/Down > Query/Key/Value/Up/Gate.");
+    // merge chunked invocations (keyed by component)
+    let mut merged: Vec<Json> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string("results/fig4.json") {
+        if let Ok(Json::Arr(prows)) = Json::parse(&prev) {
+            for pr in prows {
+                let name = pr.get("component").ok().and_then(|v| v.as_str().ok().map(String::from));
+                if let Some(name) = name {
+                    let dup = records.iter().any(|r: &Json| {
+                        r.get("component").ok().and_then(|v| v.as_str().ok())
+                            == Some(name.as_str())
+                    });
+                    if !dup {
+                        merged.push(pr);
+                    }
+                }
+            }
+        }
+    }
+    merged.extend(records);
+    save_result("fig4", &Json::Arr(merged));
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Figure 5: training efficiency — peak memory and per-step latency for
+//! Full FT / LoRA / S²FT on the `base` model across (batch, seq) shapes.
+//!
+//! Memory is reported two ways: analytic live-state bytes (params + frozen
+//! + optimizer moments, exactly what the method layouts imply) and process
+//! peak-RSS delta. Latency is the measured train-step wall time.
+
+use anyhow::Result;
+
+use crate::data::{lm_batch, pretrain_corpus, Tokenizer};
+use crate::runtime::Runtime;
+use crate::train::Trainer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::common::{init_params, save_result};
+
+const MODEL: &str = "base";
+
+pub fn run_fig5(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let mm = rt.artifacts.model(MODEL)?.clone();
+    let steps = if quick { 3 } else { 8 };
+    let base = init_params(&rt, MODEL, 1)?;
+    let tk = Tokenizer;
+    let corpus = pretrain_corpus(5, 400_000);
+
+    // every (b, t) shape that has artifacts (default + `make artifacts-fig5`)
+    let shapes: Vec<(usize, usize)> = mm.batches.clone();
+    let all_methods = ["fullft", "lora", "s2ft"];
+    let filter = std::env::var("REPRO_METHODS").ok();
+    let methods: Vec<&str> = all_methods
+        .iter()
+        .copied()
+        .filter(|m| filter.as_ref().map_or(true, |f| f.split(',').any(|x| x.trim() == *m)))
+        .collect();
+
+    println!("\n=== Figure 5: training efficiency on `{MODEL}` ({:.1}M params) ===", mm.param_count as f64 / 1e6);
+    println!(
+        "{:<8} {:>5} {:>5} {:>12} {:>12} {:>12} {:>10}",
+        "method", "B", "T", "ms/step", "state MB", "opt MB", "tok/s"
+    );
+    let mut records = Vec::new();
+    let mut baseline_ms: Option<f64> = None;
+    let mut baseline_mb: Option<f64> = None;
+    for &(b, t) in &shapes {
+        for &method in &methods {
+            let train_name = format!("train_{MODEL}_{method}_{b}x{t}");
+            if rt.artifacts.artifact(&train_name).is_err() {
+                continue;
+            }
+            let mut rng = Rng::seed(7);
+            let calib = lm_batch(&tk, &corpus, &mut rng, b, t);
+            let mut trainer =
+                Trainer::with_batch(&rt, MODEL, method, &base, 3, &calib, b, t)?;
+            // warmup (compile + first-run allocations)
+            let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+            trainer.train_step(&batch)?;
+            trainer.metrics = crate::train::TrainMetrics::new();
+            for _ in 0..steps {
+                let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+                trainer.train_step(&batch)?;
+            }
+            let ms = trainer.metrics.ms_per_step();
+            let state_mb = trainer.state_bytes() as f64 / 1e6;
+            let opt_mb = trainer.opt_bytes() as f64 / 1e6;
+            let tps = trainer.metrics.tokens_per_sec();
+            println!(
+                "{:<8} {:>5} {:>5} {:>12.1} {:>12.1} {:>12.1} {:>10.0}",
+                method, b, t, ms, state_mb, opt_mb, tps
+            );
+            if method == "fullft" && (b, t) == shapes[0] {
+                baseline_ms = Some(ms);
+                baseline_mb = Some(state_mb);
+            }
+            records.push(Json::obj(vec![
+                ("method", Json::str(method)),
+                ("batch", Json::num(b as f64)),
+                ("seq", Json::num(t as f64)),
+                ("ms_per_step", Json::num(ms)),
+                ("state_mb", Json::num(state_mb)),
+                ("opt_mb", Json::num(opt_mb)),
+                ("tokens_per_sec", Json::num(tps)),
+                (
+                    "peak_rss_mb",
+                    Json::num(crate::util::peak_rss_bytes().unwrap_or(0) as f64 / 1e6),
+                ),
+            ]));
+            // free the compiled executable before the next big one
+            rt.evict(&train_name);
+        }
+    }
+    if let (Some(bms), Some(bmb)) = (baseline_ms, baseline_mb) {
+        // summary ratios vs full FT at the default shape
+        println!("\nRatios vs Full FT (default shape): paper reports 1.5-2.7x latency, 1.4-3.0x memory.");
+        for r in &records {
+            let m = r.get("method").unwrap().as_str().unwrap();
+            if m != "fullft"
+                && r.get("batch").unwrap().as_usize().unwrap() == shapes[0].0
+                && r.get("seq").unwrap().as_usize().unwrap() == shapes[0].1
+            {
+                println!(
+                    "  {m}: latency {:.2}x faster, state {:.2}x smaller",
+                    bms / r.get("ms_per_step").unwrap().as_f64().unwrap(),
+                    bmb / r.get("state_mb").unwrap().as_f64().unwrap(),
+                );
+            }
+        }
+    }
+    // merge with prior chunked invocations (keyed by method/batch/seq)
+    let mut merged: Vec<Json> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string("results/fig5.json") {
+        if let Ok(Json::Arr(prows)) = Json::parse(&prev) {
+            for pr in prows {
+                let key = |r: &Json| {
+                    (
+                        r.get("method").ok().and_then(|v| v.as_str().ok().map(String::from)),
+                        r.get("batch").ok().and_then(|v| v.as_usize().ok()),
+                        r.get("seq").ok().and_then(|v| v.as_usize().ok()),
+                    )
+                };
+                if !records.iter().any(|r| key(r) == key(&pr)) {
+                    merged.push(pr);
+                }
+            }
+        }
+    }
+    merged.extend(records);
+    save_result("fig5", &Json::Arr(merged));
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §6).
+//!
+//! Each harness prints the same row/column structure the paper reports and
+//! writes machine-readable JSON under `results/`. Launch via
+//! `repro experiment <id>`.
+
+pub mod common;
+mod fig2;
+mod fig4;
+mod fig5;
+mod tables;
+mod tab4;
+mod tab5;
+mod thm42;
+
+pub use fig2::run_fig2;
+pub use fig4::run_fig4;
+pub use fig5::run_fig5;
+pub use tab4::run_tab4;
+pub use tab5::run_tab5;
+pub use tables::{run_tab1, run_tab2, run_tab3};
+pub use thm42::run_thm42;
+
+use anyhow::{bail, Result};
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, artifacts: &str, quick: bool) -> Result<()> {
+    match id {
+        "fig2" => run_fig2(artifacts, quick),
+        "tab1" => run_tab1(artifacts, quick),
+        "tab2" => run_tab2(artifacts, quick),
+        "tab3" => run_tab3(artifacts, quick),
+        "fig4" => run_fig4(artifacts, quick),
+        "tab4" => run_tab4(artifacts, quick),
+        "fig5" => run_fig5(artifacts, quick),
+        "tab5" => run_tab5(artifacts, quick),
+        "thm42" => run_thm42(quick),
+        "all" => {
+            for id in ["thm42", "fig2", "tab1", "tab2", "tab3", "fig4", "tab4", "fig5", "tab5"] {
+                println!("\n################ experiment {id} ################");
+                run(id, artifacts, quick)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (try fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all)"),
+    }
+}

@@ -1,0 +1,87 @@
+//! Table 4: channel-selection strategies (S²FT-{R,W,A,S,G} x {Large,Small})
+//! on commonsense + arithmetic.
+
+use anyhow::Result;
+
+use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
+use crate::runtime::Runtime;
+use crate::train::GenModel;
+
+use super::common::{evaluate_suite, finetune, pretrained_cached, save_result};
+use crate::util::json::Json;
+
+const MODEL: &str = "small";
+
+pub fn run_tab4(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 120, 12) };
+    let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
+
+    let strategies = [
+        ("S2FT-R", "s2ft"),
+        ("S2FT-W (L)", "s2ft-wL"),
+        ("S2FT-W (S)", "s2ft-wS"),
+        ("S2FT-A (L)", "s2ft-aL"),
+        ("S2FT-A (S)", "s2ft-aS"),
+        ("S2FT-S (L)", "s2ft-sL"),
+        ("S2FT-S (S)", "s2ft-sS"),
+        ("S2FT-G (L)", "s2ft-gL"),
+        ("S2FT-G (S)", "s2ft-gS"),
+    ];
+
+    println!("\n=== Table 4: selection strategies (avg test acc %) ===");
+    println!("{:<12} {:>12} {:>12}", "Strategy", "Commonsense", "Arithmetic");
+    let filter = std::env::var("REPRO_METHODS").ok();
+    let mut records = Vec::new();
+    for (label, tag) in strategies {
+        if filter.as_ref().is_some_and(|f| !f.split(',').any(|x| x.trim() == tag)) {
+            continue;
+        }
+        if rt.artifacts.model(MODEL)?.methods.get(tag).is_none() {
+            println!("  (skipping {label}: {tag} not built)");
+            continue;
+        }
+        let mut accs = [0.0f64; 2];
+        for (k, (suite, tasks)) in [
+            ("commonsense", &COMMONSENSE[..]),
+            ("arithmetic", &ARITHMETIC[..]),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let examples = finetune_examples(suite, 2000, 29);
+            let trainer = finetune(&rt, MODEL, tag, &base, &examples, ft_steps, 31)?;
+            let model = GenModel::new(&rt, MODEL, trainer.merged_params(&rt)?)?;
+            let (_, avg) = evaluate_suite(&model, tasks, n_eval, 0x7AB4)?;
+            accs[k] = avg;
+        }
+        println!("{:<12} {:>12.1} {:>12.1}", label, accs[0], accs[1]);
+        records.push(Json::obj(vec![
+            ("strategy", Json::str(label)),
+            ("commonsense", Json::num(accs[0])),
+            ("arithmetic", Json::num(accs[1])),
+        ]));
+    }
+    println!("Expected shape (paper): random is a strong baseline; A/S-small ≥ R; G-large hurts.");
+    // merge chunked invocations (keyed by strategy)
+    let mut merged: Vec<Json> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string("results/tab4.json") {
+        if let Ok(Json::Arr(prows)) = Json::parse(&prev) {
+            for pr in prows {
+                let name = pr.get("strategy").ok().and_then(|v| v.as_str().ok().map(String::from));
+                if let Some(name) = name {
+                    let dup = records.iter().any(|r: &Json| {
+                        r.get("strategy").ok().and_then(|v| v.as_str().ok())
+                            == Some(name.as_str())
+                    });
+                    if !dup {
+                        merged.push(pr);
+                    }
+                }
+            }
+        }
+    }
+    merged.extend(records);
+    save_result("tab4", &Json::Arr(merged));
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Table 5: adapter fusion. Train commonsense + arithmetic adapters, fuse
+//! with equal weights, and measure the degradation on both suites —
+//! comparing LoRA fusion vs S²FT fusion with overlapped vs non-overlapped
+//! channel selections.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::adapter::S2ftAdapter;
+use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
+use crate::runtime::{Runtime, Tensor};
+use crate::train::GenModel;
+use crate::util::json::Json;
+
+use super::common::{evaluate_suite, finetune, pretrained_cached, save_result};
+
+const MODEL: &str = "small";
+
+pub fn run_tab5(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 180, 20) };
+    let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
+    let mm = rt.artifacts.model(MODEL)?.clone();
+    let method = mm.method("s2ft")?.clone();
+
+    let cs_examples = finetune_examples("commonsense", 2000, 41);
+    let ar_examples = finetune_examples("arithmetic", 2000, 43);
+
+    let eval_both = |params: HashMap<String, Tensor>| -> Result<(f64, f64)> {
+        let model = GenModel::new(&rt, MODEL, params)?;
+        let (_, cs) = evaluate_suite(&model, &COMMONSENSE, n_eval, 0x7AB5)?;
+        let (_, ar) = evaluate_suite(&model, &ARITHMETIC, n_eval, 0x7AB5)?;
+        Ok((cs, ar))
+    };
+
+    println!("\n=== Table 5: adapter fusion (avg acc %, rows = eval suite) ===");
+    let mut records = Vec::new();
+    let emit = |label: &str, cs: f64, ar: f64, records: &mut Vec<Json>| {
+        println!("{:<28} commonsense {:>5.1}   arithmetic {:>5.1}", label, cs, ar);
+        records.push(Json::obj(vec![
+            ("setting", Json::str(label)),
+            ("commonsense", Json::num(cs)),
+            ("arithmetic", Json::num(ar)),
+        ]));
+    };
+
+    // --- S2FT: same selection seed => overlapped channels -----------------
+    println!("tab5: training S2FT adapters (overlap: same selection seed)...");
+    let t_cs = finetune(&rt, MODEL, "s2ft", &base, &cs_examples, ft_steps, 51)?;
+    let t_ar_overlap = finetune(&rt, MODEL, "s2ft", &base, &ar_examples, ft_steps, 51)?;
+    // --- different selection seed => (mostly) non-overlapping channels ----
+    println!("tab5: training S2FT arithmetic adapter (non-overlap seed)...");
+    let t_ar_disjoint = finetune(&rt, MODEL, "s2ft", &base, &ar_examples, ft_steps, 52)?;
+
+    let a_cs = S2ftAdapter::extract(&mm, &method, &t_cs.perms, &base, &t_cs.merged_params(&rt)?)?;
+    let a_ar_o = S2ftAdapter::extract(
+        &mm, &method, &t_ar_overlap.perms, &base, &t_ar_overlap.merged_params(&rt)?,
+    )?;
+    let a_ar_d = S2ftAdapter::extract(
+        &mm, &method, &t_ar_disjoint.perms, &base, &t_ar_disjoint.merged_params(&rt)?,
+    )?;
+    println!(
+        "  channel overlap: same-seed {:.0}%, diff-seed {:.0}%",
+        a_cs.overlap_with(&a_ar_o) * 100.0,
+        a_cs.overlap_with(&a_ar_d) * 100.0
+    );
+
+    // individual adapters
+    let (cs1, ar1) = eval_both(apply(&base, &a_cs)?)?;
+    emit("S2FT commonsense adapter", cs1, ar1, &mut records);
+    let (cs2, ar2) = eval_both(apply(&base, &a_ar_d)?)?;
+    emit("S2FT arithmetic adapter", cs2, ar2, &mut records);
+
+    // fused variants
+    let fused_o = S2ftAdapter::fuse(&[(&a_cs, 0.5), (&a_ar_o, 0.5)])?;
+    let (cso, aro) = eval_both(apply(&base, &fused_o)?)?;
+    emit("S2FT fused (overlap)", cso, aro, &mut records);
+    let fused_d = S2ftAdapter::fuse(&[(&a_cs, 0.5), (&a_ar_d, 0.5)])?;
+    let (csd, ard) = eval_both(apply(&base, &fused_d)?)?;
+    emit("S2FT fused (non-overlap)", csd, ard, &mut records);
+
+    // --- LoRA baseline -----------------------------------------------------
+    println!("tab5: training LoRA adapters...");
+    let l_cs = finetune(&rt, MODEL, "lora", &base, &cs_examples, ft_steps, 53)?;
+    let l_ar = finetune(&rt, MODEL, "lora", &base, &ar_examples, ft_steps, 54)?;
+    let m_cs = l_cs.merged_params(&rt)?;
+    let m_ar = l_ar.merged_params(&rt)?;
+    let (lcs1, lar1) = eval_both(m_cs.clone())?;
+    emit("LoRA commonsense adapter", lcs1, lar1, &mut records);
+    let (lcs2, lar2) = eval_both(m_ar.clone())?;
+    emit("LoRA arithmetic adapter", lcs2, lar2, &mut records);
+    // weighted ΔW fusion
+    let mut fused = base.clone();
+    for (k, v) in fused.iter_mut() {
+        let b = base[k].as_f32()?;
+        let c = m_cs[k].as_f32()?;
+        let a = m_ar[k].as_f32()?;
+        let out = v.as_f32_mut()?;
+        for i in 0..out.len() {
+            out[i] = b[i] + 0.5 * (c[i] - b[i]) + 0.5 * (a[i] - b[i]);
+        }
+    }
+    let (lcsf, larf) = eval_both(fused)?;
+    emit("LoRA fused", lcsf, larf, &mut records);
+
+    println!("\nExpected shape (paper): fusion degrades both; S2FT non-overlap degrades least.");
+    save_result("tab5", &Json::Arr(records));
+    Ok(())
+}
+
+fn apply(base: &HashMap<String, Tensor>, adapter: &S2ftAdapter) -> Result<HashMap<String, Tensor>> {
+    let mut p = base.clone();
+    adapter.apply(&mut p)?;
+    Ok(p)
+}

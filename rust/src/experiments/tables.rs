@@ -1,0 +1,161 @@
+//! Tables 1–3: commonsense reasoning, arithmetic reasoning, instruction
+//! following. Same harness, different suite + method list.
+
+use anyhow::Result;
+
+use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE, INSTRUCT};
+use crate::runtime::Runtime;
+use crate::train::GenModel;
+
+use super::common::{
+    evaluate_suite, finetune, pretrained_cached, print_table, save_result, table_json,
+};
+
+const MODEL: &str = "small";
+
+struct TableSpec {
+    id: &'static str,
+    title: &'static str,
+    suite: &'static str,
+    tasks: &'static [crate::data::Task],
+    methods: &'static [(&'static str, &'static str)],
+}
+
+fn run_table(artifacts: &str, quick: bool, spec: &TableSpec) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 250, 32) };
+    let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
+    let examples = finetune_examples(spec.suite, 2000, 13);
+
+    let subtasks: Vec<String> = spec.tasks.iter().map(|t| t.name.to_string()).collect();
+    let mut rows = Vec::new();
+    // Optional method filter (comma list of tags) + incremental result
+    // merging: long runs can be chunked across invocations, each chunk
+    // updating results/<id>.json (REPRO_METHODS=s2ft,lisa repro experiment tab1).
+    let filter: Option<Vec<String>> = std::env::var("REPRO_METHODS")
+        .ok()
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    let keep = |tag: &str| filter.as_ref().map_or(true, |f| f.iter().any(|x| x == tag));
+
+    if keep("vanilla") {
+        // Vanilla row: the pre-trained model, no fine-tuning.
+        let vanilla = GenModel::new(&rt, MODEL, base.clone())?;
+        let (accs, avg) = evaluate_suite(&vanilla, spec.tasks, n_eval, 0xEAA)?;
+        rows.push(("Vanilla".to_string(), accs.into_iter().map(|(_, a)| a).collect(), avg));
+    }
+
+    for (label, tag) in spec.methods {
+        if !keep(tag) {
+            continue;
+        }
+        if rt.artifacts.model(MODEL)?.methods.get(*tag).is_none() {
+            println!("  (skipping {label}: {tag} not built)");
+            continue;
+        }
+        println!("{}: fine-tuning {label} ({tag}) for {ft_steps} steps...", spec.id);
+        let trainer = finetune(&rt, MODEL, tag, &base, &examples, ft_steps, 17)?;
+        let merged = trainer.merged_params(&rt)?;
+        let model = GenModel::new(&rt, MODEL, merged)?;
+        let (accs, avg) = evaluate_suite(&model, spec.tasks, n_eval, 0xEAA)?;
+        println!("  -> avg {avg:.1}% (train loss {:.3})", trainer.metrics.tail_loss(10));
+        rows.push((label.to_string(), accs.into_iter().map(|(_, a)| a).collect(), avg));
+    }
+    // Merge with rows from previous chunked invocations (method name keyed;
+    // fresh rows win; ordering = vanilla + spec order).
+    let mut merged: Vec<(String, Vec<f64>, f64)> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string(format!("results/{}.json", spec.id)) {
+        if let Ok(js) = crate::util::json::Json::parse(&prev) {
+            if let Some(prows) = js.opt("rows").and_then(|r| r.as_arr().ok()) {
+                for pr in prows {
+                    let m = pr.get("method").and_then(|v| v.as_str().map(String::from));
+                    let avg = pr.get("avg").and_then(|v| v.as_f64());
+                    let accs: Option<Vec<f64>> = pr.get("accs").and_then(|v| {
+                        v.as_arr().map(|a| a.iter().filter_map(|x| x.as_f64().ok()).collect())
+                    }).ok();
+                    if let (Ok(m), Ok(avg), Some(accs)) = (m, avg, accs) {
+                        if !rows.iter().any(|(name, _, _)| *name == m) {
+                            merged.push((m, accs, avg));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    merged.extend(rows);
+    // stable order: Vanilla first, then spec.methods order
+    let order: Vec<&str> = std::iter::once("Vanilla")
+        .chain(spec.methods.iter().map(|(l, _)| *l))
+        .collect();
+    merged.sort_by_key(|(name, _, _)| {
+        order.iter().position(|o| o == name).unwrap_or(usize::MAX)
+    });
+    print_table(spec.title, &subtasks, &merged);
+    save_result(spec.id, &table_json(&subtasks, &merged));
+    Ok(())
+}
+
+/// Table 1: eight commonsense reasoning subtasks.
+pub fn run_tab1(artifacts: &str, quick: bool) -> Result<()> {
+    run_table(
+        artifacts,
+        quick,
+        &TableSpec {
+            id: "tab1",
+            title: "Table 1: commonsense reasoning (test accuracy %)",
+            suite: "commonsense",
+            tasks: &COMMONSENSE,
+            methods: &[
+                ("Full FT", "fullft"),
+                ("LoRA", "lora"),
+                ("DoRA", "dora"),
+                ("GaLore", "galore"),
+                ("SpFT", "spft"),
+                ("LISA", "lisa"),
+                ("S2FT (ours)", "s2ft"),
+            ],
+        },
+    )
+}
+
+/// Table 2: seven arithmetic reasoning subtasks (FT on the Math10K-analogue
+/// mixture; MultiArith/AddSub/SingleEq/SVAMP are near-OOD).
+pub fn run_tab2(artifacts: &str, quick: bool) -> Result<()> {
+    run_table(
+        artifacts,
+        quick,
+        &TableSpec {
+            id: "tab2",
+            title: "Table 2: arithmetic reasoning (test accuracy %)",
+            suite: "arithmetic",
+            tasks: &ARITHMETIC,
+            methods: &[
+                ("Full FT", "fullft"),
+                ("LoRA", "lora"),
+                ("DoRA", "dora"),
+                ("S2FT (ours)", "s2ft"),
+            ],
+        },
+    )
+}
+
+/// Table 3: instruction following across eight MT-Bench-like categories
+/// (exact-match score stands in for the GPT-4 judge).
+pub fn run_tab3(artifacts: &str, quick: bool) -> Result<()> {
+    run_table(
+        artifacts,
+        quick,
+        &TableSpec {
+            id: "tab3",
+            title: "Table 3: instruction following (category score %)",
+            suite: "instruct",
+            tasks: &INSTRUCT,
+            methods: &[
+                ("Full FT", "fullft"),
+                ("LoRA", "lora"),
+                ("GaLore", "galore"),
+                ("LISA", "lisa"),
+                ("S2FT (ours)", "s2ft"),
+            ],
+        },
+    )
+}

@@ -1,0 +1,30 @@
+//! S²FT: Structured Sparse Fine-Tuning — Layer-3 rust coordinator.
+//!
+//! This crate is the runtime half of a three-layer stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas partial-backprop kernels.
+//! * **L2** (`python/compile/model.py`): LLaMA-style model + every
+//!   fine-tuning method (fullft/lora/dora/spft/lisa/galore/s2ft), AOT-lowered
+//!   to HLO text by `python/compile/aot.py`.
+//! * **L3** (this crate): loads the artifacts via PJRT ([`runtime`]), owns
+//!   training ([`train`]), data generation ([`data`]), adapter lifecycle
+//!   ([`adapter`]), multi-adapter serving ([`serve`]), the deep-linear
+//!   theory simulator ([`theory`]) and the paper's experiment harnesses
+//!   ([`experiments`]).
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only, and the `repro` binary is self-contained afterwards.
+
+pub mod adapter;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod runtime;
+pub mod serve;
+pub mod sparsity;
+pub mod theory;
+pub mod train;
+pub mod util;
+
+pub use runtime::{Artifacts, Runtime, Tensor};

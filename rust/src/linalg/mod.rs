@@ -1,0 +1,241 @@
+//! Dense linear-algebra substrate (no external BLAS).
+//!
+//! Powers the theory simulator (min-norm LoRA/S²FT solutions need SVD and
+//! pseudo-inverses), the adapter math (LoRA ΔW = A·B on the switch path)
+//! and the Fig 6 single-layer serving benchmarks.
+
+mod svd;
+
+pub use svd::{svd, Svd};
+
+use std::fmt;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Standard-normal random matrix (deterministic given the rng).
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32()).collect();
+        Self { rows, cols, data }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — ikj loop order (row-major cache friendly).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {self:?} @ {other:?}");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let src = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += a * s;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn op_norm(&self) -> f32 {
+        svd(self).s.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn trace(&self) -> f32 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Moore–Penrose pseudo-inverse via SVD with relative threshold.
+    pub fn pinv(&self) -> Mat {
+        let Svd { u, s, vt } = svd(self);
+        let tol = s.first().copied().unwrap_or(0.0) * 1e-5 * self.rows.max(self.cols) as f32;
+        // A+ = V S+ U^T
+        let mut sp = Mat::zeros(vt.rows, u.cols);
+        for (i, &sv) in s.iter().enumerate() {
+            if sv > tol {
+                sp[(i, i)] = 1.0 / sv;
+            }
+        }
+        vt.t().matmul(&sp).matmul(&u.t())
+    }
+
+    /// Best rank-r approximation (truncated SVD) — the LoRA min-norm update.
+    pub fn svd_truncate(&self, r: usize) -> Mat {
+        let Svd { u, s, vt } = svd(self);
+        let r = r.min(s.len());
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for k in 0..r {
+            for i in 0..self.rows {
+                let uik = u[(i, k)] * s[k];
+                if uik == 0.0 {
+                    continue;
+                }
+                for j in 0..self.cols {
+                    out[(i, j)] += uik * vt[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Keep only the rows in `idx`, zeroing the rest (S²FT-style projector).
+    pub fn keep_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for &i in idx {
+            out.data[i * self.cols..(i + 1) * self.cols]
+                .copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed(0);
+        let a = Mat::randn(4, 6, &mut rng);
+        let got = a.matmul(&Mat::eye(6));
+        assert!(got.sub(&a).fro_norm() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn pinv_of_full_rank_square_is_inverse() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 0.0, 0.0, 2.0]);
+        let p = a.pinv();
+        let prod = a.matmul(&p);
+        assert!(prod.sub(&Mat::eye(2)).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn pinv_properties_rect() {
+        let mut rng = Rng::seed(1);
+        let a = Mat::randn(6, 3, &mut rng);
+        let p = a.pinv();
+        // A A+ A = A
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.sub(&a).fro_norm() / a.fro_norm() < 1e-3);
+    }
+
+    #[test]
+    fn truncated_svd_rank() {
+        let mut rng = Rng::seed(2);
+        // build an exactly rank-2 matrix
+        let u = Mat::randn(5, 2, &mut rng);
+        let v = Mat::randn(2, 7, &mut rng);
+        let a = u.matmul(&v);
+        let a2 = a.svd_truncate(2);
+        assert!(a2.sub(&a).fro_norm() / a.fro_norm() < 1e-3);
+        let a1 = a.svd_truncate(1);
+        assert!(a1.sub(&a).fro_norm() > 1e-3); // strictly worse
+    }
+
+    #[test]
+    fn keep_rows_projector() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let k = a.keep_rows(&[1]);
+        assert_eq!(k.data, vec![0., 0., 3., 4., 0., 0.]);
+    }
+}

@@ -1,0 +1,146 @@
+//! One-sided Jacobi SVD.
+//!
+//! Robust and dependency-free; O(n³) per sweep which is fine at the theory
+//! simulator's scale (dims ≤ a few hundred). For `rows < cols` we factor
+//! the transpose and swap U/V.
+
+use super::Mat;
+
+pub struct Svd {
+    /// (rows, k) left singular vectors, k = min(rows, cols).
+    pub u: Mat,
+    /// singular values, descending.
+    pub s: Vec<f32>,
+    /// (k, cols) right singular vectors (transposed).
+    pub vt: Mat,
+}
+
+/// Compute the thin SVD `A = U diag(s) Vt`.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        let t = svd(&a.t());
+        return Svd { u: t.vt.t(), s: t.s, vt: t.u.t() };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns of U = A (will become U * diag(s)); V accumulates rotations.
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-10f64;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    u[(i, p)] = (c * up - s * uq) as f32;
+                    u[(i, q)] = (s * up + c * uq) as f32;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)] as f64;
+                    let vq = v[(i, q)] as f64;
+                    v[(i, p)] = (c * vp - s * vq) as f32;
+                    v[(i, q)] = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sv = vec![0.0f32; n];
+    for j in 0..n {
+        let norm: f64 = (0..m).map(|i| (u[(i, j)] as f64).powi(2)).sum::<f64>().sqrt();
+        sv[j] = norm as f32;
+    }
+    order.sort_by(|&a_, &b_| sv[b_].partial_cmp(&sv[a_]).unwrap());
+    let mut uo = Mat::zeros(m, n);
+    let mut vto = Mat::zeros(n, n);
+    let mut so = vec![0.0f32; n];
+    for (k, &j) in order.iter().enumerate() {
+        so[k] = sv[j];
+        let inv = if sv[j] > 1e-20 { 1.0 / sv[j] } else { 0.0 };
+        for i in 0..m {
+            uo[(i, k)] = u[(i, j)] * inv;
+        }
+        for i in 0..n {
+            vto[(k, i)] = v[(i, j)];
+        }
+    }
+    Svd { u: uo, s: so, vt: vto }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(s: &Svd) -> Mat {
+        let k = s.s.len();
+        let mut ds = Mat::zeros(k, k);
+        for i in 0..k {
+            ds[(i, i)] = s.s[i];
+        }
+        s.u.matmul(&ds).matmul(&s.vt)
+    }
+
+    #[test]
+    fn svd_reconstructs_tall() {
+        let mut rng = Rng::seed(0);
+        let a = Mat::randn(8, 5, &mut rng);
+        let d = reconstruct(&svd(&a)).sub(&a).fro_norm() / a.fro_norm();
+        assert!(d < 1e-4, "rel err {d}");
+    }
+
+    #[test]
+    fn svd_reconstructs_wide() {
+        let mut rng = Rng::seed(1);
+        let a = Mat::randn(4, 9, &mut rng);
+        let d = reconstruct(&svd(&a)).sub(&a).fro_norm() / a.fro_norm();
+        assert!(d < 1e-4, "rel err {d}");
+    }
+
+    #[test]
+    fn svd_orthonormal_and_sorted() {
+        let mut rng = Rng::seed(2);
+        let a = Mat::randn(7, 7, &mut rng);
+        let Svd { u, s, vt } = svd(&a);
+        let utu = u.t().matmul(&u);
+        assert!(utu.sub(&Mat::eye(7)).fro_norm() < 1e-3);
+        let vvt = vt.matmul(&vt.t());
+        assert!(vvt.sub(&Mat::eye(7)).fro_norm() < 1e-3);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn svd_diag_exact() {
+        let a = Mat::from_vec(3, 3, vec![3., 0., 0., 0., 5., 0., 0., 0., 1.]);
+        let s = svd(&a).s;
+        assert!((s[0] - 5.0).abs() < 1e-5);
+        assert!((s[1] - 3.0).abs() < 1e-5);
+        assert!((s[2] - 1.0).abs() < 1e-5);
+    }
+}

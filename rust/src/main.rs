@@ -1,0 +1,367 @@
+//! `repro` — the S²FT launcher CLI (clap is not vendored; parsing is
+//! hand-rolled). Subcommands:
+//!
+//!   repro info  [--artifacts DIR]
+//!   repro pretrain --model M --steps N [--seed S] [--save DIR]
+//!   repro train --config FILE | --model M --method T [--data SUITE]
+//!               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
+//!   repro eval  --model M --weights DIR [--suite SUITE]
+//!   repro serve --model M [--weights DIR] [--requests N] [--adapters K]
+//!   repro experiment <id> [--quick]
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use repro::config::TrainConfig;
+use repro::data::{self, Tokenizer};
+use repro::experiments;
+use repro::runtime::Runtime;
+use repro::train::{self, GenModel, Trainer};
+use repro::util::rng::Rng;
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "adapter" => cmd_adapter(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "repro — S²FT: Structured Sparse Fine-Tuning (rust+JAX+Pallas reproduction)
+
+USAGE:
+  repro info  [--artifacts DIR]
+  repro pretrain --model M [--steps N] [--seed S] [--save DIR]
+  repro train (--config FILE | --model M --method TAG) [--data SUITE]
+              [--steps N] [--seed S] [--save DIR] [--init-from DIR]
+  repro eval  --model M --weights DIR [--suite commonsense|arithmetic|instruct]
+  repro serve --model M [--weights DIR] [--adapters K] [--requests N]
+  repro adapter extract|apply|info [--model M --method T --base DIR --ft DIR
+              --adapter FILE --out PATH]
+  repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
+
+Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
+variants, see `repro info`). Artifacts default to ./artifacts."
+    );
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.platform());
+    let mut models: Vec<_> = rt.artifacts.meta.models.iter().collect();
+    models.sort_by_key(|(k, _)| k.clone());
+    for (name, m) in models {
+        println!(
+            "model {name}: d={} L={} h={} ff={} vocab={} ({:.2}M params), batches {:?}",
+            m.dims.d_model,
+            m.dims.n_layers,
+            m.dims.n_heads,
+            m.dims.d_ff,
+            m.dims.vocab,
+            m.param_count as f64 / 1e6,
+            m.batches
+        );
+        let mut tags: Vec<_> = m.methods.keys().collect();
+        tags.sort();
+        for tag in tags {
+            let mm = &m.methods[tag];
+            println!(
+                "   {tag:<14} trainable {:>9} params ({:.2}%)",
+                mm.trainable_params,
+                100.0 * mm.trainable_params as f64 / m.param_count as f64
+            );
+        }
+    }
+    println!("artifacts: {}", rt.artifacts.meta.artifacts.len());
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let steps = args.usize_or("steps", 400);
+    let seed = args.u64_or("seed", 42);
+    let params = experiments::common::pretrain(&rt, model, steps, seed, true)?;
+    if let Some(dir) = args.get("save") {
+        train::save_params(dir, &params)?;
+        println!("saved base weights to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.get("config") {
+        TrainConfig::load(path)?
+    } else {
+        TrainConfig {
+            model: args.get("model").context("--model or --config required")?.into(),
+            method: args.get("method").context("--method required")?.into(),
+            data: args.get_or("data", "corpus").into(),
+            steps: args.usize_or("steps", 300),
+            seed: args.u64_or("seed", 42),
+            log_every: args.usize_or("log-every", 10),
+            artifacts: args.get_or("artifacts", "artifacts").into(),
+            save_to: args.get("save").map(String::from),
+            init_from: args.get("init-from").map(String::from),
+            notes: String::new(),
+        }
+    };
+    let rt = Runtime::new(&cfg.artifacts)?;
+    let base = match &cfg.init_from {
+        Some(dir) => train::load_params(dir)?,
+        None => experiments::common::init_params(&rt, &cfg.model, cfg.seed as i32)?,
+    };
+    let (b, t) = rt.artifacts.model(&cfg.model)?.default_batch();
+    let tk = Tokenizer;
+    println!(
+        "train: model={} method={} data={} steps={} ({}x{} per step)",
+        cfg.model, cfg.method, cfg.data, cfg.steps, b, t
+    );
+
+    let mut trainer: Trainer;
+    if cfg.data == "corpus" {
+        let corpus = data::pretrain_corpus(cfg.seed, 400_000);
+        let mut rng = Rng::seed(cfg.seed ^ 1);
+        let calib = data::lm_batch(&tk, &corpus, &mut rng, b, t);
+        trainer = Trainer::new(&rt, &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        for step in 0..cfg.steps {
+            let batch = data::lm_batch(&tk, &corpus, &mut rng, b, t);
+            let loss = trainer.train_step(&batch)?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                println!(
+                    "step {step:>5}  loss {loss:.4}  {:.0} tok/s  peak-rss {:.0} MB",
+                    trainer.metrics.tokens_per_sec(),
+                    repro::util::peak_rss_bytes().unwrap_or(0) as f64 / 1e6
+                );
+            }
+        }
+    } else {
+        let examples = data::finetune_examples(&cfg.data, 4000, cfg.seed ^ 2);
+        let calib = experiments::common::batch_at(&tk, &examples, 0, b, t);
+        trainer = Trainer::new(&rt, &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        for step in 0..cfg.steps {
+            let batch = experiments::common::batch_at(&tk, &examples, step * b, b, t);
+            let loss = trainer.train_step(&batch)?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                println!(
+                    "step {step:>5}  loss {loss:.4}  {:.0} tok/s",
+                    trainer.metrics.tokens_per_sec()
+                );
+            }
+        }
+    }
+    println!(
+        "done: {} steps, tail loss {:.4}, {:.1} ms/step, state {:.1} MB (opt {:.1} MB)",
+        trainer.metrics.steps(),
+        trainer.metrics.tail_loss(10),
+        trainer.metrics.ms_per_step(),
+        trainer.state_bytes() as f64 / 1e6,
+        trainer.opt_bytes() as f64 / 1e6,
+    );
+    if let Some(dir) = &cfg.save_to {
+        let merged = trainer.merged_params(&rt)?;
+        train::save_params(dir, &merged)?;
+        if !trainer.perms.is_empty() {
+            // selection permutations enable later adapter extraction
+            train::save_params(format!("{dir}/perms"), &trainer.perms)?;
+        }
+        println!("saved merged weights to {dir}");
+    }
+    experiments::common::save_result(
+        &format!("train_{}_{}", cfg.model, cfg.method),
+        &trainer.metrics.to_json(),
+    );
+    Ok(())
+}
+
+/// Adapter lifecycle from the command line:
+///   repro adapter extract --model M --method T --base DIR --ft DIR --out FILE
+///   repro adapter apply   --base DIR --adapter FILE --out DIR
+///   repro adapter info    --adapter FILE
+fn cmd_adapter(args: &Args) -> Result<()> {
+    let sub = args.positional.first().context("adapter subcommand required")?;
+    match sub.as_str() {
+        "extract" => {
+            let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+            let model = args.get("model").context("--model required")?;
+            let method = args.get_or("method", "s2ft");
+            let base = train::load_params(args.get("base").context("--base required")?)?;
+            let ft_dir = args.get("ft").context("--ft required")?;
+            let ft = train::load_params(ft_dir)?;
+            let perms = train::load_params(format!("{ft_dir}/perms"))
+                .context("fine-tuned checkpoint has no perms/ (was it trained with s2ft + --save?)")?;
+            let mm = rt.artifacts.model(model)?;
+            let mmeta = mm.method(method)?;
+            let adapter = repro::adapter::S2ftAdapter::extract(mm, mmeta, &perms, &base, &ft)?;
+            let out = args.get_or("out", "adapter.s2ft");
+            repro::adapter::save_adapter(out, &adapter)?;
+            println!(
+                "extracted adapter -> {out} ({:.1} KB, {} layers)",
+                adapter.bytes() as f64 / 1e3,
+                adapter.layers.len()
+            );
+            Ok(())
+        }
+        "apply" => {
+            let mut base = train::load_params(args.get("base").context("--base required")?)?;
+            let adapter =
+                repro::adapter::load_adapter(args.get("adapter").context("--adapter required")?)?;
+            adapter.apply(&mut base)?;
+            let out = args.get("out").context("--out required")?;
+            train::save_params(out, &base)?;
+            println!("fused adapter into {out}");
+            Ok(())
+        }
+        "info" => {
+            let adapter =
+                repro::adapter::load_adapter(args.get("adapter").context("--adapter required")?)?;
+            println!(
+                "adapter: d_model={} layers={} bytes={}",
+                adapter.d_model,
+                adapter.layers.len(),
+                adapter.bytes()
+            );
+            for (i, l) in adapter.layers.iter().enumerate() {
+                println!(
+                    "  L{i}: wo rows {:?}, wd rows {:?}",
+                    l.wo_rows.len(),
+                    l.wd_rows.len()
+                );
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown adapter subcommand {other:?}")),
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let weights = args.get("weights").context("--weights required")?;
+    let suite_name = args.get_or("suite", "commonsense");
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let params = train::load_params(weights)?;
+    let gm = GenModel::new(&rt, model, params)?;
+    let tasks = data::suite(suite_name).ok_or_else(|| anyhow!("unknown suite {suite_name:?}"))?;
+    let (rows, avg) =
+        experiments::common::evaluate_suite(&gm, tasks, args.usize_or("n", 32), 0xE7A1)?;
+    for (name, acc) in &rows {
+        println!("{name:>12}: {acc:5.1}%");
+    }
+    println!("{:>12}: {avg:5.1}%", "Avg");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    repro::serve::demo(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("model", "small"),
+        args.get("weights"),
+        args.usize_or("adapters", 4),
+        args.usize_or("requests", 32),
+        args.usize_or("max-batch", 8),
+    )
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("experiment id required (fig2|tab1|...|thm42|all)")?;
+    let quick = args.has("quick");
+    if quick {
+        println!("(quick mode: reduced steps/evals — shapes only)");
+    }
+    experiments::run(id, args.get_or("artifacts", "artifacts"), quick)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    #[test]
+    fn arg_parsing() {
+        // real CLI shape: positionals precede flags (repro experiment fig2 --quick)
+        let argv: Vec<String> = ["pos1", "--model", "tiny", "--steps", "5", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert!(a.has("quick"));
+        assert_eq!(a.usize_or("steps", 0), 5);
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,203 @@
+//! meta.json schema — the contract emitted by `python/compile/aot.py`.
+//!
+//! Parsed with the in-crate JSON module (no serde in the vendored set).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// `[name, shape, dtype]` triple describing one artifact input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<Self> {
+        let a = j.as_arr()?;
+        Ok(Self {
+            name: a[0].as_str()?.to_string(),
+            shape: a[1].as_arr()?.iter().map(|v| v.as_usize().unwrap_or(0)).collect(),
+            dtype: a[2].as_str()?.to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// `[name, shape]` pair (method layout sections).
+#[derive(Debug, Clone)]
+pub struct NamedShape {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl NamedShape {
+    fn parse(j: &Json) -> Result<Self> {
+        let a = j.as_arr()?;
+        Ok(Self {
+            name: a[0].as_str()?.to_string(),
+            shape: a[1].as_arr()?.iter().map(|v| v.as_usize().unwrap_or(0)).collect(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+fn parse_shapes(j: Option<&Json>) -> Result<Vec<NamedShape>> {
+    match j {
+        None => Ok(vec![]),
+        Some(j) => j.as_arr()?.iter().map(NamedShape::parse).collect(),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodMeta {
+    pub method: String,
+    pub selection: String,
+    pub rank: usize,
+    pub lora_alpha: f64,
+    pub lr: f64,
+    pub s2ft_fractions: HashMap<String, f64>,
+    pub trainable: Vec<NamedShape>,
+    pub frozen: Vec<NamedShape>,
+    pub perms: Vec<NamedShape>,
+    pub aux: Vec<NamedShape>,
+    pub opt: Vec<NamedShape>,
+    pub trainable_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub dims: ModelDims,
+    pub param_count: usize,
+    pub methods: HashMap<String, MethodMeta>,
+    pub batches: Vec<(usize, usize)>,
+    pub base_params: Vec<NamedShape>,
+}
+
+impl ModelMeta {
+    /// Default (batch, seq) — first entry emitted by aot.py.
+    pub fn default_batch(&self) -> (usize, usize) {
+        self.batches[0]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dims.d_model / self.dims.n_heads
+    }
+
+    pub fn method(&self, tag: &str) -> Result<&MethodMeta> {
+        self.methods
+            .get(tag)
+            .with_context(|| format!("method {tag:?} not in meta for model {}", self.dims.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub models: HashMap<String, ModelMeta>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta> {
+        let root = Json::parse(text).context("meta.json parse")?;
+        let mut models = HashMap::new();
+        for (name, mj) in root.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(mj).context(name.clone())?);
+        }
+        let mut artifacts = HashMap::new();
+        for (name, aj) in root.get("artifacts")?.as_obj()? {
+            let inputs = aj.get("inputs")?.as_arr()?.iter().map(TensorSpec::parse)
+                .collect::<Result<_>>()?;
+            let outputs = aj.get("outputs")?.as_arr()?.iter().map(TensorSpec::parse)
+                .collect::<Result<_>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { file: aj.get("file")?.as_str()?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Meta { models, artifacts })
+    }
+}
+
+fn parse_model(mj: &Json) -> Result<ModelMeta> {
+    let dj = mj.get("model")?;
+    let dims = ModelDims {
+        name: dj.get("name")?.as_str()?.to_string(),
+        d_model: dj.get("d_model")?.as_usize()?,
+        n_layers: dj.get("n_layers")?.as_usize()?,
+        n_heads: dj.get("n_heads")?.as_usize()?,
+        d_ff: dj.get("d_ff")?.as_usize()?,
+        vocab: dj.get("vocab")?.as_usize()?,
+        seq_len: dj.get("seq_len")?.as_usize()?,
+    };
+    let mut methods = HashMap::new();
+    for (tag, j) in mj.get("methods")?.as_obj()? {
+        let mut fractions = HashMap::new();
+        if let Some(f) = j.opt("s2ft_fractions") {
+            for (k, v) in f.as_obj()? {
+                fractions.insert(k.clone(), v.as_f64()?);
+            }
+        }
+        methods.insert(
+            tag.clone(),
+            MethodMeta {
+                method: j.str_or("method", tag),
+                selection: j.str_or("selection", "r"),
+                rank: j.num_or("rank", 0.0) as usize,
+                lora_alpha: j.num_or("lora_alpha", 0.0),
+                lr: j.num_or("lr", 0.0),
+                s2ft_fractions: fractions,
+                trainable: parse_shapes(j.opt("trainable"))?,
+                frozen: parse_shapes(j.opt("frozen"))?,
+                perms: parse_shapes(j.opt("perms"))?,
+                aux: parse_shapes(j.opt("aux"))?,
+                opt: parse_shapes(j.opt("opt"))?,
+                trainable_params: j.num_or("trainable_params", 0.0) as usize,
+            },
+        );
+    }
+    let batches = mj
+        .get("batches")?
+        .as_arr()?
+        .iter()
+        .map(|b| {
+            let a = b.as_arr()?;
+            Ok((a[0].as_usize()?, a[1].as_usize()?))
+        })
+        .collect::<Result<_>>()?;
+    Ok(ModelMeta {
+        dims,
+        param_count: mj.get("param_count")?.as_usize()?,
+        methods,
+        batches,
+        base_params: parse_shapes(mj.opt("base_params"))?,
+    })
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The interchange contract with the python build layer (`aot.py`):
+//! HLO *text* files plus `meta.json` describing every artifact's exact
+//! input/output tensor order, shapes and dtypes. This module is the only
+//! place that touches the `xla` crate.
+
+mod meta;
+mod tensor;
+
+pub use meta::{ArtifactMeta, Meta, MethodMeta, ModelMeta, NamedShape, TensorSpec};
+pub use tensor::{Tensor, TensorData};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Handle to the artifact directory + parsed meta.json (no PJRT needed).
+#[derive(Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: Arc<Meta>,
+}
+
+impl Artifacts {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}; run `make artifacts`"))?;
+        let meta = Meta::parse(&text)?;
+        Ok(Self { dir, meta: Arc::new(meta) })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in meta.json (rebuild artifacts?)"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.meta
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in meta.json"))
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache.
+///
+/// Compilation is lazy and cached per artifact name: experiment harnesses
+/// freely re-request executables without paying XLA compile time twice.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts: Artifacts,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts = Artifacts::open(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { client, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by meta.json name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.artifacts.artifact(name)?.clone();
+        let path = self.artifacts.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(xerr)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(xerr)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let exec = Arc::new(Executable { name: name.to_string(), exe, spec });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Drop a compiled executable (frees XLA memory for big models).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A compiled artifact plus its interface description.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactMeta,
+}
+
+impl Executable {
+    /// Execute with positional inputs (must match `spec.inputs` order).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "{}: input {:?} shape {:?} != expected {:?}",
+                    self.name, s.name, t.shape, s.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = lit.to_tuple().map_err(xerr)?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.into_iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with named inputs pulled from a tensor pool.
+    pub fn run_named(
+        &self,
+        pool: &HashMap<String, Tensor>,
+    ) -> Result<HashMap<String, Tensor>> {
+        let mut args = Vec::with_capacity(self.spec.inputs.len());
+        for s in &self.spec.inputs {
+            let t = pool
+                .get(&s.name)
+                .ok_or_else(|| anyhow!("{}: missing input {:?}", self.name, s.name))?;
+            args.push(t.clone());
+        }
+        let outs = self.run(&args)?;
+        Ok(self
+            .spec
+            .outputs
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(outs)
+            .collect())
+    }
+
+    /// Total bytes of all inputs (used for memory accounting in Fig 5).
+    pub fn input_bytes(&self) -> usize {
+        self.spec.inputs.iter().map(|s| s.numel() * 4).sum()
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        self.spec.outputs.iter().map(|s| s.numel() * 4).sum()
+    }
+}

@@ -1,0 +1,141 @@
+//! Host tensor type bridging rust data and `xla::Literal`.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side dense tensor (f32 or i32, row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Self { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: impl Into<Vec<usize>>, data: Vec<i32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Self { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let n = shape.iter().product::<usize>().max(1);
+        Self { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn ones(shape: impl Into<Vec<usize>>) -> Self {
+        let shape = shape.into();
+        let n = shape.iter().product::<usize>().max(1);
+        Self { shape, data: TensorData::F32(vec![1.0; n]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("not a scalar: {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape: {e}"))?
+                }
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape: {e}"))?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("array_shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow!("ty: {e}"))?;
+        match ty {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+                Ok(Tensor { shape: dims, data: TensorData::F32(v) })
+            }
+            xla::ElementType::S32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+                Ok(Tensor { shape: dims, data: TensorData::I32(v) })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Squared L2 distance to another tensor (diagnostics / tests).
+    pub fn l2_to(&self, other: &Tensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("size mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum())
+    }
+}

@@ -1,0 +1,206 @@
+//! Request router + engine thread.
+//!
+//! The PJRT client is not `Send`, so the engine thread *builds* the model
+//! itself (via the builder closure) and owns it for its whole life; the
+//! router side only moves host data (prompts, replies) across channels.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::adapter::AdapterStore;
+use crate::runtime::Tensor;
+use crate::train::GenModel;
+
+use super::batcher::AdapterBatcher;
+
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub adapter: String,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    pub text: String,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub switches: usize,
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() as f64 - 1.0) * p) as usize]
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+enum Envelope {
+    Req(ServeRequest, Sender<ServeReply>, Instant),
+    Shutdown,
+}
+
+/// Leader-side handle: submit prompts, collect replies, read metrics.
+pub struct Router {
+    tx: Sender<Envelope>,
+    handle: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+impl Router {
+    /// Spawn the engine thread. `builder` runs *inside* the engine thread
+    /// and must construct the model + adapter store (the PJRT client is
+    /// thread-local by construction).
+    pub fn spawn<F>(max_batch: usize, window: Duration, builder: F) -> Router
+    where
+        F: FnOnce() -> Result<(GenModel, AdapterStore, HashMap<String, Tensor>)>
+            + Send
+            + 'static,
+    {
+        let (tx, rx) = channel::<Envelope>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let m2 = metrics.clone();
+        let handle = std::thread::spawn(move || engine_loop(rx, max_batch, window, builder, m2));
+        Router { tx, handle: Some(handle), metrics }
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, req: ServeRequest) -> Receiver<ServeReply> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Envelope::Req(req, rtx, Instant::now()));
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: ServeRequest) -> Result<ServeReply> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Envelope::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("engine panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Envelope::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+type Pending = (Sender<ServeReply>, Instant, usize);
+
+fn engine_loop<F>(
+    rx: Receiver<Envelope>,
+    max_batch: usize,
+    window: Duration,
+    builder: F,
+    metrics: Arc<Mutex<ServeMetrics>>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<(GenModel, AdapterStore, HashMap<String, Tensor>)>,
+{
+    let (mut model, mut store, base_snapshot) = builder()?;
+    let mut batcher: AdapterBatcher<(String, usize, Pending)> =
+        AdapterBatcher::new(max_batch, window.max(Duration::from_millis(1)) * 4);
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        // Drain the channel; block briefly when idle to batch arrivals.
+        loop {
+            let msg = if batcher.is_empty() && open {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.recv_timeout(window) {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Envelope::Req(req, reply_tx, t0) => {
+                    batcher.push(
+                        req.adapter.clone(),
+                        (req.prompt, req.max_new, (reply_tx, t0, 0)),
+                    );
+                    if batcher.len() >= max_batch {
+                        break;
+                    }
+                }
+                Envelope::Shutdown => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let Some(plan) = batcher.next_batch() else { continue };
+        // adapter-affinity switch (cheap scatter_add for S²FT adapters)
+        if !store.is_empty() && plan.adapter != "base" {
+            store.switch_to(&plan.adapter, &mut model.params, &base_snapshot)?;
+        } else if store.active().is_some() && plan.adapter == "base" {
+            store.deactivate(&mut model.params, &base_snapshot)?;
+        }
+        let prompts: Vec<String> =
+            plan.items.iter().map(|q| q.payload.0.clone()).collect();
+        let max_new = plan.items.iter().map(|q| q.payload.1).max().unwrap_or(8);
+        let texts = model.generate(&prompts, max_new)?;
+        let bs = plan.items.len();
+        {
+            let mut m = metrics.lock().unwrap();
+            m.requests += bs;
+            m.batches += 1;
+            m.switches = store.switches;
+        }
+        for (q, text) in plan.items.into_iter().zip(texts) {
+            let (reply_tx, t0, _) = q.payload.2;
+            let latency = t0.elapsed();
+            metrics
+                .lock()
+                .unwrap()
+                .latencies_ms
+                .push(latency.as_secs_f64() * 1e3);
+            let _ = reply_tx.send(ServeReply { text, latency, batch_size: bs });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Selection/permutation bookkeeping — the rust mirror of
+//! `python/compile/permute.py` conventions.
+//!
+//! Weight convention: `y = x @ W`, `W: (d_in, d_out)`. FFN channel `c` is
+//! column `c` of wu/wg and row `c` of wd; MHA head `h` is column block `h`
+//! of wq/wk/wv and row block `h` of wo. The prepare artifact outputs
+//! trainable-first permutations (`L{i}.head_perm`, `L{i}.chan_perm`); this
+//! module interprets them for adapter extraction and fusion.
+
+use anyhow::{bail, Result};
+
+/// Permutation placing `selected` first (matching python
+/// `trainable_first_permutation`).
+pub fn trainable_first_permutation(selected: &[usize], total: usize) -> Result<Vec<usize>> {
+    let mut seen = vec![false; total];
+    for &c in selected {
+        if c >= total {
+            bail!("selection {c} out of range {total}");
+        }
+        if seen[c] {
+            bail!("duplicate selection {c}");
+        }
+        seen[c] = true;
+    }
+    let mut perm = selected.to_vec();
+    perm.extend((0..total).filter(|&c| !seen[c]));
+    Ok(perm)
+}
+
+/// Inverse permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// Expand a head-level permutation to element level (blocks of `head_dim`).
+pub fn expand_head_perm(head_perm: &[usize], head_dim: usize) -> Vec<usize> {
+    head_perm
+        .iter()
+        .flat_map(|&h| (0..head_dim).map(move |j| h * head_dim + j))
+        .collect()
+}
+
+/// The selected unit ids: the first `count` entries of a trainable-first
+/// permutation (as produced by the prepare artifact).
+pub fn selected_units(perm: &[i32], count: usize) -> Vec<usize> {
+    perm[..count].iter().map(|&p| p as usize).collect()
+}
+
+/// Gather rows of a row-major `(rows, cols)` matrix at `idx`.
+pub fn gather_rows(w: &[f32], cols: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * cols);
+    for &r in idx {
+        out.extend_from_slice(&w[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Scatter-add rows into a row-major `(rows, cols)` matrix at `idx`.
+///
+/// This is the S²FT adapter *switch* primitive (paper Fig. 6): applying or
+/// removing an adapter touches only `s * cols` elements — no GEMM.
+pub fn scatter_add_rows(w: &mut [f32], cols: usize, idx: &[usize], delta: &[f32]) {
+    debug_assert_eq!(delta.len(), idx.len() * cols);
+    for (k, &r) in idx.iter().enumerate() {
+        let dst = &mut w[r * cols..(r + 1) * cols];
+        let src = &delta[k * cols..(k + 1) * cols];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += *s;
+        }
+    }
+}
+
+/// Scatter-subtract (adapter unfuse).
+pub fn scatter_sub_rows(w: &mut [f32], cols: usize, idx: &[usize], delta: &[f32]) {
+    for (k, &r) in idx.iter().enumerate() {
+        let dst = &mut w[r * cols..(r + 1) * cols];
+        let src = &delta[k * cols..(k + 1) * cols];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d -= *s;
+        }
+    }
+}
+
+/// Gather columns of a row-major `(rows, cols)` matrix at `idx`.
+pub fn gather_cols(w: &[f32], rows: usize, cols: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * idx.len());
+    for r in 0..rows {
+        for &c in idx {
+            out.push(w[r * cols + c]);
+        }
+    }
+    out
+}
+
+/// Scatter-add columns into a row-major `(rows, cols)` matrix.
+pub fn scatter_add_cols(w: &mut [f32], rows: usize, cols: usize, idx: &[usize], delta: &[f32]) {
+    debug_assert_eq!(delta.len(), rows * idx.len());
+    for r in 0..rows {
+        for (k, &c) in idx.iter().enumerate() {
+            w[r * cols + c] += delta[r * idx.len() + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perm_roundtrip() {
+        let perm = trainable_first_permutation(&[3, 1], 5).unwrap();
+        assert_eq!(perm, vec![3, 1, 0, 2, 4]);
+        let inv = invert_permutation(&perm);
+        for i in 0..5 {
+            assert_eq!(inv[perm[i]], i);
+        }
+    }
+
+    #[test]
+    fn perm_rejects_bad_input() {
+        assert!(trainable_first_permutation(&[5], 5).is_err());
+        assert!(trainable_first_permutation(&[1, 1], 5).is_err());
+    }
+
+    #[test]
+    fn head_expansion() {
+        assert_eq!(expand_head_perm(&[2, 0], 2), vec![4, 5, 0, 1]);
+    }
+
+    #[test]
+    fn gather_scatter_rows_roundtrip() {
+        let mut w = vec![0.0f32; 12]; // 4x3
+        let delta = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        scatter_add_rows(&mut w, 3, &[1, 3], &delta);
+        assert_eq!(&w[3..6], &[1.0, 2.0, 3.0]);
+        assert_eq!(&w[9..12], &[4.0, 5.0, 6.0]);
+        assert_eq!(gather_rows(&w, 3, &[1, 3]), delta);
+        scatter_sub_rows(&mut w, 3, &[1, 3], &delta);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn gather_scatter_cols_roundtrip() {
+        let mut w = vec![0.0f32; 12]; // 3x4
+        let delta = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        scatter_add_cols(&mut w, 3, 4, &[0, 2], &delta);
+        assert_eq!(gather_cols(&w, 3, 4, &[0, 2]), delta);
+        assert_eq!(w[0], 1.0);
+        assert_eq!(w[2], 2.0);
+        assert_eq!(w[4 + 0], 3.0);
+    }
+}

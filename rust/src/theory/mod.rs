@@ -1,0 +1,336 @@
+//! Deep-linear-network theory simulator (paper §4 + App. F).
+//!
+//! Implements the exact setting of F.2 with population (n→∞) risks and
+//! Σx = I: pre-trained L-layer linear net, fine-tune layer ℓ with either
+//! the min-norm LoRA solution (rank r, Lemma F.9) or the min-norm S²FT
+//! solution (sparsity s, Lemma F.12), then evaluate in-distribution and
+//! out-of-distribution excess risks to check Theorem 4.2 / F.8.
+
+use crate::linalg::{svd, Mat};
+use crate::util::rng::Rng;
+
+/// Problem instance: pre-trained net + ID/OOD regression targets.
+pub struct DeepLinear {
+    /// layer weights W_1..W_L (W\[l\]: (d_l, d_{l-1}))
+    pub weights: Vec<Mat>,
+    pub dims: Vec<usize>,
+    /// in-distribution coefficient matrix (q, p)
+    pub b_id: Mat,
+    /// out-of-distribution coefficient matrix (q, p)
+    pub b_od: Mat,
+}
+
+pub struct Config {
+    pub dims: Vec<usize>, // d_0..d_L
+    /// ℓ (1-based) — which layer gets fine-tuned
+    pub layer: usize,
+    /// magnitude of the fine-tuning-task displacement B_id − W_pre
+    /// (realizable through layer ℓ). This is what fine-tuning chases and
+    /// what a forgetful method drags the model away from W_pre by.
+    pub task_shift: f32,
+    /// magnitude of the residual OOD mismatch B_od − W_pre. The theorem's
+    /// regime (paper §4.1) is "the pre-trained model is already good OOD":
+    /// keep this small relative to task_shift.
+    pub ood_noise: f32,
+    /// rank of the realizable in-distribution residual (keeps
+    /// `rank(Σf) >= s, r` as Theorem F.8 requires)
+    pub shift_rank: usize,
+    pub seed: u64,
+}
+
+impl DeepLinear {
+    pub fn generate(cfg: &Config) -> DeepLinear {
+        let mut rng = Rng::seed(cfg.seed);
+        let l = cfg.dims.len() - 1;
+        let weights: Vec<Mat> = (0..l)
+            .map(|i| {
+                // near-orthogonal init keeps condition numbers mild (F.6)
+                Mat::randn(cfg.dims[i + 1], cfg.dims[i], &mut rng)
+                    .scale(1.0 / (cfg.dims[i] as f32).sqrt())
+            })
+            .collect();
+        let w_pre = product(&weights, 0, l);
+        // Realizable in-distribution shift through the frozen outer factors
+        // (Thm F.8 premise: B_id = W̄_{ℓ+1} B̃ W̲_{ℓ-1}): perturb layer ℓ.
+        let above = product(&weights, cfg.layer, l); // W̄_{ℓ+1}
+        let below = product(&weights, 0, cfg.layer - 1); // W̲_{ℓ-1}
+        let (dl, dl1) = (cfg.dims[cfg.layer], cfg.dims[cfg.layer - 1]);
+        let tilt = low_rank(dl, dl1, cfg.shift_rank, &mut rng)
+            .scale(cfg.task_shift / (dl1 as f32).sqrt());
+        let b_id = w_pre.add(&above.matmul(&tilt).matmul(&below));
+        // OOD target stays close to the PRE-TRAINED map (the paper's
+        // forgetting regime): B_od = W_pre + small generic mismatch, so the
+        // label shift B_od − B_id ≈ −(B_id − W_pre) is dominated by the
+        // fine-tuning displacement.
+        let q = *cfg.dims.last().unwrap();
+        let p = cfg.dims[0];
+        let noise = low_rank(q, p, cfg.shift_rank, &mut rng)
+            .scale(cfg.ood_noise / (p as f32).sqrt());
+        let b_od = w_pre.add(&noise);
+        DeepLinear { weights, dims: cfg.dims.clone(), b_id, b_od }
+    }
+
+    pub fn w_pre(&self) -> Mat {
+        product(&self.weights, 0, self.weights.len())
+    }
+
+    /// W̄_{ℓ+1}: product of layers above ℓ (identity if ℓ = L).
+    pub fn above(&self, layer: usize) -> Mat {
+        product(&self.weights, layer, self.weights.len())
+    }
+
+    /// W̲_{ℓ-1}: product of layers below ℓ (identity if ℓ = 1).
+    pub fn below(&self, layer: usize) -> Mat {
+        product(&self.weights, 0, layer - 1)
+    }
+
+    /// Excess risk of the map `f` under target B (Σx = I, n→∞):
+    /// E‖(B - f) x‖² = ‖B - f‖_F².
+    pub fn excess_risk(&self, f: &Mat, b: &Mat) -> f64 {
+        let d = b.sub(f).fro_norm() as f64;
+        d * d
+    }
+
+    /// Fine-tuned map given a layer-ℓ update Δ.
+    pub fn finetuned(&self, layer: usize, delta: &Mat) -> Mat {
+        let mid = self.weights[layer - 1].add(delta);
+        self.above(layer).matmul(&mid).matmul(&self.below(layer))
+    }
+
+    /// Population min-norm LoRA update of rank r (Lemma F.9, Σx = I):
+    /// Δ = W̄† SVD_r(W̄ W̄† D W̲ᵀ A†) A†, where D = B_id - W_pre and
+    /// A = (W̲ W̲ᵀ)^{1/2}.
+    pub fn lora_update(&self, layer: usize, r: usize) -> Mat {
+        let above = self.above(layer);
+        let below = self.below(layer);
+        let d = self.b_id.sub(&self.w_pre());
+        let a2 = below.matmul(&below.t());
+        let a = sqrt_psd(&a2);
+        let a_pinv = a.pinv();
+        let above_pinv = above.pinv();
+        let proj = above.matmul(&above_pinv); // Φ'Φ'^T
+        let m = proj.matmul(&d).matmul(&below.t()).matmul(&a_pinv);
+        let m_r = m.svd_truncate(r);
+        above_pinv.matmul(&m_r).matmul(&a_pinv)
+    }
+
+    /// Population min-norm S²FT update on channel set S (Lemma F.12):
+    /// Δ = U_S (W̄ U_S)† D W̲ᵀ (A²)†  restricted to the selected rows.
+    pub fn s2ft_update(&self, layer: usize, channels: &[usize]) -> Mat {
+        let above = self.above(layer);
+        let below = self.below(layer);
+        let d = self.b_id.sub(&self.w_pre());
+        let a2 = below.matmul(&below.t());
+        // W̄ U_S: selected columns of `above`
+        let dl = self.dims[layer];
+        let au = gather_cols_mat(&above, channels);
+        let au_pinv = au.pinv();
+        let v = au_pinv.matmul(&d).matmul(&below.t()).matmul(&a2.pinv()); // (s, d_{l-1})
+        // Δ = U_S v
+        let mut delta = Mat::zeros(dl, self.dims[layer - 1]);
+        for (k, &c) in channels.iter().enumerate() {
+            delta.data[c * delta.cols..(c + 1) * delta.cols].copy_from_slice(v.row(k));
+        }
+        delta
+    }
+}
+
+/// Risk report for one (r, s) comparison.
+#[derive(Debug, Clone)]
+pub struct RiskReport {
+    pub id_pre: f64,
+    pub od_pre: f64,
+    pub id_lora: f64,
+    pub od_lora: f64,
+    pub id_s2ft: f64,
+    pub od_s2ft: f64,
+    /// ‖(B_od − B_id)‖_F² — the Thm 4.2 LoRA lower bound
+    pub label_shift_sq: f64,
+    /// ‖Φ″_S Φ″_Sᵀ (B_od − B_id)‖_F² — the Assumption 4.1/F.5 projection
+    /// (ε² · E_od(pre) in the paper's notation). Theorem F.15's bound is
+    /// E_od(S²FT) ≤ E_od(pre) + 3·this (covariate terms vanish for Σx = I
+    /// and full-column-rank W̲).
+    pub proj_shift_sq: f64,
+}
+
+/// Run the Theorem 4.2 comparison: LoRA rank r vs S²FT with
+/// s = ⌊r (d_ℓ + d_{ℓ-1}) / d_{ℓ-1}⌋ random channels (parameter-matched).
+pub fn compare(cfg: &Config, r: usize) -> RiskReport {
+    let net = DeepLinear::generate(cfg);
+    let layer = cfg.layer;
+    let dl = cfg.dims[layer];
+    let dl1 = cfg.dims[layer - 1];
+    let s = ((r * (dl + dl1)) / dl1).clamp(1, dl);
+    let mut rng = Rng::seed(cfg.seed ^ 0xC0FFEE);
+    let channels = rng.choose(dl, s);
+
+    let w_pre = net.w_pre();
+    let lora = net.finetuned(layer, &net.lora_update(layer, r));
+    let s2ft = net.finetuned(layer, &net.s2ft_update(layer, &channels));
+    let shift_mat = net.b_od.sub(&net.b_id);
+    let shift = shift_mat.fro_norm() as f64;
+    // Φ″_S = orthonormal basis of span(W̄_{ℓ+1} U_S)
+    let au = gather_cols_mat(&net.above(layer), &channels);
+    let dec = svd(&au);
+    let tol = dec.s.first().copied().unwrap_or(0.0) * 1e-4;
+    let k = dec.s.iter().filter(|&&sv| sv > tol).count();
+    let mut proj = 0.0f64;
+    for col in 0..k {
+        // ‖u_colᵀ · shift‖² accumulated over the basis
+        for j in 0..shift_mat.cols {
+            let mut dot = 0.0f64;
+            for i in 0..shift_mat.rows {
+                dot += dec.u[(i, col)] as f64 * shift_mat[(i, j)] as f64;
+            }
+            proj += dot * dot;
+        }
+    }
+    RiskReport {
+        id_pre: net.excess_risk(&w_pre, &net.b_id),
+        od_pre: net.excess_risk(&w_pre, &net.b_od),
+        id_lora: net.excess_risk(&lora, &net.b_id),
+        od_lora: net.excess_risk(&lora, &net.b_od),
+        id_s2ft: net.excess_risk(&s2ft, &net.b_id),
+        od_s2ft: net.excess_risk(&s2ft, &net.b_od),
+        label_shift_sq: shift * shift,
+        proj_shift_sq: proj,
+    }
+}
+
+fn product(ws: &[Mat], from: usize, to: usize) -> Mat {
+    // W_to ... W_{from+1}: ws[from..to] composed left-to-right
+    let dims_in = if from == 0 { ws[0].cols } else { ws[from - 1].rows };
+    let mut acc = Mat::eye(if from < to { ws[from].cols } else { dims_in });
+    for w in &ws[from..to] {
+        acc = w.matmul(&acc);
+    }
+    acc
+}
+
+fn low_rank(rows: usize, cols: usize, r: usize, rng: &mut Rng) -> Mat {
+    let u = Mat::randn(rows, r.max(1), rng);
+    let v = Mat::randn(r.max(1), cols, rng);
+    u.matmul(&v)
+}
+
+fn gather_cols_mat(m: &Mat, cols: &[usize]) -> Mat {
+    let mut out = Mat::zeros(m.rows, cols.len());
+    for i in 0..m.rows {
+        for (k, &c) in cols.iter().enumerate() {
+            out[(i, k)] = m[(i, c)];
+        }
+    }
+    out
+}
+
+/// Symmetric PSD square root via eigendecomposition (through Jacobi SVD of
+/// the symmetric matrix: A = U S Uᵀ up to sign, so √A = U √S Uᵀ).
+fn sqrt_psd(a: &Mat) -> Mat {
+    let dec = svd(a);
+    let k = dec.s.len();
+    let mut sq = Mat::zeros(k, k);
+    for i in 0..k {
+        sq[(i, i)] = dec.s[i].max(0.0).sqrt();
+    }
+    // For symmetric PSD A, U and V coincide (up to null-space signs).
+    dec.u.matmul(&sq).matmul(&dec.u.t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        // d0 ≤ hidden dims => W̲ has full column rank and the covariate
+        // slack terms in Thm F.15 vanish; s/q = 4/48 keeps the selected
+        // output span small (Assumption 4.1's regime).
+        Config {
+            dims: vec![24, 64, 64, 48],
+            layer: 2,
+            task_shift: 2.0,
+            ood_noise: 0.3,
+            shift_rank: 8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn sqrt_psd_squares_back() {
+        let mut rng = Rng::seed(0);
+        let b = Mat::randn(6, 6, &mut rng);
+        let a = b.matmul(&b.t());
+        let s = sqrt_psd(&a);
+        let back = s.matmul(&s);
+        assert!(back.sub(&a).fro_norm() / a.fro_norm() < 1e-3);
+    }
+
+    #[test]
+    fn finetuning_reduces_id_risk() {
+        let c = cfg();
+        let rep = compare(&c, 2);
+        assert!(rep.id_lora < rep.id_pre * 0.9, "{rep:?}");
+        assert!(rep.id_s2ft < rep.id_pre * 0.95, "{rep:?}");
+    }
+
+    #[test]
+    fn theorem_4_2_ood_separation() {
+        // Forgetting regime: the OOD task is (close to) the pre-training
+        // task, fine-tuning pulls the model toward B_id. S²FT keeps OOD
+        // risk near the pre-trained model (up to the Assumption-4.1
+        // projection term); LoRA's is lower-bounded by the label shift.
+        let rep = compare(&cfg(), 2);
+        // LoRA lower bound from Thm 4.2 (slack for finite dims / r-rank fit)
+        assert!(
+            rep.od_lora > 0.3 * rep.label_shift_sq,
+            "lora OOD {} vs bound {}",
+            rep.od_lora,
+            rep.label_shift_sq
+        );
+        // Theorem F.15 upper bound with its own ε-projection term
+        // (Σx = I, full-column-rank W̲ => covariate terms vanish):
+        let bound = rep.od_pre + 3.0 * rep.proj_shift_sq;
+        assert!(
+            rep.od_s2ft <= bound * 1.15,
+            "s2ft OOD {} vs F.15 bound {}",
+            rep.od_s2ft,
+            bound
+        );
+        // and the method separation is large in this regime
+        assert!(rep.od_s2ft * 1.5 < rep.od_lora, "{rep:?}");
+    }
+
+    #[test]
+    fn projection_term_scales_with_selection_size() {
+        // ε² E_od(pre) (= proj_shift_sq) grows with s/q: more selected
+        // channels -> more of the label shift lands in the touched span.
+        let net_cfg = cfg();
+        let net = DeepLinear::generate(&net_cfg);
+        let shift = net.b_od.sub(&net.b_id);
+        let total = (shift.fro_norm() as f64).powi(2);
+        let small = compare(&net_cfg, 1).proj_shift_sq;
+        let large = compare(&net_cfg, 8).proj_shift_sq;
+        assert!(small < large, "{small} !< {large}");
+        assert!(large <= total * 1.01);
+    }
+
+    #[test]
+    fn s2ft_update_touches_only_selected_rows() {
+        let c = cfg();
+        let net = DeepLinear::generate(&c);
+        let delta = net.s2ft_update(2, &[1, 3]);
+        for i in 0..delta.rows {
+            let nz = delta.row(i).iter().any(|&x| x != 0.0);
+            assert_eq!(nz, i == 1 || i == 3, "row {i}");
+        }
+    }
+
+    #[test]
+    fn lora_update_has_rank_r() {
+        let c = cfg();
+        let net = DeepLinear::generate(&c);
+        let delta = net.lora_update(2, 3);
+        let sv = crate::linalg::svd(&delta).s;
+        let big = sv.iter().filter(|&&s| s > sv[0] * 1e-3).count();
+        assert!(big <= 3, "rank {big}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Checkpointing: base-layout parameter dicts as raw little-endian f32
+//! blobs plus an index.json (no external serialization deps).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Tensor, TensorData};
+use crate::util::json::Json;
+
+/// Save a named tensor pool to `dir/` (one .bin per tensor + index.json).
+pub fn save_params(dir: impl AsRef<Path>, params: &HashMap<String, Tensor>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut index = Vec::new();
+    for (name, tensor) in params {
+        let fname = format!("{}.bin", name.replace(['/', '.'], "_"));
+        let path = dir.join(&fname);
+        let mut f = std::fs::File::create(&path)?;
+        match &tensor.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        index.push(Json::Arr(vec![
+            Json::str(name.clone()),
+            Json::str(fname),
+            Json::Arr(tensor.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            Json::str(match tensor.data {
+                TensorData::F32(_) => "f32",
+                TensorData::I32(_) => "i32",
+            }),
+        ]));
+    }
+    std::fs::write(dir.join("index.json"), Json::Arr(index).to_string_pretty())?;
+    Ok(())
+}
+
+/// Load a tensor pool saved by [`save_params`].
+pub fn load_params(dir: impl AsRef<Path>) -> Result<HashMap<String, Tensor>> {
+    let dir = dir.as_ref();
+    let text = std::fs::read_to_string(dir.join("index.json"))
+        .with_context(|| format!("reading checkpoint index in {dir:?}"))?;
+    let index = Json::parse(&text)?;
+    let mut out = HashMap::new();
+    for entry in index.as_arr()? {
+        let e = entry.as_arr()?;
+        let name = e[0].as_str()?.to_string();
+        let fname = e[1].as_str()?;
+        let shape: Vec<usize> = e[2].as_arr()?.iter().map(|v| v.as_usize().unwrap()).collect();
+        let dtype = e[3].as_str()?;
+        let mut bytes = Vec::new();
+        std::fs::File::open(dir.join(fname))?.read_to_end(&mut bytes)?;
+        let numel = shape.iter().product::<usize>().max(1);
+        if bytes.len() != numel * 4 {
+            bail!("checkpoint {name}: {} bytes, expected {}", bytes.len(), numel * 4);
+        }
+        let tensor = match dtype {
+            "f32" => Tensor::f32(
+                shape,
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            "i32" => Tensor::i32(
+                shape,
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            other => bail!("unknown dtype {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ckpt_test_{}", std::process::id()));
+        let mut params = HashMap::new();
+        params.insert("L0.wq".to_string(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        params.insert("perm".to_string(), Tensor::i32(vec![4], vec![3, 1, 0, 2]));
+        save_params(&dir, &params).unwrap();
+        let loaded = load_params(&dir).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded["L0.wq"], params["L0.wq"]);
+        assert_eq!(loaded["perm"], params["perm"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(load_params("/nonexistent/nowhere").is_err());
+    }
+}

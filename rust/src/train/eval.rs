@@ -1,0 +1,139 @@
+//! Evaluation: batched loss via the eval artifact, and exact-match task
+//! accuracy via greedy decoding with the base-layout forward artifact.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::batch::{encode_prompt, supervised_batch};
+use crate::data::tokenizer::{Tokenizer, EOS, PAD};
+use crate::data::{Batch, Example};
+use crate::runtime::{Executable, Runtime, Tensor};
+
+/// A merged (base-layout) model ready for forward passes.
+pub struct GenModel {
+    pub model: String,
+    pub b: usize,
+    pub t: usize,
+    fwd: std::sync::Arc<Executable>,
+    eval: std::sync::Arc<Executable>,
+    pub params: HashMap<String, Tensor>,
+    vocab: usize,
+}
+
+impl GenModel {
+    pub fn new(rt: &Runtime, model: &str, params: HashMap<String, Tensor>) -> Result<Self> {
+        let mm = rt.artifacts.model(model)?;
+        let (b, t) = mm.default_batch();
+        let fwd = rt
+            .load(&format!("fwd_{model}_{b}x{t}"))
+            .context("forward artifact")?;
+        let eval = rt
+            .load(&format!("eval_{model}_{b}x{t}"))
+            .context("eval artifact")?;
+        Ok(Self { model: model.to_string(), b, t, fwd, eval, params, vocab: mm.dims.vocab })
+    }
+
+    /// Masked LM loss + token accuracy on one batch.
+    pub fn eval_batch(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let mut pool = self.params.clone();
+        pool.insert("tokens".into(), batch.tokens.clone());
+        pool.insert("targets".into(), batch.targets.clone());
+        pool.insert("loss_mask".into(), batch.loss_mask.clone());
+        let out = self.eval.run_named(&pool)?;
+        let loss = out["loss"].scalar_value_f32()?;
+        let denom = batch.answer_tokens().max(1) as f32;
+        let acc = out["ncorrect"].scalar_value_f32()? / denom;
+        Ok((loss, acc))
+    }
+
+    /// Greedy-decode up to `max_new` tokens for up to `b` prompts at once.
+    ///
+    /// The forward artifact has a fixed (b, t) shape, so decoding is
+    /// recompute-per-token; prompts and answers are short so this stays
+    /// cheap (answers ≤ 12 bytes).
+    pub fn generate(&self, prompts: &[String], max_new: usize) -> Result<Vec<String>> {
+        let tk = Tokenizer;
+        let mut results = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(self.b) {
+            let mut rows: Vec<Vec<i32>> = Vec::with_capacity(self.b);
+            let mut pos: Vec<usize> = Vec::with_capacity(self.b);
+            let mut done: Vec<bool> = Vec::with_capacity(self.b);
+            for i in 0..self.b {
+                let p = chunk.get(i).map(|s| s.as_str()).unwrap_or("");
+                let (toks, gp) = encode_prompt(&tk, p, self.t);
+                rows.push(toks);
+                pos.push(gp.min(self.t - 1));
+                done.push(i >= chunk.len());
+            }
+            for _ in 0..max_new {
+                if done.iter().all(|&d| d) {
+                    break;
+                }
+                let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+                let mut pool = self.params.clone();
+                pool.insert("tokens".into(), Tensor::i32(vec![self.b, self.t], flat));
+                let out = self.fwd.run_named(&pool)?;
+                let logits = out["logits"].as_f32()?.to_vec();
+                for i in 0..self.b {
+                    if done[i] || pos[i] >= self.t {
+                        done[i] = true;
+                        continue;
+                    }
+                    // next-token distribution at position pos-1
+                    let row_off = (i * self.t + pos[i] - 1) * self.vocab;
+                    let slice = &logits[row_off..row_off + self.vocab];
+                    let arg = argmax(slice) as i32;
+                    if arg == EOS || arg == PAD {
+                        done[i] = true;
+                        continue;
+                    }
+                    rows[i][pos[i]] = arg;
+                    pos[i] += 1;
+                }
+            }
+            for (i, row) in rows.iter().enumerate().take(chunk.len()) {
+                let (_, gp) = encode_prompt(&tk, &chunk[i], self.t);
+                results.push(tk.decode_until_eos(&row[gp..pos[i].max(gp)]));
+            }
+        }
+        Ok(results)
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Exact-match accuracy of greedy generations against the gold answers.
+pub fn task_accuracy(model: &GenModel, examples: &[Example]) -> Result<f64> {
+    let prompts: Vec<String> = examples.iter().map(|e| e.prompt.clone()).collect();
+    let max_new = examples.iter().map(|e| e.answer.len() + 1).max().unwrap_or(8);
+    let outs = model.generate(&prompts, max_new)?;
+    let correct = outs
+        .iter()
+        .zip(examples)
+        .filter(|(got, ex)| got.trim() == ex.answer)
+        .count();
+    Ok(correct as f64 / examples.len().max(1) as f64)
+}
+
+/// Mean supervised loss of a model over examples (memorization metric).
+pub fn eval_loss(model: &GenModel, examples: &[Example]) -> Result<f32> {
+    let tk = Tokenizer;
+    let mut total = 0.0f64;
+    let mut batches = 0usize;
+    for chunk in examples.chunks(model.b) {
+        let batch = supervised_batch(&tk, chunk, model.b, model.t);
+        let (loss, _) = model.eval_batch(&batch)?;
+        total += loss as f64;
+        batches += 1;
+    }
+    Ok((total / batches.max(1) as f64) as f32)
+}

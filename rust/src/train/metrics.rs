@@ -1,0 +1,87 @@
+//! Training metrics: loss curve, throughput, wall time.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainMetrics {
+    pub losses: Vec<f32>,
+    pub total_tokens: usize,
+    pub total_time: Duration,
+}
+
+impl TrainMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_step(&mut self, loss: f32, tokens: usize, elapsed: Duration) {
+        self.losses.push(loss);
+        self.total_tokens += tokens;
+        self.total_time += elapsed;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.losses.len()
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the final `k` steps (smoothed curve endpoint).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len());
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f32>() / k as f32
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total_time.is_zero() {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.total_time.as_secs_f64()
+    }
+
+    pub fn ms_per_step(&self) -> f64 {
+        if self.losses.is_empty() {
+            return 0.0;
+        }
+        self.total_time.as_secs_f64() * 1e3 / self.losses.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::num(self.steps() as f64)),
+            ("last_loss", Json::num(self.last_loss() as f64)),
+            ("tail_loss", Json::num(self.tail_loss(10) as f64)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec())),
+            ("ms_per_step", Json::num(self.ms_per_step())),
+            (
+                "loss_curve",
+                Json::arr_f64(self.losses.iter().map(|&l| l as f64)),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut m = TrainMetrics::new();
+        m.record_step(2.0, 100, Duration::from_millis(10));
+        m.record_step(1.0, 100, Duration::from_millis(10));
+        assert_eq!(m.steps(), 2);
+        assert_eq!(m.last_loss(), 1.0);
+        assert_eq!(m.tail_loss(2), 1.5);
+        assert!(m.tokens_per_sec() > 0.0);
+        assert!((m.ms_per_step() - 10.0).abs() < 1.0);
+    }
+}

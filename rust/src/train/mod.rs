@@ -1,0 +1,13 @@
+//! Training coordinator: drives the per-method AOT train-step executables,
+//! owns optimizer state, evaluation (loss + greedy-decode accuracy) and
+//! checkpoints.
+
+mod checkpoint;
+mod eval;
+mod metrics;
+mod trainer;
+
+pub use checkpoint::{load_params, save_params};
+pub use eval::{eval_loss, task_accuracy, GenModel};
+pub use metrics::TrainMetrics;
+pub use trainer::Trainer;

@@ -1,0 +1,188 @@
+//! The Trainer: prepare -> step* -> merge lifecycle for one fine-tuning run.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::Batch;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+use super::metrics::TrainMetrics;
+
+/// One fine-tuning run of `method` on `model`, at the artifact batch
+/// shape `(b, t)`. Holds the method-layout state (trainable, frozen,
+/// optimizer moments, permutations) as host tensors between steps.
+pub struct Trainer {
+    pub model: String,
+    pub method: String,
+    pub b: usize,
+    pub t: usize,
+    train_exe: std::sync::Arc<Executable>,
+    /// tensor pool holding trainable + frozen + m.* + v.* (+aux names)
+    pool: HashMap<String, Tensor>,
+    /// perm outputs of prepare (s2ft only)
+    pub perms: HashMap<String, Tensor>,
+    pub step: usize,
+    pub metrics: TrainMetrics,
+    n_layers: usize,
+    rng: Rng,
+    /// LISA freezes layers randomly per step; others leave aux constant.
+    is_lisa: bool,
+    is_galore: bool,
+}
+
+impl Trainer {
+    /// Prepare a run from base-layout params. `calib` drives selection
+    /// strategies A/S/G (any train batch works; unused under R/W).
+    pub fn new(
+        rt: &Runtime,
+        model: &str,
+        method: &str,
+        base_params: &HashMap<String, Tensor>,
+        seed: u64,
+        calib: &Batch,
+    ) -> Result<Self> {
+        let mm = rt.artifacts.model(model)?;
+        let (b, t) = mm.default_batch();
+        Self::with_batch(rt, model, method, base_params, seed, calib, b, t)
+    }
+
+    /// Same but at an explicit artifact batch shape (Fig 5 sweeps).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_batch(
+        rt: &Runtime,
+        model: &str,
+        method: &str,
+        base_params: &HashMap<String, Tensor>,
+        seed: u64,
+        calib: &Batch,
+        b: usize,
+        t: usize,
+    ) -> Result<Self> {
+        let mm = rt.artifacts.model(model)?;
+        let method_meta = mm.method(method)?.clone();
+        let n_layers = mm.dims.n_layers;
+
+        // prepare: (base..., seed, calib) -> (trainable..., frozen..., perms...)
+        let prep = rt
+            .load(&format!("prepare_{model}_{method}_{b}x{t}"))
+            .with_context(|| format!("prepare artifact for {model}/{method} at {b}x{t}"))?;
+        let mut pin = base_params.clone();
+        pin.insert("seed".into(), Tensor::scalar_i32(seed as i32));
+        pin.insert("tokens".into(), calib.tokens.clone());
+        pin.insert("targets".into(), calib.targets.clone());
+        pin.insert("loss_mask".into(), calib.loss_mask.clone());
+        let prepared = prep.run_named(&pin)?;
+
+        let mut pool: HashMap<String, Tensor> = HashMap::new();
+        let mut perms: HashMap<String, Tensor> = HashMap::new();
+        let perm_names: std::collections::HashSet<&str> =
+            method_meta.perms.iter().map(|p| p.name.as_str()).collect();
+        for (name, tensor) in prepared {
+            if perm_names.contains(name.as_str()) {
+                perms.insert(name, tensor);
+            } else {
+                pool.insert(name, tensor);
+            }
+        }
+        // zero optimizer moments
+        for o in &method_meta.opt {
+            pool.insert(format!("m.{}", o.name), Tensor::zeros(o.shape.clone()));
+            pool.insert(format!("v.{}", o.name), Tensor::zeros(o.shape.clone()));
+        }
+        // aux defaults
+        for a in &method_meta.aux {
+            pool.insert(a.name.clone(), Tensor::ones(a.shape.clone()));
+        }
+
+        let train_exe = rt.load(&format!("train_{model}_{method}_{b}x{t}"))?;
+        Ok(Self {
+            model: model.to_string(),
+            method: method.to_string(),
+            b,
+            t,
+            train_exe,
+            pool,
+            perms,
+            step: 0,
+            metrics: TrainMetrics::new(),
+            n_layers,
+            rng: Rng::seed(seed ^ 0x5113),
+            is_lisa: method_meta.method == "lisa",
+            is_galore: method_meta.method == "galore",
+        })
+    }
+
+    /// Run one optimizer step; returns the loss.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
+        let started = std::time::Instant::now();
+        self.pool.insert("step".into(), Tensor::scalar_f32(self.step as f32));
+        self.pool.insert("tokens".into(), batch.tokens.clone());
+        self.pool.insert("targets".into(), batch.targets.clone());
+        self.pool.insert("loss_mask".into(), batch.loss_mask.clone());
+        if self.is_lisa {
+            // LISA: sample 1/4 of the blocks active this step (+ embeddings).
+            let active = (self.n_layers / 4).max(1);
+            let chosen = self.rng.choose(self.n_layers, active);
+            let mut mask = vec![0.0f32; self.n_layers + 1];
+            for c in chosen {
+                mask[c] = 1.0;
+            }
+            mask[self.n_layers] = 1.0;
+            self.pool
+                .insert("layer_mask".into(), Tensor::f32(vec![self.n_layers + 1], mask));
+        }
+        if self.is_galore {
+            // fixed projection: constant seed for the whole run
+            self.pool.insert("proj_seed".into(), Tensor::scalar_f32(1.0));
+        }
+        let out = self.train_exe.run_named(&self.pool)?;
+        let mut loss = f32::NAN;
+        for (name, tensor) in out {
+            if name == "loss" {
+                loss = tensor.scalar_value_f32()?;
+            } else if let Some(rest) = name.strip_prefix("new_m.") {
+                self.pool.insert(format!("m.{rest}"), tensor);
+            } else if let Some(rest) = name.strip_prefix("new_v.") {
+                self.pool.insert(format!("v.{rest}"), tensor);
+            } else if let Some(rest) = name.strip_prefix("new.") {
+                self.pool.insert(rest.to_string(), tensor);
+            }
+        }
+        self.step += 1;
+        let tokens = batch.tokens.numel();
+        self.metrics.record_step(loss, tokens, started.elapsed());
+        Ok(loss)
+    }
+
+    /// Merge back into base layout (for eval / serving / adapter diffing).
+    pub fn merged_params(&self, rt: &Runtime) -> Result<HashMap<String, Tensor>> {
+        let merge = rt.load(&format!("merge_{}_{}", self.model, self.method))?;
+        let mut pin = self.pool.clone();
+        for (k, v) in &self.perms {
+            pin.insert(k.clone(), v.clone());
+        }
+        merge.run_named(&pin)
+    }
+
+    /// Bytes of live training state (trainable+frozen+opt), the Fig 5
+    /// analytic memory number.
+    pub fn state_bytes(&self) -> usize {
+        self.pool.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Bytes of optimizer state only.
+    pub fn opt_bytes(&self) -> usize {
+        self.pool
+            .iter()
+            .filter(|(k, _)| k.starts_with("m.") || k.starts_with("v."))
+            .map(|(_, t)| t.bytes())
+            .sum()
+    }
+
+    /// Read a state tensor (tests / diagnostics).
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.pool.get(name).ok_or_else(|| anyhow!("no tensor {name:?} in trainer pool"))
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal criterion-style bench harness (criterion is not vendored).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`BenchSuite`], registers closures, and calls [`BenchSuite::run`]. The
+//! harness warms up, runs timed batches until a wall budget, and reports
+//! median / p10 / p90 per-iteration times plus throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p10_ns", Json::num(self.p10_ns)),
+            ("p90_ns", Json::num(self.p90_ns)),
+            ("mean_ns", Json::num(self.mean_ns)),
+        ])
+    }
+}
+
+pub struct BenchSuite {
+    pub suite: String,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        Self {
+            suite: suite.to_string(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// For expensive benchmarks (whole train steps).
+    pub fn slow(mut self) -> Self {
+        self.warmup = Duration::from_millis(0);
+        self.budget = Duration::from_secs(4);
+        self.min_iters = 3;
+        self
+    }
+
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        f();
+        let first = start.elapsed();
+        if first < self.warmup {
+            let wstart = Instant::now();
+            while wstart.elapsed() < self.warmup {
+                f();
+            }
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let tstart = Instant::now();
+        while (tstart.elapsed() < self.budget || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < 10_000
+        {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if first > self.budget && samples_ns.len() >= self.min_iters {
+                break; // very slow case: stop at min_iters
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let pct = |p: f64| samples_ns[((n as f64 - 1.0) * p) as usize];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+        };
+        println!(
+            "{:<52} {:>12}  (p10 {:>10}, p90 {:>10}, n={})",
+            format!("{}/{}", self.suite, name),
+            fmt_ns(res.median_ns),
+            fmt_ns(res.p10_ns),
+            fmt_ns(res.p90_ns),
+            n
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Write results JSON under results/bench_<suite>.json.
+    pub fn save(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let js = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench_{}.json", self.suite);
+        if std::fs::write(&path, js.to_string_pretty()).is_ok() {
+            println!("saved {path}");
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut s = BenchSuite::new("selftest");
+        s.budget = Duration::from_millis(30);
+        s.warmup = Duration::from_millis(5);
+        let r = s.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,40 @@
+//! In-crate substrates for the offline environment: JSON, deterministic
+//! RNG, a criterion-style bench harness, and process memory introspection.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Peak resident set size of this process in bytes (VmHWM from
+/// /proc/self/status). Used by the Fig 5 memory-efficiency harness.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current resident set size in bytes (VmRSS).
+pub fn current_rss_bytes() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn rss_readable() {
+        assert!(super::current_rss_bytes().unwrap() > 0);
+        assert!(super::peak_rss_bytes().unwrap() >= super::current_rss_bytes().unwrap());
+    }
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The vendored crate set has no `proptest`, so these are seeded
+//! generator sweeps (many random cases per property, deterministic seeds,
+//! shrink-free but reproducible) — same invariants, zero dependencies.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use repro::adapter::{S2ftAdapter, S2ftLayerDelta};
+use repro::data::batch::encode_example;
+use repro::data::tokenizer::{Tokenizer, EOS, PAD, SEP};
+use repro::data::{Example, Split, World, ARITHMETIC, COMMONSENSE, INSTRUCT};
+use repro::linalg::Mat;
+use repro::runtime::Tensor;
+use repro::serve::AdapterBatcher;
+use repro::sparsity;
+use repro::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Routing invariant: every queued request is emitted exactly once, in
+/// FIFO order within its adapter group, with batches never exceeding cap.
+#[test]
+fn prop_batcher_conserves_requests() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(case as u64);
+        let n = 1 + rng.below(64);
+        let n_adapters = 1 + rng.below(6);
+        let cap = 1 + rng.below(8);
+        let mut b: AdapterBatcher<usize> = AdapterBatcher::new(cap, Duration::from_secs(60));
+        let mut pushed: HashMap<String, Vec<usize>> = HashMap::new();
+        for i in 0..n {
+            let a = format!("a{}", rng.below(n_adapters));
+            b.push(a.clone(), i);
+            pushed.entry(a).or_default().push(i);
+        }
+        let mut drained: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut total = 0;
+        while let Some(plan) = b.next_batch() {
+            assert!(plan.items.len() <= cap, "case {case}: batch over cap");
+            assert!(!plan.items.is_empty());
+            total += plan.items.len();
+            drained
+                .entry(plan.adapter.clone())
+                .or_default()
+                .extend(plan.items.iter().map(|q| q.payload));
+        }
+        assert_eq!(total, n, "case {case}: lost/duplicated requests");
+        for (a, seq) in &drained {
+            assert_eq!(seq, &pushed[a], "case {case}: order broken for {a}");
+        }
+    }
+}
+
+/// Permutation invariants: trainable-first + inverse compose to identity.
+#[test]
+fn prop_permutation_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(1000 + case as u64);
+        let total = 2 + rng.below(128);
+        let s = 1 + rng.below(total - 1);
+        let sel = rng.choose(total, s);
+        let perm = sparsity::trainable_first_permutation(&sel, total).unwrap();
+        assert_eq!(&perm[..s], &sel[..]);
+        let inv = sparsity::invert_permutation(&perm);
+        for i in 0..total {
+            assert_eq!(inv[perm[i]], i);
+            assert_eq!(perm[inv[i]], i);
+        }
+        // expanded head perms partition the element range
+        let hd = 1 + rng.below(8);
+        let e = sparsity::expand_head_perm(&perm, hd);
+        let mut sorted = e.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..total * hd).collect::<Vec<_>>());
+    }
+}
+
+/// Scatter/gather rows+cols are exact inverses and touch nothing else.
+#[test]
+fn prop_scatter_gather_isolation() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(2000 + case as u64);
+        let rows = 2 + rng.below(32);
+        let cols = 1 + rng.below(32);
+        let s = 1 + rng.below(rows - 1);
+        let idx = rng.choose(rows, s);
+        let mut w: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32()).collect();
+        let orig = w.clone();
+        let delta: Vec<f32> = (0..s * cols).map(|_| rng.normal_f32()).collect();
+        sparsity::scatter_add_rows(&mut w, cols, &idx, &delta);
+        // untouched rows identical
+        for r in 0..rows {
+            if !idx.contains(&r) {
+                assert_eq!(&w[r * cols..(r + 1) * cols], &orig[r * cols..(r + 1) * cols]);
+            }
+        }
+        assert_eq!(sparsity::gather_rows(&w, cols, &idx).len(), s * cols);
+        sparsity::scatter_sub_rows(&mut w, cols, &idx, &delta);
+        for (a, b) in w.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
+/// Adapter apply/remove is an exact involution on the weight pool, and
+/// fusion of an adapter with weight 1.0 equals the adapter itself.
+#[test]
+fn prop_adapter_apply_remove_fuse() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(3000 + case as u64);
+        let d = 4 + rng.below(24);
+        let kf = 6 + rng.below(30);
+        let n_layers = 1 + rng.below(3);
+        let layers: Vec<S2ftLayerDelta> = (0..n_layers)
+            .map(|_| {
+                let s = 1 + rng.below(3);
+                let c = 1 + rng.below(4);
+                S2ftLayerDelta {
+                    wo_rows: rng.choose(d, s),
+                    wo_delta: (0..s * d).map(|_| rng.normal_f32()).collect(),
+                    wd_rows: rng.choose(kf, c),
+                    wd_delta: (0..c * d).map(|_| rng.normal_f32()).collect(),
+                }
+            })
+            .collect();
+        let adapter = S2ftAdapter { layers, d_model: d };
+        let mut params: HashMap<String, Tensor> = HashMap::new();
+        for i in 0..n_layers {
+            params.insert(
+                format!("L{i}.wo"),
+                Tensor::f32(vec![d, d], (0..d * d).map(|x| x as f32).collect()),
+            );
+            params.insert(
+                format!("L{i}.wd"),
+                Tensor::f32(vec![kf, d], (0..kf * d).map(|x| x as f32 * 0.5).collect()),
+            );
+        }
+        let orig = params.clone();
+        adapter.apply(&mut params).unwrap();
+        adapter.remove(&mut params).unwrap();
+        for (k, v) in &params {
+            let a = v.as_f32().unwrap();
+            let b = orig[k].as_f32().unwrap();
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "case {case}: {k} drifted");
+            }
+        }
+        // fuse([(a, 1.0)]) == a (on the union representation)
+        let fused = S2ftAdapter::fuse(&[(&adapter, 1.0)]).unwrap();
+        let mut p1 = orig.clone();
+        adapter.apply(&mut p1).unwrap();
+        let mut p2 = orig.clone();
+        fused.apply(&mut p2).unwrap();
+        for (k, v) in &p1 {
+            assert_eq!(v.as_f32().unwrap(), p2[k].as_f32().unwrap(), "case {case}: {k}");
+        }
+    }
+}
+
+/// Batch encoding invariants: loss mask covers exactly the answer+EOS
+/// targets; decoding the supervised positions recovers the answer.
+#[test]
+fn prop_batch_encoding_supervises_answer() {
+    let tk = Tokenizer;
+    let world = World::canonical();
+    for case in 0..CASES {
+        let mut rng = Rng::seed(4000 + case as u64);
+        let all: Vec<&repro::data::Task> =
+            COMMONSENSE.iter().chain(&ARITHMETIC).chain(&INSTRUCT).collect();
+        let task = all[rng.below(all.len())];
+        let split = if rng.bool(0.5) { Split::Train } else { Split::Test };
+        let ex = task.sample(&world, &mut rng, split);
+        let t = 64;
+        let (tokens, targets, mask) = encode_example(&tk, &ex, t);
+        assert_eq!(tokens.len(), t);
+        // supervised targets reconstruct answer + EOS
+        let supervised: Vec<i32> = targets
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(&t, _)| t)
+            .collect();
+        assert_eq!(*supervised.last().unwrap(), EOS, "case {case}");
+        let decoded = tk.decode(&supervised[..supervised.len() - 1]);
+        assert_eq!(decoded, ex.answer, "case {case}: {ex:?}");
+        // no loss on SEP-or-earlier positions' inputs, none on padding
+        for (i, &tok) in tokens.iter().enumerate() {
+            if tok == PAD {
+                assert_eq!(mask[i], 0.0);
+            }
+        }
+        assert!(tokens.contains(&SEP));
+    }
+}
+
+/// linalg invariants: (A·B)ᵀ = Bᵀ·Aᵀ and ‖A‖_F² = Σ σᵢ².
+#[test]
+fn prop_linalg_identities() {
+    for case in 0..30 {
+        let mut rng = Rng::seed(5000 + case as u64);
+        let m = 2 + rng.below(10);
+        let k = 2 + rng.below(10);
+        let n = 2 + rng.below(10);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let ab_t = a.matmul(&b).t();
+        let bt_at = b.t().matmul(&a.t());
+        assert!(ab_t.sub(&bt_at).fro_norm() < 1e-4);
+        let sv = repro::linalg::svd(&a).s;
+        let fro2: f32 = sv.iter().map(|s| s * s).sum();
+        let want = a.fro_norm() * a.fro_norm();
+        assert!(
+            (fro2 - want).abs() / want.max(1e-6) < 1e-3,
+            "case {case}: {fro2} vs {want}"
+        );
+    }
+}
+
+/// Task-suite invariant: answers fit the decode budget and train/test
+/// prompts for entity tasks never collide.
+#[test]
+fn prop_task_splits_disjoint() {
+    let world = World::canonical();
+    for (ti, task) in COMMONSENSE.iter().enumerate() {
+        if task.name == "OBQA" {
+            continue; // rule-recall task intentionally shares prompts
+        }
+        let mut rng = Rng::seed(6000 + ti as u64);
+        let train: std::collections::HashSet<String> = (0..120)
+            .map(|_| task.sample(&world, &mut rng, Split::Train))
+            .map(|e: Example| e.prompt)
+            .collect();
+        let test: std::collections::HashSet<String> = (0..120)
+            .map(|_| task.sample(&world, &mut rng, Split::Test).prompt)
+            .collect();
+        let inter: Vec<_> = train.intersection(&test).collect();
+        assert!(
+            inter.is_empty(),
+            "{}: {} colliding prompts, e.g. {:?}",
+            task.name,
+            inter.len(),
+            inter.first()
+        );
+    }
+}

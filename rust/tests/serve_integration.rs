@@ -1,0 +1,104 @@
+//! Serving-stack integration: router + batcher + engine over the real
+//! tiny model, with live S²FT adapter switches mid-stream.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use repro::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use repro::runtime::{Runtime, Tensor};
+use repro::serve::{Router, ServeRequest};
+use repro::train::GenModel;
+use repro::util::rng::Rng;
+
+fn spawn_router(n_adapters: usize, max_batch: usize) -> Router {
+    Router::spawn(max_batch, Duration::from_millis(2), move || {
+        let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+        let init = rt.load("init_tiny")?;
+        let outs = init.run(&[Tensor::scalar_i32(3)])?;
+        let params: HashMap<String, Tensor> =
+            init.spec.outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        let mm = rt.artifacts.model("tiny")?;
+        let (d, hd) = (mm.dims.d_model, mm.head_dim());
+        let mut store = AdapterStore::new();
+        let mut rng = Rng::seed(77);
+        for a in 0..n_adapters {
+            let layers = (0..mm.dims.n_layers)
+                .map(|_| {
+                    let heads = rng.choose(mm.dims.n_heads, 1);
+                    let wo_rows = repro::sparsity::expand_head_perm(&heads, hd);
+                    S2ftLayerDelta {
+                        wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                        wo_rows,
+                        wd_rows: rng.choose(mm.dims.d_ff, 2),
+                        wd_delta: (0..2 * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                    }
+                })
+                .collect();
+            store.insert(format!("a{a}"), AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d }));
+        }
+        let snapshot = params.clone();
+        let gm = GenModel::new(&rt, "tiny", params)?;
+        Ok((gm, store, snapshot))
+    })
+}
+
+#[test]
+fn router_serves_all_requests_across_adapters() {
+    let router = spawn_router(3, 2);
+    let mut rx = Vec::new();
+    for i in 0..9 {
+        rx.push(router.submit(ServeRequest {
+            adapter: format!("a{}", i % 3),
+            prompt: format!("q: item {i}?"),
+            max_new: 3,
+        }));
+    }
+    let mut served = 0;
+    for r in rx {
+        let reply = r.recv().expect("reply");
+        assert!(reply.batch_size >= 1 && reply.batch_size <= 2);
+        served += 1;
+    }
+    assert_eq!(served, 9);
+    let m = router.metrics();
+    assert_eq!(m.requests, 9);
+    assert!(m.batches >= 5, "batcher should cap at max_batch=2: {}", m.batches);
+    assert!(m.switches >= 3, "must have switched between 3 adapters");
+    assert!(m.percentile_ms(0.5) > 0.0);
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn router_base_requests_use_pristine_weights() {
+    let router = spawn_router(1, 4);
+    // adapter request then base request: engine must unfuse in between
+    let r1 = router.call(ServeRequest {
+        adapter: "a0".into(),
+        prompt: "q: x?".into(),
+        max_new: 2,
+    }).unwrap();
+    let r2 = router.call(ServeRequest {
+        adapter: "base".into(),
+        prompt: "q: x?".into(),
+        max_new: 2,
+    }).unwrap();
+    // both served; determinism of each path is covered elsewhere — here we
+    // assert the engine survives the fuse/unfuse round trip
+    assert!(r1.text.len() <= 2 && r2.text.len() <= 2);
+    let m = router.metrics();
+    assert_eq!(m.requests, 2);
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_cleanly() {
+    let router = spawn_router(2, 4);
+    let pending = router.submit(ServeRequest {
+        adapter: "a1".into(),
+        prompt: "q: last?".into(),
+        max_new: 2,
+    });
+    router.shutdown().unwrap();
+    // the queued request was served before shutdown completed
+    assert!(pending.recv().is_ok());
+}
