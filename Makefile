@@ -1,0 +1,39 @@
+# S²FT reproduction — top-level driver.
+#
+#   make build      release build (native backend, hermetic: no Python/XLA)
+#   make test       full hermetic test suite (default features)
+#   make test-pjrt  compile-check the PJRT feature path as well
+#   make artifacts  AOT-lower the JAX models to HLO text (needs python+jax)
+#   make fmt lint   formatting / clippy gates (same as CI)
+
+CARGO ?= cargo
+MANIFEST = rust/Cargo.toml
+
+.PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint clean
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+test-pjrt:
+	$(CARGO) test -q --manifest-path $(MANIFEST) --features pjrt
+
+fmt:
+	$(CARGO) fmt --check --manifest-path $(MANIFEST)
+
+lint:
+	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
+
+# Build-time only: lower every (model, method) to HLO text + meta.json.
+# Requires a python environment with jax installed; the rust side never
+# needs python at runtime (and the native backend never needs artifacts).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+artifacts-fig5:
+	cd python && python -m compile.aot --out ../rust/artifacts --fig5 --extras
+
+clean:
+	$(CARGO) clean --manifest-path $(MANIFEST)

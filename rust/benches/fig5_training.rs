@@ -1,29 +1,31 @@
 //! Figure 5 (bench form): end-to-end train-step latency per method on the
-//! `small` model through the full PJRT stack. The `repro experiment fig5`
-//! harness covers the `base`-model sweep with memory accounting; this
-//! bench gives tight per-step latency distributions for regressions.
+//! `small` model through whichever backend is available (native interprets
+//! fullft + s2ft; the pjrt feature adds the full AOT method set). The
+//! `repro experiment fig5` harness covers the `base`-model sweep with
+//! memory accounting; this bench gives tight per-step latency
+//! distributions for regressions.
 
 use repro::data::{lm_batch, pretrain_corpus, Tokenizer};
-use repro::runtime::{Runtime, Tensor};
+use repro::runtime::{open_backend, Executable, Executor, Tensor};
 use repro::train::Trainer;
 use repro::util::bench::BenchSuite;
 use repro::util::rng::Rng;
 
 fn main() {
-    let rt = match Runtime::new("artifacts") {
+    let rt = match open_backend("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping fig5_training bench: {e:#} (run `make artifacts`)");
+            eprintln!("skipping fig5_training bench: {e:#}");
             return;
         }
     };
     let model = "small";
-    let mm = rt.artifacts.model(model).expect("small model meta");
+    let mm = rt.artifacts().model(model).expect("small model meta").clone();
     let (b, t) = mm.default_batch();
     let init = rt.load(&format!("init_{model}")).expect("init artifact");
     let outs = init.run(&[Tensor::scalar_i32(1)]).expect("init run");
     let base: std::collections::HashMap<String, Tensor> = init
-        .spec
+        .spec()
         .outputs
         .iter()
         .map(|s| s.name.clone())
@@ -33,14 +35,17 @@ fn main() {
     let tk = Tokenizer;
     let corpus = pretrain_corpus(3, 200_000);
     let mut suite = BenchSuite::new("fig5_training").slow();
-    println!("Fig 5 (bench): one optimizer step, model=small {b}x{t}\n");
+    println!(
+        "Fig 5 (bench): one optimizer step, model=small {b}x{t}, backend {}\n",
+        rt.platform()
+    );
     for method in ["fullft", "lora", "dora", "spft", "lisa", "galore", "s2ft", "s2ft-pallas"] {
         if mm.methods.get(method).is_none() {
             continue;
         }
         let mut rng = Rng::seed(5);
         let calib = lm_batch(&tk, &corpus, &mut rng, b, t);
-        let mut trainer = match Trainer::new(&rt, model, method, &base, 3, &calib) {
+        let mut trainer = match Trainer::new(rt.as_ref(), model, method, &base, 3, &calib) {
             Ok(tr) => tr,
             Err(e) => {
                 eprintln!("  {method}: {e:#}");

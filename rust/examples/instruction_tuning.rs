@@ -9,20 +9,26 @@ use anyhow::Result;
 
 use repro::data::{finetune_examples, COMMONSENSE, INSTRUCT};
 use repro::experiments::common::{evaluate_suite, finetune, pretrain};
-use repro::runtime::Runtime;
+use repro::runtime::open_backend;
 use repro::train::GenModel;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(150);
-    let rt = Runtime::new("artifacts")?;
+    let rt = open_backend("artifacts")?;
     println!("pre-training base model ({steps} steps)...");
-    let base = pretrain(&rt, "small", steps, 42, true)?;
+    let base = pretrain(rt.as_ref(), "small", steps, 42, true)?;
     let examples = finetune_examples("instruct", 2000, 99);
 
     println!("\n{:<10} {:>10} {:>12} {:>14}", "method", "instruct%", "retention%", "train-loss");
     for method in ["fullft", "lora", "s2ft"] {
-        let trainer = finetune(&rt, "small", method, &base, &examples, steps, 5)?;
-        let model = GenModel::new(&rt, "small", trainer.merged_params(&rt)?)?;
+        let trainer = match finetune(rt.as_ref(), "small", method, &base, &examples, steps, 5) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("{method:<10} skipped ({e})");
+                continue;
+            }
+        };
+        let model = GenModel::new(rt.as_ref(), "small", trainer.merged_params(rt.as_ref())?)?;
         let (per_cat, avg) = evaluate_suite(&model, &INSTRUCT, 16, 3)?;
         // far-OOD retention: commonsense skills learned in pre-training
         let (_, retention) = evaluate_suite(&model, &COMMONSENSE, 16, 3)?;

@@ -5,7 +5,8 @@
 //!   3. merge, extract the adapter, evaluate ID + OOD accuracy,
 //!   4. demonstrate fuse/unfuse via scatter_add.
 //!
-//! Run: `cargo run --release --example quickstart` (artifacts required).
+//! Run: `cargo run --release --example quickstart` (hermetic on the native
+//! backend; add `--features pjrt` + artifacts for PJRT execution).
 //! Set QUICKSTART_STEPS to shrink/grow the budget.
 
 use anyhow::Result;
@@ -13,7 +14,7 @@ use anyhow::Result;
 use repro::adapter::S2ftAdapter;
 use repro::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
 use repro::experiments::common::{evaluate_suite, finetune, pretrain};
-use repro::runtime::Runtime;
+use repro::runtime::{open_backend, Executor};
 use repro::train::GenModel;
 
 fn main() -> Result<()> {
@@ -21,17 +22,17 @@ fn main() -> Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(150);
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    let rt = open_backend("artifacts")?;
+    println!("backend: {}", rt.platform());
 
     // 1. pre-train
     println!("\n[1/4] pre-training `small` for {steps} steps on the synthetic corpus");
-    let base = pretrain(&rt, "small", steps, 42, true)?;
+    let base = pretrain(rt.as_ref(), "small", steps, 42, true)?;
 
     // 2. S²FT fine-tune
     println!("\n[2/4] S²FT fine-tuning on the arithmetic mixture ({steps} steps)");
     let examples = finetune_examples("arithmetic", 2000, 7);
-    let trainer = finetune(&rt, "small", "s2ft", &base, &examples, steps, 11)?;
+    let trainer = finetune(rt.as_ref(), "small", "s2ft", &base, &examples, steps, 11)?;
     println!(
         "  tail loss {:.4}, {:.1} ms/step, trainable state only {:.2} MB of {:.2} MB",
         trainer.metrics.tail_loss(10),
@@ -42,8 +43,8 @@ fn main() -> Result<()> {
 
     // 3. merge + evaluate
     println!("\n[3/4] merging and evaluating");
-    let merged = trainer.merged_params(&rt)?;
-    let model = GenModel::new(&rt, "small", merged.clone())?;
+    let merged = trainer.merged_params(rt.as_ref())?;
+    let model = GenModel::new(rt.as_ref(), "small", merged.clone())?;
     let (rows, avg) = evaluate_suite(&model, &ARITHMETIC, 16, 1)?;
     for (name, acc) in &rows {
         println!("  {name:>10}: {acc:5.1}%");
@@ -54,7 +55,7 @@ fn main() -> Result<()> {
 
     // 4. adapter extraction + switch
     println!("\n[4/4] adapter lifecycle");
-    let mm = rt.artifacts.model("small")?;
+    let mm = rt.artifacts().model("small")?;
     let method = mm.method("s2ft")?;
     let adapter = S2ftAdapter::extract(mm, method, &trainer.perms, &base, &merged)?;
     println!(

@@ -210,31 +210,13 @@ fn diff_rows(base: &[f32], merged: &[f32], cols: usize, rows: &[usize]) -> Vec<f
     out
 }
 
-/// Mirror of python `selection.budget_to_counts` for wo/wd.
+/// Per-projection trainable unit counts for an S²FT method (zero-count
+/// projections dropped). Delegates to [`sparsity::budget_to_counts`].
 pub fn s2ft_counts(mm: &ModelMeta, method: &MethodMeta) -> HashMap<String, usize> {
-    let mut out = HashMap::new();
-    for (proj, f) in &method.s2ft_fractions {
-        let c = match proj.as_str() {
-            "wo" | "wq" | "wk" | "wv" => {
-                if *f > 0.0 {
-                    ((f * mm.dims.n_heads as f64).round() as usize).max(1)
-                } else {
-                    0
-                }
-            }
-            _ => {
-                if *f > 0.0 {
-                    ((f * mm.dims.d_ff as f64).round() as usize).max(1)
-                } else {
-                    0
-                }
-            }
-        };
-        if c > 0 {
-            out.insert(proj.clone(), c);
-        }
-    }
-    out
+    sparsity::budget_to_counts(&method.s2ft_fractions, mm.dims.d_ff, mm.dims.n_heads)
+        .into_iter()
+        .filter(|(_, c)| *c > 0)
+        .collect()
 }
 
 // ---------------------------------------------------------------------------

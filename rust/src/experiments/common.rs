@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::data::{supervised_batch, Batch, Example, Split, Task, Tokenizer, World};
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{Executable, Executor, Tensor};
 use crate::train::{task_accuracy, GenModel, Trainer};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -21,11 +21,11 @@ pub fn save_result(name: &str, value: &Json) {
 }
 
 /// Initialize base params from the init artifact.
-pub fn init_params(rt: &Runtime, model: &str, seed: i32) -> Result<HashMap<String, Tensor>> {
+pub fn init_params(rt: &dyn Executor, model: &str, seed: i32) -> Result<HashMap<String, Tensor>> {
     let init = rt.load(&format!("init_{model}"))?;
     let outs = init.run(&[Tensor::scalar_i32(seed)])?;
     Ok(init
-        .spec
+        .spec()
         .outputs
         .iter()
         .map(|s| s.name.clone())
@@ -37,14 +37,14 @@ pub fn init_params(rt: &Runtime, model: &str, seed: i32) -> Result<HashMap<Strin
 /// returning base-layout weights. This is the stand-in for the paper's
 /// pre-trained LLaMA checkpoints (DESIGN.md §2).
 pub fn pretrain(
-    rt: &Runtime,
+    rt: &dyn Executor,
     model: &str,
     steps: usize,
     seed: u64,
     log: bool,
 ) -> Result<HashMap<String, Tensor>> {
     let base = init_params(rt, model, seed as i32)?;
-    let (b, t) = rt.artifacts.model(model)?.default_batch();
+    let (b, t) = rt.artifacts().model(model)?.default_batch();
     let tk = Tokenizer;
     let corpus = crate::data::pretrain_corpus(seed, 200_000);
     let mut rng = Rng::seed(seed ^ 0x9E37);
@@ -66,7 +66,7 @@ pub fn pretrain(
 /// Load the cached pre-trained checkpoint, or pre-train and cache it.
 /// Every accuracy experiment shares this base model.
 pub fn pretrained_cached(
-    rt: &Runtime,
+    rt: &dyn Executor,
     model: &str,
     steps: usize,
     seed: u64,
@@ -84,7 +84,7 @@ pub fn pretrained_cached(
 
 /// Fine-tune `method` on a task example stream; returns the trainer.
 pub fn finetune(
-    rt: &Runtime,
+    rt: &dyn Executor,
     model: &str,
     method: &str,
     base: &HashMap<String, Tensor>,
@@ -92,7 +92,7 @@ pub fn finetune(
     steps: usize,
     seed: u64,
 ) -> Result<Trainer> {
-    let (b, t) = rt.artifacts.model(model)?.default_batch();
+    let (b, t) = rt.artifacts().model(model)?.default_batch();
     let tk = Tokenizer;
     let calib = batch_at(&tk, examples, 0, b, t);
     let mut trainer = Trainer::new(rt, model, method, base, seed, &calib)?;

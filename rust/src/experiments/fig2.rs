@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::data::{finetune_examples, Difficulty, Split, Tokenizer, World, ARITHMETIC, COMMONSENSE};
-use crate::runtime::Runtime;
+use crate::runtime::{open_backend, Executor};
 use crate::train::{task_accuracy, GenModel};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -21,7 +21,7 @@ use super::common::{finetune, pretrained_cached, print_table, save_result, table
 const MODEL: &str = "small";
 
 pub fn run_fig2(artifacts: &str, quick: bool) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
+    let rt = open_backend(artifacts)?;
     let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 150, 12) };
     let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
     let examples = finetune_examples("arithmetic", 2000, 7);
@@ -49,7 +49,7 @@ pub fn run_fig2(artifacts: &str, quick: bool) -> Result<()> {
         if filter.as_ref().is_some_and(|f| !f.split(',').any(|x| x.trim() == tag)) {
             continue;
         }
-        if rt.artifacts.model(MODEL)?.methods.get(tag).is_none() {
+        if rt.artifacts().model(MODEL)?.methods.get(tag).is_none() {
             println!("  (skipping {label}: artifact variant {tag} not built — `make artifacts`)");
             continue;
         }

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
-use crate::runtime::Runtime;
+use crate::runtime::{open_backend, Executor};
 use crate::train::GenModel;
 
 use super::common::{evaluate_suite, finetune, pretrained_cached, save_result};
@@ -13,7 +13,7 @@ use crate::util::json::Json;
 const MODEL: &str = "small";
 
 pub fn run_tab4(artifacts: &str, quick: bool) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
+    let rt = open_backend(artifacts)?;
     let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 120, 12) };
     let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
 
@@ -37,7 +37,7 @@ pub fn run_tab4(artifacts: &str, quick: bool) -> Result<()> {
         if filter.as_ref().is_some_and(|f| !f.split(',').any(|x| x.trim() == tag)) {
             continue;
         }
-        if rt.artifacts.model(MODEL)?.methods.get(tag).is_none() {
+        if rt.artifacts().model(MODEL)?.methods.get(tag).is_none() {
             println!("  (skipping {label}: {tag} not built)");
             continue;
         }

@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use crate::adapter::S2ftAdapter;
 use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE};
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{open_backend, Executor, Tensor};
 use crate::train::GenModel;
 use crate::util::json::Json;
 
@@ -18,10 +18,10 @@ use super::common::{evaluate_suite, finetune, pretrained_cached, save_result};
 const MODEL: &str = "small";
 
 pub fn run_tab5(artifacts: &str, quick: bool) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
+    let rt = open_backend(artifacts)?;
     let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 180, 20) };
     let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
-    let mm = rt.artifacts.model(MODEL)?.clone();
+    let mm = rt.artifacts().model(MODEL)?.clone();
     let method = mm.method("s2ft")?.clone();
 
     let cs_examples = finetune_examples("commonsense", 2000, 41);
@@ -81,6 +81,11 @@ pub fn run_tab5(artifacts: &str, quick: bool) -> Result<()> {
     emit("S2FT fused (non-overlap)", csd, ard, &mut records);
 
     // --- LoRA baseline -----------------------------------------------------
+    if mm.methods.get("lora").is_none() {
+        println!("tab5: skipping LoRA baseline (method not available on this backend)");
+        save_result("tab5", &Json::Arr(records));
+        return Ok(());
+    }
     println!("tab5: training LoRA adapters...");
     let l_cs = finetune(&rt, MODEL, "lora", &base, &cs_examples, ft_steps, 53)?;
     let l_ar = finetune(&rt, MODEL, "lora", &base, &ar_examples, ft_steps, 54)?;

@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::data::{finetune_examples, ARITHMETIC, COMMONSENSE, INSTRUCT};
-use crate::runtime::Runtime;
+use crate::runtime::{open_backend, Executor};
 use crate::train::GenModel;
 
 use super::common::{
@@ -22,7 +22,7 @@ struct TableSpec {
 }
 
 fn run_table(artifacts: &str, quick: bool, spec: &TableSpec) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
+    let rt = open_backend(artifacts)?;
     let (pre_steps, ft_steps, n_eval) = if quick { (60, 30, 8) } else { (800, 250, 32) };
     let base = pretrained_cached(&rt, MODEL, pre_steps, 42)?;
     let examples = finetune_examples(spec.suite, 2000, 13);
@@ -48,7 +48,7 @@ fn run_table(artifacts: &str, quick: bool, spec: &TableSpec) -> Result<()> {
         if !keep(tag) {
             continue;
         }
-        if rt.artifacts.model(MODEL)?.methods.get(*tag).is_none() {
+        if rt.artifacts().model(MODEL)?.methods.get(*tag).is_none() {
             println!("  (skipping {label}: {tag} not built)");
             continue;
         }

@@ -6,14 +6,25 @@
 //! * **L2** (`python/compile/model.py`): LLaMA-style model + every
 //!   fine-tuning method (fullft/lora/dora/spft/lisa/galore/s2ft), AOT-lowered
 //!   to HLO text by `python/compile/aot.py`.
-//! * **L3** (this crate): loads the artifacts via PJRT ([`runtime`]), owns
-//!   training ([`train`]), data generation ([`data`]), adapter lifecycle
-//!   ([`adapter`]), multi-adapter serving ([`serve`]), the deep-linear
-//!   theory simulator ([`theory`]) and the paper's experiment harnesses
-//!   ([`experiments`]).
+//! * **L3** (this crate): executes the model contract through a pluggable
+//!   backend ([`runtime::Executor`]), owns training ([`train`]), data
+//!   generation ([`data`]), adapter lifecycle ([`adapter`]), multi-adapter
+//!   serving ([`serve`]), the deep-linear theory simulator ([`theory`]) and
+//!   the paper's experiment harnesses ([`experiments`]).
 //!
-//! Python never runs on the request path: `make artifacts` is build-time
-//! only, and the `repro` binary is self-contained afterwards.
+//! # Execution backends
+//!
+//! * [`runtime::NativeBackend`] (default): a pure-Rust interpreter of the
+//!   contract — seeded init, LLaMA forward/eval, AdamW with S²FT partial
+//!   backprop, greedy generation. Fully hermetic: `cargo build && cargo
+//!   test` need no Python, no artifacts and no XLA toolchain.
+//! * [`runtime::Runtime`] (cargo feature `pjrt`): loads the AOT HLO-text
+//!   artifacts via PJRT. `make artifacts` is build-time only, and the
+//!   `repro` binary is self-contained afterwards; python never runs on the
+//!   request path.
+//!
+//! Backend selection is a single call — [`runtime::open_backend`] — and
+//! everything above the [`runtime`] module is backend-agnostic.
 
 pub mod adapter;
 pub mod config;
@@ -27,4 +38,6 @@ pub mod theory;
 pub mod train;
 pub mod util;
 
-pub use runtime::{Artifacts, Runtime, Tensor};
+pub use runtime::{open_backend, Artifacts, Executable, Executor, NativeBackend, Tensor};
+#[cfg(feature = "pjrt")]
+pub use runtime::Runtime;

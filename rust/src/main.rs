@@ -16,9 +16,43 @@ use anyhow::{anyhow, Context, Result};
 use repro::config::TrainConfig;
 use repro::data::{self, Tokenizer};
 use repro::experiments;
-use repro::runtime::Runtime;
+use repro::runtime::{open_backend, Artifacts, Executor, NativeBackend};
 use repro::train::{self, GenModel, Trainer};
 use repro::util::rng::Rng;
+
+/// Resolve the execution backend from `--backend native|pjrt|auto` (auto:
+/// PJRT when built with the feature and artifacts exist, else native).
+fn backend_for(args: &Args) -> Result<Box<dyn Executor>> {
+    backend_for_dir(args, args.get_or("artifacts", "artifacts"))
+}
+
+/// Same, but with an explicit artifact directory (config-file runs).
+fn backend_for_dir(args: &Args, dir: &str) -> Result<Box<dyn Executor>> {
+    match args.get("backend").unwrap_or("auto") {
+        "auto" => open_backend(dir),
+        "native" => {
+            if std::path::Path::new(dir).join("meta.json").exists() {
+                Ok(Box::new(NativeBackend::with_artifacts(Artifacts::open(dir)?)))
+            } else {
+                Ok(Box::new(NativeBackend::builtin()))
+            }
+        }
+        "pjrt" => pjrt_backend(dir),
+        other => Err(anyhow!("unknown backend {other:?} (native|pjrt|auto)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(dir: &str) -> Result<Box<dyn Executor>> {
+    Ok(Box::new(repro::runtime::Runtime::new(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_dir: &str) -> Result<Box<dyn Executor>> {
+    Err(anyhow!(
+        "this binary was built without PJRT; rebuild with `--features pjrt`"
+    ))
+}
 
 struct Args {
     positional: Vec<String>,
@@ -113,14 +147,20 @@ USAGE:
   repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
 
 Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
-variants, see `repro info`). Artifacts default to ./artifacts."
+variants, see `repro info`). Artifacts default to ./artifacts.
+
+Backends (--backend native|pjrt|auto): the native pure-rust interpreter
+runs fullft + s2ft with no artifacts, python or XLA; pjrt (cargo feature)
+executes the full AOT method set from ./artifacts. auto prefers pjrt when
+available, else native."
     );
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let rt = backend_for(args)?;
     println!("platform: {}", rt.platform());
-    let mut models: Vec<_> = rt.artifacts.meta.models.iter().collect();
+    let meta = rt.artifacts().meta.clone();
+    let mut models: Vec<_> = meta.models.iter().collect();
     models.sort_by_key(|(k, _)| k.clone());
     for (name, m) in models {
         println!(
@@ -144,16 +184,19 @@ fn cmd_info(args: &Args) -> Result<()> {
             );
         }
     }
-    println!("artifacts: {}", rt.artifacts.meta.artifacts.len());
+    match meta.artifacts.len() {
+        0 => println!("artifacts: none (native interpreter, specs synthesized on demand)"),
+        n => println!("artifacts: {n}"),
+    }
     Ok(())
 }
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let model = args.get("model").context("--model required")?;
-    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let rt = backend_for(args)?;
     let steps = args.usize_or("steps", 400);
     let seed = args.u64_or("seed", 42);
-    let params = experiments::common::pretrain(&rt, model, steps, seed, true)?;
+    let params = experiments::common::pretrain(rt.as_ref(), model, steps, seed, true)?;
     if let Some(dir) = args.get("save") {
         train::save_params(dir, &params)?;
         println!("saved base weights to {dir}");
@@ -178,12 +221,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             notes: String::new(),
         }
     };
-    let rt = Runtime::new(&cfg.artifacts)?;
+    let rt = backend_for_dir(args, &cfg.artifacts)?;
     let base = match &cfg.init_from {
         Some(dir) => train::load_params(dir)?,
-        None => experiments::common::init_params(&rt, &cfg.model, cfg.seed as i32)?,
+        None => experiments::common::init_params(rt.as_ref(), &cfg.model, cfg.seed as i32)?,
     };
-    let (b, t) = rt.artifacts.model(&cfg.model)?.default_batch();
+    let (b, t) = rt.artifacts().model(&cfg.model)?.default_batch();
     let tk = Tokenizer;
     println!(
         "train: model={} method={} data={} steps={} ({}x{} per step)",
@@ -195,7 +238,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let corpus = data::pretrain_corpus(cfg.seed, 400_000);
         let mut rng = Rng::seed(cfg.seed ^ 1);
         let calib = data::lm_batch(&tk, &corpus, &mut rng, b, t);
-        trainer = Trainer::new(&rt, &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        trainer = Trainer::new(rt.as_ref(), &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
         for step in 0..cfg.steps {
             let batch = data::lm_batch(&tk, &corpus, &mut rng, b, t);
             let loss = trainer.train_step(&batch)?;
@@ -210,7 +253,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         let examples = data::finetune_examples(&cfg.data, 4000, cfg.seed ^ 2);
         let calib = experiments::common::batch_at(&tk, &examples, 0, b, t);
-        trainer = Trainer::new(&rt, &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        trainer = Trainer::new(rt.as_ref(), &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
         for step in 0..cfg.steps {
             let batch = experiments::common::batch_at(&tk, &examples, step * b, b, t);
             let loss = trainer.train_step(&batch)?;
@@ -231,7 +274,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.opt_bytes() as f64 / 1e6,
     );
     if let Some(dir) = &cfg.save_to {
-        let merged = trainer.merged_params(&rt)?;
+        let merged = trainer.merged_params(rt.as_ref())?;
         train::save_params(dir, &merged)?;
         if !trainer.perms.is_empty() {
             // selection permutations enable later adapter extraction
@@ -254,7 +297,7 @@ fn cmd_adapter(args: &Args) -> Result<()> {
     let sub = args.positional.first().context("adapter subcommand required")?;
     match sub.as_str() {
         "extract" => {
-            let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+            let rt = backend_for(args)?;
             let model = args.get("model").context("--model required")?;
             let method = args.get_or("method", "s2ft");
             let base = train::load_params(args.get("base").context("--base required")?)?;
@@ -262,7 +305,7 @@ fn cmd_adapter(args: &Args) -> Result<()> {
             let ft = train::load_params(ft_dir)?;
             let perms = train::load_params(format!("{ft_dir}/perms"))
                 .context("fine-tuned checkpoint has no perms/ (was it trained with s2ft + --save?)")?;
-            let mm = rt.artifacts.model(model)?;
+            let mm = rt.artifacts().model(model)?;
             let mmeta = mm.method(method)?;
             let adapter = repro::adapter::S2ftAdapter::extract(mm, mmeta, &perms, &base, &ft)?;
             let out = args.get_or("out", "adapter.s2ft");
@@ -310,9 +353,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.get("model").context("--model required")?;
     let weights = args.get("weights").context("--weights required")?;
     let suite_name = args.get_or("suite", "commonsense");
-    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let rt = backend_for(args)?;
     let params = train::load_params(weights)?;
-    let gm = GenModel::new(&rt, model, params)?;
+    let gm = GenModel::new(rt.as_ref(), model, params)?;
     let tasks = data::suite(suite_name).ok_or_else(|| anyhow!("unknown suite {suite_name:?}"))?;
     let (rows, avg) =
         experiments::common::evaluate_suite(&gm, tasks, args.usize_or("n", 32), 0xE7A1)?;

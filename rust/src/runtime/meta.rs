@@ -29,6 +29,18 @@ impl TensorSpec {
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
+
+    /// Bytes per element for this spec's dtype (unknown dtypes default to
+    /// 4 so memory accounting degrades gracefully rather than panicking).
+    pub fn dtype_bytes(&self) -> usize {
+        match self.dtype.as_str() {
+            "f64" | "i64" | "u64" | "float64" | "int64" => 8,
+            "f32" | "i32" | "u32" | "float32" | "int32" => 4,
+            "f16" | "bf16" | "i16" | "u16" | "float16" | "int16" => 2,
+            "i8" | "u8" | "bool" | "pred" | "int8" | "uint8" => 1,
+            _ => 4,
+        }
+    }
 }
 
 /// `[name, shape]` pair (method layout sections).
@@ -75,15 +87,22 @@ pub struct ModelDims {
     pub d_ff: usize,
     pub vocab: usize,
     pub seq_len: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
 }
 
 #[derive(Debug, Clone)]
 pub struct MethodMeta {
     pub method: String,
     pub selection: String,
+    pub select_small: bool,
     pub rank: usize,
     pub lora_alpha: f64,
     pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
     pub s2ft_fractions: HashMap<String, f64>,
     pub trainable: Vec<NamedShape>,
     pub frozen: Vec<NamedShape>,
@@ -157,6 +176,8 @@ fn parse_model(mj: &Json) -> Result<ModelMeta> {
         d_ff: dj.get("d_ff")?.as_usize()?,
         vocab: dj.get("vocab")?.as_usize()?,
         seq_len: dj.get("seq_len")?.as_usize()?,
+        rope_theta: dj.num_or("rope_theta", 10000.0),
+        norm_eps: dj.num_or("norm_eps", 1e-5),
     };
     let mut methods = HashMap::new();
     for (tag, j) in mj.get("methods")?.as_obj()? {
@@ -171,9 +192,17 @@ fn parse_model(mj: &Json) -> Result<ModelMeta> {
             MethodMeta {
                 method: j.str_or("method", tag),
                 selection: j.str_or("selection", "r"),
+                select_small: j
+                    .opt("select_small")
+                    .and_then(|v| v.as_bool().ok())
+                    .unwrap_or(true),
                 rank: j.num_or("rank", 0.0) as usize,
                 lora_alpha: j.num_or("lora_alpha", 0.0),
                 lr: j.num_or("lr", 0.0),
+                beta1: j.num_or("beta1", 0.9),
+                beta2: j.num_or("beta2", 0.999),
+                eps: j.num_or("eps", 1e-8),
+                weight_decay: j.num_or("weight_decay", 0.0),
                 s2ft_fractions: fractions,
                 trainable: parse_shapes(j.opt("trainable"))?,
                 frozen: parse_shapes(j.opt("frozen"))?,

@@ -1,23 +1,46 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Pluggable execution backends behind the [`Executor`] / [`Executable`]
+//! traits.
 //!
-//! The interchange contract with the python build layer (`aot.py`):
-//! HLO *text* files plus `meta.json` describing every artifact's exact
-//! input/output tensor order, shapes and dtypes. This module is the only
-//! place that touches the `xla` crate.
+//! The interchange contract (defined by the python build layer `aot.py`)
+//! is a set of named *artifacts* — `init_M`, `fwd_M_BxT`, `eval_M_BxT`,
+//! `prepare_M_m_BxT`, `train_M_m_BxT`, `merge_M_m` — each with an exact
+//! input/output tensor order recorded in `meta.json`. Two backends honor
+//! that contract:
+//!
+//! * [`NativeBackend`] — a pure-Rust interpreter of the model contract
+//!   (seeded init, LLaMA-style forward/eval, AdamW train step with S²FT
+//!   partial backprop, merge). Hermetic: no Python, no artifacts, no XLA.
+//!   This is the default, and the only backend unit/integration tests need.
+//! * [`Runtime`] (cargo feature `pjrt`) — compiles the AOT HLO-text
+//!   artifacts through the `xla` PJRT crate and executes them. Requires
+//!   `make artifacts` and a real `xla` build (the vendored crate is a
+//!   compile-only stub).
+//!
+//! Everything above this module ([`crate::train`], [`crate::serve`],
+//! [`crate::experiments`]) is backend-agnostic: it sees only
+//! `&dyn Executor` and `Arc<dyn Executable>`.
 
 mod meta;
+pub mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 mod tensor;
 
-pub use meta::{ArtifactMeta, Meta, MethodMeta, ModelMeta, NamedShape, TensorSpec};
+pub use meta::{ArtifactMeta, Meta, MethodMeta, ModelDims, ModelMeta, NamedShape, TensorSpec};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 pub use tensor::{Tensor, TensorData};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-/// Handle to the artifact directory + parsed meta.json (no PJRT needed).
+/// Handle to the parsed meta.json plus (for artifact-backed backends) the
+/// directory the HLO files live in. The native backend synthesizes its
+/// meta in-process and uses a placeholder directory.
 #[derive(Clone)]
 pub struct Artifacts {
     pub dir: PathBuf,
@@ -25,6 +48,7 @@ pub struct Artifacts {
 }
 
 impl Artifacts {
+    /// Open an artifact directory produced by `make artifacts`.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let meta_path = dir.join("meta.json");
@@ -34,133 +58,50 @@ impl Artifacts {
         Ok(Self { dir, meta: Arc::new(meta) })
     }
 
+    /// Wrap an in-memory meta (native backend — no files involved).
+    pub fn from_meta(meta: Meta) -> Self {
+        Self { dir: PathBuf::from("<native>"), meta: Arc::new(meta) }
+    }
+
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
         self.meta
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in meta.json (rebuild artifacts?)"))
+            .ok_or_else(|| anyhow!("artifact {name:?} not in meta (rebuild artifacts?)"))
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
         self.meta
             .models
             .get(name)
-            .ok_or_else(|| anyhow!("model {name:?} not in meta.json"))
+            .ok_or_else(|| anyhow!("model {name:?} not in meta"))
     }
 }
 
-/// PJRT CPU client + compiled-executable cache.
-///
-/// Compilation is lazy and cached per artifact name: experiment harnesses
-/// freely re-request executables without paying XLA compile time twice.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub artifacts: Artifacts,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
+/// One loaded artifact: a callable with a self-describing interface.
+pub trait Executable: Send + Sync {
+    /// Artifact name (`train_tiny_s2ft_2x32`, ...).
+    fn name(&self) -> &str;
 
-impl Runtime {
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let artifacts = Artifacts::open(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Self { client, artifacts, cache: Mutex::new(HashMap::new()) })
-    }
+    /// Interface description: input/output names, shapes, dtypes.
+    fn spec(&self) -> &ArtifactMeta;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by meta.json name.
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.artifacts.artifact(name)?.clone();
-        let path = self.artifacts.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(xerr)
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(xerr)
-            .with_context(|| format!("XLA compile of {name}"))?;
-        let exec = Arc::new(Executable { name: name.to_string(), exe, spec });
-        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
-        Ok(exec)
-    }
-
-    /// Drop a compiled executable (frees XLA memory for big models).
-    pub fn evict(&self, name: &str) {
-        self.cache.lock().unwrap().remove(name);
-    }
-}
-
-fn xerr(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
-
-/// A compiled artifact plus its interface description.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: ArtifactMeta,
-}
-
-impl Executable {
-    /// Execute with positional inputs (must match `spec.inputs` order).
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
-            if t.shape != s.shape {
-                bail!(
-                    "{}: input {:?} shape {:?} != expected {:?}",
-                    self.name, s.name, t.shape, s.shape
-                );
-            }
-        }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
-        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
-        // aot.py lowers with return_tuple=True: single tuple output.
-        let parts = lit.to_tuple().map_err(xerr)?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                self.name,
-                self.spec.outputs.len(),
-                parts.len()
-            );
-        }
-        parts.into_iter().map(Tensor::from_literal).collect()
-    }
+    /// Execute with positional inputs (must match `spec().inputs` order).
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
 
     /// Execute with named inputs pulled from a tensor pool.
-    pub fn run_named(
-        &self,
-        pool: &HashMap<String, Tensor>,
-    ) -> Result<HashMap<String, Tensor>> {
-        let mut args = Vec::with_capacity(self.spec.inputs.len());
-        for s in &self.spec.inputs {
+    fn run_named(&self, pool: &HashMap<String, Tensor>) -> Result<HashMap<String, Tensor>> {
+        let spec = self.spec();
+        let mut args = Vec::with_capacity(spec.inputs.len());
+        for s in &spec.inputs {
             let t = pool
                 .get(&s.name)
-                .ok_or_else(|| anyhow!("{}: missing input {:?}", self.name, s.name))?;
+                .ok_or_else(|| anyhow!("{}: missing input {:?}", self.name(), s.name))?;
             args.push(t.clone());
         }
         let outs = self.run(&args)?;
         Ok(self
-            .spec
+            .spec()
             .outputs
             .iter()
             .map(|s| s.name.clone())
@@ -168,12 +109,142 @@ impl Executable {
             .collect())
     }
 
-    /// Total bytes of all inputs (used for memory accounting in Fig 5).
-    pub fn input_bytes(&self) -> usize {
-        self.spec.inputs.iter().map(|s| s.numel() * 4).sum()
+    /// Total bytes of all inputs at their declared dtypes (Fig 5 memory
+    /// accounting).
+    fn input_bytes(&self) -> usize {
+        self.spec().inputs.iter().map(|s| s.numel() * s.dtype_bytes()).sum()
     }
 
-    pub fn output_bytes(&self) -> usize {
-        self.spec.outputs.iter().map(|s| s.numel() * 4).sum()
+    fn output_bytes(&self) -> usize {
+        self.spec().outputs.iter().map(|s| s.numel() * s.dtype_bytes()).sum()
+    }
+}
+
+/// Validate positional inputs against a spec (shared by all backends).
+pub fn check_inputs(name: &str, spec: &ArtifactMeta, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+    }
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        if t.shape != s.shape {
+            bail!(
+                "{name}: input {:?} shape {:?} != expected {:?}",
+                s.name, t.shape, s.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// An execution backend: loads executables by artifact name and owns the
+/// compiled/interpreted cache.
+pub trait Executor: Send + Sync {
+    /// The meta the backend serves (models, methods, artifact specs).
+    fn artifacts(&self) -> &Artifacts;
+
+    /// Compile (or fetch from cache) an executable by artifact name.
+    fn load(&self, name: &str) -> Result<Arc<dyn Executable>>;
+
+    /// Drop a cached executable (frees memory for big models).
+    fn evict(&self, name: &str);
+
+    /// Human-readable backend identifier.
+    fn platform(&self) -> String;
+}
+
+/// Open the best available backend for `artifact_dir`:
+///
+/// * with the `pjrt` feature and a `meta.json` present, the PJRT runtime;
+/// * with a `meta.json` but no PJRT, the native interpreter *at the
+///   artifact shapes* (meta-driven);
+/// * otherwise the native interpreter with its builtin model set
+///   (tiny/small/base, mirroring `python/compile/configs.py`).
+pub fn open_backend(artifact_dir: &str) -> Result<Box<dyn Executor>> {
+    let has_meta = Path::new(artifact_dir).join("meta.json").exists();
+    #[cfg(feature = "pjrt")]
+    if has_meta {
+        return Ok(Box::new(Runtime::new(artifact_dir)?));
+    }
+    if has_meta {
+        return Ok(Box::new(NativeBackend::with_artifacts(Artifacts::open(artifact_dir)?)));
+    }
+    Ok(Box::new(NativeBackend::builtin()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy {
+        spec: ArtifactMeta,
+    }
+
+    impl Executable for Dummy {
+        fn name(&self) -> &str {
+            "dummy"
+        }
+        fn spec(&self) -> &ArtifactMeta {
+            &self.spec
+        }
+        fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            check_inputs(self.name(), &self.spec, inputs)?;
+            Ok(vec![Tensor::scalar_f32(0.0)])
+        }
+    }
+
+    fn spec_of(inputs: Vec<(&str, Vec<usize>, &str)>) -> ArtifactMeta {
+        ArtifactMeta {
+            file: String::new(),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, shape, dt)| TensorSpec {
+                    name: n.to_string(),
+                    shape,
+                    dtype: dt.to_string(),
+                })
+                .collect(),
+            outputs: vec![TensorSpec {
+                name: "out".to_string(),
+                shape: vec![],
+                dtype: "f32".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn input_bytes_uses_per_dtype_sizes() {
+        // f32 and i32 are both 4 bytes; f64 is 8; f16/bf16 are 2.
+        let d = Dummy {
+            spec: spec_of(vec![
+                ("a", vec![2, 3], "f32"),
+                ("b", vec![2, 3], "i32"),
+                ("c", vec![5], "f64"),
+                ("d", vec![8], "bf16"),
+            ]),
+        };
+        assert_eq!(d.input_bytes(), 6 * 4 + 6 * 4 + 5 * 8 + 8 * 2);
+        assert_eq!(d.output_bytes(), 4); // scalar f32
+    }
+
+    #[test]
+    fn check_inputs_rejects_arity_and_shape() {
+        let d = Dummy { spec: spec_of(vec![("a", vec![2, 2], "f32")]) };
+        assert!(d.run(&[]).is_err());
+        assert!(d.run(&[Tensor::zeros(vec![3, 2])]).is_err());
+        assert!(d.run(&[Tensor::zeros(vec![2, 2])]).is_ok());
+    }
+
+    #[test]
+    fn run_named_pulls_spec_order_and_names_outputs() {
+        let d = Dummy {
+            spec: spec_of(vec![("a", vec![1], "f32"), ("b", vec![1], "i32")]),
+        };
+        let mut pool = HashMap::new();
+        pool.insert("a".to_string(), Tensor::f32(vec![1], vec![1.0]));
+        pool.insert("b".to_string(), Tensor::i32(vec![1], vec![2]));
+        let out = d.run_named(&pool).unwrap();
+        assert!(out.contains_key("out"));
+        pool.remove("b");
+        assert!(d.run_named(&pool).is_err());
     }
 }

@@ -1,0 +1,246 @@
+//! Builtin model set for the native backend, mirroring
+//! `python/compile/configs.py` (dims, parameter-matched S²FT budgets) and
+//! the layout sections `aot.py` would emit into meta.json — so the rest of
+//! the crate sees an identical self-describing contract whether or not
+//! artifacts exist on disk.
+
+use std::collections::HashMap;
+
+use crate::runtime::meta::{Meta, MethodMeta, ModelDims, ModelMeta, NamedShape};
+use crate::sparsity;
+
+/// The native methods: fullft and s2ft (the paper's method). Other
+/// baselines (lora/dora/spft/lisa/galore) exist only as AOT artifacts.
+pub const NATIVE_METHODS: [&str; 2] = ["fullft", "s2ft"];
+
+/// Builtin meta: tiny/small/base models with fullft + s2ft methods at the
+/// default batch shapes.
+pub fn builtin_meta() -> Meta {
+    let mut models = HashMap::new();
+    for (name, d, l, h, ff, seq, b, t) in [
+        ("tiny", 64, 2, 4, 176, 32, 2, 32),
+        ("small", 256, 4, 8, 704, 64, 8, 64),
+        ("base", 512, 6, 8, 1376, 128, 4, 128),
+    ] {
+        let dims = ModelDims {
+            name: name.to_string(),
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: ff,
+            vocab: 261,
+            seq_len: seq,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        models.insert(name.to_string(), build_model(dims, (b, t)));
+    }
+    // Artifact specs are synthesized on demand by the backend (see
+    // `native::spec_for`), so the artifacts table starts empty.
+    Meta { models, artifacts: HashMap::new() }
+}
+
+fn build_model(dims: ModelDims, batch: (usize, usize)) -> ModelMeta {
+    let base_params = base_shapes(&dims);
+    let param_count: usize = base_params.iter().map(NamedShape::numel).sum();
+    let mut methods = HashMap::new();
+    methods.insert("fullft".to_string(), method_fullft(&base_params));
+    methods.insert("s2ft".to_string(), method_s2ft(&dims, &base_params));
+    ModelMeta { dims, param_count, methods, batches: vec![batch], base_params }
+}
+
+/// Ordered (sorted-name) base parameter layout — python `param_shapes`.
+pub fn base_shapes(dims: &ModelDims) -> Vec<NamedShape> {
+    let (d, k, v) = (dims.d_model, dims.d_ff, dims.vocab);
+    let mut shapes: Vec<NamedShape> = vec![
+        named("embed", vec![v, d]),
+        named("norm_f", vec![d]),
+    ];
+    for i in 0..dims.n_layers {
+        shapes.push(named(&format!("L{i}.wq"), vec![d, d]));
+        shapes.push(named(&format!("L{i}.wk"), vec![d, d]));
+        shapes.push(named(&format!("L{i}.wv"), vec![d, d]));
+        shapes.push(named(&format!("L{i}.wo"), vec![d, d]));
+        shapes.push(named(&format!("L{i}.wu"), vec![d, k]));
+        shapes.push(named(&format!("L{i}.wg"), vec![d, k]));
+        shapes.push(named(&format!("L{i}.wd"), vec![k, d]));
+        shapes.push(named(&format!("L{i}.norm1"), vec![d]));
+        shapes.push(named(&format!("L{i}.norm2"), vec![d]));
+    }
+    shapes.sort_by(|a, b| a.name.cmp(&b.name));
+    shapes
+}
+
+fn named(name: &str, shape: Vec<usize>) -> NamedShape {
+    NamedShape { name: name.to_string(), shape }
+}
+
+fn method_fullft(base: &[NamedShape]) -> MethodMeta {
+    let trainable: Vec<NamedShape> = base.to_vec();
+    MethodMeta {
+        method: "fullft".to_string(),
+        selection: "r".to_string(),
+        select_small: true,
+        rank: 0,
+        lora_alpha: 0.0,
+        lr: 2e-4,
+        beta1: 0.9,
+        beta2: 0.999,
+        eps: 1e-8,
+        weight_decay: 0.0,
+        s2ft_fractions: HashMap::new(),
+        trainable_params: trainable.iter().map(NamedShape::numel).sum(),
+        opt: trainable.clone(),
+        trainable,
+        frozen: vec![],
+        perms: vec![],
+        aux: vec![],
+    }
+}
+
+fn method_s2ft(dims: &ModelDims, base: &[NamedShape]) -> MethodMeta {
+    // Parameter-matched budget (configs.py): fraction f such that S²FT on
+    // (wo, wd) trains about as many params as LoRA rank 16 on (wo, wd).
+    let (d, k, r) = (dims.d_model as f64, dims.d_ff as f64, 16.0);
+    let lora_params = r * (2.0 * d) + r * (k + d);
+    let f = lora_params / (d * d + k * d);
+    let mut fractions = HashMap::new();
+    fractions.insert("wo".to_string(), f);
+    fractions.insert("wd".to_string(), f);
+
+    let counts: HashMap<String, usize> =
+        sparsity::budget_to_counts(&fractions, dims.d_ff, dims.n_heads)
+            .into_iter()
+            .filter(|(_, c)| *c > 0)
+            .collect();
+    let (trainable, frozen, perms) = s2ft_layout(dims, base, &counts);
+    MethodMeta {
+        method: "s2ft".to_string(),
+        selection: "r".to_string(),
+        select_small: true,
+        rank: 0,
+        lora_alpha: 0.0,
+        lr: 1e-3,
+        beta1: 0.9,
+        beta2: 0.999,
+        eps: 1e-8,
+        weight_decay: 0.0,
+        s2ft_fractions: fractions,
+        trainable_params: trainable.iter().map(NamedShape::numel).sum(),
+        opt: trainable.clone(),
+        trainable,
+        frozen,
+        perms,
+        aux: vec![],
+    }
+}
+
+/// Projections whose trainable slice is a row block (axis 0); the rest
+/// split on columns. Mirrors python `model.ROW_SPLIT`.
+pub const ROW_SPLIT: [&str; 2] = ["wo", "wd"];
+pub const MHA_PROJS: [&str; 4] = ["wq", "wk", "wv", "wo"];
+pub const FFN_PROJS: [&str; 3] = ["wu", "wg", "wd"];
+
+pub fn is_row_split(p: &str) -> bool {
+    ROW_SPLIT.contains(&p)
+}
+
+pub fn is_mha(p: &str) -> bool {
+    MHA_PROJS.contains(&p)
+}
+
+/// The s2ft (trainable, frozen, perms) shape sections for a unit-count
+/// budget — python `method_layout`, s2ft arm.
+pub fn s2ft_layout(
+    dims: &ModelDims,
+    base: &[NamedShape],
+    counts: &HashMap<String, usize>,
+) -> (Vec<NamedShape>, Vec<NamedShape>, Vec<NamedShape>) {
+    let hd = dims.d_model / dims.n_heads;
+    let base_shape = |name: &str| -> Vec<usize> {
+        base.iter().find(|s| s.name == name).map(|s| s.shape.clone()).unwrap_or_default()
+    };
+    let mut trn: Vec<NamedShape> = Vec::new();
+    let mut frz: Vec<NamedShape> = base.to_vec();
+    let mut perms: Vec<NamedShape> = Vec::new();
+    let has_mha = counts.keys().any(|p| is_mha(p));
+    let has_ffn = counts.keys().any(|p| !is_mha(p));
+    for i in 0..dims.n_layers {
+        for (p, &c) in counts {
+            let name = format!("L{i}.{p}");
+            let shape = base_shape(&name);
+            let (din, dout) = (shape[0], shape[1]);
+            let rows = if is_mha(p) { c * hd } else { c };
+            frz.retain(|s| s.name != name);
+            if is_row_split(p) {
+                trn.push(named(&format!("{name}_t"), vec![rows, dout]));
+                frz.push(named(&format!("{name}_f"), vec![din - rows, dout]));
+            } else {
+                trn.push(named(&format!("{name}_t"), vec![din, rows]));
+                frz.push(named(&format!("{name}_f"), vec![din, dout - rows]));
+            }
+        }
+        if has_mha {
+            perms.push(named(&format!("L{i}.head_perm"), vec![dims.n_heads]));
+        }
+        if has_ffn {
+            perms.push(named(&format!("L{i}.chan_perm"), vec![dims.d_ff]));
+        }
+    }
+    trn.sort_by(|a, b| a.name.cmp(&b.name));
+    frz.sort_by(|a, b| a.name.cmp(&b.name));
+    perms.sort_by(|a, b| a.name.cmp(&b.name));
+    (trn, frz, perms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_models_well_formed() {
+        let meta = builtin_meta();
+        for name in ["tiny", "small", "base"] {
+            let mm = &meta.models[name];
+            assert_eq!(mm.dims.d_model % mm.dims.n_heads, 0, "{name}");
+            assert_eq!(
+                mm.param_count,
+                mm.base_params.iter().map(NamedShape::numel).sum::<usize>()
+            );
+            for tag in NATIVE_METHODS {
+                let m = &mm.methods[tag];
+                assert!(m.trainable_params > 0, "{name}/{tag}");
+                assert_eq!(m.opt.len(), m.trainable.len());
+            }
+        }
+    }
+
+    #[test]
+    fn s2ft_budget_is_parameter_matched() {
+        let meta = builtin_meta();
+        let mm = &meta.models["small"];
+        let s2ft = &mm.methods["s2ft"];
+        let lora_params = {
+            let (d, k, r) = (mm.dims.d_model, mm.dims.d_ff, 16);
+            mm.dims.n_layers * (r * 2 * d + r * (k + d))
+        };
+        let ratio = s2ft.trainable_params as f64 / lora_params as f64;
+        assert!((0.5..2.0).contains(&ratio), "budget mismatch: {ratio}");
+        // trainable + frozen partitions the wo/wd projections exactly
+        let d = mm.dims.d_model;
+        for i in 0..mm.dims.n_layers {
+            let t = s2ft
+                .trainable
+                .iter()
+                .find(|s| s.name == format!("L{i}.wo_t"))
+                .unwrap();
+            let f = s2ft
+                .frozen
+                .iter()
+                .find(|s| s.name == format!("L{i}.wo_f"))
+                .unwrap();
+            assert_eq!(t.shape[0] + f.shape[0], d);
+            assert_eq!(t.shape[0] % mm.head_dim(), 0, "wo split must be head-aligned");
+        }
+    }
+}

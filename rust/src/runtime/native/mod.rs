@@ -1,0 +1,386 @@
+//! Native backend: a pure-Rust interpreter of the artifact contract.
+//!
+//! Instead of compiling AOT HLO, [`NativeBackend`] recognizes artifact
+//! *names* (`init_M`, `fwd_M_BxT`, `eval_M_BxT`, `prepare_M_m_BxT`,
+//! `train_M_m_BxT`, `merge_M_m`) and executes the corresponding model
+//! semantics directly on [`Tensor`]s: seeded init, LLaMA-style
+//! forward/eval, an AdamW train step with S²FT partial backprop (only the
+//! trainable-first rows/columns get weight gradients), and the
+//! method-layout merge. Supported methods: `fullft` and `s2ft` (selection
+//! strategies R and W); the remaining baselines exist only as AOT
+//! artifacts under the `pjrt` feature.
+//!
+//! Specs are synthesized on demand from the model/method layout sections,
+//! so any (batch, seq) shape works — there is no artifact enumeration
+//! step and no files on disk.
+
+pub mod builtin;
+mod model;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::meta::{ArtifactMeta, Meta, MethodMeta, ModelMeta, TensorSpec};
+use super::{check_inputs, Artifacts, Executable, Executor, Tensor};
+
+/// Pure-Rust execution backend (hermetic: no Python, no XLA, no files).
+pub struct NativeBackend {
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<String, Arc<dyn Executable>>>,
+}
+
+impl NativeBackend {
+    /// Backend over the builtin model set (tiny/small/base).
+    pub fn builtin() -> Self {
+        Self::with_artifacts(Artifacts::from_meta(builtin::builtin_meta()))
+    }
+
+    /// Backend over an explicit meta (e.g. parsed from an artifact
+    /// directory's meta.json — the native interpreter then runs at the
+    /// exact AOT shapes).
+    pub fn with_artifacts(artifacts: Artifacts) -> Self {
+        Self { artifacts, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Backend over a custom in-memory meta.
+    pub fn with_meta(meta: Meta) -> Self {
+        Self::with_artifacts(Artifacts::from_meta(meta))
+    }
+}
+
+impl Executor for NativeBackend {
+    fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<dyn Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let kind = Kind::parse(name)
+            .with_context(|| format!("native backend cannot interpret artifact {name:?}"))?;
+        let spec = spec_for(&self.artifacts, name, &kind)?;
+        let exec: Arc<dyn Executable> = Arc::new(NativeExecutable {
+            name: name.to_string(),
+            spec,
+            kind,
+            meta: self.artifacts.meta.clone(),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+}
+
+/// The artifact families the native interpreter understands.
+#[derive(Debug, Clone)]
+enum Kind {
+    Init { model: String },
+    Fwd { model: String, b: usize, t: usize },
+    Eval { model: String, b: usize, t: usize },
+    Prepare { model: String, method: String, b: usize, t: usize },
+    Train { model: String, method: String, b: usize, t: usize },
+    Merge { model: String, method: String },
+}
+
+fn parse_bt(s: &str) -> Option<(usize, usize)> {
+    let (b, t) = s.split_once('x')?;
+    Some((b.parse().ok()?, t.parse().ok()?))
+}
+
+impl Kind {
+    fn parse(name: &str) -> Result<Kind> {
+        let parts: Vec<&str> = name.split('_').collect();
+        let kind = match parts.as_slice() {
+            ["init", m] => Kind::Init { model: m.to_string() },
+            ["fwd", m, bt] => {
+                let (b, t) = parse_bt(bt).context("bad BxT suffix")?;
+                Kind::Fwd { model: m.to_string(), b, t }
+            }
+            ["eval", m, bt] => {
+                let (b, t) = parse_bt(bt).context("bad BxT suffix")?;
+                Kind::Eval { model: m.to_string(), b, t }
+            }
+            ["prepare", m, meth, bt] => {
+                let (b, t) = parse_bt(bt).context("bad BxT suffix")?;
+                Kind::Prepare { model: m.to_string(), method: meth.to_string(), b, t }
+            }
+            ["train", m, meth, bt] => {
+                let (b, t) = parse_bt(bt).context("bad BxT suffix")?;
+                Kind::Train { model: m.to_string(), method: meth.to_string(), b, t }
+            }
+            ["merge", m, meth] => {
+                Kind::Merge { model: m.to_string(), method: meth.to_string() }
+            }
+            _ => bail!("unrecognized artifact name shape"),
+        };
+        Ok(kind)
+    }
+
+    fn model(&self) -> &str {
+        match self {
+            Kind::Init { model }
+            | Kind::Fwd { model, .. }
+            | Kind::Eval { model, .. }
+            | Kind::Prepare { model, .. }
+            | Kind::Train { model, .. }
+            | Kind::Merge { model, .. } => model,
+        }
+    }
+
+    fn method(&self) -> Option<&str> {
+        match self {
+            Kind::Prepare { method, .. }
+            | Kind::Train { method, .. }
+            | Kind::Merge { method, .. } => Some(method),
+            _ => None,
+        }
+    }
+}
+
+/// Check this method is natively executable and fetch its meta.
+fn native_method<'m>(mm: &'m ModelMeta, tag: &str) -> Result<&'m MethodMeta> {
+    let method = mm.method(tag)?;
+    match method.method.as_str() {
+        "fullft" => Ok(method),
+        "s2ft" => {
+            if !matches!(method.selection.as_str(), "r" | "w") {
+                bail!(
+                    "native backend supports s2ft selection strategies R and W \
+                     (got {:?}); use the pjrt backend for A/S/G",
+                    method.selection
+                );
+            }
+            Ok(method)
+        }
+        other => bail!(
+            "method {other:?} is only available through AOT artifacts \
+             (--features pjrt); the native backend implements fullft and s2ft"
+        ),
+    }
+}
+
+/// Resolve an artifact spec: prefer an explicit meta.json entry, else
+/// synthesize one from the model/method layout sections.
+fn spec_for(artifacts: &Artifacts, name: &str, kind: &Kind) -> Result<ArtifactMeta> {
+    if let Ok(spec) = artifacts.artifact(name) {
+        return Ok(spec.clone());
+    }
+    let mm = artifacts.model(kind.model())?;
+    if let Some(tag) = kind.method() {
+        native_method(mm, tag)?;
+    }
+    Ok(synthesize_spec(mm, kind))
+}
+
+fn ts(name: &str, shape: Vec<usize>, dtype: &str) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape, dtype: dtype.to_string() }
+}
+
+fn section(shapes: &[super::NamedShape], dtype: &str) -> Vec<TensorSpec> {
+    shapes.iter().map(|s| ts(&s.name, s.shape.clone(), dtype)).collect()
+}
+
+fn batch_specs(b: usize, t: usize) -> Vec<TensorSpec> {
+    vec![
+        ts("tokens", vec![b, t], "i32"),
+        ts("targets", vec![b, t], "i32"),
+        ts("loss_mask", vec![b, t], "f32"),
+    ]
+}
+
+/// Build the interface description `aot.py` would have recorded for this
+/// artifact (names, shapes, dtypes, exact ordering).
+fn synthesize_spec(mm: &ModelMeta, kind: &Kind) -> ArtifactMeta {
+    let base = section(&mm.base_params, "f32");
+    let (inputs, outputs) = match kind {
+        Kind::Init { .. } => (vec![ts("seed", vec![], "i32")], base),
+        Kind::Fwd { b, t, .. } => {
+            let mut inputs = base;
+            inputs.push(ts("tokens", vec![*b, *t], "i32"));
+            (inputs, vec![ts("logits", vec![*b, *t, mm.dims.vocab], "f32")])
+        }
+        Kind::Eval { b, t, .. } => {
+            let mut inputs = base;
+            inputs.extend(batch_specs(*b, *t));
+            (inputs, vec![ts("loss", vec![], "f32"), ts("ncorrect", vec![], "f32")])
+        }
+        Kind::Prepare { method, b, t, .. } => {
+            let m = &mm.methods[method.as_str()];
+            let mut inputs = base;
+            inputs.push(ts("seed", vec![], "i32"));
+            inputs.extend(batch_specs(*b, *t));
+            let mut outputs = section(&m.trainable, "f32");
+            outputs.extend(section(&m.frozen, "f32"));
+            outputs.extend(section(&m.perms, "i32"));
+            (inputs, outputs)
+        }
+        Kind::Train { method, b, t, .. } => {
+            let m = &mm.methods[method.as_str()];
+            let mut inputs = section(&m.trainable, "f32");
+            inputs.extend(section(&m.frozen, "f32"));
+            for o in &m.opt {
+                inputs.push(ts(&format!("m.{}", o.name), o.shape.clone(), "f32"));
+            }
+            for o in &m.opt {
+                inputs.push(ts(&format!("v.{}", o.name), o.shape.clone(), "f32"));
+            }
+            inputs.push(ts("step", vec![], "f32"));
+            inputs.extend(batch_specs(*b, *t));
+            inputs.extend(section(&m.aux, "f32"));
+            let mut outputs = Vec::new();
+            for s in &m.trainable {
+                outputs.push(ts(&format!("new.{}", s.name), s.shape.clone(), "f32"));
+            }
+            for o in &m.opt {
+                outputs.push(ts(&format!("new_m.{}", o.name), o.shape.clone(), "f32"));
+            }
+            for o in &m.opt {
+                outputs.push(ts(&format!("new_v.{}", o.name), o.shape.clone(), "f32"));
+            }
+            outputs.push(ts("loss", vec![], "f32"));
+            (inputs, outputs)
+        }
+        Kind::Merge { method, .. } => {
+            let m = &mm.methods[method.as_str()];
+            let mut inputs = section(&m.trainable, "f32");
+            inputs.extend(section(&m.frozen, "f32"));
+            inputs.extend(section(&m.perms, "i32"));
+            (inputs, base)
+        }
+    };
+    ArtifactMeta { file: "<native>".to_string(), inputs, outputs }
+}
+
+/// One interpreted artifact.
+struct NativeExecutable {
+    name: String,
+    spec: ArtifactMeta,
+    kind: Kind,
+    meta: Arc<Meta>,
+}
+
+impl Executable for NativeExecutable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &ArtifactMeta {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        check_inputs(&self.name, &self.spec, inputs)?;
+        let named: HashMap<&str, &Tensor> = self
+            .spec
+            .inputs
+            .iter()
+            .map(|s| s.name.as_str())
+            .zip(inputs)
+            .collect();
+        let mm = self
+            .meta
+            .models
+            .get(self.kind.model())
+            .ok_or_else(|| anyhow!("model {:?} disappeared from meta", self.kind.model()))?;
+        let mut out = match &self.kind {
+            Kind::Init { .. } => {
+                let seed = named["seed"].as_i32()?[0];
+                model::init_params(mm, seed)
+            }
+            Kind::Fwd { b, t, .. } => {
+                let logits = model::forward_logits(mm, &named, named["tokens"], *b, *t)?;
+                HashMap::from([("logits".to_string(), logits)])
+            }
+            Kind::Eval { b, t, .. } => {
+                let (loss, ncorrect) = model::eval_batch(mm, &named, *b, *t)?;
+                HashMap::from([
+                    ("loss".to_string(), Tensor::scalar_f32(loss)),
+                    ("ncorrect".to_string(), Tensor::scalar_f32(ncorrect)),
+                ])
+            }
+            Kind::Prepare { method, .. } => {
+                let meth = native_method(mm, method)?;
+                model::prepare(mm, meth, &named)?
+            }
+            Kind::Train { method, b, t, .. } => {
+                let meth = native_method(mm, method)?;
+                model::train_step(mm, meth, &named, *b, *t)?
+            }
+            Kind::Merge { method, .. } => {
+                let meth = native_method(mm, method)?;
+                model::merge(mm, meth, &named)?
+            }
+        };
+        self.spec
+            .outputs
+            .iter()
+            .map(|s| {
+                out.remove(&s.name)
+                    .ok_or_else(|| anyhow!("{}: missing output {:?}", self.name, s.name))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert!(matches!(Kind::parse("init_tiny"), Ok(Kind::Init { .. })));
+        let k = Kind::parse("train_tiny_s2ft-pallas_2x32").unwrap();
+        match k {
+            Kind::Train { ref model, ref method, b, t } => {
+                assert_eq!(model, "tiny");
+                assert_eq!(method, "s2ft-pallas");
+                assert_eq!((b, t), (2, 32));
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        assert!(Kind::parse("bogus").is_err());
+        assert!(Kind::parse("fwd_tiny_2y32").is_err());
+    }
+
+    #[test]
+    fn load_caches_and_evicts() {
+        let be = NativeBackend::builtin();
+        let a = be.load("init_tiny").unwrap();
+        let b = be.load("init_tiny").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        be.evict("init_tiny");
+        let c = be.load("init_tiny").unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn unsupported_method_is_rejected_with_hint() {
+        let be = NativeBackend::builtin();
+        let err = be.load("train_tiny_lora_2x32").unwrap_err();
+        assert!(format!("{err:#}").contains("method"), "{err:#}");
+    }
+
+    #[test]
+    fn synthesized_train_spec_orders_sections() {
+        let be = NativeBackend::builtin();
+        let exe = be.load("train_tiny_s2ft_2x32").unwrap();
+        let spec = exe.spec();
+        let names: Vec<&str> = spec.inputs.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"L0.wo_t"));
+        assert!(names.contains(&"m.L0.wd_t"));
+        assert!(names.contains(&"step"));
+        let out_names: Vec<&str> = spec.outputs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(*out_names.last().unwrap(), "loss");
+        assert!(out_names.contains(&"new.L1.wo_t"));
+    }
+}

@@ -1,0 +1,1153 @@
+//! Native numerics: the LLaMA-style model semantics interpreted directly
+//! on host tensors — seeded init, cached forward, masked cross-entropy,
+//! manual backprop with S²FT *partial* weight gradients (paper §3.3: the
+//! activation is sliced before the dW GEMM, so frozen rows never get a
+//! gradient, let alone an update), AdamW, and the method-layout
+//! prepare/merge co-permutations (paper §3.1–3.2).
+//!
+//! Conventions match `python/compile/model.py` exactly: `y = x @ W` with
+//! `W: (d_in, d_out)`; FFN channel `c` is column `c` of wu/wg and row `c`
+//! of wd; MHA head `h` is column block `h` of wq/wk/wv and row block `h`
+//! of wo; trainable-first co-permutation puts selected units first.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::meta::{MethodMeta, ModelMeta};
+use crate::runtime::Tensor;
+use crate::sparsity;
+use crate::util::rng::Rng;
+
+use super::builtin::{is_mha, is_row_split, FFN_PROJS, MHA_PROJS};
+
+type Named<'a> = HashMap<&'a str, &'a Tensor>;
+type WeightMap<'a> = HashMap<String, &'a [f32]>;
+
+fn get<'a>(named: &Named<'a>, name: &str) -> Result<&'a Tensor> {
+    named
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("native: missing input {name:?}"))
+}
+
+fn getf<'a>(named: &Named<'a>, name: &str) -> Result<&'a [f32]> {
+    get(named, name)?.as_f32()
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Init
+// ---------------------------------------------------------------------------
+
+/// Seeded scaled-gaussian init (GPT-2 style; residual projections wo/wd
+/// down-scaled by 1/sqrt(2L); norms start at one). Deterministic per
+/// (seed, tensor name).
+pub fn init_params(mm: &ModelMeta, seed: i32) -> HashMap<String, Tensor> {
+    let resid_scale = 1.0 / ((2 * mm.dims.n_layers) as f32).sqrt();
+    let root = Rng::seed(seed as u32 as u64 ^ 0x51F7_0000);
+    let mut out = HashMap::new();
+    for s in &mm.base_params {
+        let n = s.numel();
+        let data = if s.name.ends_with("norm1")
+            || s.name.ends_with("norm2")
+            || s.name.ends_with("norm_f")
+        {
+            vec![1.0f32; n]
+        } else {
+            let mut rng = root.fold(fxhash(&s.name));
+            let mut std = 0.02f32;
+            if s.name.ends_with(".wo") || s.name.ends_with(".wd") {
+                std *= resid_scale;
+            }
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        };
+        out.insert(s.name.clone(), Tensor::f32(s.shape.clone(), data));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels
+// ---------------------------------------------------------------------------
+
+/// `a (m,k) @ b (k,n)` — ikj loop order.
+fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a (m,k) @ bᵀ` with `b (n,k)` — row-dot products.
+fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            *o = s;
+        }
+    }
+    out
+}
+
+/// `a[:, :lim]ᵀ @ b` with `a (rows, ka)`, `b (rows, kb)` → `(lim, kb)`.
+///
+/// This is the S²FT partial-backprop kernel: with `lim < ka` only the
+/// trainable slice of the weight gradient is ever materialized.
+fn gemm_tn(a: &[f32], b: &[f32], rows: usize, ka: usize, kb: usize, lim: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; lim * kb];
+    for r in 0..rows {
+        let arow = &a[r * ka..r * ka + lim];
+        let brow = &b[r * kb..(r + 1) * kb];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * kb..(i + 1) * kb];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ @ b[:, :lim]` with `a (rows, ka)`, `b (rows, kb)` → `(ka, lim)` —
+/// the column-split partial gradient (trainable head/channel columns).
+fn gemm_tn_outcols(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; ka * lim];
+    for r in 0..rows {
+        let arow = &a[r * ka..(r + 1) * ka];
+        let brow = &b[r * kb..r * kb + lim];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * lim..(i + 1) * lim];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm / RoPE / SiLU
+// ---------------------------------------------------------------------------
+
+/// y = g ⊙ x · rsqrt(mean(x²)+eps); returns (y, inv_rms per row).
+fn rms_norm_fwd(x: &[f32], g: &[f32], n: usize, d: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; n * d];
+    let mut inv = vec![0.0f32; n];
+    for i in 0..n {
+        let xr = &x[i * d..(i + 1) * d];
+        let var = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + eps).sqrt();
+        inv[i] = r;
+        let yr = &mut y[i * d..(i + 1) * d];
+        for j in 0..d {
+            yr[j] = g[j] * xr[j] * r;
+        }
+    }
+    (y, inv)
+}
+
+/// dx for rms_norm; accumulates dg into `dg` when provided (full FT).
+fn rms_norm_bwd(
+    x: &[f32],
+    g: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    n: usize,
+    d: usize,
+    mut dg: Option<&mut [f32]>,
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; n * d];
+    for i in 0..n {
+        let xr = &x[i * d..(i + 1) * d];
+        let dyr = &dy[i * d..(i + 1) * d];
+        let r = inv[i];
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += dyr[j] * g[j] * xr[j];
+        }
+        let coef = r * r * r * dot / d as f32;
+        let dxr = &mut dx[i * d..(i + 1) * d];
+        for j in 0..d {
+            dxr[j] = g[j] * dyr[j] * r - xr[j] * coef;
+        }
+        if let Some(dg) = dg.as_deref_mut() {
+            for j in 0..d {
+                dg[j] += dyr[j] * xr[j] * r;
+            }
+        }
+    }
+    dx
+}
+
+/// cos/sin tables, each (t, hd/2): angle = pos · theta^(−2j/hd).
+fn rope_tables(t: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = hd / 2;
+    let mut cos = vec![0.0f32; t * half];
+    let mut sin = vec![0.0f32; t * half];
+    for pos in 0..t {
+        for j in 0..half {
+            let freq = theta.powf(-((2 * j) as f64) / hd as f64);
+            let ang = pos as f64 * freq;
+            cos[pos * half + j] = ang.cos() as f32;
+            sin[pos * half + j] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate (even, odd) pairs per head in place; `inverse` applies the
+/// transpose rotation (the exact backward of RoPE).
+#[allow(clippy::too_many_arguments)]
+fn apply_rope(
+    x: &mut [f32],
+    b: usize,
+    t: usize,
+    heads: usize,
+    hd: usize,
+    cos: &[f32],
+    sin: &[f32],
+    inverse: bool,
+) {
+    let half = hd / 2;
+    let d = heads * hd;
+    for bi in 0..b {
+        for tt in 0..t {
+            let base = (bi * t + tt) * d;
+            for hh in 0..heads {
+                let off = base + hh * hd;
+                for j in 0..half {
+                    let c = cos[tt * half + j];
+                    let s = if inverse {
+                        -sin[tt * half + j]
+                    } else {
+                        sin[tt * half + j]
+                    };
+                    let x1 = x[off + 2 * j];
+                    let x2 = x[off + 2 * j + 1];
+                    x[off + 2 * j] = x1 * c - x2 * s;
+                    x[off + 2 * j + 1] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Forward (cached)
+// ---------------------------------------------------------------------------
+
+struct LayerCache {
+    h_in: Vec<f32>,
+    inv1: Vec<f32>,
+    x1: Vec<f32>,
+    qr: Vec<f32>,
+    kr: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>, // (b, heads, t, t)
+    attn: Vec<f32>,  // concatenated head outputs (N, d), pre-wo
+    h_mid: Vec<f32>,
+    inv2: Vec<f32>,
+    x2: Vec<f32>,
+    u: Vec<f32>,
+    g: Vec<f32>,
+    act: Vec<f32>,
+}
+
+struct Cache {
+    layers: Vec<LayerCache>,
+    h_final: Vec<f32>,
+    invf: Vec<f32>,
+    xf: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn weight<'a>(w: &WeightMap<'a>, name: &str) -> Result<&'a [f32]> {
+    w.get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("native: missing weight {name:?}"))
+}
+
+/// Full cached forward pass in (possibly permuted) base layout.
+fn forward(mm: &ModelMeta, w: &WeightMap, tokens: &[i32], b: usize, t: usize) -> Result<Cache> {
+    let d = mm.dims.d_model;
+    let heads = mm.dims.n_heads;
+    let hd = d / heads;
+    let ff = mm.dims.d_ff;
+    let vocab = mm.dims.vocab;
+    let eps = mm.dims.norm_eps as f32;
+    let n = b * t;
+    if tokens.len() != n {
+        bail!("native: tokens length {} != {b}x{t}", tokens.len());
+    }
+
+    let embed = weight(w, "embed")?;
+    let mut h = vec![0.0f32; n * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= vocab {
+            bail!("native: token id {tok} out of vocab {vocab}");
+        }
+        h[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    let (cos, sin) = rope_tables(t, hd, mm.dims.rope_theta);
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut layers = Vec::with_capacity(mm.dims.n_layers);
+    for i in 0..mm.dims.n_layers {
+        let h_in = h;
+        let (x1, inv1) =
+            rms_norm_fwd(&h_in, weight(w, &format!("L{i}.norm1"))?, n, d, eps);
+        let mut qr = gemm(&x1, weight(w, &format!("L{i}.wq"))?, n, d, d);
+        let mut kr = gemm(&x1, weight(w, &format!("L{i}.wk"))?, n, d, d);
+        let v = gemm(&x1, weight(w, &format!("L{i}.wv"))?, n, d, d);
+        apply_rope(&mut qr, b, t, heads, hd, &cos, &sin, false);
+        apply_rope(&mut kr, b, t, heads, hd, &cos, &sin, false);
+
+        let mut probs = vec![0.0f32; b * heads * t * t];
+        let mut attn = vec![0.0f32; n * d];
+        for bi in 0..b {
+            for hh in 0..heads {
+                for tq in 0..t {
+                    let qoff = (bi * t + tq) * d + hh * hd;
+                    let prow =
+                        &mut probs[((bi * heads + hh) * t + tq) * t..][..t];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (tk, p) in prow.iter_mut().enumerate().take(tq + 1) {
+                        let koff = (bi * t + tk) * d + hh * hd;
+                        let mut s = 0.0f32;
+                        for j in 0..hd {
+                            s += qr[qoff + j] * kr[koff + j];
+                        }
+                        let s = s * scale;
+                        *p = s;
+                        if s > maxv {
+                            maxv = s;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    for p in prow.iter_mut().take(tq + 1) {
+                        *p = (*p - maxv).exp();
+                        denom += *p;
+                    }
+                    for p in prow.iter_mut().take(tq + 1) {
+                        *p /= denom;
+                    }
+                    let aoff = (bi * t + tq) * d + hh * hd;
+                    for tk in 0..=tq {
+                        let p = prow[tk];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let voff = (bi * t + tk) * d + hh * hd;
+                        for j in 0..hd {
+                            attn[aoff + j] += p * v[voff + j];
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut h_mid = h_in.clone();
+        add_assign(&mut h_mid, &gemm(&attn, weight(w, &format!("L{i}.wo"))?, n, d, d));
+        let (x2, inv2) =
+            rms_norm_fwd(&h_mid, weight(w, &format!("L{i}.norm2"))?, n, d, eps);
+        let u = gemm(&x2, weight(w, &format!("L{i}.wu"))?, n, d, ff);
+        let g = gemm(&x2, weight(w, &format!("L{i}.wg"))?, n, d, ff);
+        let mut act = vec![0.0f32; n * ff];
+        for j in 0..n * ff {
+            act[j] = u[j] * g[j] * sigmoid(g[j]);
+        }
+        let mut h_out = h_mid.clone();
+        add_assign(&mut h_out, &gemm(&act, weight(w, &format!("L{i}.wd"))?, n, ff, d));
+
+        layers.push(LayerCache {
+            h_in,
+            inv1,
+            x1,
+            qr,
+            kr,
+            v,
+            probs,
+            attn,
+            h_mid,
+            inv2,
+            x2,
+            u,
+            g,
+            act,
+        });
+        h = h_out;
+    }
+
+    let (xf, invf) = rms_norm_fwd(&h, weight(w, "norm_f")?, n, d, eps);
+    let logits = gemm_nt(&xf, embed, n, d, vocab);
+    Ok(Cache { layers, h_final: h, invf, xf, logits })
+}
+
+/// Masked mean cross-entropy + (optionally) dlogits, + masked ncorrect.
+fn loss_ncorrect_grad(
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    n: usize,
+    vocab: usize,
+    want_grad: bool,
+) -> (f32, f32, Option<Vec<f32>>) {
+    let msum: f32 = mask.iter().sum();
+    let m = msum.max(1.0);
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0.0f32;
+    let mut dlogits = if want_grad {
+        Some(vec![0.0f32; n * vocab])
+    } else {
+        None
+    };
+    for i in 0..n {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let tgt = targets[i] as usize;
+        let mut maxv = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > maxv {
+                maxv = x;
+                arg = j;
+            }
+        }
+        if arg == tgt {
+            ncorrect += mask[i];
+        }
+        if mask[i] == 0.0 && dlogits.is_none() {
+            continue;
+        }
+        let lse: f32 = maxv + row.iter().map(|&x| (x - maxv).exp()).sum::<f32>().ln();
+        if mask[i] > 0.0 {
+            loss += (mask[i] * (lse - row[tgt])) as f64;
+        }
+        if let Some(dl) = dlogits.as_deref_mut() {
+            if mask[i] > 0.0 {
+                let coef = mask[i] / m;
+                let drow = &mut dl[i * vocab..(i + 1) * vocab];
+                for (j, &x) in row.iter().enumerate() {
+                    drow[j] = coef * (x - lse).exp();
+                }
+                drow[tgt] -= coef;
+            }
+        }
+    }
+    ((loss / m as f64) as f32, ncorrect, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points: fwd / eval
+// ---------------------------------------------------------------------------
+
+fn base_weight_map<'a>(mm: &ModelMeta, named: &Named<'a>) -> Result<WeightMap<'a>> {
+    let mut w = WeightMap::new();
+    for s in &mm.base_params {
+        w.insert(s.name.clone(), getf(named, &s.name)?);
+    }
+    Ok(w)
+}
+
+pub fn forward_logits(
+    mm: &ModelMeta,
+    named: &Named,
+    tokens: &Tensor,
+    b: usize,
+    t: usize,
+) -> Result<Tensor> {
+    let w = base_weight_map(mm, named)?;
+    let cache = forward(mm, &w, tokens.as_i32()?, b, t)?;
+    Ok(Tensor::f32(vec![b, t, mm.dims.vocab], cache.logits))
+}
+
+pub fn eval_batch(mm: &ModelMeta, named: &Named, b: usize, t: usize) -> Result<(f32, f32)> {
+    let w = base_weight_map(mm, named)?;
+    let tokens = get(named, "tokens")?.as_i32()?;
+    let targets = get(named, "targets")?.as_i32()?;
+    let mask = getf(named, "loss_mask")?;
+    let cache = forward(mm, &w, tokens, b, t)?;
+    let (loss, ncorrect, _) =
+        loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, false);
+    Ok((loss, ncorrect))
+}
+
+// ---------------------------------------------------------------------------
+// Gradient plan + backward
+// ---------------------------------------------------------------------------
+
+/// Which weight gradients to materialize.
+struct GradPlan {
+    /// full fine-tuning: every base tensor (incl. embed + norms)
+    full: bool,
+    /// s2ft: per layer, projection short-name -> trainable elements
+    /// (rows for wo/wd, columns for the rest); absent = frozen.
+    sel: Vec<HashMap<String, usize>>,
+}
+
+impl GradPlan {
+    fn from_method(mm: &ModelMeta, meth: &MethodMeta) -> GradPlan {
+        if meth.method == "fullft" {
+            return GradPlan { full: true, sel: vec![] };
+        }
+        let mut sel = vec![HashMap::new(); mm.dims.n_layers];
+        for s in &meth.trainable {
+            // names look like "L{i}.{proj}_t"
+            if let Some(rest) = s.name.strip_prefix('L') {
+                if let Some((idx, tail)) = rest.split_once('.') {
+                    if let (Ok(i), Some(proj)) =
+                        (idx.parse::<usize>(), tail.strip_suffix("_t"))
+                    {
+                        let units = if is_row_split(proj) { s.shape[0] } else { s.shape[1] };
+                        sel[i].insert(proj.to_string(), units);
+                    }
+                }
+            }
+        }
+        GradPlan { full: false, sel }
+    }
+
+    fn units(&self, layer: usize, proj: &str) -> usize {
+        if self.full {
+            usize::MAX
+        } else {
+            self.sel.get(layer).and_then(|m| m.get(proj)).copied().unwrap_or(0)
+        }
+    }
+}
+
+/// Backward pass. Returns gradients keyed by *trainable tensor name*:
+/// base names under full FT, `L{i}.{p}_t` slices under S²FT.
+#[allow(clippy::too_many_arguments)]
+fn backward(
+    mm: &ModelMeta,
+    w: &WeightMap,
+    cache: &Cache,
+    dlogits: &[f32],
+    tokens: &[i32],
+    plan: &GradPlan,
+    b: usize,
+    t: usize,
+) -> Result<HashMap<String, Vec<f32>>> {
+    let d = mm.dims.d_model;
+    let heads = mm.dims.n_heads;
+    let hd = d / heads;
+    let ff = mm.dims.d_ff;
+    let vocab = mm.dims.vocab;
+    let n = b * t;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let (cos, sin) = rope_tables(t, hd, mm.dims.rope_theta);
+    let embed = weight(w, "embed")?;
+
+    let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
+
+    // logits = xf @ embedᵀ (tied embedding)
+    let dxf = gemm(dlogits, embed, n, vocab, d);
+    if plan.full {
+        grads.insert("embed".to_string(), gemm_tn(dlogits, &cache.xf, n, vocab, d, vocab));
+    }
+    let mut dgf = plan.full.then(|| vec![0.0f32; d]);
+    let mut dh = rms_norm_bwd(
+        &cache.h_final,
+        weight(w, "norm_f")?,
+        &cache.invf,
+        &dxf,
+        n,
+        d,
+        dgf.as_deref_mut(),
+    );
+    if let Some(dgf) = dgf {
+        grads.insert("norm_f".to_string(), dgf);
+    }
+
+    for i in (0..mm.dims.n_layers).rev() {
+        let lc = &cache.layers[i];
+
+        // ---- FFN: h_out = h_mid + act @ wd -------------------------------
+        let dffn = &dh; // gradient wrt (act @ wd)
+        let wd_units = plan.units(i, "wd");
+        if plan.full {
+            grads.insert(format!("L{i}.wd"), gemm_tn(&lc.act, dffn, n, ff, d, ff));
+        } else if wd_units > 0 {
+            // partial backprop: slice activation channels BEFORE the GEMM
+            grads.insert(
+                format!("L{i}.wd_t"),
+                gemm_tn(&lc.act, dffn, n, ff, d, wd_units),
+            );
+        }
+        let dact = gemm_nt(dffn, weight(w, &format!("L{i}.wd"))?, n, d, ff);
+        let mut du = vec![0.0f32; n * ff];
+        let mut dgpre = vec![0.0f32; n * ff];
+        for j in 0..n * ff {
+            let sg = sigmoid(lc.g[j]);
+            let sil = lc.g[j] * sg;
+            du[j] = dact[j] * sil;
+            dgpre[j] = dact[j] * lc.u[j] * sg * (1.0 + lc.g[j] * (1.0 - sg));
+        }
+        for (proj, dproj) in [("wu", &du), ("wg", &dgpre)] {
+            let units = plan.units(i, proj);
+            if plan.full {
+                grads.insert(format!("L{i}.{proj}"), gemm_tn(&lc.x2, dproj, n, d, ff, d));
+            } else if units > 0 {
+                grads.insert(
+                    format!("L{i}.{proj}_t"),
+                    gemm_tn_outcols(&lc.x2, dproj, n, d, ff, units),
+                );
+            }
+        }
+        let mut dx2 = gemm_nt(&du, weight(w, &format!("L{i}.wu"))?, n, ff, d);
+        add_assign(&mut dx2, &gemm_nt(&dgpre, weight(w, &format!("L{i}.wg"))?, n, ff, d));
+        let mut dn2 = plan.full.then(|| vec![0.0f32; d]);
+        let dh_mid_norm = rms_norm_bwd(
+            &lc.h_mid,
+            weight(w, &format!("L{i}.norm2"))?,
+            &lc.inv2,
+            &dx2,
+            n,
+            d,
+            dn2.as_deref_mut(),
+        );
+        if let Some(dn2) = dn2 {
+            grads.insert(format!("L{i}.norm2"), dn2);
+        }
+        let mut dh_mid = dh; // residual path
+        add_assign(&mut dh_mid, &dh_mid_norm);
+
+        // ---- Attention: h_mid = h_in + attn @ wo -------------------------
+        let wo_units = plan.units(i, "wo");
+        if plan.full {
+            grads.insert(format!("L{i}.wo"), gemm_tn(&lc.attn, &dh_mid, n, d, d, d));
+        } else if wo_units > 0 {
+            grads.insert(
+                format!("L{i}.wo_t"),
+                gemm_tn(&lc.attn, &dh_mid, n, d, d, wo_units),
+            );
+        }
+        let da = gemm_nt(&dh_mid, weight(w, &format!("L{i}.wo"))?, n, d, d);
+
+        let mut dqr = vec![0.0f32; n * d];
+        let mut dkr = vec![0.0f32; n * d];
+        let mut dv = vec![0.0f32; n * d];
+        for bi in 0..b {
+            for hh in 0..heads {
+                for tq in 0..t {
+                    let prow = &lc.probs[((bi * heads + hh) * t + tq) * t..][..t];
+                    let doff = (bi * t + tq) * d + hh * hd;
+                    let mut dpro = vec![0.0f32; tq + 1];
+                    for (tk, dp) in dpro.iter_mut().enumerate() {
+                        let voff = (bi * t + tk) * d + hh * hd;
+                        let mut s = 0.0f32;
+                        for j in 0..hd {
+                            s += da[doff + j] * lc.v[voff + j];
+                        }
+                        *dp = s;
+                        let p = prow[tk];
+                        if p != 0.0 {
+                            for j in 0..hd {
+                                dv[voff + j] += p * da[doff + j];
+                            }
+                        }
+                    }
+                    let dot: f32 =
+                        dpro.iter().zip(prow).map(|(dp, p)| dp * p).sum();
+                    for (tk, dp) in dpro.iter().enumerate() {
+                        let ds = prow[tk] * (dp - dot) * scale;
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let koff = (bi * t + tk) * d + hh * hd;
+                        for j in 0..hd {
+                            dqr[doff + j] += ds * lc.kr[koff + j];
+                            dkr[koff + j] += ds * lc.qr[doff + j];
+                        }
+                    }
+                }
+            }
+        }
+        apply_rope(&mut dqr, b, t, heads, hd, &cos, &sin, true);
+        apply_rope(&mut dkr, b, t, heads, hd, &cos, &sin, true);
+
+        for (proj, dproj) in [("wq", &dqr), ("wk", &dkr), ("wv", &dv)] {
+            let units = plan.units(i, proj);
+            if plan.full {
+                grads.insert(format!("L{i}.{proj}"), gemm_tn(&lc.x1, dproj, n, d, d, d));
+            } else if units > 0 {
+                grads.insert(
+                    format!("L{i}.{proj}_t"),
+                    gemm_tn_outcols(&lc.x1, dproj, n, d, d, units),
+                );
+            }
+        }
+        let mut dx1 = gemm_nt(&dqr, weight(w, &format!("L{i}.wq"))?, n, d, d);
+        add_assign(&mut dx1, &gemm_nt(&dkr, weight(w, &format!("L{i}.wk"))?, n, d, d));
+        add_assign(&mut dx1, &gemm_nt(&dv, weight(w, &format!("L{i}.wv"))?, n, d, d));
+        let mut dn1 = plan.full.then(|| vec![0.0f32; d]);
+        let dh_in_norm = rms_norm_bwd(
+            &lc.h_in,
+            weight(w, &format!("L{i}.norm1"))?,
+            &lc.inv1,
+            &dx1,
+            n,
+            d,
+            dn1.as_deref_mut(),
+        );
+        if let Some(dn1) = dn1 {
+            grads.insert(format!("L{i}.norm1"), dn1);
+        }
+        dh = dh_mid;
+        add_assign(&mut dh, &dh_in_norm);
+    }
+
+    if plan.full {
+        // input-embedding gradient (tied with the output projection above)
+        let de = grads.get_mut("embed").expect("embed grad allocated");
+        for (idx, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            add_assign(&mut de[tok * d..(tok + 1) * d], &dh[idx * d..(idx + 1) * d]);
+        }
+    }
+    Ok(grads)
+}
+
+// ---------------------------------------------------------------------------
+// Train step
+// ---------------------------------------------------------------------------
+
+/// Build the effective (possibly permuted) base-layout weight map for a
+/// method pool: full-FT reads trainable directly; S²FT concatenates the
+/// `_t`/`_f` splits. Returns the owned concat storage + name resolution.
+#[allow(clippy::type_complexity)]
+fn effective_weights<'a>(
+    mm: &ModelMeta,
+    named: &Named<'a>,
+) -> Result<(HashMap<String, Vec<f32>>, Vec<(String, Option<&'a [f32]>)>)> {
+    let mut store: HashMap<String, Vec<f32>> = HashMap::new();
+    let mut direct: Vec<(String, Option<&[f32]>)> = Vec::new();
+    for s in &mm.base_params {
+        let name = &s.name;
+        let t_name = format!("{name}_t");
+        let f_name = format!("{name}_f");
+        if named.contains_key(t_name.as_str()) {
+            let tt = get(named, &t_name)?;
+            let ft = get(named, &f_name)?;
+            let proj = name.rsplit('.').next().unwrap_or("");
+            let buf = if is_row_split(proj) {
+                let mut buf = Vec::with_capacity(s.numel());
+                buf.extend_from_slice(tt.as_f32()?);
+                buf.extend_from_slice(ft.as_f32()?);
+                buf
+            } else {
+                // column concat: row r = t[r] ++ f[r]
+                let (ct, cf) = (tt.shape[1], ft.shape[1]);
+                let rows = tt.shape[0];
+                let (tv, fv) = (tt.as_f32()?, ft.as_f32()?);
+                let mut buf = Vec::with_capacity(rows * (ct + cf));
+                for r in 0..rows {
+                    buf.extend_from_slice(&tv[r * ct..(r + 1) * ct]);
+                    buf.extend_from_slice(&fv[r * cf..(r + 1) * cf]);
+                }
+                buf
+            };
+            store.insert(name.clone(), buf);
+            direct.push((name.clone(), None));
+        } else {
+            // base-named tensor lives in either trainable (fullft) or
+            // frozen (s2ft untouched) — both arrive in `named`.
+            direct.push((name.clone(), Some(getf(named, name)?)));
+        }
+    }
+    Ok((store, direct))
+}
+
+/// One AdamW step in method layout. Outputs `new.*`, `new_m.*`, `new_v.*`
+/// and `loss`, exactly like the AOT train artifacts.
+pub fn train_step(
+    mm: &ModelMeta,
+    meth: &MethodMeta,
+    named: &Named,
+    b: usize,
+    t: usize,
+) -> Result<HashMap<String, Tensor>> {
+    let (store, direct) = effective_weights(mm, named)?;
+    let mut w: WeightMap = WeightMap::new();
+    for (name, slice) in &direct {
+        match slice {
+            Some(s) => w.insert(name.clone(), *s),
+            None => w.insert(name.clone(), store[name].as_slice()),
+        };
+    }
+
+    let tokens = get(named, "tokens")?.as_i32()?;
+    let targets = get(named, "targets")?.as_i32()?;
+    let mask = getf(named, "loss_mask")?;
+    let step = getf(named, "step")?[0];
+
+    let cache = forward(mm, &w, tokens, b, t)?;
+    let (loss, _, dlogits) =
+        loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, true);
+    let dlogits = dlogits.expect("gradient requested");
+    let plan = GradPlan::from_method(mm, meth);
+    let grads = backward(mm, &w, &cache, &dlogits, tokens, &plan, b, t)?;
+
+    // AdamW (python `_adam` + decoupled weight decay), t = step + 1.
+    let tt = (step + 1.0) as f64;
+    let (b1, b2) = (meth.beta1 as f32, meth.beta2 as f32);
+    let bc1 = (1.0 - meth.beta1.powf(tt)) as f32;
+    let bc2 = (1.0 - meth.beta2.powf(tt)) as f32;
+    let (lr, eps, wd) = (meth.lr as f32, meth.eps as f32, meth.weight_decay as f32);
+
+    let mut out = HashMap::new();
+    for s in &meth.trainable {
+        let name = &s.name;
+        let g = grads
+            .get(name.as_str())
+            .ok_or_else(|| anyhow!("native: no gradient computed for {name:?}"))?;
+        let mut p = get(named, name)?.as_f32()?.to_vec();
+        let mut om = getf(named, &format!("m.{name}"))?.to_vec();
+        let mut ov = getf(named, &format!("v.{name}"))?.to_vec();
+        for j in 0..p.len() {
+            om[j] = b1 * om[j] + (1.0 - b1) * g[j];
+            ov[j] = b2 * ov[j] + (1.0 - b2) * g[j] * g[j];
+            let mh = om[j] / bc1;
+            let vh = ov[j] / bc2;
+            p[j] -= lr * (mh / (vh.sqrt() + eps) + wd * p[j]);
+        }
+        out.insert(format!("new.{name}"), Tensor::f32(s.shape.clone(), p));
+        out.insert(format!("new_m.{name}"), Tensor::f32(s.shape.clone(), om));
+        out.insert(format!("new_v.{name}"), Tensor::f32(s.shape.clone(), ov));
+    }
+    out.insert("loss".to_string(), Tensor::scalar_f32(loss));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Prepare: base layout -> method layout (trainable-first co-permutation)
+// ---------------------------------------------------------------------------
+
+fn permute_rows(w: &[f32], cols: usize, perm: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(perm.len() * cols);
+    for &r in perm {
+        out.extend_from_slice(&w[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+fn permute_cols(w: &[f32], rows: usize, cols: usize, perm: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * perm.len());
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        for &c in perm {
+            out.push(row[c]);
+        }
+    }
+    out
+}
+
+/// Unit selection for one coupled structure (strategies R and W).
+fn select_units(
+    meth: &MethodMeta,
+    total: usize,
+    count: usize,
+    scores: impl Fn() -> Vec<f32>,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    if count >= total {
+        return Ok((0..total).collect());
+    }
+    match meth.selection.as_str() {
+        "r" => Ok(rng.choose(total, count)),
+        "w" => {
+            let sc = scores();
+            let mut idx: Vec<usize> = (0..total).collect();
+            idx.sort_by(|&a, &b| sc[a].partial_cmp(&sc[b]).unwrap_or(std::cmp::Ordering::Equal));
+            if !meth.select_small {
+                idx.reverse();
+            }
+            let mut sel = idx[..count].to_vec();
+            sel.sort_unstable();
+            Ok(sel)
+        }
+        other => bail!("native: unsupported selection strategy {other:?}"),
+    }
+}
+
+/// Split base params into (trainable, frozen, perms) — the S²FT
+/// trainable-first co-permutation, or a passthrough for full FT.
+pub fn prepare(
+    mm: &ModelMeta,
+    meth: &MethodMeta,
+    named: &Named,
+) -> Result<HashMap<String, Tensor>> {
+    if meth.method == "fullft" {
+        let mut out = HashMap::new();
+        for s in &mm.base_params {
+            out.insert(s.name.clone(), get(named, &s.name)?.clone());
+        }
+        return Ok(out);
+    }
+
+    let d = mm.dims.d_model;
+    let hd = mm.head_dim();
+    let ff = mm.dims.d_ff;
+    let seed = get(named, "seed")?.as_i32()?[0] as u32 as u64;
+    let counts = crate::adapter::s2ft_counts(mm, meth);
+    let mha_count = MHA_PROJS.iter().find_map(|p| counts.get(*p)).copied().unwrap_or(0);
+    let ffn_count = FFN_PROJS.iter().find_map(|p| counts.get(*p)).copied().unwrap_or(0);
+
+    let mut staged: HashMap<String, Tensor> = HashMap::new();
+    for s in &mm.base_params {
+        staged.insert(s.name.clone(), get(named, &s.name)?.clone());
+    }
+    let root = Rng::seed(seed ^ 0x52F7_1111);
+    for i in 0..mm.dims.n_layers {
+        if mha_count > 0 {
+            let wo = getf(named, &format!("L{i}.wo"))?;
+            let sel = select_units(
+                meth,
+                mm.dims.n_heads,
+                mha_count,
+                || {
+                    (0..mm.dims.n_heads)
+                        .map(|h| {
+                            wo[h * hd * d..(h + 1) * hd * d]
+                                .iter()
+                                .map(|v| v * v)
+                                .sum::<f32>()
+                                .sqrt()
+                        })
+                        .collect()
+                },
+                &mut root.fold(2 * i as u64),
+            )?;
+            let hperm = sparsity::trainable_first_permutation(&sel, mm.dims.n_heads)?;
+            let eperm = sparsity::expand_head_perm(&hperm, hd);
+            for p in ["wq", "wk", "wv"] {
+                let wsrc = getf(named, &format!("L{i}.{p}"))?;
+                staged.insert(
+                    format!("L{i}.{p}"),
+                    Tensor::f32(vec![d, d], permute_cols(wsrc, d, d, &eperm)),
+                );
+            }
+            staged.insert(
+                format!("L{i}.wo"),
+                Tensor::f32(vec![d, d], permute_rows(wo, d, &eperm)),
+            );
+            staged.insert(
+                format!("L{i}.head_perm"),
+                Tensor::i32(
+                    vec![mm.dims.n_heads],
+                    hperm.iter().map(|&x| x as i32).collect(),
+                ),
+            );
+        }
+        if ffn_count > 0 {
+            let wu = getf(named, &format!("L{i}.wu"))?;
+            let wg = getf(named, &format!("L{i}.wg"))?;
+            let wd = getf(named, &format!("L{i}.wd"))?;
+            let sel = select_units(
+                meth,
+                ff,
+                ffn_count,
+                || {
+                    (0..ff)
+                        .map(|c| {
+                            let col = |w: &[f32]| {
+                                (0..d).map(|r| w[r * ff + c] * w[r * ff + c]).sum::<f32>().sqrt()
+                            };
+                            let wd_row = wd[c * d..(c + 1) * d]
+                                .iter()
+                                .map(|v| v * v)
+                                .sum::<f32>()
+                                .sqrt();
+                            col(wu) + col(wg) + wd_row
+                        })
+                        .collect()
+                },
+                &mut root.fold(2 * i as u64 + 1),
+            )?;
+            let cperm = sparsity::trainable_first_permutation(&sel, ff)?;
+            staged.insert(
+                format!("L{i}.wu"),
+                Tensor::f32(vec![d, ff], permute_cols(wu, d, ff, &cperm)),
+            );
+            staged.insert(
+                format!("L{i}.wg"),
+                Tensor::f32(vec![d, ff], permute_cols(wg, d, ff, &cperm)),
+            );
+            staged.insert(
+                format!("L{i}.wd"),
+                Tensor::f32(vec![ff, d], permute_rows(wd, d, &cperm)),
+            );
+            staged.insert(
+                format!("L{i}.chan_perm"),
+                Tensor::i32(vec![ff], cperm.iter().map(|&x| x as i32).collect()),
+            );
+        }
+        // split the budgeted projections into (_t, _f)
+        for (p, &c) in &counts {
+            let name = format!("L{i}.{p}");
+            let w = staged
+                .remove(&name)
+                .ok_or_else(|| anyhow!("native: missing staged {name:?}"))?;
+            let rows = if is_mha(p) { c * hd } else { c };
+            let (din, dout) = (w.shape[0], w.shape[1]);
+            let wv = w.as_f32()?;
+            if is_row_split(p) {
+                staged.insert(
+                    format!("{name}_t"),
+                    Tensor::f32(vec![rows, dout], wv[..rows * dout].to_vec()),
+                );
+                staged.insert(
+                    format!("{name}_f"),
+                    Tensor::f32(vec![din - rows, dout], wv[rows * dout..].to_vec()),
+                );
+            } else {
+                let all: Vec<usize> = (0..dout).collect();
+                staged.insert(
+                    format!("{name}_t"),
+                    Tensor::f32(vec![din, rows], permute_cols(wv, din, dout, &all[..rows])),
+                );
+                staged.insert(
+                    format!("{name}_f"),
+                    Tensor::f32(vec![din, dout - rows], permute_cols(wv, din, dout, &all[rows..])),
+                );
+            }
+        }
+    }
+    Ok(staged)
+}
+
+// ---------------------------------------------------------------------------
+// Merge: method layout -> base layout
+// ---------------------------------------------------------------------------
+
+/// Invert the co-permutation and re-assemble base-layout weights. Pure
+/// index gathers — frozen rows come back bit-identical.
+pub fn merge(mm: &ModelMeta, meth: &MethodMeta, named: &Named) -> Result<HashMap<String, Tensor>> {
+    let mut out = HashMap::new();
+    if meth.method == "fullft" {
+        for s in &mm.base_params {
+            out.insert(s.name.clone(), get(named, &s.name)?.clone());
+        }
+        return Ok(out);
+    }
+
+    let hd = mm.head_dim();
+    for s in &mm.base_params {
+        if let Some(t) = named.get(s.name.as_str()) {
+            out.insert(s.name.clone(), (*t).clone());
+        }
+    }
+    let unsplit = |name: &str, proj: &str| -> Result<Tensor> {
+        let t_name = format!("{name}_t");
+        if !named.contains_key(t_name.as_str()) {
+            return Ok(get(named, name)?.clone());
+        }
+        let tt = get(named, &t_name)?;
+        let ft = get(named, &format!("{name}_f"))?;
+        if is_row_split(proj) {
+            let cols = tt.shape[1];
+            let mut buf = tt.as_f32()?.to_vec();
+            buf.extend_from_slice(ft.as_f32()?);
+            Ok(Tensor::f32(vec![tt.shape[0] + ft.shape[0], cols], buf))
+        } else {
+            let rows = tt.shape[0];
+            let (ct, cf) = (tt.shape[1], ft.shape[1]);
+            let (tv, fv) = (tt.as_f32()?, ft.as_f32()?);
+            let mut buf = Vec::with_capacity(rows * (ct + cf));
+            for r in 0..rows {
+                buf.extend_from_slice(&tv[r * ct..(r + 1) * ct]);
+                buf.extend_from_slice(&fv[r * cf..(r + 1) * cf]);
+            }
+            Ok(Tensor::f32(vec![rows, ct + cf], buf))
+        }
+    };
+    for i in 0..mm.dims.n_layers {
+        if let Some(hp) = named.get(format!("L{i}.head_perm").as_str()) {
+            let hperm: Vec<usize> = hp.as_i32()?.iter().map(|&x| x as usize).collect();
+            let inv = sparsity::invert_permutation(&sparsity::expand_head_perm(&hperm, hd));
+            for p in MHA_PROJS {
+                let name = format!("L{i}.{p}");
+                let w = unsplit(&name, p)?;
+                let (rows, cols) = (w.shape[0], w.shape[1]);
+                let data = if is_row_split(p) {
+                    permute_rows(w.as_f32()?, cols, &inv)
+                } else {
+                    permute_cols(w.as_f32()?, rows, cols, &inv)
+                };
+                out.insert(name, Tensor::f32(vec![rows, cols], data));
+            }
+        }
+        if let Some(cp) = named.get(format!("L{i}.chan_perm").as_str()) {
+            let cperm: Vec<usize> = cp.as_i32()?.iter().map(|&x| x as usize).collect();
+            let inv = sparsity::invert_permutation(&cperm);
+            for p in FFN_PROJS {
+                let name = format!("L{i}.{p}");
+                let w = unsplit(&name, p)?;
+                let (rows, cols) = (w.shape[0], w.shape[1]);
+                let data = if is_row_split(p) {
+                    permute_rows(w.as_f32()?, cols, &inv)
+                } else {
+                    permute_cols(w.as_f32()?, rows, cols, &inv)
+                };
+                out.insert(name, Tensor::f32(vec![rows, cols], data));
+            }
+        }
+    }
+    for s in &mm.base_params {
+        if !out.contains_key(&s.name) {
+            bail!("native merge: could not reassemble {:?}", s.name);
+        }
+    }
+    Ok(out)
+}

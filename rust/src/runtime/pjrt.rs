@@ -1,0 +1,150 @@
+//! PJRT backend (cargo feature `pjrt`): compile AOT HLO-text artifacts
+//! through the `xla` crate and execute them.
+//!
+//! This module is the only place that touches `xla`. Note the in-tree
+//! `xla` dependency is a compile-only stub; execution requires vendoring
+//! the real crate (see rust/README.md).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{check_inputs, ArtifactMeta, Artifacts, Executable, Executor, Tensor, TensorData};
+
+/// PJRT CPU client + compiled-executable cache.
+///
+/// Compilation is lazy and cached per artifact name: experiment harnesses
+/// freely re-request executables without paying XLA compile time twice.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<String, Arc<dyn Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let artifacts = Artifacts::open(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { client, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+}
+
+impl Executor for Runtime {
+    fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<dyn Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.artifacts.artifact(name)?.clone();
+        let path = self.artifacts.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(xerr)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(xerr)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let exec: Arc<dyn Executable> =
+            Arc::new(PjrtExecutable { name: name.to_string(), exe, spec });
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    fn platform(&self) -> String {
+        format!("pjrt/{}", self.client.platform_name())
+    }
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A compiled artifact plus its interface description.
+pub struct PjrtExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactMeta,
+}
+
+impl Executable for PjrtExecutable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> &ArtifactMeta {
+        &self.spec
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        check_inputs(&self.name, &self.spec, inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = lit.to_tuple().map_err(xerr)?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.into_iter().map(from_literal).collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => {
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e}"))?
+            }
+        }
+        TensorData::I32(v) => {
+            if t.shape.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e}"))?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(|e| anyhow!("ty: {e}"))?;
+    match ty {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            Ok(Tensor { shape: dims, data: TensorData::F32(v) })
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            Ok(Tensor { shape: dims, data: TensorData::I32(v) })
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}

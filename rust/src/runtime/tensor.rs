@@ -1,6 +1,7 @@
-//! Host tensor type bridging rust data and `xla::Literal`.
+//! Host-side dense tensor type shared by every backend (the `pjrt` module
+//! bridges it to `xla::Literal` when that feature is enabled).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
@@ -83,50 +84,6 @@ impl Tensor {
             bail!("not a scalar: {:?}", self.shape);
         }
         Ok(v[0])
-    }
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &self.data {
-            TensorData::F32(v) => {
-                if self.shape.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v)
-                        .reshape(&dims)
-                        .map_err(|e| anyhow!("reshape: {e}"))?
-                }
-            }
-            TensorData::I32(v) => {
-                if self.shape.is_empty() {
-                    xla::Literal::scalar(v[0])
-                } else {
-                    xla::Literal::vec1(v)
-                        .reshape(&dims)
-                        .map_err(|e| anyhow!("reshape: {e}"))?
-                }
-            }
-        };
-        Ok(lit)
-    }
-
-    pub fn from_literal(lit: xla::Literal) -> Result<Self> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow!("array_shape: {e}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let ty = lit.ty().map_err(|e| anyhow!("ty: {e}"))?;
-        match ty {
-            xla::ElementType::F32 => {
-                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
-                Ok(Tensor { shape: dims, data: TensorData::F32(v) })
-            }
-            xla::ElementType::S32 => {
-                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?;
-                Ok(Tensor { shape: dims, data: TensorData::I32(v) })
-            }
-            other => bail!("unsupported literal element type {other:?}"),
-        }
     }
 
     /// Squared L2 distance to another tensor (diagnostics / tests).

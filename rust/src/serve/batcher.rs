@@ -137,4 +137,43 @@ mod tests {
         let mut b: AdapterBatcher<u32> = AdapterBatcher::new(4, Duration::from_secs(1));
         assert!(b.next_batch().is_none());
     }
+
+    /// Affinity: a batch only ever contains one adapter, and skipped
+    /// requests keep their FIFO slot for the next round.
+    #[test]
+    fn affinity_never_mixes_adapters() {
+        let mut b = AdapterBatcher::new(8, Duration::from_secs(60));
+        for i in 0..12 {
+            b.push(format!("a{}", i % 3), i);
+        }
+        while let Some(plan) = b.next_batch() {
+            assert!(plan.items.iter().all(|q| q.adapter == plan.adapter));
+            assert!(
+                plan.items.windows(2).all(|w| w[0].payload < w[1].payload),
+                "FIFO order broken within {:?}",
+                plan.adapter
+            );
+        }
+    }
+
+    /// Windowing: once the wait budget expires, age dominates group size —
+    /// and within the overdue set, the *oldest* adapter is served first.
+    #[test]
+    fn windowing_prefers_oldest_once_overdue() {
+        let mut b = AdapterBatcher::new(8, Duration::from_millis(1));
+        b.push("first", 0);
+        std::thread::sleep(Duration::from_millis(3));
+        b.push("second", 1);
+        b.push("big", 2);
+        b.push("big", 3);
+        b.push("big", 4);
+        std::thread::sleep(Duration::from_millis(3)); // all overdue now
+        let p1 = b.next_batch().unwrap();
+        assert_eq!(p1.adapter, "first");
+        let p2 = b.next_batch().unwrap();
+        assert_eq!(p2.adapter, "second");
+        let p3 = b.next_batch().unwrap();
+        assert_eq!(p3.adapter, "big");
+        assert_eq!(p3.items.len(), 3);
+    }
 }

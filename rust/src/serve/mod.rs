@@ -19,7 +19,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{open_backend, Executable, Executor, Tensor};
 use crate::train::GenModel;
 use crate::util::rng::Rng;
 
@@ -41,13 +41,13 @@ pub fn demo(
     let model_name = model.to_string();
     let weights = weights.map(String::from);
     let router = Router::spawn(max_batch, Duration::from_millis(3), move || {
-        let rt = Runtime::new(&artifacts)?;
+        let rt = open_backend(&artifacts)?;
         let params = match &weights {
             Some(dir) => crate::train::load_params(dir)?,
             None => {
                 let init = rt.load(&format!("init_{model_name}"))?;
                 let outs = init.run(&[Tensor::scalar_i32(9)])?;
-                init.spec
+                init.spec()
                     .outputs
                     .iter()
                     .map(|s| s.name.clone())
@@ -55,7 +55,7 @@ pub fn demo(
                     .collect()
             }
         };
-        let mm = rt.artifacts.model(&model_name)?;
+        let mm = rt.artifacts().model(&model_name)?;
         let (d, k, hd) = (mm.dims.d_model, mm.dims.d_ff, mm.head_dim());
         let n_layers = mm.dims.n_layers;
         let mut store = AdapterStore::new();
@@ -86,7 +86,7 @@ pub fn demo(
             params.values().map(Tensor::bytes).sum::<usize>() as f64 / 1e6
         );
         let snapshot: HashMap<String, Tensor> = params.clone();
-        let gm = GenModel::new(&rt, &model_name, params)?;
+        let gm = GenModel::new(rt.as_ref(), &model_name, params)?;
         Ok((gm, store, snapshot))
     });
 

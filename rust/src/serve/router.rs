@@ -124,6 +124,30 @@ impl Drop for Router {
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_handles_empty_and_sorts() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.percentile_ms(0.5), 0.0);
+        assert_eq!(m.percentile_ms(0.99), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+
+        let m = ServeMetrics {
+            requests: 4,
+            batches: 2,
+            switches: 1,
+            latencies_ms: vec![40.0, 10.0, 30.0, 20.0],
+        };
+        assert_eq!(m.percentile_ms(0.0), 10.0);
+        assert_eq!(m.percentile_ms(1.0), 40.0);
+        assert_eq!(m.percentile_ms(0.5), 20.0);
+        assert_eq!(m.mean_batch_size(), 2.0);
+    }
+}
+
 type Pending = (Sender<ServeReply>, Instant, usize);
 
 fn engine_loop<F>(

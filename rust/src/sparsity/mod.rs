@@ -7,7 +7,34 @@
 //! trainable-first permutations (`L{i}.head_perm`, `L{i}.chan_perm`); this
 //! module interprets them for adapter extraction and fusion.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, Result};
+
+/// Mirror of python `selection.budget_to_counts`: per-projection trainable
+/// fractions -> integer unit counts. Head-grouped projections
+/// (wq/wk/wv/wo) count heads; channel projections (wu/wg/wd) count FFN
+/// channels. A positive fraction always yields at least one unit.
+pub fn budget_to_counts(
+    fractions: &HashMap<String, f64>,
+    d_ff: usize,
+    n_heads: usize,
+) -> HashMap<String, usize> {
+    let mut counts = HashMap::new();
+    for (proj, &f) in fractions {
+        let total = match proj.as_str() {
+            "wo" | "wq" | "wk" | "wv" => n_heads,
+            _ => d_ff,
+        };
+        let c = if f > 0.0 {
+            ((f * total as f64).round() as usize).max(1)
+        } else {
+            0
+        };
+        counts.insert(proj.clone(), c);
+    }
+    counts
+}
 
 /// Permutation placing `selected` first (matching python
 /// `trainable_first_permutation`).

@@ -8,22 +8,22 @@ use anyhow::{Context, Result};
 use crate::data::batch::{encode_prompt, supervised_batch};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
 use crate::data::{Batch, Example};
-use crate::runtime::{Executable, Runtime, Tensor};
+use crate::runtime::{Executable, Executor, Tensor};
 
 /// A merged (base-layout) model ready for forward passes.
 pub struct GenModel {
     pub model: String,
     pub b: usize,
     pub t: usize,
-    fwd: std::sync::Arc<Executable>,
-    eval: std::sync::Arc<Executable>,
+    fwd: std::sync::Arc<dyn Executable>,
+    eval: std::sync::Arc<dyn Executable>,
     pub params: HashMap<String, Tensor>,
     vocab: usize,
 }
 
 impl GenModel {
-    pub fn new(rt: &Runtime, model: &str, params: HashMap<String, Tensor>) -> Result<Self> {
-        let mm = rt.artifacts.model(model)?;
+    pub fn new(rt: &dyn Executor, model: &str, params: HashMap<String, Tensor>) -> Result<Self> {
+        let mm = rt.artifacts().model(model)?;
         let (b, t) = mm.default_batch();
         let fwd = rt
             .load(&format!("fwd_{model}_{b}x{t}"))

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Context, Result};
 
 use crate::data::Batch;
-use crate::runtime::{Executable, Runtime, Tensor};
+use crate::runtime::{Executable, Executor, Tensor};
 use crate::util::rng::Rng;
 
 use super::metrics::TrainMetrics;
@@ -18,7 +18,7 @@ pub struct Trainer {
     pub method: String,
     pub b: usize,
     pub t: usize,
-    train_exe: std::sync::Arc<Executable>,
+    train_exe: std::sync::Arc<dyn Executable>,
     /// tensor pool holding trainable + frozen + m.* + v.* (+aux names)
     pool: HashMap<String, Tensor>,
     /// perm outputs of prepare (s2ft only)
@@ -36,14 +36,14 @@ impl Trainer {
     /// Prepare a run from base-layout params. `calib` drives selection
     /// strategies A/S/G (any train batch works; unused under R/W).
     pub fn new(
-        rt: &Runtime,
+        rt: &dyn Executor,
         model: &str,
         method: &str,
         base_params: &HashMap<String, Tensor>,
         seed: u64,
         calib: &Batch,
     ) -> Result<Self> {
-        let mm = rt.artifacts.model(model)?;
+        let mm = rt.artifacts().model(model)?;
         let (b, t) = mm.default_batch();
         Self::with_batch(rt, model, method, base_params, seed, calib, b, t)
     }
@@ -51,7 +51,7 @@ impl Trainer {
     /// Same but at an explicit artifact batch shape (Fig 5 sweeps).
     #[allow(clippy::too_many_arguments)]
     pub fn with_batch(
-        rt: &Runtime,
+        rt: &dyn Executor,
         model: &str,
         method: &str,
         base_params: &HashMap<String, Tensor>,
@@ -60,7 +60,7 @@ impl Trainer {
         b: usize,
         t: usize,
     ) -> Result<Self> {
-        let mm = rt.artifacts.model(model)?;
+        let mm = rt.artifacts().model(model)?;
         let method_meta = mm.method(method)?.clone();
         let n_layers = mm.dims.n_layers;
 
@@ -157,7 +157,7 @@ impl Trainer {
     }
 
     /// Merge back into base layout (for eval / serving / adapter diffing).
-    pub fn merged_params(&self, rt: &Runtime) -> Result<HashMap<String, Tensor>> {
+    pub fn merged_params(&self, rt: &dyn Executor) -> Result<HashMap<String, Tensor>> {
         let merge = rt.load(&format!("merge_{}_{}", self.model, self.method))?;
         let mut pin = self.pool.clone();
         for (k, v) in &self.perms {

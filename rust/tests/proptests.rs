@@ -77,6 +77,84 @@ fn prop_permutation_roundtrip() {
     }
 }
 
+/// Permutation construction rejects duplicates and out-of-range ids, for
+/// every position of the offending entry.
+#[test]
+fn prop_permutation_rejects_bad_input() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(1500 + case as u64);
+        let total = 2 + rng.below(64);
+        let s = 1 + rng.below(total);
+        let good = rng.choose(total, s);
+        assert!(sparsity::trainable_first_permutation(&good, total).is_ok());
+        // out-of-range: corrupt one slot
+        let mut oob = good.clone();
+        let slot = rng.below(oob.len());
+        oob[slot] = total + rng.below(5);
+        assert!(
+            sparsity::trainable_first_permutation(&oob, total).is_err(),
+            "case {case}: accepted out-of-range {oob:?} (total {total})"
+        );
+        // duplicate: repeat an existing entry somewhere else
+        if good.len() >= 2 {
+            let mut dup = good.clone();
+            let (a, b) = (rng.below(dup.len()), rng.below(dup.len()));
+            if a != b {
+                dup[a] = dup[b];
+                assert!(
+                    sparsity::trainable_first_permutation(&dup, total).is_err(),
+                    "case {case}: accepted duplicate {dup:?}"
+                );
+            }
+        }
+    }
+}
+
+/// expand_head_perm has exact block structure: element k*hd + j of the
+/// expansion is head_perm[k]*hd + j.
+#[test]
+fn prop_expand_head_perm_block_structure() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(1700 + case as u64);
+        let heads = 1 + rng.below(16);
+        let hd = 1 + rng.below(16);
+        let mut perm: Vec<usize> = (0..heads).collect();
+        rng.shuffle(&mut perm);
+        let e = sparsity::expand_head_perm(&perm, hd);
+        assert_eq!(e.len(), heads * hd);
+        for (k, &h) in perm.iter().enumerate() {
+            for j in 0..hd {
+                assert_eq!(e[k * hd + j], h * hd + j, "case {case}: block ({k},{j})");
+            }
+        }
+    }
+}
+
+/// budget_to_counts: positive fractions always yield >=1 unit, never more
+/// than the structure size; zero fractions yield zero.
+#[test]
+fn prop_budget_to_counts_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(1800 + case as u64);
+        let d_ff = 1 + rng.below(512);
+        let heads = 1 + rng.below(16);
+        let mut fractions = HashMap::new();
+        for p in ["wo", "wq", "wd", "wu"] {
+            fractions.insert(p.to_string(), if rng.bool(0.3) { 0.0 } else { rng.f64() });
+        }
+        let counts = sparsity::budget_to_counts(&fractions, d_ff, heads);
+        for (p, &c) in &counts {
+            let total = if p == "wo" || p == "wq" { heads } else { d_ff };
+            let f = fractions[p];
+            if f > 0.0 {
+                assert!((1..=total).contains(&c), "case {case}: {p} f={f} c={c}");
+            } else {
+                assert_eq!(c, 0, "case {case}: {p}");
+            }
+        }
+    }
+}
+
 /// Scatter/gather rows+cols are exact inverses and touch nothing else.
 #[test]
 fn prop_scatter_gather_isolation() {

@@ -1,23 +1,32 @@
-//! Serving-stack integration: router + batcher + engine over the real
-//! tiny model, with live S²FT adapter switches mid-stream.
+//! Serving-stack integration: router + batcher + engine with live S²FT
+//! adapter switches mid-stream.
+//!
+//! Runs hermetically on the native backend (default features); the pjrt
+//! module replays the same scenarios against real AOT artifacts when they
+//! exist.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
 use repro::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
-use repro::runtime::{Runtime, Tensor};
+use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
 use repro::serve::{Router, ServeRequest};
 use repro::train::GenModel;
 use repro::util::rng::Rng;
 
-fn spawn_router(n_adapters: usize, max_batch: usize) -> Router {
+/// Spawn a router whose engine is built by `make_backend` (runs inside the
+/// engine thread, PJRT-compatible).
+fn spawn_router<F>(make_backend: F, n_adapters: usize, max_batch: usize) -> Router
+where
+    F: FnOnce() -> anyhow::Result<Box<dyn Executor>> + Send + 'static,
+{
     Router::spawn(max_batch, Duration::from_millis(2), move || {
-        let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+        let rt = make_backend()?;
         let init = rt.load("init_tiny")?;
         let outs = init.run(&[Tensor::scalar_i32(3)])?;
         let params: HashMap<String, Tensor> =
-            init.spec.outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
-        let mm = rt.artifacts.model("tiny")?;
+            init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        let mm = rt.artifacts().model("tiny")?;
         let (d, hd) = (mm.dims.d_model, mm.head_dim());
         let mut store = AdapterStore::new();
         let mut rng = Rng::seed(77);
@@ -27,7 +36,9 @@ fn spawn_router(n_adapters: usize, max_batch: usize) -> Router {
                     let heads = rng.choose(mm.dims.n_heads, 1);
                     let wo_rows = repro::sparsity::expand_head_perm(&heads, hd);
                     S2ftLayerDelta {
-                        wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                        wo_delta: (0..wo_rows.len() * d)
+                            .map(|_| rng.normal_f32() * 1e-3)
+                            .collect(),
                         wo_rows,
                         wd_rows: rng.choose(mm.dims.d_ff, 2),
                         wd_delta: (0..2 * d).map(|_| rng.normal_f32() * 1e-3).collect(),
@@ -37,14 +48,12 @@ fn spawn_router(n_adapters: usize, max_batch: usize) -> Router {
             store.insert(format!("a{a}"), AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d }));
         }
         let snapshot = params.clone();
-        let gm = GenModel::new(&rt, "tiny", params)?;
+        let gm = GenModel::new(rt.as_ref(), "tiny", params)?;
         Ok((gm, store, snapshot))
     })
 }
 
-#[test]
-fn router_serves_all_requests_across_adapters() {
-    let router = spawn_router(3, 2);
+fn router_serves_all_requests_across_adapters(router: Router) {
     let mut rx = Vec::new();
     for i in 0..9 {
         rx.push(router.submit(ServeRequest {
@@ -65,23 +74,18 @@ fn router_serves_all_requests_across_adapters() {
     assert!(m.batches >= 5, "batcher should cap at max_batch=2: {}", m.batches);
     assert!(m.switches >= 3, "must have switched between 3 adapters");
     assert!(m.percentile_ms(0.5) > 0.0);
+    assert_eq!(m.latencies_ms.len(), 9);
     router.shutdown().unwrap();
 }
 
-#[test]
-fn router_base_requests_use_pristine_weights() {
-    let router = spawn_router(1, 4);
+fn router_base_requests_use_pristine_weights(router: Router) {
     // adapter request then base request: engine must unfuse in between
-    let r1 = router.call(ServeRequest {
-        adapter: "a0".into(),
-        prompt: "q: x?".into(),
-        max_new: 2,
-    }).unwrap();
-    let r2 = router.call(ServeRequest {
-        adapter: "base".into(),
-        prompt: "q: x?".into(),
-        max_new: 2,
-    }).unwrap();
+    let r1 = router
+        .call(ServeRequest { adapter: "a0".into(), prompt: "q: x?".into(), max_new: 2 })
+        .unwrap();
+    let r2 = router
+        .call(ServeRequest { adapter: "base".into(), prompt: "q: x?".into(), max_new: 2 })
+        .unwrap();
     // both served; determinism of each path is covered elsewhere — here we
     // assert the engine survives the fuse/unfuse round trip
     assert!(r1.text.len() <= 2 && r2.text.len() <= 2);
@@ -90,9 +94,7 @@ fn router_base_requests_use_pristine_weights() {
     router.shutdown().unwrap();
 }
 
-#[test]
-fn shutdown_drains_cleanly() {
-    let router = spawn_router(2, 4);
+fn shutdown_drains_cleanly(router: Router) {
     let pending = router.submit(ServeRequest {
         adapter: "a1".into(),
         prompt: "q: last?".into(),
@@ -101,4 +103,137 @@ fn shutdown_drains_cleanly() {
     router.shutdown().unwrap();
     // the queued request was served before shutdown completed
     assert!(pending.recv().is_ok());
+}
+
+/// Sequential calls make the switch count exact: every adapter change is
+/// one store switch, repeats are free.
+fn switch_count_matches_adapter_changes(router: Router) {
+    for (i, adapter) in ["a0", "a1", "a1", "a0", "a2"].iter().enumerate() {
+        router
+            .call(ServeRequest {
+                adapter: adapter.to_string(),
+                prompt: format!("q: {i}?"),
+                max_new: 1,
+            })
+            .unwrap();
+    }
+    let m = router.metrics();
+    assert_eq!(m.requests, 5);
+    // a0 -> a1 (skip dup) -> a0 -> a2 = 4 switches
+    assert_eq!(m.switches, 4, "switch count must match adapter changes");
+    router.shutdown().unwrap();
+}
+
+mod native {
+    use super::*;
+
+    fn native_router(n_adapters: usize, max_batch: usize) -> Router {
+        spawn_router(
+            || Ok(Box::new(NativeBackend::builtin()) as Box<dyn Executor>),
+            n_adapters,
+            max_batch,
+        )
+    }
+
+    #[test]
+    fn router_serves_all_requests_across_adapters() {
+        super::router_serves_all_requests_across_adapters(native_router(3, 2));
+    }
+
+    #[test]
+    fn router_base_requests_use_pristine_weights() {
+        super::router_base_requests_use_pristine_weights(native_router(1, 4));
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        super::shutdown_drains_cleanly(native_router(2, 4));
+    }
+
+    #[test]
+    fn switch_count_matches_adapter_changes() {
+        super::switch_count_matches_adapter_changes(native_router(3, 4));
+    }
+
+    /// Concurrent submits from several threads all complete (the router
+    /// side is just channel sends; the single engine thread serializes).
+    #[test]
+    fn concurrent_submits_complete() {
+        let router = std::sync::Arc::new(native_router(2, 4));
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0;
+                for i in 0..3 {
+                    let reply = r
+                        .call(ServeRequest {
+                            adapter: format!("a{}", (w + i) % 2),
+                            prompt: format!("q: w{w} i{i}?"),
+                            max_new: 1,
+                        })
+                        .expect("reply");
+                    assert!(reply.batch_size >= 1);
+                    got += 1;
+                }
+                got
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 12);
+        let m = router.metrics();
+        assert_eq!(m.requests, 12);
+        assert!(m.switches >= 1);
+        std::sync::Arc::try_unwrap(router)
+            .ok()
+            .expect("sole owner")
+            .shutdown()
+            .unwrap();
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use repro::runtime::Runtime;
+
+    fn artifacts_dir() -> Option<&'static str> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("meta.json").exists() {
+            eprintln!("skipping pjrt serve test: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        // probe PJRT up front so the engine-thread builder cannot fail
+        if let Err(e) = Runtime::new(dir) {
+            eprintln!("skipping pjrt serve test: {e:#} (vendor the real xla crate)");
+            return None;
+        }
+        Some(dir)
+    }
+
+    fn pjrt_router(dir: &'static str, n_adapters: usize, max_batch: usize) -> Router {
+        spawn_router(
+            move || Ok(Box::new(Runtime::new(dir)?) as Box<dyn Executor>),
+            n_adapters,
+            max_batch,
+        )
+    }
+
+    #[test]
+    fn router_serves_all_requests_across_adapters() {
+        let Some(dir) = artifacts_dir() else { return };
+        super::router_serves_all_requests_across_adapters(pjrt_router(dir, 3, 2));
+    }
+
+    #[test]
+    fn router_base_requests_use_pristine_weights() {
+        let Some(dir) = artifacts_dir() else { return };
+        super::router_base_requests_use_pristine_weights(pjrt_router(dir, 1, 4));
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let Some(dir) = artifacts_dir() else { return };
+        super::shutdown_drains_cleanly(pjrt_router(dir, 2, 4));
+    }
 }

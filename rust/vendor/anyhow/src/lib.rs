@@ -1,0 +1,171 @@
+//! Minimal `anyhow`-compatible error crate, vendored so the workspace
+//! builds hermetically (no network, no registry).
+//!
+//! Implements the subset this repository uses: [`Error`] with a context
+//! chain, the [`Result`] alias, the [`Context`] extension trait for both
+//! `Result` and `Option`, and the `anyhow!` / `bail!` macros. `{e}` prints
+//! the outermost message; `{e:#}` prints the whole chain joined by `: `,
+//! matching upstream `anyhow` formatting.
+
+use std::fmt;
+
+/// Error with an ordered context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            e.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = io_err().into();
+        let e = e.context("reading file").context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: reading file: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: gone");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        // context also nests on an already-anyhow Result
+        let r2: Result<()> = Err(anyhow!("inner {}", 1));
+        let e2 = r2.context("outer").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer: inner 1");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} and {}", 4);
+        assert_eq!(format!("{e}"), "value 3 and 4");
+        fn f() -> Result<()> {
+            bail!("boom {}", 9)
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 9");
+    }
+}
