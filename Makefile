@@ -1,15 +1,20 @@
 # S²FT reproduction — top-level driver.
 #
-#   make build      release build (native backend, hermetic: no Python/XLA)
-#   make test       full hermetic test suite (default features)
-#   make test-pjrt  compile-check the PJRT feature path as well
-#   make artifacts  AOT-lower the JAX models to HLO text (needs python+jax)
-#   make fmt lint   formatting / clippy gates (same as CI)
+#   make build          release build (native backend, hermetic: no Python/XLA)
+#   make test           full hermetic test suite (default features)
+#   make test-pjrt      compile-check the PJRT feature path as well
+#   make artifacts      AOT-lower the JAX models to HLO text (needs python+jax)
+#   make fmt lint doc   formatting / clippy / rustdoc gates (same as CI)
+#   make bench          run every harness=false bench (JSON in rust/results/)
+#   make bench-smoke    same with the short CI wall budget
+#   make bench-baseline regenerate the committed kernels regression baseline
+#   make bench-compare  gate rust/results/bench_kernels.json vs the baseline
 
 CARGO ?= cargo
 MANIFEST = rust/Cargo.toml
 
-.PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint clean
+.PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint doc clean \
+	bench bench-smoke bench-baseline bench-compare
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -25,6 +30,26 @@ fmt:
 
 lint:
 	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
+
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
+
+# Bench binaries run with cwd = package root; JSON lands in rust/results/.
+bench:
+	$(CARGO) bench --manifest-path $(MANIFEST)
+
+bench-smoke:
+	S2FT_BENCH_BUDGET_MS=300 $(CARGO) bench --manifest-path $(MANIFEST)
+
+bench-baseline:
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench kernels
+	cp rust/results/bench_kernels.json rust/benches/baseline/kernels.json
+	@echo "baseline updated: rust/benches/baseline/kernels.json (commit it)"
+
+bench-compare:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
+	  --current rust/results/bench_kernels.json \
+	  --baseline rust/benches/baseline/kernels.json
 
 # Build-time only: lower every (model, method) to HLO text + meta.json.
 # Requires a python environment with jax installed; the rust side never

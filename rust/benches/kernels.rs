@@ -1,0 +1,109 @@
+//! Micro-benchmarks for the shared GEMM kernel subsystem.
+//!
+//! Covers each of the four GEMM shapes at the builtin tiny/small/base
+//! model dimensions, single- vs multi-threaded (the acceptance shape:
+//! `gemm/base` at 4 workers vs 1), the naive triple-loop reference as
+//! the "before" datum, and the partial-backprop `lim` sweep showing the
+//! paper's partial-gradient saving (§3.3): dW cost scales with the
+//! trainable slice, not the full layer.
+//!
+//! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
+//! `make bench-baseline` regenerates the committed regression baseline
+//! from this target's JSON.
+
+use repro::kernels::{gemm_nt_with_threads, gemm_tn_outcols_with_threads, gemm_tn_with_threads};
+use repro::kernels::{gemm_with_threads, reference};
+use repro::util::bench::{black_box, BenchSuite};
+use repro::util::rng::Rng;
+
+const PAR_THREADS: usize = 4;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("kernels");
+    println!(
+        "kernel micro-benches: threads 1 vs {PAR_THREADS} (available parallelism {})\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    );
+
+    // (m, k, n) = (b·t, d_model, d_model) per builtin model — the
+    // attention-projection GEMM shape that dominates the forward pass.
+    for (name, m, k, n) in [
+        ("tiny", 64usize, 64usize, 64usize),
+        ("small", 512, 256, 256),
+        ("base", 512, 512, 512),
+    ] {
+        let mut rng = Rng::seed(k as u64);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bt = randv(&mut rng, n * k);
+        let g = randv(&mut rng, m * k); // upstream gradient, (m, k)
+
+        if name != "base" {
+            // the naive "before" datum is too slow to repeat at base dims
+            suite.bench(&format!("gemm_naive/{name}"), || {
+                black_box(reference::gemm(&a, &b, m, k, n));
+            });
+        }
+        suite.bench(&format!("gemm/{name}/threads=1"), || {
+            black_box(gemm_with_threads(&a, &b, m, k, n, 1));
+        });
+        suite.bench(&format!("gemm/{name}/threads={PAR_THREADS}"), || {
+            black_box(gemm_with_threads(&a, &b, m, k, n, PAR_THREADS));
+        });
+        suite.bench(&format!("gemm_nt/{name}/threads=1"), || {
+            black_box(gemm_nt_with_threads(&a, &bt, m, k, n, 1));
+        });
+        suite.bench(&format!("gemm_nt/{name}/threads={PAR_THREADS}"), || {
+            black_box(gemm_nt_with_threads(&a, &bt, m, k, n, PAR_THREADS));
+        });
+        // full-width dW gradients (rows = m tokens, both operands (m, k))
+        suite.bench(&format!("gemm_tn/{name}/threads=1"), || {
+            black_box(gemm_tn_with_threads(&a, &g, m, k, k, k, 1));
+        });
+        suite.bench(&format!("gemm_tn/{name}/threads={PAR_THREADS}"), || {
+            black_box(gemm_tn_with_threads(&a, &g, m, k, k, k, PAR_THREADS));
+        });
+        suite.bench(&format!("gemm_tn_outcols/{name}/threads=1"), || {
+            black_box(gemm_tn_outcols_with_threads(&a, &g, m, k, k, k, 1));
+        });
+        suite.bench(&format!("gemm_tn_outcols/{name}/threads={PAR_THREADS}"), || {
+            black_box(gemm_tn_outcols_with_threads(&a, &g, m, k, k, k, PAR_THREADS));
+        });
+    }
+
+    // Partial-backprop sweep at the base FFN down-projection (wd): the
+    // dW GEMM is (b·t=512, d_ff=1376)ᵀ-sliced @ (512, d=512). S²FT only
+    // materializes `lim` trainable channel rows — cost is linear in lim.
+    {
+        let (rows, ka, kb) = (512usize, 1376usize, 512usize);
+        let mut rng = Rng::seed(0x57EE);
+        let act = randv(&mut rng, rows * ka);
+        let dy = randv(&mut rng, rows * kb);
+        for lim in [ka, ka / 4, ka / 16, ka / 64] {
+            suite.bench(&format!("gemm_tn_partial/base_ffn/lim={lim}"), || {
+                black_box(gemm_tn_with_threads(&act, &dy, rows, ka, kb, lim, 1));
+            });
+        }
+    }
+
+    let median = |name: &str| {
+        suite.results.iter().find(|r| r.name == name).map(|r| r.median_ns).unwrap_or(f64::NAN)
+    };
+    let speedup =
+        median("gemm/base/threads=1") / median(&format!("gemm/base/threads={PAR_THREADS}"));
+    println!(
+        "\ngemm/base median speedup ({PAR_THREADS} threads vs 1): {speedup:.2}x \
+         (acceptance target >= 2x on a >=4-core runner)"
+    );
+    let full = median("gemm_tn_partial/base_ffn/lim=1376");
+    let part = median("gemm_tn_partial/base_ffn/lim=86");
+    println!(
+        "partial dW saving at lim=86/1376: {:.1}x less GEMM time (paper Fig 5 mechanism)",
+        full / part
+    );
+    suite.save();
+}

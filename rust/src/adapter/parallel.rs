@@ -10,7 +10,13 @@
 //! At the paper's setting (s = 2r, k = d) the MAC counts match, but S²FT
 //! does one fused pass over memory instead of two chained GEMVs — the
 //! source of its measured advantage.
+//!
+//! All dense math routes through [`crate::kernels`]: the base GEMM is the
+//! blocked parallel kernel, and the per-request deltas are partitioned
+//! across the worker pool by output row (requests are independent, so
+//! results are bit-identical to the serial path).
 
+use crate::kernels;
 use crate::linalg::Mat;
 
 /// Per-request LoRA factors for one layer.
@@ -33,57 +39,59 @@ pub fn base_forward(x: &Mat, w: &Mat) -> Mat {
 
 /// LoRA path: per-request low-rank correction on top of `y`.
 pub fn lora_parallel(x: &Mat, y: &mut Mat, adapters: &[LoraReqAdapter]) {
+    lora_parallel_with_threads(x, y, adapters, kernels::configured_threads())
+}
+
+/// [`lora_parallel`] on an explicit worker count (requests partitioned).
+pub fn lora_parallel_with_threads(
+    x: &Mat,
+    y: &mut Mat,
+    adapters: &[LoraReqAdapter],
+    threads: usize,
+) {
     let k = x.cols;
     let d = y.cols;
     assert_eq!(adapters.len(), x.rows);
-    for (i, ad) in adapters.iter().enumerate() {
-        let r = ad.a.cols;
-        let xi = x.row(i);
-        // t = x_i @ A  (k x r)
-        let mut t = vec![0.0f32; r];
-        for kk in 0..k {
-            let xv = xi[kk];
-            if xv == 0.0 {
-                continue;
-            }
-            let arow = ad.a.row(kk);
-            for j in 0..r {
-                t[j] += xv * arow[j];
-            }
+    let r = adapters.first().map_or(0, |ad| ad.a.cols);
+    let work = adapters.len() * r * (k + d);
+    kernels::for_each_row_chunk(&mut y.data, d, threads, work, |row0, chunk| {
+        for (i, yrow) in chunk.chunks_mut(d).enumerate() {
+            let ad = &adapters[row0 + i];
+            // t = x_i @ A (1 x r), then y_i += (t @ B) * scale
+            let t = kernels::gemm_with_threads(x.row(row0 + i), &ad.a.data, 1, k, ad.a.cols, 1);
+            kernels::gemv_acc(&t, &ad.b.data, d, ad.scale, yrow);
         }
-        // y_i += (t @ B) * scale
-        let yrow = &mut y.data[i * d..(i + 1) * d];
-        for rr in 0..r {
-            let tv = t[rr] * ad.scale;
-            if tv == 0.0 {
-                continue;
-            }
-            let brow = ad.b.row(rr);
-            for j in 0..d {
-                yrow[j] += tv * brow[j];
-            }
-        }
-    }
+    });
 }
 
 /// S²FT path: gather the selected activations, apply the dense delta.
 pub fn s2ft_parallel(x: &Mat, y: &mut Mat, adapters: &[S2ftReqAdapter]) {
+    s2ft_parallel_with_threads(x, y, adapters, kernels::configured_threads())
+}
+
+/// [`s2ft_parallel`] on an explicit worker count (requests partitioned).
+pub fn s2ft_parallel_with_threads(
+    x: &Mat,
+    y: &mut Mat,
+    adapters: &[S2ftReqAdapter],
+    threads: usize,
+) {
     let d = y.cols;
     assert_eq!(adapters.len(), x.rows);
-    for (i, ad) in adapters.iter().enumerate() {
-        let xi = x.row(i);
-        let yrow = &mut y.data[i * d..(i + 1) * d];
-        for (s_idx, &row) in ad.rows.iter().enumerate() {
-            let xv = xi[row]; // gather
-            if xv == 0.0 {
-                continue;
-            }
-            let drow = ad.delta.row(s_idx);
-            for j in 0..d {
-                yrow[j] += xv * drow[j];
-            }
+    let s = adapters.first().map_or(0, |ad| ad.rows.len());
+    let work = adapters.len() * s * d;
+    kernels::for_each_row_chunk(&mut y.data, d, threads, work, |row0, chunk| {
+        // one gather buffer per worker chunk — the delta path stays
+        // allocation-free per request (the point of the Fig 6c comparison)
+        let mut xs: Vec<f32> = Vec::new();
+        for (i, yrow) in chunk.chunks_mut(d).enumerate() {
+            let ad = &adapters[row0 + i];
+            let xi = x.row(row0 + i);
+            xs.clear();
+            xs.extend(ad.rows.iter().map(|&row| xi[row])); // gather
+            kernels::gemv_acc(&xs, &ad.delta.data, d, 1.0, yrow);
         }
-    }
+    });
 }
 
 /// Exact dense reference: y_i = x_i @ (W + ΔW_i).
@@ -151,5 +159,38 @@ mod tests {
         let deltas2: Vec<Mat> = s2fts.iter().map(|a| a.dense_delta(k)).collect();
         let want2 = dense_reference(&x, &w, &deltas2);
         assert!(y2.sub(&want2).fro_norm() / want2.fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn request_partitioning_is_bit_identical() {
+        // sized above kernels::MIN_PAR_WORK so the scoped-thread path runs
+        let mut rng = Rng::seed(9);
+        let (n, k, d, r, s) = (33, 256, 256, 8, 16);
+        let x = Mat::randn(n, k, &mut rng);
+        let w = Mat::randn(k, d, &mut rng);
+        let loras: Vec<LoraReqAdapter> = (0..n)
+            .map(|_| LoraReqAdapter {
+                a: Mat::randn(k, r, &mut rng),
+                b: Mat::randn(r, d, &mut rng),
+                scale: 2.0,
+            })
+            .collect();
+        let s2fts: Vec<S2ftReqAdapter> = (0..n)
+            .map(|_| S2ftReqAdapter {
+                rows: rng.choose(k, s),
+                delta: Mat::randn(s, d, &mut rng),
+            })
+            .collect();
+        let base = base_forward(&x, &w);
+        let (mut l1, mut s1) = (base.clone(), base.clone());
+        lora_parallel_with_threads(&x, &mut l1, &loras, 1);
+        s2ft_parallel_with_threads(&x, &mut s1, &s2fts, 1);
+        for t in [2usize, 3, 8] {
+            let (mut lt, mut st) = (base.clone(), base.clone());
+            lora_parallel_with_threads(&x, &mut lt, &loras, t);
+            s2ft_parallel_with_threads(&x, &mut st, &s2fts, t);
+            assert!(l1.data.iter().zip(&lt.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(s1.data.iter().zip(&st.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 }

@@ -1,0 +1,294 @@
+//! Causal-attention kernels (scores → softmax → weighted values, and the
+//! exact backward), shared by the native model interpreter.
+//!
+//! Layout matches `python/compile/model.py`: activations are `(b·t, d)`
+//! row-major with head `h` occupying column block `h·hd..(h+1)·hd`, and
+//! probabilities are `(b, heads, t, t)`. Parallelism partitions the
+//! *batch* axis — every output buffer is contiguous per batch element, so
+//! worker chunks are disjoint slices and the per-element accumulation
+//! order never depends on the thread count (bit-identical results).
+
+use super::{configured_threads, MIN_PAR_WORK};
+
+/// Attention problem shape; `d_model = heads * hd`.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnDims {
+    pub b: usize,
+    pub t: usize,
+    pub heads: usize,
+    pub hd: usize,
+}
+
+impl AttnDims {
+    fn d(&self) -> usize {
+        self.heads * self.hd
+    }
+
+    /// Multiply-add estimate for the parallel/serial decision.
+    fn work(&self) -> usize {
+        2 * self.b * self.heads * self.t * self.t * self.hd
+    }
+}
+
+/// Forward causal attention over rotated Q/K and V, each `(b·t, d)`.
+/// Returns `(probs (b,heads,t,t), attn (b·t, d))` — attn is the
+/// concatenated head outputs, pre-`wo`.
+pub fn causal_attn_fwd(
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    causal_attn_fwd_with_threads(qr, kr, v, dims, scale, configured_threads())
+}
+
+/// [`causal_attn_fwd`] on an explicit worker count.
+pub fn causal_attn_fwd_with_threads(
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (b, t) = (dims.b, dims.t);
+    let (p_unit, a_unit) = (dims.heads * t * t, t * dims.d());
+    let mut probs = vec![0.0f32; b * p_unit];
+    let mut attn = vec![0.0f32; b * a_unit];
+    let nt = threads.min(b.max(1));
+    if nt <= 1 || dims.work() < MIN_PAR_WORK {
+        fwd_block(qr, kr, v, dims, scale, 0, &mut probs, &mut attn);
+    } else {
+        let per = b.div_ceil(nt);
+        std::thread::scope(|s| {
+            let chunks = probs.chunks_mut(per * p_unit).zip(attn.chunks_mut(per * a_unit));
+            for (ci, (pc, ac)) in chunks.enumerate() {
+                s.spawn(move || fwd_block(qr, kr, v, dims, scale, ci * per, pc, ac));
+            }
+        });
+    }
+    (probs, attn)
+}
+
+/// Forward for batches `[b0, b0 + probs.len()/p_unit)`; `probs`/`attn`
+/// are the local output slices for exactly those batches.
+#[allow(clippy::too_many_arguments)]
+fn fwd_block(
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+    b0: usize,
+    probs: &mut [f32],
+    attn: &mut [f32],
+) {
+    let (t, heads, hd, d) = (dims.t, dims.heads, dims.hd, dims.d());
+    let nb = probs.len() / (heads * t * t);
+    for lb in 0..nb {
+        let bi = b0 + lb;
+        for hh in 0..heads {
+            for tq in 0..t {
+                let qoff = (bi * t + tq) * d + hh * hd;
+                let prow = &mut probs[((lb * heads + hh) * t + tq) * t..][..t];
+                let mut maxv = f32::NEG_INFINITY;
+                for (tk, p) in prow.iter_mut().enumerate().take(tq + 1) {
+                    let koff = (bi * t + tk) * d + hh * hd;
+                    let mut s = 0.0f32;
+                    for j in 0..hd {
+                        s += qr[qoff + j] * kr[koff + j];
+                    }
+                    let s = s * scale;
+                    *p = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for p in prow.iter_mut().take(tq + 1) {
+                    *p = (*p - maxv).exp();
+                    denom += *p;
+                }
+                for p in prow.iter_mut().take(tq + 1) {
+                    *p /= denom;
+                }
+                let aoff = (lb * t + tq) * d + hh * hd;
+                for tk in 0..=tq {
+                    let p = prow[tk];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let voff = (bi * t + tk) * d + hh * hd;
+                    for j in 0..hd {
+                        attn[aoff + j] += p * v[voff + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`causal_attn_fwd`]: given the cached probabilities and
+/// `da = d(loss)/d(attn)`, produce `(dqr, dkr, dv)` (pre-RoPE-inverse).
+pub fn causal_attn_bwd(
+    probs: &[f32],
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    da: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    causal_attn_bwd_with_threads(probs, qr, kr, v, da, dims, scale, configured_threads())
+}
+
+/// [`causal_attn_bwd`] on an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attn_bwd_with_threads(
+    probs: &[f32],
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    da: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, t) = (dims.b, dims.t);
+    let unit = t * dims.d();
+    let mut dqr = vec![0.0f32; b * unit];
+    let mut dkr = vec![0.0f32; b * unit];
+    let mut dv = vec![0.0f32; b * unit];
+    let nt = threads.min(b.max(1));
+    if nt <= 1 || dims.work() < MIN_PAR_WORK {
+        bwd_block(probs, qr, kr, v, da, dims, scale, 0, &mut dqr, &mut dkr, &mut dv);
+    } else {
+        let per = b.div_ceil(nt);
+        std::thread::scope(|s| {
+            let chunks = dqr
+                .chunks_mut(per * unit)
+                .zip(dkr.chunks_mut(per * unit).zip(dv.chunks_mut(per * unit)));
+            for (ci, (qc, (kc, vc))) in chunks.enumerate() {
+                s.spawn(move || {
+                    bwd_block(probs, qr, kr, v, da, dims, scale, ci * per, qc, kc, vc);
+                });
+            }
+        });
+    }
+    (dqr, dkr, dv)
+}
+
+/// Backward for batches `[b0, b0 + dqr.len()/unit)`; the three gradient
+/// slices are local to exactly those batches.
+#[allow(clippy::too_many_arguments)]
+fn bwd_block(
+    probs: &[f32],
+    qr: &[f32],
+    kr: &[f32],
+    v: &[f32],
+    da: &[f32],
+    dims: &AttnDims,
+    scale: f32,
+    b0: usize,
+    dqr: &mut [f32],
+    dkr: &mut [f32],
+    dv: &mut [f32],
+) {
+    let (t, heads, hd, d) = (dims.t, dims.heads, dims.hd, dims.d());
+    let nb = dqr.len() / (t * d);
+    for lb in 0..nb {
+        let bi = b0 + lb;
+        for hh in 0..heads {
+            for tq in 0..t {
+                let prow = &probs[((bi * heads + hh) * t + tq) * t..][..t];
+                let doff = (bi * t + tq) * d + hh * hd;
+                let ldoff = (lb * t + tq) * d + hh * hd;
+                let mut dpro = vec![0.0f32; tq + 1];
+                for (tk, dp) in dpro.iter_mut().enumerate() {
+                    let voff = (bi * t + tk) * d + hh * hd;
+                    let lvoff = (lb * t + tk) * d + hh * hd;
+                    let mut s = 0.0f32;
+                    for j in 0..hd {
+                        s += da[doff + j] * v[voff + j];
+                    }
+                    *dp = s;
+                    let p = prow[tk];
+                    if p != 0.0 {
+                        for j in 0..hd {
+                            dv[lvoff + j] += p * da[doff + j];
+                        }
+                    }
+                }
+                let dot: f32 = dpro.iter().zip(prow).map(|(dp, p)| dp * p).sum();
+                for (tk, dp) in dpro.iter().enumerate() {
+                    let ds = prow[tk] * (dp - dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let koff = (bi * t + tk) * d + hh * hd;
+                    let lkoff = (lb * t + tk) * d + hh * hd;
+                    for j in 0..hd {
+                        dqr[ldoff + j] += ds * kr[koff + j];
+                        dkr[lkoff + j] += ds * qr[doff + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(dims: &AttnDims, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let n = dims.b * dims.t * dims.d();
+        let mk = |rng: &mut Rng| (0..n).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+        (mk(&mut rng), mk(&mut rng), mk(&mut rng))
+    }
+
+    #[test]
+    fn fwd_probs_are_causal_softmax_rows() {
+        let dims = AttnDims { b: 2, t: 6, heads: 2, hd: 4 };
+        let (qr, kr, v) = setup(&dims, 1);
+        let scale = 1.0 / (dims.hd as f32).sqrt();
+        let (probs, attn) = causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, 1);
+        assert_eq!(attn.len(), dims.b * dims.t * dims.d());
+        for bi in 0..dims.b {
+            for hh in 0..dims.heads {
+                for tq in 0..dims.t {
+                    let row = &probs[((bi * dims.heads + hh) * dims.t + tq) * dims.t..][..dims.t];
+                    let sum: f32 = row[..=tq].iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-5, "row sums to {sum}");
+                    for &p in &row[tq + 1..] {
+                        assert_eq!(p, 0.0, "future position attended");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwd_and_bwd_are_bit_identical_across_threads() {
+        // large enough to cross MIN_PAR_WORK: 2*4*4*24*24*8 = 147456
+        let dims = AttnDims { b: 4, t: 24, heads: 4, hd: 8 };
+        let (qr, kr, v) = setup(&dims, 2);
+        let scale = 1.0 / (dims.hd as f32).sqrt();
+        let mut rng = Rng::seed(3);
+        let da: Vec<f32> = (0..dims.b * dims.t * dims.d()).map(|_| rng.normal_f32()).collect();
+        let (p1, a1) = causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, 1);
+        let bwd1 = causal_attn_bwd_with_threads(&p1, &qr, &kr, &v, &da, &dims, scale, 1);
+        for t in [2usize, 3, 4, 7] {
+            let (pt, at) = causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, t);
+            assert!(p1.iter().zip(&pt).all(|(x, y)| x.to_bits() == y.to_bits()), "probs t={t}");
+            assert!(a1.iter().zip(&at).all(|(x, y)| x.to_bits() == y.to_bits()), "attn t={t}");
+            let bwdt = causal_attn_bwd_with_threads(&p1, &qr, &kr, &v, &da, &dims, scale, t);
+            for (one, many) in [(&bwd1.0, &bwdt.0), (&bwd1.1, &bwdt.1), (&bwd1.2, &bwdt.2)] {
+                assert!(one.iter().zip(many.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+}

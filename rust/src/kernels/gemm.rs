@@ -1,0 +1,324 @@
+//! The four GEMM shapes, cache-blocked and output-partitioned.
+//!
+//! Each kernel keeps one accumulator per output element and walks the
+//! reduction axis in ascending order, so the result is bit-identical to
+//! the naive triple loop ([`super::reference`]) and independent of the
+//! thread count. The `gemm` micro-kernel processes four A-rows per pass
+//! over a B-row, cutting B memory traffic 4× while the four output rows
+//! (4·n·4 bytes) stay resident in L1.
+
+use super::{configured_threads, for_each_row_chunk};
+
+/// `A (m,k) @ B (k,n)` with the configured worker count.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    gemm_with_threads(a, b, m, k, n, configured_threads())
+}
+
+/// `A (m,k) @ B (k,n)` on an explicit worker count (output rows are
+/// partitioned; reduction order is fixed, so results do not depend on
+/// `threads`).
+pub fn gemm_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k, "gemm: A shape");
+    debug_assert_eq!(b.len(), k * n, "gemm: B shape");
+    let mut out = vec![0.0f32; m * n];
+    for_each_row_chunk(&mut out, n, threads, 2 * m * k * n, |row0, chunk| {
+        gemm_rows(a, b, row0, k, n, chunk);
+    });
+    out
+}
+
+/// Rows `[row0, row0 + chunk_rows)` of `A @ B` into `out`.
+fn gemm_rows(a: &[f32], b: &[f32], row0: usize, k: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    let mut r = 0;
+    // 4-row micro-kernel: each B row is streamed once per quad.
+    while r + 4 <= rows {
+        let quad = &mut out[r * n..(r + 4) * n];
+        let (o0, quad) = quad.split_at_mut(n);
+        let (o1, quad) = quad.split_at_mut(n);
+        let (o2, o3) = quad.split_at_mut(n);
+        let a0 = &a[(row0 + r) * k..][..k];
+        let a1 = &a[(row0 + r + 1) * k..][..k];
+        let a2 = &a[(row0 + r + 2) * k..][..k];
+        let a3 = &a[(row0 + r + 3) * k..][..k];
+        let quads = a0.iter().zip(a1).zip(a2).zip(a3).enumerate();
+        for (kk, (((&v0, &v1), &v2), &v3)) in quads {
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue; // fully-masked quad column (e.g. padded dlogits)
+            }
+            let br = &b[kk * n..][..n];
+            for (j, &bv) in br.iter().enumerate() {
+                o0[j] += v0 * bv;
+                o1[j] += v1 * bv;
+                o2[j] += v2 * bv;
+                o3[j] += v3 * bv;
+            }
+        }
+        r += 4;
+    }
+    // Remainder rows: plain ikj with a zero-skip.
+    for rr in r..rows {
+        let arow = &a[(row0 + rr) * k..][..k];
+        let orow = &mut out[rr * n..][..n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[kk * n..][..n];
+            for (o, &bv) in orow.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `A (m,k) @ Bᵀ` with `B (n,k)` — row-dot products.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    gemm_nt_with_threads(a, b, m, k, n, configured_threads())
+}
+
+/// `A (m,k) @ Bᵀ` with `B (n,k)` on an explicit worker count.
+pub fn gemm_nt_with_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k, "gemm_nt: A shape");
+    debug_assert_eq!(b.len(), n * k, "gemm_nt: B shape");
+    let mut out = vec![0.0f32; m * n];
+    for_each_row_chunk(&mut out, n, threads, 2 * m * k * n, |row0, chunk| {
+        for (rr, orow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + rr) * k..][..k];
+            for (o, brow) in orow.iter_mut().zip(b.chunks(k.max(1))) {
+                let mut s = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                *o = s;
+            }
+        }
+    });
+    out
+}
+
+/// `A[:, :lim]ᵀ @ B` with `A (rows, ka)`, `B (rows, kb)` → `(lim, kb)`.
+///
+/// The S²FT row-split partial-backprop kernel: with `lim < ka` only the
+/// trainable slice of the weight gradient is ever materialized — the
+/// activation is sliced *before* the GEMM (paper §3.3).
+pub fn gemm_tn(a: &[f32], b: &[f32], rows: usize, ka: usize, kb: usize, lim: usize) -> Vec<f32> {
+    gemm_tn_with_threads(a, b, rows, ka, kb, lim, configured_threads())
+}
+
+/// [`gemm_tn`] on an explicit worker count (output rows partitioned).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_with_threads(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * ka, "gemm_tn: A shape");
+    debug_assert_eq!(b.len(), rows * kb, "gemm_tn: B shape");
+    debug_assert!(lim <= ka, "gemm_tn: lim {lim} > ka {ka}");
+    let mut out = vec![0.0f32; lim * kb];
+    for_each_row_chunk(&mut out, kb, threads, 2 * rows * lim * kb, |i0, chunk| {
+        let nlim = chunk.len() / kb;
+        for r in 0..rows {
+            let arow = &a[r * ka + i0..][..nlim];
+            let brow = &b[r * kb..][..kb];
+            for (ii, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut chunk[ii * kb..][..kb];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `Aᵀ @ B[:, :lim]` with `A (rows, ka)`, `B (rows, kb)` → `(ka, lim)` —
+/// the column-split partial gradient (trainable head/channel columns).
+pub fn gemm_tn_outcols(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+) -> Vec<f32> {
+    gemm_tn_outcols_with_threads(a, b, rows, ka, kb, lim, configured_threads())
+}
+
+/// [`gemm_tn_outcols`] on an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_outcols_with_threads(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * ka, "gemm_tn_outcols: A shape");
+    debug_assert_eq!(b.len(), rows * kb, "gemm_tn_outcols: B shape");
+    debug_assert!(lim <= kb, "gemm_tn_outcols: lim {lim} > kb {kb}");
+    let mut out = vec![0.0f32; ka * lim];
+    for_each_row_chunk(&mut out, lim, threads, 2 * rows * ka * lim, |i0, chunk| {
+        let ni = chunk.len() / lim;
+        for r in 0..rows {
+            let arow = &a[r * ka + i0..][..ni];
+            let brow = &b[r * kb..][..lim];
+            for (ii, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut chunk[ii * lim..][..lim];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Fused GEMV accumulate: `y (n) += scale · (x (k) @ W (k,n))` on the
+/// calling thread — the per-request adapter-delta shape (one activation
+/// row against a small dense delta).
+pub fn gemv_acc(x: &[f32], w: &[f32], n: usize, scale: f32, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), n, "gemv_acc: y shape");
+    debug_assert_eq!(w.len(), x.len() * n, "gemv_acc: W shape");
+    for (kk, &xv) in x.iter().enumerate() {
+        let v = xv * scale;
+        if v == 0.0 {
+            continue;
+        }
+        let wrow = &w[kk * n..][..n];
+        for (o, &wv) in y.iter_mut().zip(wrow) {
+            *o += v * wv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        // [1 2; 3 4] @ [1 1; 1 1] = [3 3; 7 7]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(gemm(&a, &b, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_quad_and_remainder_match_reference() {
+        // rows chosen to exercise the 4-row micro-kernel plus a remainder
+        let mut rng = Rng::seed(11);
+        for (m, k, n) in [(1, 3, 2), (4, 5, 6), (6, 7, 3), (9, 4, 8), (12, 1, 1)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            assert_eq!(
+                gemm_with_threads(&a, &b, m, k, n, 1),
+                reference::gemm(&a, &b, m, k, n),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_reference() {
+        let mut rng = Rng::seed(12);
+        for (m, k, n) in [(5, 4, 3), (8, 6, 7), (3, 1, 9)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, n * k);
+            assert_eq!(
+                gemm_nt_with_threads(&a, &b, m, k, n, 1),
+                reference::gemm_nt(&a, &b, m, k, n)
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_tn_partial_equals_slice_of_full() {
+        let mut rng = Rng::seed(13);
+        let (rows, ka, kb) = (9, 7, 5);
+        let a = randv(&mut rng, rows * ka);
+        let b = randv(&mut rng, rows * kb);
+        let full = gemm_tn(&a, &b, rows, ka, kb, ka);
+        for lim in [0, 1, 3, ka] {
+            let part = gemm_tn(&a, &b, rows, ka, kb, lim);
+            assert_eq!(part, full[..lim * kb].to_vec(), "lim {lim}");
+            assert_eq!(part, reference::gemm_tn(&a, &b, rows, ka, kb, lim));
+        }
+    }
+
+    #[test]
+    fn gemm_tn_outcols_partial_equals_cols_of_full() {
+        let mut rng = Rng::seed(14);
+        let (rows, ka, kb) = (8, 6, 7);
+        let a = randv(&mut rng, rows * ka);
+        let b = randv(&mut rng, rows * kb);
+        let full = gemm_tn_outcols(&a, &b, rows, ka, kb, kb);
+        for lim in [0, 2, 5, kb] {
+            let part = gemm_tn_outcols(&a, &b, rows, ka, kb, lim);
+            let want: Vec<f32> =
+                (0..ka).flat_map(|i| full[i * kb..i * kb + lim].to_vec()).collect();
+            assert_eq!(part, want, "lim {lim}");
+            assert_eq!(part, reference::gemm_tn_outcols(&a, &b, rows, ka, kb, lim));
+        }
+    }
+
+    #[test]
+    fn gemv_acc_accumulates_scaled() {
+        let x = vec![1.0, 0.0, 2.0];
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (3,2)
+        let mut y = vec![10.0, 20.0];
+        gemv_acc(&x, &w, 2, 0.5, &mut y);
+        // y += 0.5 * [1*[1,2] + 2*[5,6]] = [5.5, 7.0]
+        assert_eq!(y, vec![15.5, 27.0]);
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        let mut rng = Rng::seed(15);
+        let (m, k, n) = (33, 40, 37); // above MIN_PAR_WORK
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bt = randv(&mut rng, n * k);
+        let one = gemm_with_threads(&a, &b, m, k, n, 1);
+        let one_nt = gemm_nt_with_threads(&a, &bt, m, k, n, 1);
+        for t in [2usize, 3, 5, 8] {
+            let many = gemm_with_threads(&a, &b, m, k, n, t);
+            assert!(one.iter().zip(&many).all(|(x, y)| x.to_bits() == y.to_bits()), "t={t}");
+            let many_nt = gemm_nt_with_threads(&a, &bt, m, k, n, t);
+            assert!(one_nt.iter().zip(&many_nt).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+}

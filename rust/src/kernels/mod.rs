@@ -1,0 +1,158 @@
+//! Shared compute-kernel subsystem: every dense GEMM in the crate routes
+//! through here.
+//!
+//! S²FT's efficiency claim (paper §3.3) is "select sparsely, compute
+//! densely": the trainable slice is carved out *before* the dW GEMM, and
+//! the remaining work is a plain dense matmul. That only pays off if the
+//! dense matmuls themselves are engineered, so this module provides
+//! cache-blocked, multi-threaded implementations of the four GEMM shapes
+//! the codebase needs:
+//!
+//! * [`gemm`] — `C = A (m,k) @ B (k,n)`, the forward projections;
+//! * [`gemm_nt`] — `C = A (m,k) @ Bᵀ` with `B (n,k)`, logits + dX;
+//! * [`gemm_tn`] — `C = A[:, :lim]ᵀ @ B`, the row-split partial-gradient
+//!   kernel (S²FT `wo`/`wd` backprop slices activation channels first);
+//! * [`gemm_tn_outcols`] — `C = Aᵀ @ B[:, :lim]`, the column-split
+//!   partial-gradient kernel (trainable head/channel columns);
+//!
+//! plus [`gemv_acc`] (fused `y += scale·(x @ W)` for the per-request
+//! adapter deltas) and the causal-attention pair
+//! [`causal_attn_fwd`]/[`causal_attn_bwd`] used by the native model
+//! interpreter.
+//!
+//! # Threading model
+//!
+//! Kernels run on `std::thread::scope` workers — no persistent pool, no
+//! dependencies. The worker count comes from, in priority order:
+//! [`set_threads`] (the CLI `--threads` flag), the `S2FT_THREADS`
+//! environment variable, then [`std::thread::available_parallelism`].
+//! Small problems (below [`MIN_PAR_WORK`] multiply-adds) stay on the
+//! calling thread to avoid spawn overhead.
+//!
+//! # Determinism
+//!
+//! Parallelism only ever partitions the *output* — never the reduction
+//! axis — so every output element is accumulated in exactly the same
+//! order regardless of thread count. Results are bit-identical between
+//! `S2FT_THREADS=1` and `S2FT_THREADS=N` (asserted by the proptests in
+//! `tests/proptests.rs`), which keeps the JAX-reference numeric tests
+//! meaningful under any machine configuration.
+//!
+//! The [`reference`] module holds naive triple-loop oracles used by tests
+//! and benches.
+
+mod attn;
+mod gemm;
+pub mod reference;
+
+pub use attn::{causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
+pub use attn::{causal_attn_fwd, causal_attn_fwd_with_threads};
+pub use gemm::{gemm, gemm_nt, gemm_nt_with_threads, gemm_tn, gemm_tn_outcols};
+pub use gemm::{gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_threads, gemv_acc};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Problems smaller than this many multiply-adds run on the calling
+/// thread: at ~1 GFLOP/s-per-core worst case this is tens of
+/// microseconds, the same order as a thread spawn.
+pub const MIN_PAR_WORK: usize = 1 << 16;
+
+/// `0` means "not overridden" — fall back to the environment.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the kernel worker count for this process (the CLI `--threads`
+/// flag lands here). Takes precedence over `S2FT_THREADS`.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Worker count kernels use by default: [`set_threads`] override, else
+/// `S2FT_THREADS`, else available parallelism (read once per process).
+pub fn configured_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("S2FT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+    })
+}
+
+/// Split `out` into contiguous whole-row chunks and run `f(first_row,
+/// chunk)` on scoped worker threads — the single partitioning primitive
+/// behind every kernel. `work` is a multiply-add estimate; below
+/// [`MIN_PAR_WORK`] (or with one thread / one row) `f` runs inline.
+pub(crate) fn for_each_row_chunk(
+    out: &mut [f32],
+    row_len: usize,
+    threads: usize,
+    work: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    if out.is_empty() || row_len == 0 {
+        return;
+    }
+    let rows = out.len() / row_len;
+    let t = threads.min(rows);
+    if t <= 1 || work < MIN_PAR_WORK {
+        f(0, out);
+        return;
+    }
+    let per = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * per, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configured_threads_positive() {
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn set_threads_overrides() {
+        // run last-wins semantics through the atomic; restore a sane value
+        set_threads(3);
+        assert_eq!(configured_threads(), 3);
+        set_threads(1);
+        assert_eq!(configured_threads(), 1);
+    }
+
+    #[test]
+    fn row_chunks_cover_all_rows_once() {
+        for threads in [1usize, 2, 3, 5, 16] {
+            let rows = 13;
+            let cols = 4;
+            let mut out = vec![0.0f32; rows * cols];
+            // force the parallel path with a huge work estimate
+            for_each_row_chunk(&mut out, cols, threads, usize::MAX, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(cols).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + r) as f32 + 1.0;
+                    }
+                }
+            });
+            let want: Vec<f32> = (0..rows).flat_map(|r| vec![r as f32 + 1.0; cols]).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn row_chunks_empty_is_noop() {
+        let mut out: Vec<f32> = vec![];
+        for_each_row_chunk(&mut out, 4, 8, usize::MAX, |_, _| panic!("called on empty"));
+    }
+}

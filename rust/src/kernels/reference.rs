@@ -1,0 +1,73 @@
+//! Naive triple-loop GEMM oracles.
+//!
+//! Deliberately unblocked and single-threaded: these are the ground truth
+//! the optimized kernels are proptested against (elementwise, bit-exact —
+//! both sides accumulate each output element in ascending reduction
+//! order) and the "before" side of the kernel micro-benchmarks.
+
+/// `A (m,k) @ B (k,n)`.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a[i * k + kk] * b[kk * n + j];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+/// `A (m,k) @ Bᵀ` with `B (n,k)`.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a[i * k + kk] * b[j * k + kk];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+/// `A[:, :lim]ᵀ @ B` with `A (rows, ka)`, `B (rows, kb)` → `(lim, kb)`.
+pub fn gemm_tn(a: &[f32], b: &[f32], rows: usize, ka: usize, kb: usize, lim: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; lim * kb];
+    for i in 0..lim {
+        for j in 0..kb {
+            let mut s = 0.0f32;
+            for r in 0..rows {
+                s += a[r * ka + i] * b[r * kb + j];
+            }
+            out[i * kb + j] = s;
+        }
+    }
+    out
+}
+
+/// `Aᵀ @ B[:, :lim]` with `A (rows, ka)`, `B (rows, kb)` → `(ka, lim)`.
+pub fn gemm_tn_outcols(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; ka * lim];
+    for i in 0..ka {
+        for j in 0..lim {
+            let mut s = 0.0f32;
+            for r in 0..rows {
+                s += a[r * ka + i] * b[r * kb + j];
+            }
+            out[i * lim + j] = s;
+        }
+    }
+    out
+}

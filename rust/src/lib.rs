@@ -25,11 +25,21 @@
 //!
 //! Backend selection is a single call — [`runtime::open_backend`] — and
 //! everything above the [`runtime`] module is backend-agnostic.
+//!
+//! # Compute kernels
+//!
+//! Every dense GEMM — native forward/backward, the linear-algebra
+//! substrate, multi-adapter serving — routes through the shared
+//! [`kernels`] subsystem: cache-blocked, multi-threaded (scoped
+//! `std::thread`, sized by `S2FT_THREADS` / `--threads`), and
+//! bit-identical across thread counts because only the output is ever
+//! partitioned, never the reduction axis.
 
 pub mod adapter;
 pub mod config;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod linalg;
 pub mod runtime;
 pub mod serve;

@@ -72,24 +72,15 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — ikj loop order (row-major cache friendly).
+    /// `self @ other` via the shared parallel kernel subsystem
+    /// ([`crate::kernels::gemm`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul {self:?} @ {other:?}");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
-                }
-                let src = &other.data[k * other.cols..(k + 1) * other.cols];
-                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += a * s;
-                }
-            }
+        Mat {
+            rows: self.rows,
+            cols: other.cols,
+            data: crate::kernels::gemm(&self.data, &other.data, self.rows, self.cols, other.cols),
         }
-        out
     }
 
     pub fn add(&self, other: &Mat) -> Mat {
@@ -138,23 +129,25 @@ impl Mat {
         vt.t().matmul(&sp).matmul(&u.t())
     }
 
-    /// Best rank-r approximation (truncated SVD) — the LoRA min-norm update.
+    /// Best rank-r approximation (truncated SVD) — the LoRA min-norm
+    /// update. Reconstruction `(U_r Σ_r) @ Vt_r` runs on the shared GEMM
+    /// kernel.
     pub fn svd_truncate(&self, r: usize) -> Mat {
         let Svd { u, s, vt } = svd(self);
         let r = r.min(s.len());
-        let mut out = Mat::zeros(self.rows, self.cols);
-        for k in 0..r {
-            for i in 0..self.rows {
-                let uik = u[(i, k)] * s[k];
-                if uik == 0.0 {
-                    continue;
-                }
-                for j in 0..self.cols {
-                    out[(i, j)] += uik * vt[(k, j)];
-                }
+        // gather the first r columns of U scaled by the singular values
+        let mut us = Vec::with_capacity(self.rows * r);
+        for i in 0..self.rows {
+            for (k, &sv) in s.iter().enumerate().take(r) {
+                us.push(u[(i, k)] * sv);
             }
         }
-        out
+        let vtr = &vt.data[..r * self.cols];
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: crate::kernels::gemm(&us, vtr, self.rows, r, self.cols),
+        }
     }
 
     /// Keep only the rows in `idx`, zeroing the rest (S²FT-style projector).

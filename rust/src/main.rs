@@ -11,7 +11,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use repro::config::TrainConfig;
 use repro::data::{self, Tokenizer};
@@ -111,6 +111,10 @@ fn main() {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
+    if let Some(n) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        // size the shared kernel worker pool (overrides S2FT_THREADS)
+        repro::kernels::set_threads(n);
+    }
     let result = match cmd.as_str() {
         "info" => cmd_info(&args),
         "pretrain" => cmd_pretrain(&args),
@@ -119,6 +123,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "adapter" => cmd_adapter(&args),
         "experiment" => cmd_experiment(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -145,9 +150,15 @@ USAGE:
   repro adapter extract|apply|info [--model M --method T --base DIR --ft DIR
               --adapter FILE --out PATH]
   repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
+  repro bench-compare [--current FILE] [--baseline FILE] [--warn R] [--fail R]
 
 Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
 variants, see `repro info`). Artifacts default to ./artifacts.
+
+Every command accepts --threads N to size the shared GEMM kernel worker
+pool (default: S2FT_THREADS env, else all cores). bench-compare diffs a
+bench JSON against a committed baseline and exits non-zero past --fail
+(default 2.0x median; --warn 1.3x prints warnings only).
 
 Backends (--backend native|pjrt|auto): the native pure-rust interpreter
 runs fullft + s2ft with no artifacts, python or XLA; pjrt (cargo feature)
@@ -375,6 +386,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.usize_or("requests", 32),
         args.usize_or("max-batch", 8),
     )
+}
+
+/// CI regression gate: diff a bench JSON against the committed baseline.
+/// Exits non-zero when any median regresses past `--fail` (default 2.0x);
+/// ratios past `--warn` (default 1.3x) only print, keeping the gate
+/// robust to shared-runner noise.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let cur_path = args.get_or("current", "rust/results/bench_kernels.json");
+    let base_path = args.get_or("baseline", "rust/benches/baseline/kernels.json");
+    let warn: f64 = args.get("warn").and_then(|s| s.parse().ok()).unwrap_or(1.3);
+    let fail: f64 = args.get("fail").and_then(|s| s.parse().ok()).unwrap_or(2.0);
+    let cur = repro::util::json::Json::parse(
+        &std::fs::read_to_string(cur_path).with_context(|| format!("reading {cur_path}"))?,
+    )?;
+    let base = repro::util::json::Json::parse(
+        &std::fs::read_to_string(base_path).with_context(|| format!("reading {base_path}"))?,
+    )?;
+    let cmp = repro::util::bench::compare_bench(&cur, &base)?;
+    if let Some(reason) = &cmp.skipped {
+        println!("bench-compare: current run was skipped ({reason}); nothing to gate");
+        return Ok(());
+    }
+    println!("bench-compare: {cur_path} vs {base_path} (warn >{warn}x, fail >{fail}x)\n");
+    let mut warned = 0usize;
+    let mut failed = 0usize;
+    for d in &cmp.deltas {
+        let flag = if d.ratio > fail {
+            failed += 1;
+            "FAIL"
+        } else if d.ratio > warn {
+            warned += 1;
+            "warn"
+        } else {
+            "  ok"
+        };
+        println!(
+            "  {flag} {:<48} {:>10} -> {:>10}  ({:.2}x)",
+            d.name,
+            repro::util::bench::fmt_ns(d.baseline_ns),
+            repro::util::bench::fmt_ns(d.current_ns),
+            d.ratio
+        );
+    }
+    for name in &cmp.missing {
+        println!("  FAIL {name:<48} missing from current run");
+    }
+    for name in &cmp.added {
+        println!("   new {name:<48} (no baseline yet — run `make bench-baseline`)");
+    }
+    if warned > 0 {
+        println!("\n{warned} benchmark(s) in the {warn}x..{fail}x noise band — not failing");
+    }
+    if failed > 0 {
+        bail!("{failed} benchmark(s) regressed past {fail}x median vs baseline");
+    }
+    // a gate that compared nothing proves nothing: renamed/lost benchmarks
+    // must fail until the committed baseline is regenerated
+    if !cmp.missing.is_empty() {
+        bail!(
+            "{} baseline benchmark(s) missing from the current run — \
+             if renames are intended, refresh with `make bench-baseline`",
+            cmp.missing.len()
+        );
+    }
+    if cmp.deltas.is_empty() {
+        bail!("no overlapping benchmarks between {cur_path} and {base_path}");
+    }
+    println!("\nbaseline comparison passed ({} benchmarks)", cmp.deltas.len());
+    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {

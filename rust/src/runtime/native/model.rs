@@ -14,6 +14,9 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kernels::{
+    causal_attn_bwd, causal_attn_fwd, gemm, gemm_nt, gemm_tn, gemm_tn_outcols, AttnDims,
+};
 use crate::runtime::meta::{MethodMeta, ModelMeta};
 use crate::runtime::Tensor;
 use crate::sparsity;
@@ -76,94 +79,11 @@ pub fn init_params(mm: &ModelMeta, seed: i32) -> HashMap<String, Tensor> {
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels
+// Dense kernels — all GEMMs route through `crate::kernels` (cache-blocked,
+// multi-threaded, bit-identical across thread counts). The S²FT partial
+// gradients use `gemm_tn`/`gemm_tn_outcols`, which slice the trainable
+// rows/columns *before* the dW GEMM (paper §3.3).
 // ---------------------------------------------------------------------------
-
-/// `a (m,k) @ b (k,n)` — ikj loop order.
-fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `a (m,k) @ bᵀ` with `b (n,k)` — row-dot products.
-fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            *o = s;
-        }
-    }
-    out
-}
-
-/// `a[:, :lim]ᵀ @ b` with `a (rows, ka)`, `b (rows, kb)` → `(lim, kb)`.
-///
-/// This is the S²FT partial-backprop kernel: with `lim < ka` only the
-/// trainable slice of the weight gradient is ever materialized.
-fn gemm_tn(a: &[f32], b: &[f32], rows: usize, ka: usize, kb: usize, lim: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; lim * kb];
-    for r in 0..rows {
-        let arow = &a[r * ka..r * ka + lim];
-        let brow = &b[r * kb..(r + 1) * kb];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * kb..(i + 1) * kb];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `aᵀ @ b[:, :lim]` with `a (rows, ka)`, `b (rows, kb)` → `(ka, lim)` —
-/// the column-split partial gradient (trainable head/channel columns).
-fn gemm_tn_outcols(
-    a: &[f32],
-    b: &[f32],
-    rows: usize,
-    ka: usize,
-    kb: usize,
-    lim: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; ka * lim];
-    for r in 0..rows {
-        let arow = &a[r * ka..(r + 1) * ka];
-        let brow = &b[r * kb..r * kb + lim];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * lim..(i + 1) * lim];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
 
 fn add_assign(dst: &mut [f32], src: &[f32]) {
     for (d, s) in dst.iter_mut().zip(src) {
@@ -353,49 +273,7 @@ fn forward(mm: &ModelMeta, w: &WeightMap, tokens: &[i32], b: usize, t: usize) ->
         apply_rope(&mut qr, b, t, heads, hd, &cos, &sin, false);
         apply_rope(&mut kr, b, t, heads, hd, &cos, &sin, false);
 
-        let mut probs = vec![0.0f32; b * heads * t * t];
-        let mut attn = vec![0.0f32; n * d];
-        for bi in 0..b {
-            for hh in 0..heads {
-                for tq in 0..t {
-                    let qoff = (bi * t + tq) * d + hh * hd;
-                    let prow =
-                        &mut probs[((bi * heads + hh) * t + tq) * t..][..t];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for (tk, p) in prow.iter_mut().enumerate().take(tq + 1) {
-                        let koff = (bi * t + tk) * d + hh * hd;
-                        let mut s = 0.0f32;
-                        for j in 0..hd {
-                            s += qr[qoff + j] * kr[koff + j];
-                        }
-                        let s = s * scale;
-                        *p = s;
-                        if s > maxv {
-                            maxv = s;
-                        }
-                    }
-                    let mut denom = 0.0f32;
-                    for p in prow.iter_mut().take(tq + 1) {
-                        *p = (*p - maxv).exp();
-                        denom += *p;
-                    }
-                    for p in prow.iter_mut().take(tq + 1) {
-                        *p /= denom;
-                    }
-                    let aoff = (bi * t + tq) * d + hh * hd;
-                    for tk in 0..=tq {
-                        let p = prow[tk];
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let voff = (bi * t + tk) * d + hh * hd;
-                        for j in 0..hd {
-                            attn[aoff + j] += p * v[voff + j];
-                        }
-                    }
-                }
-            }
-        }
+        let (probs, attn) = causal_attn_fwd(&qr, &kr, &v, &AttnDims { b, t, heads, hd }, scale);
 
         let mut h_mid = h_in.clone();
         add_assign(&mut h_mid, &gemm(&attn, weight(w, &format!("L{i}.wo"))?, n, d, d));
@@ -675,45 +553,15 @@ fn backward(
         }
         let da = gemm_nt(&dh_mid, weight(w, &format!("L{i}.wo"))?, n, d, d);
 
-        let mut dqr = vec![0.0f32; n * d];
-        let mut dkr = vec![0.0f32; n * d];
-        let mut dv = vec![0.0f32; n * d];
-        for bi in 0..b {
-            for hh in 0..heads {
-                for tq in 0..t {
-                    let prow = &lc.probs[((bi * heads + hh) * t + tq) * t..][..t];
-                    let doff = (bi * t + tq) * d + hh * hd;
-                    let mut dpro = vec![0.0f32; tq + 1];
-                    for (tk, dp) in dpro.iter_mut().enumerate() {
-                        let voff = (bi * t + tk) * d + hh * hd;
-                        let mut s = 0.0f32;
-                        for j in 0..hd {
-                            s += da[doff + j] * lc.v[voff + j];
-                        }
-                        *dp = s;
-                        let p = prow[tk];
-                        if p != 0.0 {
-                            for j in 0..hd {
-                                dv[voff + j] += p * da[doff + j];
-                            }
-                        }
-                    }
-                    let dot: f32 =
-                        dpro.iter().zip(prow).map(|(dp, p)| dp * p).sum();
-                    for (tk, dp) in dpro.iter().enumerate() {
-                        let ds = prow[tk] * (dp - dot) * scale;
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        let koff = (bi * t + tk) * d + hh * hd;
-                        for j in 0..hd {
-                            dqr[doff + j] += ds * lc.kr[koff + j];
-                            dkr[koff + j] += ds * lc.qr[doff + j];
-                        }
-                    }
-                }
-            }
-        }
+        let (mut dqr, mut dkr, dv) = causal_attn_bwd(
+            &lc.probs,
+            &lc.qr,
+            &lc.kr,
+            &lc.v,
+            &da,
+            &AttnDims { b, t, heads, hd },
+            scale,
+        );
         apply_rope(&mut dqr, b, t, heads, hd, &cos, &sin, true);
         apply_rope(&mut dkr, b, t, heads, hd, &cos, &sin, true);
 

@@ -1,11 +1,19 @@
 //! Minimal criterion-style bench harness (criterion is not vendored).
 //!
 //! Each `cargo bench` target is a `harness = false` binary that builds a
-//! [`BenchSuite`], registers closures, and calls [`BenchSuite::run`]. The
+//! [`BenchSuite`], registers closures, and calls [`BenchSuite::bench`]. The
 //! harness warms up, runs timed batches until a wall budget, and reports
 //! median / p10 / p90 per-iteration times plus throughput.
+//!
+//! CI hooks: `S2FT_BENCH_BUDGET_MS` caps the per-bench wall budget (the
+//! `bench-smoke` job sets a short one), [`BenchSuite::save_skipped`]
+//! records a machine-readable skip marker instead of silently exiting
+//! (so a missing artifact is distinguishable from a lost file), and
+//! [`compare_bench`] diffs two result files for the regression gate.
 
 use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
@@ -40,15 +48,26 @@ pub struct BenchSuite {
     pub results: Vec<BenchResult>,
 }
 
+/// Wall-budget override from the environment (CI smoke runs).
+fn env_budget() -> Option<Duration> {
+    std::env::var("S2FT_BENCH_BUDGET_MS")
+        .ok()?
+        .parse::<u64>()
+        .ok()
+        .map(|ms| Duration::from_millis(ms.max(1)))
+}
+
 impl BenchSuite {
     pub fn new(suite: &str) -> Self {
-        Self {
+        let mut s = Self {
             suite: suite.to_string(),
             warmup: Duration::from_millis(200),
             budget: Duration::from_secs(2),
             min_iters: 10,
             results: Vec::new(),
-        }
+        };
+        s.apply_env_budget();
+        s
     }
 
     /// For expensive benchmarks (whole train steps).
@@ -56,7 +75,17 @@ impl BenchSuite {
         self.warmup = Duration::from_millis(0);
         self.budget = Duration::from_secs(4);
         self.min_iters = 3;
+        self.apply_env_budget();
         self
+    }
+
+    /// Honor `S2FT_BENCH_BUDGET_MS` (CI smoke budget): cap the timed
+    /// budget and shrink the warmup proportionally.
+    fn apply_env_budget(&mut self) {
+        if let Some(b) = env_budget() {
+            self.budget = b;
+            self.warmup = self.warmup.min(b / 4);
+        }
     }
 
     pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
@@ -115,6 +144,103 @@ impl BenchSuite {
             println!("saved {path}");
         }
     }
+
+    /// A bench target that cannot run (missing backend/artifacts) must
+    /// still leave a machine-readable record, so the CI artifact
+    /// distinguishes "skipped" from "lost". Writes
+    /// `results/bench_<suite>.json` with a `skipped` reason.
+    pub fn save_skipped(suite: &str, reason: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let js = Json::obj(vec![("suite", Json::str(suite)), ("skipped", Json::str(reason))]);
+        let path = format!("results/bench_{suite}.json");
+        if std::fs::write(&path, js.to_string_pretty()).is_ok() {
+            eprintln!("skipping {suite} bench: {reason} (recorded in {path})");
+        } else {
+            eprintln!("skipping {suite} bench: {reason} (could not write {path})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline comparison (the CI `compare-bench` gate)
+// ---------------------------------------------------------------------------
+
+/// One benchmark's current-vs-baseline ratio (`> 1` = slower than base).
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    pub ratio: f64,
+}
+
+/// Outcome of diffing a current bench JSON against a committed baseline.
+#[derive(Debug, Default)]
+pub struct BenchCompare {
+    /// The current file is a skip record (reason), not results.
+    pub skipped: Option<String>,
+    /// Benchmarks present on both sides, with median ratios.
+    pub deltas: Vec<BenchDelta>,
+    /// Baseline entries missing from the current run.
+    pub missing: Vec<String>,
+    /// Current entries with no baseline yet.
+    pub added: Vec<String>,
+}
+
+impl BenchCompare {
+    /// Slowest relative entry, if any ran.
+    pub fn worst(&self) -> Option<&BenchDelta> {
+        self.deltas
+            .iter()
+            .max_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+fn parse_results(j: &Json) -> Result<Vec<(String, f64)>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| Ok((e.get("name")?.as_str()?.to_string(), e.get("median_ns")?.as_f64()?)))
+        .collect()
+}
+
+/// Diff two bench JSON documents (arrays of [`BenchResult`] objects, or a
+/// `{"skipped": ...}` record on the current side). Median-time ratios are
+/// matched by benchmark name; order does not matter.
+pub fn compare_bench(current: &Json, baseline: &Json) -> Result<BenchCompare> {
+    if let Some(reason) = current.opt("skipped") {
+        return Ok(BenchCompare {
+            skipped: Some(reason.as_str().unwrap_or("unknown").to_string()),
+            ..BenchCompare::default()
+        });
+    }
+    if baseline.opt("skipped").is_some() {
+        bail!("baseline is a skip record — regenerate it with `make bench-baseline`");
+    }
+    let cur = parse_results(current)?;
+    let base = parse_results(baseline)?;
+    let cur_map: std::collections::BTreeMap<&str, f64> =
+        cur.iter().map(|(n, m)| (n.as_str(), *m)).collect();
+    let base_map: std::collections::BTreeMap<&str, f64> =
+        base.iter().map(|(n, m)| (n.as_str(), *m)).collect();
+    let mut out = BenchCompare::default();
+    for (name, &base_ns) in &base_map {
+        match cur_map.get(name) {
+            Some(&cur_ns) if base_ns > 0.0 => out.deltas.push(BenchDelta {
+                name: name.to_string(),
+                baseline_ns: base_ns,
+                current_ns: cur_ns,
+                ratio: cur_ns / base_ns,
+            }),
+            Some(_) => {} // degenerate zero baseline: no ratio
+            None => out.missing.push(name.to_string()),
+        }
+    }
+    for name in cur_map.keys() {
+        if !base_map.contains_key(name) {
+            out.added.push(name.to_string());
+        }
+    }
+    Ok(out)
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -156,5 +282,56 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    fn results_json(entries: &[(&str, f64)]) -> Json {
+        let rows = entries
+            .iter()
+            .map(|(n, m)| Json::obj(vec![("name", Json::str(*n)), ("median_ns", Json::num(*m))]))
+            .collect();
+        Json::Arr(rows)
+    }
+
+    #[test]
+    fn compare_matches_by_name_and_ratios() {
+        let base = results_json(&[("a", 100.0), ("b", 200.0), ("gone", 50.0)]);
+        let cur = results_json(&[("b", 500.0), ("a", 100.0), ("new", 10.0)]);
+        let cmp = compare_bench(&cur, &base).unwrap();
+        assert!(cmp.skipped.is_none());
+        assert_eq!(cmp.deltas.len(), 2);
+        assert_eq!(cmp.missing, vec!["gone".to_string()]);
+        assert_eq!(cmp.added, vec!["new".to_string()]);
+        let worst = cmp.worst().unwrap();
+        assert_eq!(worst.name, "b");
+        assert!((worst.ratio - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compare_detects_skip_records() {
+        let cur = Json::obj(vec![
+            ("suite", Json::str("fig5_training")),
+            ("skipped", Json::str("no artifacts")),
+        ]);
+        let base = results_json(&[("a", 100.0)]);
+        let cmp = compare_bench(&cur, &base).unwrap();
+        assert_eq!(cmp.skipped.as_deref(), Some("no artifacts"));
+        assert!(cmp.deltas.is_empty());
+        // a skip record on the *baseline* side is a configuration error
+        assert!(compare_bench(&base, &cur).is_err());
+    }
+
+    #[test]
+    fn compare_roundtrips_through_serialized_results() {
+        let mut s = BenchSuite::new("cmp_roundtrip");
+        s.budget = Duration::from_millis(10);
+        s.warmup = Duration::from_millis(1);
+        s.bench("x", || {
+            black_box(2 + 2);
+        });
+        let js = Json::Arr(s.results.iter().map(|r| r.to_json()).collect());
+        let reparsed = Json::parse(&js.to_string_pretty()).unwrap();
+        let cmp = compare_bench(&reparsed, &reparsed).unwrap();
+        assert_eq!(cmp.deltas.len(), 1);
+        assert!((cmp.deltas[0].ratio - 1.0).abs() < 1e-12);
     }
 }

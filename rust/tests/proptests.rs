@@ -11,6 +11,7 @@ use repro::adapter::{S2ftAdapter, S2ftLayerDelta};
 use repro::data::batch::encode_example;
 use repro::data::tokenizer::{Tokenizer, EOS, PAD, SEP};
 use repro::data::{Example, Split, World, ARITHMETIC, COMMONSENSE, INSTRUCT};
+use repro::kernels;
 use repro::linalg::Mat;
 use repro::runtime::Tensor;
 use repro::serve::AdapterBatcher;
@@ -270,6 +271,174 @@ fn prop_batch_encoding_supervises_answer() {
             }
         }
         assert!(tokens.contains(&SEP));
+    }
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Every parallel GEMM kernel matches the naive triple-loop reference
+/// elementwise (bit-exact: both sides accumulate each output in ascending
+/// reduction order), at arbitrary shapes and thread counts.
+#[test]
+fn prop_gemm_kernels_match_naive_reference() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(7000 + case as u64);
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(24);
+        let n = 1 + rng.below(24);
+        let threads = 1 + rng.below(5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bt = randv(&mut rng, n * k);
+        assert!(
+            bits_eq(
+                &kernels::gemm_with_threads(&a, &b, m, k, n, threads),
+                &kernels::reference::gemm(&a, &b, m, k, n),
+            ),
+            "case {case}: gemm {m}x{k}x{n} t={threads}"
+        );
+        assert!(
+            bits_eq(
+                &kernels::gemm_nt_with_threads(&a, &bt, m, k, n, threads),
+                &kernels::reference::gemm_nt(&a, &bt, m, k, n),
+            ),
+            "case {case}: gemm_nt {m}x{k}x{n} t={threads}"
+        );
+    }
+}
+
+/// The S²FT partial-gradient kernels: for every `lim <= ka` (including
+/// strict partial slices) the result equals the naive reference AND the
+/// corresponding slice of the full-width gradient — i.e. slicing before
+/// the GEMM loses nothing but the frozen rows/columns.
+#[test]
+fn prop_partial_gradient_kernels_slice_exactly() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(7500 + case as u64);
+        let rows = 1 + rng.below(24);
+        let ka = 2 + rng.below(24);
+        let kb = 1 + rng.below(24);
+        let threads = 1 + rng.below(5);
+        let a = randv(&mut rng, rows * ka);
+        let b = randv(&mut rng, rows * kb);
+        let lim = 1 + rng.below(ka); // often a strict partial slice
+        let part = kernels::gemm_tn_with_threads(&a, &b, rows, ka, kb, lim, threads);
+        assert!(
+            bits_eq(&part, &kernels::reference::gemm_tn(&a, &b, rows, ka, kb, lim)),
+            "case {case}: gemm_tn lim={lim}/{ka}"
+        );
+        let full = kernels::gemm_tn_with_threads(&a, &b, rows, ka, kb, ka, threads);
+        assert!(bits_eq(&part, &full[..lim * kb]), "case {case}: partial != slice of full");
+
+        let limc = 1 + rng.below(kb);
+        let partc = kernels::gemm_tn_outcols_with_threads(&a, &b, rows, ka, kb, limc, threads);
+        assert!(
+            bits_eq(&partc, &kernels::reference::gemm_tn_outcols(&a, &b, rows, ka, kb, limc)),
+            "case {case}: gemm_tn_outcols lim={limc}/{kb}"
+        );
+        let fullc = kernels::gemm_tn_outcols_with_threads(&a, &b, rows, ka, kb, kb, threads);
+        let sliced: Vec<f32> =
+            (0..ka).flat_map(|i| fullc[i * kb..i * kb + limc].to_vec()).collect();
+        assert!(bits_eq(&partc, &sliced), "case {case}: outcols partial != cols of full");
+    }
+}
+
+/// `S2FT_THREADS=1` vs `N` bit-equality on shapes large enough to cross
+/// the parallel threshold — the determinism contract the numeric tests
+/// rely on (only the output is partitioned, never the reduction axis).
+#[test]
+fn prop_kernels_thread_count_bit_identical() {
+    for case in 0..12 {
+        let mut rng = Rng::seed(7900 + case as u64);
+        let m = 33 + rng.below(31);
+        let k = 33 + rng.below(31);
+        let n = 33 + rng.below(31);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bt = randv(&mut rng, n * k);
+        let g1 = kernels::gemm_with_threads(&a, &b, m, k, n, 1);
+        let nt1 = kernels::gemm_nt_with_threads(&a, &bt, m, k, n, 1);
+        let tn1 = kernels::gemm_tn_with_threads(&a, &a, m, k, k, k, 1);
+        let oc1 = kernels::gemm_tn_outcols_with_threads(&a, &a, m, k, k, k, 1);
+        for threads in [2usize, 3, 4, 7] {
+            assert!(
+                bits_eq(&g1, &kernels::gemm_with_threads(&a, &b, m, k, n, threads)),
+                "case {case}: gemm t={threads}"
+            );
+            assert!(
+                bits_eq(&nt1, &kernels::gemm_nt_with_threads(&a, &bt, m, k, n, threads)),
+                "case {case}: gemm_nt t={threads}"
+            );
+            assert!(
+                bits_eq(&tn1, &kernels::gemm_tn_with_threads(&a, &a, m, k, k, k, threads)),
+                "case {case}: gemm_tn t={threads}"
+            );
+            assert!(
+                bits_eq(&oc1, &kernels::gemm_tn_outcols_with_threads(&a, &a, m, k, k, k, threads)),
+                "case {case}: gemm_tn_outcols t={threads}"
+            );
+        }
+    }
+}
+
+/// The causal-attention kernel pair is bit-identical across thread counts
+/// and produces causal softmax rows.
+#[test]
+fn prop_attention_kernels_deterministic_and_causal() {
+    for case in 0..10 {
+        let mut rng = Rng::seed(8200 + case as u64);
+        let dims = kernels::AttnDims {
+            b: 2 + rng.below(3),
+            t: 8 + rng.below(17),
+            heads: 1 + rng.below(4),
+            hd: 2 * (1 + rng.below(4)),
+        };
+        let d = dims.heads * dims.hd;
+        let nel = dims.b * dims.t * d;
+        let qr = randv(&mut rng, nel);
+        let kr = randv(&mut rng, nel);
+        let v = randv(&mut rng, nel);
+        let da = randv(&mut rng, nel);
+        let scale = 1.0 / (dims.hd as f32).sqrt();
+        let (p1, a1) = kernels::causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, 1);
+        let (dq1, dk1, dv1) =
+            kernels::causal_attn_bwd_with_threads(&p1, &qr, &kr, &v, &da, &dims, scale, 1);
+        for threads in [2usize, 3, 5] {
+            let (pt, at) =
+                kernels::causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, threads);
+            assert!(bits_eq(&p1, &pt) && bits_eq(&a1, &at), "case {case}: fwd t={threads}");
+            let (dqt, dkt, dvt) = kernels::causal_attn_bwd_with_threads(
+                &p1,
+                &qr,
+                &kr,
+                &v,
+                &da,
+                &dims,
+                scale,
+                threads,
+            );
+            assert!(
+                bits_eq(&dq1, &dqt) && bits_eq(&dk1, &dkt) && bits_eq(&dv1, &dvt),
+                "case {case}: bwd t={threads}"
+            );
+        }
+        // causal structure: row tq is a softmax over keys 0..=tq, 0 after
+        for bi in 0..dims.b {
+            for hh in 0..dims.heads {
+                for tq in 0..dims.t {
+                    let row = &p1[((bi * dims.heads + hh) * dims.t + tq) * dims.t..][..dims.t];
+                    let sum: f32 = row[..=tq].iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-4, "case {case}: sum {sum}");
+                    assert!(row[tq + 1..].iter().all(|&p| p == 0.0), "case {case}: acausal");
+                }
+            }
+        }
     }
 }
 
