@@ -7,14 +7,15 @@
 #   make fmt lint doc   formatting / clippy / rustdoc gates (same as CI)
 #   make bench          run every harness=false bench (JSON in rust/results/)
 #   make bench-smoke    same with the short CI wall budget
-#   make bench-baseline regenerate the committed kernels regression baseline
-#   make bench-compare  gate rust/results/bench_kernels.json vs the baseline
+#   make bench-baseline regenerate the committed regression baselines
+#   make bench-compare  gate kernels + serve results vs the baselines
+#   make serve-smoke    engine-pool serving end-to-end (hermetic, native)
 
 CARGO ?= cargo
 MANIFEST = rust/Cargo.toml
 
 .PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint doc clean \
-	bench bench-smoke bench-baseline bench-compare
+	bench bench-smoke bench-baseline bench-compare serve-smoke
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -43,13 +44,22 @@ bench-smoke:
 
 bench-baseline:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench kernels
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench serve
 	cp rust/results/bench_kernels.json rust/benches/baseline/kernels.json
-	@echo "baseline updated: rust/benches/baseline/kernels.json (commit it)"
+	cp rust/results/bench_serve.json rust/benches/baseline/serve.json
+	@echo "baselines updated: rust/benches/baseline/{kernels,serve}.json (commit them)"
 
 bench-compare:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
 	  --current rust/results/bench_kernels.json \
 	  --baseline rust/benches/baseline/kernels.json
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
+	  --current rust/results/bench_serve.json \
+	  --baseline rust/benches/baseline/serve.json
+
+serve-smoke:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve \
+	  --backend native --model tiny --workers 2 --adapters 3 --requests 32 --stream
 
 # Build-time only: lower every (model, method) to HLO text + meta.json.
 # Requires a python environment with jax installed; the rust side never

@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use repro::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use repro::adapter::{AdapterSlot, AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
 use repro::data::{supervised_batch, Example, Tokenizer};
 use repro::runtime::Tensor;
 use repro::serve::AdapterBatcher;
@@ -41,7 +41,7 @@ fn main() {
             .collect();
         AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d })
     };
-    let mut store = AdapterStore::new();
+    let store = AdapterStore::new();
     for i in 0..16 {
         store.insert(format!("a{i}"), mk_adapter(&mut rng));
     }
@@ -51,15 +51,15 @@ fn main() {
         params.insert(format!("L{i}.wd"), Tensor::zeros(vec![704, d]));
     }
     let snapshot = params.clone();
+    let mut slot = AdapterSlot::new();
     let mut flip = 0usize;
     suite.bench("store/switch_16_adapters", || {
         flip += 1;
-        store
-            .switch_to(&format!("a{}", flip % 16), &mut params, &snapshot)
+        slot.switch_to(&store, &format!("a{}", flip % 16), &mut params, &snapshot)
             .unwrap();
     });
 
-    // tokenizer + batch building (the router-side per-request cost)
+    // tokenizer + batch building (the submit-side per-request cost)
     let tk = Tokenizer;
     let examples: Vec<Example> = (0..8)
         .map(|i| Example {

@@ -1,0 +1,92 @@
+//! Serving benches: KV-cached decode vs full recompute, and engine-pool
+//! wave throughput at 1/2/4 workers (the multi-worker scaling datum the
+//! baseline gate tracks).
+//!
+//! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
+//! `make bench-baseline` regenerates the committed regression baseline
+//! from this target's JSON.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
+use repro::serve::{synthetic_adapter, Engine, EngineConfig, GenRequest};
+use repro::train::{DecodeRequest, GenModel};
+use repro::util::bench::{black_box, BenchSuite};
+use repro::util::rng::Rng;
+
+fn tiny_params(rt: &NativeBackend) -> HashMap<String, Tensor> {
+    let init = rt.load("init_tiny").unwrap();
+    let outs = init.run(&[Tensor::scalar_i32(5)]).unwrap();
+    init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect()
+}
+
+fn spawn_engine(workers: usize, n_adapters: usize) -> Engine {
+    let cfg = EngineConfig::new()
+        .workers(workers)
+        .max_batch(2)
+        .window(Duration::from_millis(1));
+    let engine = Engine::spawn(cfg, |_wid| {
+        let rt = NativeBackend::builtin();
+        let params = tiny_params(&rt);
+        let snapshot = params.clone();
+        let gm = GenModel::new(&rt, "tiny", params)?;
+        Ok((gm, snapshot))
+    });
+    let rt = NativeBackend::builtin();
+    let mm = rt.artifacts().model("tiny").unwrap().clone();
+    let mut rng = Rng::seed(0xBE);
+    for a in 0..n_adapters {
+        engine.register(format!("a{a}"), synthetic_adapter(&mm, &mut rng));
+    }
+    engine
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("serve");
+    println!(
+        "serving benches (available parallelism {})\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    );
+
+    // --- decode hot path: O(t) cached step vs O(t²) full recompute ------
+    let rt = NativeBackend::builtin();
+    let gm = GenModel::new(&rt, "tiny", tiny_params(&rt)).unwrap();
+    let reqs: Vec<DecodeRequest> = (0..4)
+        .map(|i| DecodeRequest::greedy(format!("q: is item {i} blue and big?"), 16))
+        .collect();
+    suite.bench("decode/tiny/kv_cached_16tok", || {
+        black_box(gm.generate_stream(&reqs, |_, _| {}).unwrap());
+    });
+    suite.bench("decode/tiny/full_recompute_16tok", || {
+        black_box(gm.generate_full_recompute(&reqs, |_, _| {}).unwrap());
+    });
+
+    // --- engine pool: a 32-request wave across 4 adapters ---------------
+    for workers in [1usize, 2, 4] {
+        let engine = spawn_engine(workers, 4);
+        suite.bench(&format!("engine/tiny/wave32/workers={workers}"), || {
+            let streams: Vec<_> = (0..32)
+                .map(|i| {
+                    engine.submit(
+                        GenRequest::new(format!("a{}", i % 4), format!("q: item {i}?")).max_new(4),
+                    )
+                })
+                .collect();
+            for s in streams {
+                s.wait().expect("reply");
+            }
+        });
+        let m = engine.metrics();
+        println!(
+            "  workers={workers}: {} batches (mean size {:.1}), {} switches, {} tokens",
+            m.batches,
+            m.mean_batch_size(),
+            m.switches,
+            m.tokens
+        );
+        engine.shutdown().unwrap();
+    }
+
+    suite.save();
+}

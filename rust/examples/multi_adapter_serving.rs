@@ -1,9 +1,10 @@
-//! Multi-adapter serving (paper §6.2): router + dynamic batcher + engine
+//! Multi-adapter serving (paper §6.2): engine pool + dynamic batcher
 //! serving requests across many S²FT adapters with adapter-affinity
-//! batching and scatter_add switches.
+//! batching, scatter_add switches and KV-cached incremental decode.
 //!
 //! Run: `cargo run --release --example multi_adapter_serving`
-//! Env: ADAPTERS (default 6), REQUESTS (default 48), MAX_BATCH (default 8)
+//! Env: ADAPTERS (default 6), REQUESTS (default 48), MAX_BATCH (default 8),
+//!      WORKERS (default 2)
 
 use anyhow::Result;
 
@@ -15,6 +16,20 @@ fn main() -> Result<()> {
     let adapters = env("ADAPTERS", 6);
     let requests = env("REQUESTS", 48);
     let max_batch = env("MAX_BATCH", 8);
-    println!("multi-adapter serving demo: {adapters} adapters, {requests} requests, max batch {max_batch}");
-    repro::serve::demo("artifacts", "small", None, adapters, requests, max_batch)
+    let workers = env("WORKERS", 2);
+    println!(
+        "multi-adapter serving demo: {adapters} adapters, {requests} requests, \
+         max batch {max_batch}, {workers} workers"
+    );
+    repro::serve::demo(repro::serve::DemoOpts {
+        artifacts: "artifacts".into(),
+        backend: "auto".into(),
+        model: "small".into(),
+        weights: None,
+        adapters,
+        requests,
+        max_batch,
+        workers,
+        stream: true,
+    })
 }

@@ -13,7 +13,7 @@ mod persist;
 mod store;
 
 pub use persist::{load_adapter, save_adapter};
-pub use store::{AdapterStore, AnyAdapter};
+pub use store::{AdapterSlot, AdapterStore, AnyAdapter};
 
 use std::collections::HashMap;
 

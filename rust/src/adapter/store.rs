@@ -1,10 +1,23 @@
-//! Adapter store: holds many fine-tuned adapters in memory, tracks which
-//! one is fused into the live weights, and implements the four-step
-//! switch (unfuse old, unload, load, fuse new) from paper §6.2.
+//! Adapter store + per-worker fused-state slot.
+//!
+//! [`AdapterStore`] holds many fine-tuned adapters behind interior
+//! mutability (`RwLock` map of `Arc`-shared adapters), so one store can
+//! be shared by every worker of a [`crate::serve::Engine`] pool and
+//! mutated at runtime — register/unregister while requests are in
+//! flight, the S-LoRA-style scenario from paper §6.2.
+//!
+//! Which adapter is *fused* into a given set of live weights is
+//! per-worker state, tracked by [`AdapterSlot`]: each pool worker owns
+//! its weights and one slot, and drives the four-step switch (unfuse
+//! old, unload, load, fuse new). Because the slot keeps an `Arc` to the
+//! active adapter, unfusing still works even after the adapter has been
+//! unregistered from the store mid-flight.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::Tensor;
 
@@ -22,14 +35,121 @@ impl AnyAdapter {
             AnyAdapter::Lora(a) => a.bytes(),
         }
     }
+
+    /// Check that fusing into `params` cannot fail halfway: every
+    /// referenced tensor exists, row indices are in bounds and delta
+    /// buffers have the right length. Called *before* any mutation so
+    /// [`AdapterSlot::switch_to`] stays transactional.
+    pub fn validate(&self, params: &HashMap<String, Tensor>) -> Result<()> {
+        match self {
+            AnyAdapter::S2ft(a) => {
+                for (i, l) in a.layers.iter().enumerate() {
+                    for (proj, rows, delta) in [
+                        ("wo", &l.wo_rows, &l.wo_delta),
+                        ("wd", &l.wd_rows, &l.wd_delta),
+                    ] {
+                        if rows.is_empty() {
+                            continue;
+                        }
+                        let name = format!("L{i}.{proj}");
+                        let w = params
+                            .get(&name)
+                            .ok_or_else(|| anyhow!("adapter references missing {name:?}"))?;
+                        w.as_f32()?;
+                        if w.shape.len() != 2 || w.shape[1] != a.d_model {
+                            bail!(
+                                "adapter d_model {} incompatible with {name:?} shape {:?}",
+                                a.d_model,
+                                w.shape
+                            );
+                        }
+                        if let Some(&r) = rows.iter().max() {
+                            if r >= w.shape[0] {
+                                bail!(
+                                    "adapter row {r} out of bounds for {name:?} ({} rows)",
+                                    w.shape[0]
+                                );
+                            }
+                        }
+                        if delta.len() != rows.len() * a.d_model {
+                            bail!(
+                                "adapter delta length {} != {} rows x d_model {}",
+                                delta.len(),
+                                rows.len(),
+                                a.d_model
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            }
+            AnyAdapter::Lora(a) => {
+                for (i, l) in a.layers.iter().enumerate() {
+                    for (proj, fa, fb) in
+                        [("wo", &l.wo_a, &l.wo_b), ("wd", &l.wd_a, &l.wd_b)]
+                    {
+                        let name = format!("L{i}.{proj}");
+                        let w = params
+                            .get(&name)
+                            .ok_or_else(|| anyhow!("adapter references missing {name:?}"))?;
+                        w.as_f32()?;
+                        if fa.cols != fb.rows {
+                            bail!(
+                                "adapter {name}: A ({}, {}) incompatible with B ({}, {})",
+                                fa.rows,
+                                fa.cols,
+                                fb.rows,
+                                fb.cols
+                            );
+                        }
+                        if w.shape != [fa.rows, fb.cols] {
+                            bail!(
+                                "adapter ΔW ({}, {}) does not match {name:?} shape {:?}",
+                                fa.rows,
+                                fb.cols,
+                                w.shape
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn fuse(&self, params: &mut HashMap<String, Tensor>) -> Result<()> {
+        match self {
+            AnyAdapter::S2ft(a) => a.apply(params),
+            AnyAdapter::Lora(a) => a.apply(params),
+        }
+    }
+
+    fn unfuse(
+        &self,
+        params: &mut HashMap<String, Tensor>,
+        base_snapshot: &HashMap<String, Tensor>,
+    ) -> Result<()> {
+        match self {
+            AnyAdapter::S2ft(a) => a.remove(params),
+            AnyAdapter::Lora(_) => {
+                // LoRA cannot be unfused exactly (ΔW is dense); restore the
+                // touched projections from the pristine snapshot instead.
+                for (k, v) in base_snapshot {
+                    if k.ends_with(".wo") || k.ends_with(".wd") {
+                        params.insert(k.clone(), v.clone());
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
+/// Thread-safe adapter registry, shared across an engine pool.
 #[derive(Default)]
 pub struct AdapterStore {
-    adapters: HashMap<String, AnyAdapter>,
-    /// id currently fused into the live weights (if any)
-    active: Option<String>,
-    pub switches: usize,
+    adapters: RwLock<HashMap<String, Arc<AnyAdapter>>>,
+    switches: AtomicUsize,
 }
 
 impl AdapterStore {
@@ -37,67 +157,118 @@ impl AdapterStore {
         Self::default()
     }
 
-    pub fn insert(&mut self, id: impl Into<String>, adapter: AnyAdapter) {
-        self.adapters.insert(id.into(), adapter);
+    /// Register (or replace) an adapter. `&self`: safe while serving.
+    pub fn insert(&self, id: impl Into<String>, adapter: AnyAdapter) {
+        self.adapters.write().unwrap().insert(id.into(), Arc::new(adapter));
+    }
+
+    /// Unregister an adapter. Workers that still have it fused keep their
+    /// own `Arc` and unfuse normally on their next switch.
+    pub fn remove(&self, id: &str) -> Result<()> {
+        self.adapters
+            .write()
+            .unwrap()
+            .remove(id)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("adapter {id:?} not in store"))
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<AnyAdapter>> {
+        self.adapters.read().unwrap().get(id).cloned()
+    }
+
+    /// Registered adapter ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.adapters.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
     }
 
     pub fn len(&self) -> usize {
-        self.adapters.len()
+        self.adapters.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.adapters.is_empty()
-    }
-
-    pub fn active(&self) -> Option<&str> {
-        self.active.as_deref()
+        self.adapters.read().unwrap().is_empty()
     }
 
     pub fn total_bytes(&self) -> usize {
-        self.adapters.values().map(|a| a.bytes()).sum()
+        self.adapters.read().unwrap().values().map(|a| a.bytes()).sum()
     }
 
-    /// Switch the live weights to `id` (no-op if already active).
+    /// Total switches performed across all slots sharing this store.
+    pub fn switches(&self) -> usize {
+        self.switches.load(Ordering::Relaxed)
+    }
+
+    fn note_switch(&self) {
+        self.switches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-worker fused-adapter state: which adapter is currently merged into
+/// *this worker's* live weights, and the transactional switch between
+/// them (S²FT switch cost is two scatter_adds over s·d elements per
+/// layer; LoRA pays a ΔW GEMM — the Fig 6a comparison).
+#[derive(Default)]
+pub struct AdapterSlot {
+    active: Option<(String, Arc<AnyAdapter>)>,
+}
+
+impl AdapterSlot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Id currently fused into this slot's weights (if any).
+    pub fn active(&self) -> Option<&str> {
+        self.active.as_ref().map(|(id, _)| id.as_str())
+    }
+
+    /// Switch the live weights to `id` (no-op if the exact same adapter
+    /// is already active — compared by `Arc` identity, so re-`register`ing
+    /// an id with new weights takes effect on the next batch).
     ///
-    /// S²FT switch cost is two scatter_adds over s·d elements per layer;
-    /// a LoRA switch costs a ΔW GEMM per target — the Fig 6a comparison.
-    /// LoRA adapters cannot be *unfused* exactly here (we'd have to keep
-    /// ΔW around), so the store snapshots base weights for them.
+    /// Transactional: the new adapter is looked up and validated against
+    /// the weight pool *before* the current one is unfused, so a missing
+    /// or incompatible adapter returns an error with the previous adapter
+    /// still fused and `active` unchanged. If fusing still fails after
+    /// validation, the previous adapter is re-fused before returning.
     pub fn switch_to(
         &mut self,
+        store: &AdapterStore,
         id: &str,
         params: &mut HashMap<String, Tensor>,
         base_snapshot: &HashMap<String, Tensor>,
     ) -> Result<()> {
-        if self.active.as_deref() == Some(id) {
-            return Ok(());
-        }
-        // unfuse current
-        if let Some(cur) = self.active.take() {
-            match self.adapters.get(&cur) {
-                Some(AnyAdapter::S2ft(a)) => a.remove(params)?,
-                Some(AnyAdapter::Lora(_)) => {
-                    // restore touched weights from the snapshot
-                    for (k, v) in base_snapshot {
-                        if k.ends_with(".wo") || k.ends_with(".wd") {
-                            params.insert(k.clone(), v.clone());
-                        }
-                    }
-                }
-                None => {}
-            }
-        }
-        let adapter = self
-            .adapters
+        let next = store
             .get(id)
             .ok_or_else(|| anyhow!("adapter {id:?} not in store"))?;
-        match adapter {
-            AnyAdapter::S2ft(a) => a.apply(params)?,
-            AnyAdapter::Lora(a) => a.apply(params)?,
+        if let Some((aid, cur)) = &self.active {
+            if aid == id && Arc::ptr_eq(cur, &next) {
+                return Ok(());
+            }
         }
-        self.active = Some(id.to_string());
-        self.switches += 1;
-        Ok(())
+        next.validate(params)?;
+        let prev = self.active.take();
+        if let Some((_, a)) = &prev {
+            a.unfuse(params, base_snapshot)?;
+        }
+        match next.fuse(params) {
+            Ok(()) => {
+                self.active = Some((id.to_string(), next));
+                store.note_switch();
+                Ok(())
+            }
+            Err(e) => {
+                if let Some((pid, a)) = prev {
+                    if a.fuse(params).is_ok() {
+                        self.active = Some((pid, a));
+                    }
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Unfuse whatever is active, restoring pristine base weights.
@@ -106,18 +277,8 @@ impl AdapterStore {
         params: &mut HashMap<String, Tensor>,
         base_snapshot: &HashMap<String, Tensor>,
     ) -> Result<()> {
-        if let Some(cur) = self.active.take() {
-            match self.adapters.get(&cur) {
-                Some(AnyAdapter::S2ft(a)) => a.remove(params)?,
-                Some(AnyAdapter::Lora(_)) => {
-                    for (k, v) in base_snapshot {
-                        if k.ends_with(".wo") || k.ends_with(".wd") {
-                            params.insert(k.clone(), v.clone());
-                        }
-                    }
-                }
-                None => {}
-            }
+        if let Some((_, a)) = self.active.take() {
+            a.unfuse(params, base_snapshot)?;
         }
         Ok(())
     }
@@ -151,28 +312,132 @@ mod tests {
     fn switch_sequence_restores_weights() {
         let snapshot = base();
         let mut params = base();
-        let mut store = AdapterStore::new();
+        let store = AdapterStore::new();
+        let mut slot = AdapterSlot::new();
         store.insert("a", adapter(1.0));
         store.insert("b", adapter(2.0));
 
-        store.switch_to("a", &mut params, &snapshot).unwrap();
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
         assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 1.0);
-        store.switch_to("b", &mut params, &snapshot).unwrap();
+        slot.switch_to(&store, "b", &mut params, &snapshot).unwrap();
         assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 2.0);
-        assert_eq!(store.switches, 2);
+        assert_eq!(store.switches(), 2);
         // switching to the active id is free
-        store.switch_to("b", &mut params, &snapshot).unwrap();
-        assert_eq!(store.switches, 2);
-        store.deactivate(&mut params, &snapshot).unwrap();
+        slot.switch_to(&store, "b", &mut params, &snapshot).unwrap();
+        assert_eq!(store.switches(), 2);
+        slot.deactivate(&mut params, &snapshot).unwrap();
         assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 0.0);
-        assert!(store.active().is_none());
+        assert!(slot.active().is_none());
     }
 
     #[test]
     fn missing_adapter_errors() {
         let snapshot = base();
         let mut params = base();
-        let mut store = AdapterStore::new();
-        assert!(store.switch_to("nope", &mut params, &snapshot).is_err());
+        let store = AdapterStore::new();
+        let mut slot = AdapterSlot::new();
+        assert!(slot.switch_to(&store, "nope", &mut params, &snapshot).is_err());
+    }
+
+    /// Regression: a failed switch must leave the previous adapter fused
+    /// and `active` pointing at it — not stale, not cleared.
+    #[test]
+    fn failed_switch_is_transactional() {
+        let snapshot = base();
+        let mut params = base();
+        let store = AdapterStore::new();
+        let mut slot = AdapterSlot::new();
+        store.insert("a", adapter(1.0));
+        // references L1.wd which the pool doesn't have
+        store.insert(
+            "bad",
+            AnyAdapter::S2ft(S2ftAdapter {
+                layers: vec![
+                    S2ftLayerDelta {
+                        wd_rows: vec![0],
+                        wd_delta: vec![9.0; 4],
+                        ..Default::default()
+                    },
+                    S2ftLayerDelta {
+                        wd_rows: vec![0],
+                        wd_delta: vec![9.0; 4],
+                        ..Default::default()
+                    },
+                ],
+                d_model: 4,
+            }),
+        );
+        // also an out-of-bounds row variant
+        store.insert(
+            "oob",
+            AnyAdapter::S2ft(S2ftAdapter {
+                layers: vec![S2ftLayerDelta {
+                    wd_rows: vec![99],
+                    wd_delta: vec![9.0; 4],
+                    ..Default::default()
+                }],
+                d_model: 4,
+            }),
+        );
+
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
+        for bad in ["missing-id", "bad", "oob"] {
+            let err = slot.switch_to(&store, bad, &mut params, &snapshot);
+            assert!(err.is_err(), "{bad} must fail");
+            assert_eq!(slot.active(), Some("a"), "{bad}: active id rolled back");
+            assert_eq!(
+                params["L0.wd"].as_f32().unwrap()[0],
+                1.0,
+                "{bad}: previous adapter must stay fused"
+            );
+        }
+        assert_eq!(store.switches(), 1, "failed switches must not count");
+        // the engine is still fully operational after the failures
+        store.insert("b", adapter(2.0));
+        slot.switch_to(&store, "b", &mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 2.0);
+    }
+
+    /// Re-registering an id with new weights must take effect on the next
+    /// switch even for a worker already fused on that id (Arc identity,
+    /// not id string, decides the no-op fast path).
+    #[test]
+    fn reregistered_adapter_replaces_fused_version() {
+        let snapshot = base();
+        let mut params = base();
+        let store = AdapterStore::new();
+        let mut slot = AdapterSlot::new();
+        store.insert("a", adapter(1.0));
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 1.0);
+        // same id, same version: free
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
+        assert_eq!(store.switches(), 1);
+        // replace the adapter under the same id while fused
+        store.insert("a", adapter(5.0));
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
+        assert_eq!(
+            params["L0.wd"].as_f32().unwrap()[0],
+            5.0,
+            "v2 weights must be fused after re-register (v1 unfused first)"
+        );
+        assert_eq!(store.switches(), 2);
+    }
+
+    /// Unregistering an adapter that is fused elsewhere: the slot keeps
+    /// its Arc and can still unfuse cleanly.
+    #[test]
+    fn unregister_while_fused_still_unfuses() {
+        let snapshot = base();
+        let mut params = base();
+        let store = AdapterStore::new();
+        let mut slot = AdapterSlot::new();
+        store.insert("a", adapter(1.0));
+        slot.switch_to(&store, "a", &mut params, &snapshot).unwrap();
+        store.remove("a").unwrap();
+        assert!(store.is_empty());
+        assert!(store.remove("a").is_err(), "double-unregister errors");
+        slot.deactivate(&mut params, &snapshot).unwrap();
+        assert_eq!(params["L0.wd"].as_f32().unwrap()[0], 0.0);
     }
 }

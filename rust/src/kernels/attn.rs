@@ -238,6 +238,86 @@ fn bwd_block(
     }
 }
 
+/// Single-query causal attention over a KV cache — the incremental-decode
+/// counterpart of [`causal_attn_fwd`].
+///
+/// `q` holds one rotated query row per active request, `(m, d)` with the
+/// usual head-blocked columns. `k_cache`/`v_cache` are `(cache_rows,
+/// t_max, d)` ring-free caches; query `j` lives in cache row `rows[j]`
+/// and sits at position `pos[j]`, with positions `0..=pos[j]` already
+/// appended (including the current token). Returns the attended outputs
+/// `(m, d)`.
+///
+/// Accumulation order per output element — score loop, running max,
+/// exp/denominator pass, normalization, weighted-value sum with the
+/// zero-probability skip — exactly mirrors the `tq`-th query row of
+/// [`causal_attn_fwd`], so greedy decode through this kernel is
+/// bit-identical to full-sequence recompute.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_decode(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    rows: &[usize],
+    pos: &[usize],
+    heads: usize,
+    hd: usize,
+    t_max: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let d = heads * hd;
+    let m = rows.len();
+    debug_assert_eq!(q.len(), m * d);
+    debug_assert_eq!(pos.len(), m);
+    let mut out = vec![0.0f32; m * d];
+    let work: usize = pos.iter().map(|&p| 2 * (p + 1) * d).sum();
+    super::for_each_row_chunk(&mut out, d, configured_threads(), work, |row0, chunk| {
+        for (lj, orow) in chunk.chunks_mut(d).enumerate() {
+            let j = row0 + lj;
+            let (bi, p) = (rows[j], pos[j]);
+            let cbase = bi * t_max * d;
+            // one score buffer per row, reused across heads (every entry
+            // is rewritten by the score loop before it is read)
+            let mut prow = vec![0.0f32; p + 1];
+            for hh in 0..heads {
+                let qh = &q[j * d + hh * hd..][..hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (tk, pr) in prow.iter_mut().enumerate() {
+                    let kh = &k_cache[cbase + tk * d + hh * hd..][..hd];
+                    let mut s = 0.0f32;
+                    for (x, y) in qh.iter().zip(kh) {
+                        s += x * y;
+                    }
+                    let s = s * scale;
+                    *pr = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for pr in prow.iter_mut() {
+                    *pr = (*pr - maxv).exp();
+                    denom += *pr;
+                }
+                for pr in prow.iter_mut() {
+                    *pr /= denom;
+                }
+                let oh = &mut orow[hh * hd..hh * hd + hd];
+                for (tk, &pr) in prow.iter().enumerate() {
+                    if pr == 0.0 {
+                        continue;
+                    }
+                    let vh = &v_cache[cbase + tk * d + hh * hd..][..hd];
+                    for (o, &vv) in oh.iter_mut().zip(vh) {
+                        *o += pr * vv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +347,35 @@ mod tests {
                         assert_eq!(p, 0.0, "future position attended");
                     }
                 }
+            }
+        }
+    }
+
+    /// Every query position computed through the single-query decode
+    /// kernel must reproduce the corresponding row of the full forward
+    /// bit-for-bit (the KV-cache decode correctness contract).
+    #[test]
+    fn decode_matches_full_forward_bitwise() {
+        let dims = AttnDims { b: 3, t: 7, heads: 2, hd: 4 };
+        let (qr, kr, v) = setup(&dims, 9);
+        let scale = 1.0 / (dims.hd as f32).sqrt();
+        let d = dims.d();
+        let (_, attn) = causal_attn_fwd_with_threads(&qr, &kr, &v, &dims, scale, 1);
+        // caches in (b, t_max, d) layout == the (b·t, d) activation layout
+        for tq in 0..dims.t {
+            let rows: Vec<usize> = (0..dims.b).collect();
+            let pos = vec![tq; dims.b];
+            let q: Vec<f32> = (0..dims.b)
+                .flat_map(|bi| qr[(bi * dims.t + tq) * d..][..d].to_vec())
+                .collect();
+            let out = attn_decode(&q, &kr, &v, &rows, &pos, dims.heads, dims.hd, dims.t, scale);
+            for bi in 0..dims.b {
+                let want = &attn[(bi * dims.t + tq) * d..][..d];
+                let got = &out[bi * d..][..d];
+                assert!(
+                    want.iter().zip(got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "decode mismatch at b={bi} tq={tq}"
+                );
             }
         }
     }

@@ -45,7 +45,7 @@ mod attn;
 mod gemm;
 pub mod reference;
 
-pub use attn::{causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
+pub use attn::{attn_decode, causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
 pub use attn::{causal_attn_fwd, causal_attn_fwd_with_threads};
 pub use gemm::{gemm, gemm_nt, gemm_nt_with_threads, gemm_tn, gemm_tn_outcols};
 pub use gemm::{gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_threads, gemv_acc};

@@ -26,6 +26,16 @@
 //! Backend selection is a single call — [`runtime::open_backend`] — and
 //! everything above the [`runtime`] module is backend-agnostic.
 //!
+//! # Serving
+//!
+//! [`serve::Engine`] is the public serving API: an N-worker pool over a
+//! shared thread-safe [`adapter::AdapterStore`], streamed token replies
+//! ([`serve::ReplyStream`]), per-request sampling, and a runtime adapter
+//! lifecycle (register/unregister/fuse/switch while serving — the paper
+//! §6.2 decoupled modes). Generation uses the KV-cached incremental
+//! decode path ([`runtime::DecodeSession`]) when the backend provides
+//! one — O(t) per token, bit-identical to full recompute.
+//!
 //! # Compute kernels
 //!
 //! Every dense GEMM — native forward/backward, the linear-algebra
@@ -48,6 +58,9 @@ pub mod theory;
 pub mod train;
 pub mod util;
 
-pub use runtime::{open_backend, Artifacts, Executable, Executor, NativeBackend, Tensor};
+pub use runtime::{
+    open_backend, Artifacts, DecodeSession, DecoderProvider, Executable, Executor,
+    NativeBackend, Tensor,
+};
 #[cfg(feature = "pjrt")]
 pub use runtime::Runtime;

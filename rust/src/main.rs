@@ -7,6 +7,7 @@
 //!               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
 //!   repro eval  --model M --weights DIR [--suite SUITE]
 //!   repro serve --model M [--weights DIR] [--requests N] [--adapters K]
+//!               [--workers W] [--max-batch B] [--stream]
 //!   repro experiment <id> [--quick]
 
 use std::collections::HashMap;
@@ -16,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use repro::config::TrainConfig;
 use repro::data::{self, Tokenizer};
 use repro::experiments;
-use repro::runtime::{open_backend, Artifacts, Executor, NativeBackend};
+use repro::runtime::{open_backend_named, Executor};
 use repro::train::{self, GenModel, Trainer};
 use repro::util::rng::Rng;
 
@@ -28,30 +29,7 @@ fn backend_for(args: &Args) -> Result<Box<dyn Executor>> {
 
 /// Same, but with an explicit artifact directory (config-file runs).
 fn backend_for_dir(args: &Args, dir: &str) -> Result<Box<dyn Executor>> {
-    match args.get("backend").unwrap_or("auto") {
-        "auto" => open_backend(dir),
-        "native" => {
-            if std::path::Path::new(dir).join("meta.json").exists() {
-                Ok(Box::new(NativeBackend::with_artifacts(Artifacts::open(dir)?)))
-            } else {
-                Ok(Box::new(NativeBackend::builtin()))
-            }
-        }
-        "pjrt" => pjrt_backend(dir),
-        other => Err(anyhow!("unknown backend {other:?} (native|pjrt|auto)")),
-    }
-}
-
-#[cfg(feature = "pjrt")]
-fn pjrt_backend(dir: &str) -> Result<Box<dyn Executor>> {
-    Ok(Box::new(repro::runtime::Runtime::new(dir)?))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn pjrt_backend(_dir: &str) -> Result<Box<dyn Executor>> {
-    Err(anyhow!(
-        "this binary was built without PJRT; rebuild with `--features pjrt`"
-    ))
+    open_backend_named(args.get("backend").unwrap_or("auto"), dir)
 }
 
 struct Args {
@@ -147,6 +125,7 @@ USAGE:
               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
   repro eval  --model M --weights DIR [--suite commonsense|arithmetic|instruct]
   repro serve --model M [--weights DIR] [--adapters K] [--requests N]
+              [--workers W] [--max-batch B] [--stream]
   repro adapter extract|apply|info [--model M --method T --base DIR --ft DIR
               --adapter FILE --out PATH]
   repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
@@ -378,14 +357,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    repro::serve::demo(
-        args.get_or("artifacts", "artifacts"),
-        args.get_or("model", "small"),
-        args.get("weights"),
-        args.usize_or("adapters", 4),
-        args.usize_or("requests", 32),
-        args.usize_or("max-batch", 8),
-    )
+    repro::serve::demo(repro::serve::DemoOpts {
+        artifacts: args.get_or("artifacts", "artifacts").to_string(),
+        backend: args.get_or("backend", "auto").to_string(),
+        model: args.get_or("model", "small").to_string(),
+        weights: args.get("weights").map(String::from),
+        adapters: args.usize_or("adapters", 4),
+        requests: args.usize_or("requests", 32),
+        max_batch: args.usize_or("max-batch", 8),
+        workers: args.usize_or("workers", 2),
+        stream: args.has("stream"),
+    })
 }
 
 /// CI regression gate: diff a bench JSON against the committed baseline.

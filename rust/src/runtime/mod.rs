@@ -150,6 +150,51 @@ pub trait Executor: Send + Sync {
 
     /// Human-readable backend identifier.
     fn platform(&self) -> String;
+
+    /// KV-cached incremental-decode provider, if the backend supports
+    /// stepping a model one token at a time (the native interpreter
+    /// does). `None` means callers must fall back to full-sequence
+    /// recompute through the `fwd_M_BxT` artifact.
+    fn decoder(&self) -> Option<Arc<dyn DecoderProvider>> {
+        None
+    }
+}
+
+/// An in-flight incremental decoding session over a fixed batch capacity
+/// and maximum sequence length. Rows advance independently: each
+/// [`DecodeSession::step`] consumes at most one token per row, appends
+/// its key/value to that row's cache, and returns next-token logits —
+/// O(t) work per generated token instead of the O(t²) full-sequence
+/// recompute.
+pub trait DecodeSession {
+    /// Batch capacity (cache rows).
+    fn batch(&self) -> usize;
+
+    /// Maximum positions per row.
+    fn max_seq(&self) -> usize;
+
+    /// Cache length (= next position) for `row`.
+    fn pos(&self, row: usize) -> usize;
+
+    /// Feed `tokens[row]` at each `Some` row's next position and return
+    /// logits as a `(batch, vocab)` row-major buffer. Rows passed `None`
+    /// are untouched and their logits rows are zero/stale.
+    fn step(&mut self, tokens: &[Option<i32>]) -> Result<Vec<f32>>;
+}
+
+/// Factory for [`DecodeSession`]s. Split from [`Executor`] so a session
+/// can borrow the caller's weight pool (`'p`) without tying it to the
+/// backend's lifetime.
+pub trait DecoderProvider: Send + Sync {
+    /// Open a session over `params` (base-layout weights) for `model`,
+    /// with `b` cache rows of `t_max` positions each.
+    fn open_session<'p>(
+        &self,
+        model: &str,
+        params: &'p HashMap<String, Tensor>,
+        b: usize,
+        t_max: usize,
+    ) -> Result<Box<dyn DecodeSession + 'p>>;
 }
 
 /// Open the best available backend for `artifact_dir`:
@@ -169,6 +214,33 @@ pub fn open_backend(artifact_dir: &str) -> Result<Box<dyn Executor>> {
         return Ok(Box::new(NativeBackend::with_artifacts(Artifacts::open(artifact_dir)?)));
     }
     Ok(Box::new(NativeBackend::builtin()))
+}
+
+/// Resolve an explicit backend choice (the CLI `--backend` flag, shared
+/// by every command and the serve engine's per-worker builders):
+///
+/// * `auto` — [`open_backend`] preference order;
+/// * `native` — the pure-Rust interpreter (meta-driven when
+///   `meta.json` exists, builtin models otherwise);
+/// * `pjrt` — the AOT runtime; errors without the `pjrt` feature.
+pub fn open_backend_named(backend: &str, artifact_dir: &str) -> Result<Box<dyn Executor>> {
+    match backend {
+        "auto" => open_backend(artifact_dir),
+        "native" => {
+            if Path::new(artifact_dir).join("meta.json").exists() {
+                Ok(Box::new(NativeBackend::with_artifacts(Artifacts::open(artifact_dir)?)))
+            } else {
+                Ok(Box::new(NativeBackend::builtin()))
+            }
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(Runtime::new(artifact_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => Err(anyhow!(
+            "this binary was built without PJRT; rebuild with `--features pjrt`"
+        )),
+        other => Err(anyhow!("unknown backend {other:?} (native|pjrt|auto)")),
+    }
 }
 
 #[cfg(test)]

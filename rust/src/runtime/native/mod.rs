@@ -15,7 +15,10 @@
 //! step and no files on disk.
 
 pub mod builtin;
+mod decode;
 mod model;
+
+pub use decode::NativeDecodeSession;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -78,6 +81,12 @@ impl Executor for NativeBackend {
 
     fn platform(&self) -> String {
         "native".to_string()
+    }
+
+    fn decoder(&self) -> Option<Arc<dyn super::DecoderProvider>> {
+        Some(Arc::new(decode::NativeDecoderProvider {
+            meta: self.artifacts.meta.clone(),
+        }))
     }
 }
 

@@ -96,7 +96,7 @@ fn add_assign(dst: &mut [f32], src: &[f32]) {
 // ---------------------------------------------------------------------------
 
 /// y = g ⊙ x · rsqrt(mean(x²)+eps); returns (y, inv_rms per row).
-fn rms_norm_fwd(x: &[f32], g: &[f32], n: usize, d: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+pub(super) fn rms_norm_fwd(x: &[f32], g: &[f32], n: usize, d: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0.0f32; n * d];
     let mut inv = vec![0.0f32; n];
     for i in 0..n {
@@ -146,7 +146,7 @@ fn rms_norm_bwd(
 }
 
 /// cos/sin tables, each (t, hd/2): angle = pos · theta^(−2j/hd).
-fn rope_tables(t: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+pub(super) fn rope_tables(t: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
     let half = hd / 2;
     let mut cos = vec![0.0f32; t * half];
     let mut sin = vec![0.0f32; t * half];
@@ -198,7 +198,7 @@ fn apply_rope(
     }
 }
 
-fn sigmoid(x: f32) -> f32 {
+pub(super) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 

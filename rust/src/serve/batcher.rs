@@ -1,12 +1,28 @@
 //! Dynamic batcher with adapter affinity.
 //!
 //! Groups queued requests by adapter id, emitting batches of at most
-//! `max_batch`. Among groups it serves the *largest* group first
-//! (throughput) but never starves: groups older than `max_wait` get
-//! priority (bounded latency / backpressure).
+//! `max_batch`. Under [`SchedPolicy::AdapterAffinity`] it serves the
+//! *largest* group first (throughput) but never starves: groups older
+//! than `max_wait` get priority (bounded latency / backpressure).
+//! [`SchedPolicy::Fifo`] always serves the oldest request's group.
+//! Engine-pool workers call [`AdapterBatcher::next_batch_preferring`]
+//! with their currently-fused adapter so a worker keeps draining "its"
+//! adapter switch-free while other groups are fresh.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// How the batcher picks the next adapter group to serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Largest queued group first (amortizes adapter switches), with the
+    /// `max_wait` starvation guard.
+    #[default]
+    AdapterAffinity,
+    /// Strictly oldest request first (minimal queueing latency, more
+    /// switches).
+    Fifo,
+}
 
 #[derive(Debug, Clone)]
 pub struct Queued<T> {
@@ -25,11 +41,22 @@ pub struct AdapterBatcher<T> {
     queue: VecDeque<Queued<T>>,
     pub max_batch: usize,
     pub max_wait: Duration,
+    pub policy: SchedPolicy,
 }
 
 impl<T> AdapterBatcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
-        Self { queue: VecDeque::new(), max_batch, max_wait }
+        Self {
+            queue: VecDeque::new(),
+            max_batch,
+            max_wait,
+            policy: SchedPolicy::AdapterAffinity,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     pub fn push(&mut self, adapter: impl Into<String>, payload: T) {
@@ -48,16 +75,37 @@ impl<T> AdapterBatcher<T> {
         self.queue.is_empty()
     }
 
+    /// Age of the oldest queued request (zero when empty). O(1): pushes
+    /// append and [`Self::take_group`] preserves relative order, so the
+    /// front of the queue is always the oldest entry.
+    pub fn oldest_age(&self) -> Duration {
+        self.queue
+            .front()
+            .map(|q| q.enqueued.elapsed())
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Whether any queued request has waited past `max_wait` (the front
+    /// is the oldest, so checking it covers the whole queue).
+    fn any_overdue(&self) -> bool {
+        self.queue
+            .front()
+            .is_some_and(|q| q.enqueued.elapsed() >= self.max_wait)
+    }
+
     /// Pick the adapter to serve next; None if the queue is empty.
     fn pick_adapter(&self) -> Option<String> {
-        // starvation guard: oldest overdue request wins
-        if let Some(overdue) = self
+        // starvation guard: oldest overdue request wins (under Fifo
+        // everything counts as overdue)
+        let overdue = self
             .queue
             .iter()
-            .filter(|q| q.enqueued.elapsed() >= self.max_wait)
-            .min_by_key(|q| q.enqueued)
-        {
-            return Some(overdue.adapter.clone());
+            .filter(|q| {
+                self.policy == SchedPolicy::Fifo || q.enqueued.elapsed() >= self.max_wait
+            })
+            .min_by_key(|q| q.enqueued);
+        if let Some(q) = overdue {
+            return Some(q.adapter.clone());
         }
         // otherwise the largest group (throughput-optimal switch amortization)
         let mut counts: std::collections::HashMap<&str, usize> = Default::default();
@@ -73,6 +121,25 @@ impl<T> AdapterBatcher<T> {
     /// Remove and return the next batch (same adapter, FIFO within group).
     pub fn next_batch(&mut self) -> Option<BatchPlan<T>> {
         let adapter = self.pick_adapter()?;
+        Some(self.take_group(adapter))
+    }
+
+    /// Like [`Self::next_batch`], but while nothing is overdue prefer
+    /// `prefer` (the caller's currently-fused adapter) when it has queued
+    /// requests — the switch-free fast path for engine-pool workers.
+    pub fn next_batch_preferring(&mut self, prefer: Option<&str>) -> Option<BatchPlan<T>> {
+        if let Some(p) = prefer {
+            let preferable = self.policy == SchedPolicy::AdapterAffinity
+                && !self.any_overdue()
+                && self.queue.iter().any(|q| q.adapter == p);
+            if preferable {
+                return Some(self.take_group(p.to_string()));
+            }
+        }
+        self.next_batch()
+    }
+
+    fn take_group(&mut self, adapter: String) -> BatchPlan<T> {
         let mut items = Vec::with_capacity(self.max_batch);
         let mut rest = VecDeque::with_capacity(self.queue.len());
         for q in self.queue.drain(..) {
@@ -83,7 +150,7 @@ impl<T> AdapterBatcher<T> {
             }
         }
         self.queue = rest;
-        Some(BatchPlan { adapter, items })
+        BatchPlan { adapter, items }
     }
 }
 
@@ -154,6 +221,93 @@ mod tests {
                 plan.adapter
             );
         }
+    }
+
+    /// A worker already fused on `b` keeps draining `b` while nothing is
+    /// overdue, even though `a` is the larger group.
+    #[test]
+    fn preferring_keeps_fused_adapter_while_fresh() {
+        let mut b = AdapterBatcher::new(4, Duration::from_secs(60));
+        b.push("a", 1);
+        b.push("a", 2);
+        b.push("a", 3);
+        b.push("b", 4);
+        let p = b.next_batch_preferring(Some("b")).unwrap();
+        assert_eq!(p.adapter, "b");
+        assert_eq!(p.items[0].payload, 4);
+        // preference for an adapter with nothing queued falls back
+        let p2 = b.next_batch_preferring(Some("b")).unwrap();
+        assert_eq!(p2.adapter, "a");
+        // and no preference behaves exactly like next_batch
+        assert!(b.next_batch_preferring(None).is_none());
+    }
+
+    /// Preference never overrides the starvation guard: once another
+    /// group is overdue, the oldest request wins.
+    #[test]
+    fn preferring_yields_to_overdue_requests() {
+        let mut b = AdapterBatcher::new(4, Duration::from_millis(1));
+        b.push("old", 1);
+        std::thread::sleep(Duration::from_millis(3));
+        b.push("mine", 2);
+        let p = b.next_batch_preferring(Some("mine")).unwrap();
+        assert_eq!(p.adapter, "old");
+    }
+
+    /// Fifo policy: strictly oldest request's group first, group size is
+    /// irrelevant, but batches still never mix adapters.
+    #[test]
+    fn fifo_policy_serves_oldest_group_first() {
+        let mut b = AdapterBatcher::new(8, Duration::from_secs(60)).with_policy(SchedPolicy::Fifo);
+        b.push("first", 0);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("big", 1);
+        b.push("big", 2);
+        b.push("big", 3);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("first", 4);
+        let p = b.next_batch().unwrap();
+        assert_eq!(p.adapter, "first");
+        // FIFO batch still collects the whole group (affinity intact)
+        assert_eq!(p.items.iter().map(|q| q.payload).collect::<Vec<_>>(), vec![0, 4]);
+        // preference is ignored under Fifo
+        b.push("late", 9);
+        let p2 = b.next_batch_preferring(Some("late")).unwrap();
+        assert_eq!(p2.adapter, "big");
+    }
+
+    /// An over-large group splits into consecutive max_batch chunks with
+    /// FIFO payload order preserved end-to-end.
+    #[test]
+    fn oversized_group_splits_at_max_batch() {
+        let mut b = AdapterBatcher::new(3, Duration::from_secs(60));
+        for i in 0..8 {
+            b.push("a", i);
+        }
+        let sizes: Vec<usize> = std::iter::from_fn(|| b.next_batch())
+            .map(|p| {
+                assert_eq!(p.adapter, "a");
+                p.items.len()
+            })
+            .collect();
+        assert_eq!(sizes, vec![3, 3, 2]);
+    }
+
+    /// Zero `max_wait` (the engine's `window = 0` configuration): every
+    /// request is instantly overdue, so batches cut immediately in
+    /// arrival order and `oldest_age` reflects the head of the queue.
+    #[test]
+    fn zero_window_cuts_immediately_in_arrival_order() {
+        let mut b = AdapterBatcher::new(8, Duration::ZERO);
+        assert_eq!(b.oldest_age(), Duration::ZERO);
+        b.push("x", 1);
+        std::thread::sleep(Duration::from_millis(1));
+        b.push("y", 2);
+        assert!(b.oldest_age() >= Duration::from_millis(1));
+        let p = b.next_batch_preferring(Some("y")).unwrap();
+        assert_eq!(p.adapter, "x", "zero window: age beats preference");
+        assert_eq!(b.next_batch().unwrap().adapter, "y");
+        assert!(b.next_batch().is_none());
     }
 
     /// Windowing: once the wait budget expires, age dominates group size —

@@ -1,0 +1,520 @@
+//! The public serving API: an N-worker engine pool with streamed replies
+//! and a runtime adapter lifecycle.
+//!
+//! ```text
+//!            Engine::submit(GenRequest) ──► ReplyStream (GenEvent::Token…Done)
+//!                     │
+//!              Mutex<AdapterBatcher> + Condvar   (shared work queue,
+//!                     │                           adapter-affinity scheduling)
+//!        ┌────────────┼────────────┐
+//!     worker 0     worker 1  …  worker N-1      (each: own GenModel weights
+//!        │            │            │             + AdapterSlot fused state)
+//!        └────────────┴────────────┘
+//!              Arc<AdapterStore>                 (thread-safe registry:
+//!                                                 register/unregister/fuse
+//!                                                 while serving)
+//! ```
+//!
+//! Each worker owns a full copy of the (merged, base-layout) weights and
+//! a [`AdapterSlot`]; the [`AdapterStore`] is shared. A worker asks the
+//! batcher for a batch *preferring its currently-fused adapter*, so under
+//! steady multi-adapter load the pool converges to one adapter per worker
+//! and switches only when the mix shifts — the paper §6.2 decoupling in
+//! all three modes at once: **fuse** ([`Engine::fuse`] merges adapters
+//! into a new servable one), **fast switch** (scatter_add per batch via
+//! the slot) and **parallel serve** (different adapters live on different
+//! workers concurrently).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adapter::{AdapterSlot, AdapterStore, AnyAdapter, S2ftAdapter};
+use crate::data::Tokenizer;
+use crate::runtime::Tensor;
+use crate::train::{DecodeRequest, GenModel};
+
+use super::batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
+use super::metrics::ServeMetrics;
+
+/// Reserved adapter id meaning "pristine base weights, nothing fused".
+pub const BASE_ADAPTER: &str = "base";
+
+/// Engine construction parameters (builder-style).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    /// How long a freshly-arrived request may wait for batch-mates.
+    pub window: Duration,
+    pub policy: SchedPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            max_batch: 8,
+            window: Duration::from_millis(2),
+            policy: SchedPolicy::AdapterAffinity,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    pub fn window(mut self, w: Duration) -> Self {
+        self.window = w;
+        self
+    }
+
+    pub fn policy(mut self, p: SchedPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+}
+
+/// Per-request sampling parameters (see [`DecodeRequest`]).
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    pub max_new: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub stop: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { max_new: 8, temperature: 0.0, top_k: 0, stop: None, seed: 0 }
+    }
+}
+
+/// One generation request routed to `adapter` (use [`BASE_ADAPTER`] for
+/// the un-adapted base model).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub adapter: String,
+    pub prompt: String,
+    pub params: SamplingParams,
+}
+
+impl GenRequest {
+    pub fn new(adapter: impl Into<String>, prompt: impl Into<String>) -> Self {
+        Self {
+            adapter: adapter.into(),
+            prompt: prompt.into(),
+            params: SamplingParams::default(),
+        }
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.params.max_new = n;
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.params.temperature = t;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.params.top_k = k;
+        self
+    }
+
+    pub fn stop(mut self, tok: i32) -> Self {
+        self.params.stop = Some(tok);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.params.seed = s;
+        self
+    }
+}
+
+/// Streamed reply events, in order: zero or more `Token`s, then exactly
+/// one `Done` or `Error`.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    /// One generated token, as it was produced.
+    Token { token: i32, text: String },
+    /// Generation finished; the full reply.
+    Done(GenReply),
+    /// The request failed (unknown adapter, engine stopped, ...).
+    Error(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct GenReply {
+    pub text: String,
+    /// Tokens generated for this request.
+    pub tokens: usize,
+    pub latency: Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Pool worker that served it.
+    pub worker: usize,
+    pub adapter: String,
+}
+
+/// Receiver half of one request's event stream. Iterate for tokens, or
+/// [`ReplyStream::wait`] for just the final reply.
+pub struct ReplyStream {
+    rx: Receiver<GenEvent>,
+}
+
+impl ReplyStream {
+    /// Next event; `None` once the stream is finished (after
+    /// `Done`/`Error`, or if the engine dropped the request).
+    pub fn recv(&self) -> Option<GenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream and return the final reply.
+    pub fn wait(self) -> Result<GenReply> {
+        for ev in self {
+            match ev {
+                GenEvent::Token { .. } => {}
+                GenEvent::Done(reply) => return Ok(reply),
+                GenEvent::Error(e) => bail!("{e}"),
+            }
+        }
+        bail!("engine dropped the request")
+    }
+}
+
+impl Iterator for ReplyStream {
+    type Item = GenEvent;
+
+    fn next(&mut self) -> Option<GenEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+/// What [`Engine::spawn`]'s builder produces per worker: the worker's
+/// own model (merged base-layout weights) plus a pristine snapshot of
+/// those weights (used to unfuse adapters exactly).
+pub type WorkerParts = (GenModel, HashMap<String, Tensor>);
+
+type WorkerBuilder = dyn Fn(usize) -> Result<WorkerParts> + Send + Sync;
+
+struct Job {
+    prompt: String,
+    params: SamplingParams,
+    events: Sender<GenEvent>,
+    t0: Instant,
+}
+
+struct QueueState {
+    batcher: AdapterBatcher<Job>,
+    open: bool,
+}
+
+struct Shared {
+    cfg: EngineConfig,
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    store: AdapterStore,
+    metrics: Mutex<ServeMetrics>,
+    live: AtomicUsize,
+}
+
+/// Multi-worker serving engine. See the module docs for the architecture.
+pub struct Engine {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<Result<()>>>,
+}
+
+impl Engine {
+    /// Spawn the pool. `builder(worker_id)` runs *inside* each worker
+    /// thread and must construct that worker's model plus a pristine
+    /// base-weight snapshot (used to unfuse adapters exactly). Backends
+    /// with thread-local state (PJRT) are therefore supported: every
+    /// worker builds its own.
+    pub fn spawn<F>(cfg: EngineConfig, builder: F) -> Engine
+    where
+        F: Fn(usize) -> Result<WorkerParts> + Send + Sync + 'static,
+    {
+        let workers = cfg.workers;
+        let max_wait = cfg.window.max(Duration::from_millis(1)) * 4;
+        let batcher = AdapterBatcher::new(cfg.max_batch, max_wait).with_policy(cfg.policy);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { batcher, open: true }),
+            cv: Condvar::new(),
+            store: AdapterStore::new(),
+            metrics: Mutex::new(ServeMetrics::default()),
+            live: AtomicUsize::new(workers),
+            cfg,
+        });
+        let builder = Arc::new(builder);
+        let handles = (0..workers)
+            .map(|id| {
+                let shared = shared.clone();
+                let builder = builder.clone();
+                std::thread::Builder::new()
+                    .name(format!("s2ft-engine-{id}"))
+                    .spawn(move || worker_main(id, shared, builder.as_ref()))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Engine { shared, handles }
+    }
+
+    /// Submit a request; token events and the final reply arrive on the
+    /// returned stream.
+    pub fn submit(&self, req: GenRequest) -> ReplyStream {
+        let (tx, rx) = channel();
+        {
+            // the open check shares the queue lock with the last-worker
+            // drain, so a request can never be pushed after the drain ran
+            // (it would hang forever with no worker left to fail it)
+            let mut q = self.shared.queue.lock().unwrap();
+            if !q.open {
+                let _ = tx.send(GenEvent::Error("engine is shut down".into()));
+                return ReplyStream { rx };
+            }
+            q.batcher.push(
+                req.adapter,
+                Job { prompt: req.prompt, params: req.params, events: tx, t0: Instant::now() },
+            );
+        }
+        self.shared.cv.notify_all();
+        ReplyStream { rx }
+    }
+
+    /// Convenience: submit and wait for the final reply.
+    pub fn call(&self, req: GenRequest) -> Result<GenReply> {
+        self.submit(req).wait()
+    }
+
+    // --- runtime adapter lifecycle (paper §6.2) -------------------------
+
+    /// Register (or replace) an adapter while serving.
+    pub fn register(&self, id: impl Into<String>, adapter: AnyAdapter) {
+        self.shared.store.insert(id, adapter);
+    }
+
+    /// Unregister an adapter. In-flight batches already fused on it
+    /// finish normally (workers hold their own handle).
+    pub fn unregister(&self, id: &str) -> Result<()> {
+        self.shared.store.remove(id)
+    }
+
+    /// Fuse-mode: weighted-combine registered S²FT adapters into a new
+    /// adapter registered as `new_id`, servable immediately.
+    pub fn fuse(&self, new_id: impl Into<String>, parts: &[(&str, f32)]) -> Result<()> {
+        let handles: Vec<(Arc<AnyAdapter>, f32)> = parts
+            .iter()
+            .map(|(id, w)| {
+                self.shared
+                    .store
+                    .get(id)
+                    .map(|a| (a, *w))
+                    .ok_or_else(|| anyhow!("adapter {id:?} not in store"))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<(&S2ftAdapter, f32)> = handles
+            .iter()
+            .map(|(a, w)| match a.as_ref() {
+                AnyAdapter::S2ft(s) => Ok((s, *w)),
+                AnyAdapter::Lora(_) => Err(anyhow!("fuse supports S²FT adapters only")),
+            })
+            .collect::<Result<_>>()?;
+        let fused = S2ftAdapter::fuse(&refs)?;
+        self.shared.store.insert(new_id, AnyAdapter::S2ft(fused));
+        Ok(())
+    }
+
+    /// The shared adapter registry.
+    pub fn store(&self) -> &AdapterStore {
+        &self.shared.store
+    }
+
+    /// Registered adapter ids, sorted.
+    pub fn adapters(&self) -> Vec<String> {
+        self.shared.store.ids()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        let mut m = self.shared.metrics.lock().unwrap().clone();
+        m.switches = self.shared.store.switches();
+        m
+    }
+
+    /// Stop accepting work, drain the queue, join every worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Result<()> {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.open = false;
+        }
+        self.shared.cv.notify_all();
+        let mut first_err = None;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or(Some(anyhow!("engine worker panicked"))),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+fn worker_main(id: usize, shared: Arc<Shared>, builder: &WorkerBuilder) -> Result<()> {
+    let res = (|| -> Result<()> {
+        let (mut gm, snapshot) = builder(id)?;
+        let mut slot = AdapterSlot::new();
+        loop {
+            let prefer = slot.active().map(String::from);
+            let Some(plan) = next_plan(&shared, prefer.as_deref()) else {
+                break;
+            };
+            serve_batch(id, &shared, &mut gm, &mut slot, &snapshot, plan);
+        }
+        Ok(())
+    })();
+    if shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+        // last worker out: nothing will ever drain the queue again
+        let mut q = shared.queue.lock().unwrap();
+        q.open = false;
+        while let Some(plan) = q.batcher.next_batch() {
+            for item in plan.items {
+                let _ = item.payload.events.send(GenEvent::Error("engine stopped".into()));
+            }
+        }
+    }
+    res
+}
+
+/// Block until a batch is available (respecting the arrival window) or
+/// the engine is closed and drained. `None` = exit. `prefer` is the
+/// calling worker's currently-fused adapter (switch-free fast path).
+fn next_plan(shared: &Shared, prefer: Option<&str>) -> Option<BatchPlan<Job>> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if q.batcher.is_empty() {
+            if !q.open {
+                return None;
+            }
+            q = shared.cv.wait(q).unwrap();
+            continue;
+        }
+        let age = q.batcher.oldest_age();
+        if !q.open || q.batcher.len() >= shared.cfg.max_batch || age >= shared.cfg.window {
+            break;
+        }
+        let (qq, _) = shared.cv.wait_timeout(q, shared.cfg.window - age).unwrap();
+        q = qq;
+    }
+    q.batcher.next_batch_preferring(prefer)
+}
+
+fn serve_batch(
+    id: usize,
+    shared: &Shared,
+    gm: &mut GenModel,
+    slot: &mut AdapterSlot,
+    snapshot: &HashMap<String, Tensor>,
+    plan: BatchPlan<Job>,
+) {
+    let fail_all = |items: Vec<Queued<Job>>, msg: String| {
+        for item in items {
+            let _ = item.payload.events.send(GenEvent::Error(msg.clone()));
+        }
+    };
+    // adapter-affinity switch (at most one per batch; scatter_add for S²FT)
+    let switched = if plan.adapter == BASE_ADAPTER {
+        slot.deactivate(&mut gm.params, snapshot)
+    } else {
+        slot.switch_to(&shared.store, &plan.adapter, &mut gm.params, snapshot)
+    };
+    if let Err(e) = switched {
+        // transactional switch: previous adapter still fused, the engine
+        // keeps serving — only this batch fails
+        return fail_all(plan.items, format!("adapter switch failed: {e:#}"));
+    }
+
+    let items = plan.items;
+    let bs = items.len();
+    let reqs: Vec<DecodeRequest> = items
+        .iter()
+        .map(|q| DecodeRequest {
+            prompt: q.payload.prompt.clone(),
+            max_new: q.payload.params.max_new,
+            temperature: q.payload.params.temperature,
+            top_k: q.payload.params.top_k,
+            stop: q.payload.params.stop,
+            seed: q.payload.params.seed,
+        })
+        .collect();
+    let tk = Tokenizer;
+    let mut counts = vec![0usize; bs];
+    let texts = gm.generate_stream(&reqs, |i, tok| {
+        counts[i] += 1;
+        let _ = items[i]
+            .payload
+            .events
+            .send(GenEvent::Token { token: tok, text: tk.decode(&[tok]) });
+    });
+    let texts = match texts {
+        Ok(t) => t,
+        Err(e) => return fail_all(items, format!("generation failed: {e:#}")),
+    };
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        m.requests += bs;
+        m.batches += 1;
+        m.tokens += counts.iter().sum::<usize>();
+        for item in &items {
+            m.record_latency_ms(item.payload.t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    for ((item, text), tokens) in items.into_iter().zip(texts).zip(counts) {
+        let latency = item.payload.t0.elapsed();
+        let _ = item.payload.events.send(GenEvent::Done(GenReply {
+            text,
+            tokens,
+            latency,
+            batch_size: bs,
+            worker: id,
+            adapter: item.adapter,
+        }));
+    }
+}

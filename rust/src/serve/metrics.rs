@@ -1,0 +1,91 @@
+//! Engine-wide serving metrics.
+
+/// Counters + latency distribution for one [`super::Engine`].
+///
+/// Latencies are kept **sorted on insert** ([`ServeMetrics::record_latency_ms`]
+/// does a binary-search insert), so percentile reads are O(1) index math
+/// instead of the former clone-and-sort per call.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub switches: usize,
+    /// Total tokens generated (streamed) across all requests.
+    pub tokens: usize,
+    latencies_ms: Vec<f64>,
+}
+
+impl ServeMetrics {
+    /// Record one request latency, keeping the vector sorted.
+    pub fn record_latency_ms(&mut self, ms: f64) {
+        let i = self.latencies_ms.partition_point(|&x| x < ms);
+        self.latencies_ms.insert(i, ms);
+    }
+
+    /// All recorded latencies, ascending.
+    pub fn latencies_ms(&self) -> &[f64] {
+        &self.latencies_ms
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 1]`): the smallest recorded
+    /// latency such that at least `p · n` samples are ≤ it.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let n = self.latencies_ms.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (p * n as f64).ceil() as usize;
+        self.latencies_ms[rank.clamp(1, n) - 1]
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_handles_empty_and_stays_sorted() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.percentile_ms(0.5), 0.0);
+        assert_eq!(m.percentile_ms(0.99), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+
+        let mut m = ServeMetrics {
+            requests: 4,
+            batches: 2,
+            switches: 1,
+            ..Default::default()
+        };
+        for ms in [40.0, 10.0, 30.0, 20.0] {
+            m.record_latency_ms(ms);
+        }
+        assert_eq!(m.latencies_ms(), &[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(m.percentile_ms(0.0), 10.0);
+        assert_eq!(m.percentile_ms(1.0), 40.0);
+        assert_eq!(m.percentile_ms(0.5), 20.0);
+        assert_eq!(m.mean_batch_size(), 2.0);
+    }
+
+    /// Nearest-rank must not truncate toward low ranks: p99 of 9 samples
+    /// is the maximum (rank ceil(8.91) = 9), not sample 7 as the old
+    /// `(n-1)·p` truncation produced.
+    #[test]
+    fn nearest_rank_indexing() {
+        let mut m = ServeMetrics::default();
+        for i in 1..=9 {
+            m.record_latency_ms(i as f64);
+        }
+        assert_eq!(m.percentile_ms(0.99), 9.0);
+        assert_eq!(m.percentile_ms(0.5), 5.0);
+        assert_eq!(m.percentile_ms(0.11), 1.0);
+        assert_eq!(m.percentile_ms(0.12), 2.0);
+    }
+}

@@ -1,47 +1,87 @@
-//! Multi-adapter serving coordinator (paper §6.2, S-LoRA-style scenario).
+//! Multi-adapter serving (paper §6.2, S-LoRA-style scenario).
 //!
-//! Architecture: a leader **router** thread owns the request queue and the
-//! dynamic batcher; a single **engine** thread owns the PJRT runtime, the
-//! live merged weights and the [`AdapterStore`]. Requests are grouped by
-//! adapter id (adapter-affinity batching) so each engine iteration pays at
-//! most one adapter switch — the scatter_add fast path S²FT makes cheap.
-//! Python never appears anywhere on this path.
+//! Public API: [`Engine`] — an N-worker pool over one shared
+//! [`crate::adapter::AdapterStore`]. Requests ([`GenRequest`]) carry
+//! per-request sampling parameters and stream their tokens back as
+//! [`GenEvent`]s over a [`ReplyStream`]; the batcher groups requests by
+//! adapter id (adapter-affinity) so each worker iteration pays at most
+//! one adapter switch — the scatter_add fast path S²FT makes cheap.
+//! Generation runs the KV-cached incremental decode path when the
+//! backend provides one (native), O(t) per token. Python never appears
+//! anywhere on this path.
 
 mod batcher;
-mod router;
+mod engine;
+mod metrics;
 
-pub use batcher::{AdapterBatcher, BatchPlan};
-pub use router::{Router, ServeMetrics, ServeReply, ServeRequest};
-
-use std::collections::HashMap;
-use std::time::Duration;
+pub use batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
+pub use engine::{
+    Engine, EngineConfig, GenEvent, GenReply, GenRequest, ReplyStream, SamplingParams,
+    BASE_ADAPTER,
+};
+pub use metrics::ServeMetrics;
 
 use anyhow::Result;
 
-use crate::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
-use crate::runtime::{open_backend, Executable, Executor, Tensor};
+use crate::adapter::{AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use crate::runtime::{open_backend_named, Executable, Executor, ModelMeta, Tensor};
 use crate::train::GenModel;
 use crate::util::rng::Rng;
 
+/// `repro serve` options.
+#[derive(Debug, Clone)]
+pub struct DemoOpts {
+    pub artifacts: String,
+    /// `native` | `pjrt` | `auto` (same semantics as the other commands).
+    pub backend: String,
+    pub model: String,
+    pub weights: Option<String>,
+    pub adapters: usize,
+    pub requests: usize,
+    pub max_batch: usize,
+    pub workers: usize,
+    /// Print the first request's tokens as they stream in.
+    pub stream: bool,
+}
+
+/// Synthesize a random S²FT adapter matching `mm`'s geometry (one head +
+/// ~3% of FFN channels per layer).
+pub fn synthetic_adapter(mm: &ModelMeta, rng: &mut Rng) -> AnyAdapter {
+    let (d, k, hd) = (mm.dims.d_model, mm.dims.d_ff, mm.head_dim());
+    let layers = (0..mm.dims.n_layers)
+        .map(|_| {
+            let heads = rng.choose(mm.dims.n_heads, 1);
+            let wo_rows = crate::sparsity::expand_head_perm(&heads, hd);
+            let chans = rng.choose(k, (k / 32).max(1));
+            S2ftLayerDelta {
+                wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                wo_rows,
+                wd_delta: (0..chans.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                wd_rows: chans,
+            }
+        })
+        .collect();
+    AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d })
+}
+
 /// Self-contained multi-adapter serving demo (`repro serve`).
 ///
-/// Loads (or randomly initializes) base weights, registers `n_adapters`
-/// synthetic S²FT adapters, and fires `n_requests` prompts round-robin
-/// across them through the router. Reports throughput, latency
-/// percentiles, switch count and adapter memory.
-pub fn demo(
-    artifacts: &str,
-    model: &str,
-    weights: Option<&str>,
-    n_adapters: usize,
-    n_requests: usize,
-    max_batch: usize,
-) -> Result<()> {
-    let artifacts = artifacts.to_string();
-    let model_name = model.to_string();
-    let weights = weights.map(String::from);
-    let router = Router::spawn(max_batch, Duration::from_millis(3), move || {
-        let rt = open_backend(&artifacts)?;
+/// Spins an [`Engine`] pool, registers `adapters` synthetic S²FT
+/// adapters at runtime, demonstrates fuse-mode by combining the first
+/// two, and fires `requests` prompts round-robin across the adapters.
+/// Reports throughput, latency percentiles, switch count, tokens
+/// streamed and adapter memory.
+pub fn demo(opts: DemoOpts) -> Result<()> {
+    let cfg = EngineConfig::new()
+        .workers(opts.workers)
+        .max_batch(opts.max_batch)
+        .window(std::time::Duration::from_millis(3));
+    let artifacts = opts.artifacts.clone();
+    let backend = opts.backend.clone();
+    let model_name = opts.model.clone();
+    let weights = opts.weights.clone();
+    let engine = Engine::spawn(cfg, move |wid| {
+        let rt = open_backend_named(&backend, &artifacts)?;
         let params = match &weights {
             Some(dir) => crate::train::load_params(dir)?,
             None => {
@@ -55,66 +95,91 @@ pub fn demo(
                     .collect()
             }
         };
-        let mm = rt.artifacts().model(&model_name)?;
-        let (d, k, hd) = (mm.dims.d_model, mm.dims.d_ff, mm.head_dim());
-        let n_layers = mm.dims.n_layers;
-        let mut store = AdapterStore::new();
-        let mut rng = Rng::seed(0x5EE);
-        for a in 0..n_adapters {
-            let layers = (0..n_layers)
-                .map(|_| {
-                    let heads = rng.choose(mm.dims.n_heads, 1);
-                    let wo_rows = crate::sparsity::expand_head_perm(&heads, hd);
-                    let chans = rng.choose(k, (k / 32).max(1));
-                    S2ftLayerDelta {
-                        wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
-                        wo_rows,
-                        wd_delta: (0..chans.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
-                        wd_rows: chans,
-                    }
-                })
-                .collect();
-            store.insert(
-                format!("adapter{a}"),
-                AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d }),
+        let snapshot = params.clone();
+        let gm = GenModel::new(rt.as_ref(), &model_name, params)?;
+        if wid == 0 {
+            println!(
+                "worker 0 up: model {model_name}, decode path = {}",
+                if gm.has_decoder() { "kv-cached" } else { "full recompute" }
             );
         }
-        println!(
-            "engine up: {} adapters ({:.1} KB total, vs {:.1} MB base weights)",
-            store.len(),
-            store.total_bytes() as f64 / 1e3,
-            params.values().map(Tensor::bytes).sum::<usize>() as f64 / 1e6
-        );
-        let snapshot: HashMap<String, Tensor> = params.clone();
-        let gm = GenModel::new(rt.as_ref(), &model_name, params)?;
-        Ok((gm, store, snapshot))
+        Ok((gm, snapshot))
     });
 
+    // runtime adapter lifecycle: register while the pool is already up
+    let rt = open_backend_named(&opts.backend, &opts.artifacts)?;
+    let mm = rt.artifacts().model(&opts.model)?.clone();
+    let mut rng = Rng::seed(0x5EE);
+    for a in 0..opts.adapters {
+        engine.register(format!("adapter{a}"), synthetic_adapter(&mm, &mut rng));
+    }
+    if opts.adapters >= 2 {
+        // fuse-mode: a merged adapter is just another registry entry
+        engine.fuse("fused01", &[("adapter0", 0.5), ("adapter1", 0.5)])?;
+    }
+    let base_bytes: usize = 4 * mm.param_count;
+    println!(
+        "engine up: {} workers, {} adapters ({:.1} KB total, vs {:.1} MB base weights/worker)",
+        engine.workers(),
+        engine.store().len(),
+        engine.store().total_bytes() as f64 / 1e3,
+        base_bytes as f64 / 1e6
+    );
+
     let world = crate::data::World::canonical();
-    let mut rng = Rng::seed(0xDEE);
+    let mut prng = Rng::seed(0xDEE);
     let started = std::time::Instant::now();
-    let mut receivers = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        let task = &crate::data::COMMONSENSE[rng.below(8)];
-        let ex = task.sample(&world, &mut rng, crate::data::Split::Test);
-        receivers.push(router.submit(ServeRequest {
-            adapter: format!("adapter{}", i % n_adapters.max(1)),
-            prompt: ex.prompt,
-            max_new: 8,
-        }));
+    let mut streams = Vec::with_capacity(opts.requests);
+    for i in 0..opts.requests {
+        let task = &crate::data::COMMONSENSE[prng.below(8)];
+        let ex = task.sample(&world, &mut prng, crate::data::Split::Test);
+        let adapter = if opts.adapters == 0 {
+            BASE_ADAPTER.to_string()
+        } else if opts.adapters >= 2 && i % 8 == 7 {
+            "fused01".to_string()
+        } else {
+            format!("adapter{}", i % opts.adapters)
+        };
+        let req = GenRequest::new(adapter, ex.prompt).max_new(8).seed(i as u64);
+        if i == 0 && opts.stream {
+            // stream the first request token-by-token
+            let mut stream = engine.submit(req);
+            print!("streamed reply: ");
+            let mut reply = None;
+            for ev in &mut stream {
+                match ev {
+                    GenEvent::Token { text, .. } => print!("{text}"),
+                    GenEvent::Done(r) => reply = Some(r),
+                    GenEvent::Error(e) => println!(" <error: {e}>"),
+                }
+            }
+            if let Some(r) = reply {
+                println!(
+                    "  ({} tokens in {:.0} ms on worker {})",
+                    r.tokens,
+                    r.latency.as_secs_f64() * 1e3,
+                    r.worker
+                );
+            }
+            continue;
+        }
+        streams.push(engine.submit(req));
     }
     let mut ok = 0;
-    for r in receivers {
-        if r.recv().is_ok() {
+    for s in streams {
+        if s.wait().is_ok() {
             ok += 1;
         }
     }
     let wall = started.elapsed();
-    let m = router.metrics();
+    let m = engine.metrics();
+    let served = m.requests;
     println!(
-        "served {ok}/{n_requests} requests in {:.2}s ({:.1} req/s)",
+        "served {served}/{} requests ({ok} awaited) in {:.2}s ({:.1} req/s, {:.0} tok/s streamed)",
+        opts.requests,
         wall.as_secs_f64(),
-        ok as f64 / wall.as_secs_f64()
+        served as f64 / wall.as_secs_f64(),
+        m.tokens as f64 / wall.as_secs_f64()
     );
     println!(
         "batches {} (mean size {:.1}), adapter switches {}, latency p50 {:.0} ms / p99 {:.0} ms",
@@ -124,5 +189,5 @@ pub fn demo(
         m.percentile_ms(0.5),
         m.percentile_ms(0.99)
     );
-    router.shutdown()
+    engine.shutdown()
 }

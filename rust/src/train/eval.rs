@@ -1,24 +1,113 @@
-//! Evaluation: batched loss via the eval artifact, and exact-match task
-//! accuracy via greedy decoding with the base-layout forward artifact.
+//! Evaluation + generation: batched loss via the eval artifact, and
+//! incremental decoding with per-request sampling.
+//!
+//! [`GenModel`] carries two decode paths that are bit-identical for the
+//! same logits:
+//!
+//! * **KV-cached** ([`crate::runtime::DecodeSession`], native backend):
+//!   prefill the prompt once, then one O(t) step per generated token;
+//! * **full recompute** (`fwd_M_BxT` artifact, any backend): re-run the
+//!   whole fixed-shape forward per token — the reference path, and the
+//!   only one AOT artifacts can serve.
+//!
+//! Both paths share one driver ([`GenModel::generate_stream`]) that owns
+//! prompt encoding, per-request sampling ([`DecodeRequest`]: `max_new`,
+//! temperature, top-k, stop token, seed) and the per-token callback used
+//! for streamed replies, so cached-vs-recompute equality reduces to
+//! logits equality (asserted bitwise by the generation proptests).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::data::batch::{encode_prompt, supervised_batch};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
 use crate::data::{Batch, Example};
-use crate::runtime::{Executable, Executor, Tensor};
+use crate::runtime::{DecodeSession, DecoderProvider, Executable, Executor, Tensor};
+use crate::util::rng::Rng;
 
-/// A merged (base-layout) model ready for forward passes.
+/// One generation request: prompt + sampling parameters.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub prompt: String,
+    /// Maximum tokens to generate for this request.
+    pub max_new: usize,
+    /// `<= 0.0` = greedy argmax; otherwise softmax temperature.
+    pub temperature: f32,
+    /// Restrict sampling to the k highest logits (`0` = whole vocab).
+    pub top_k: usize,
+    /// Extra stop token (EOS and PAD always stop).
+    pub stop: Option<i32>,
+    /// Seed for the per-request sampling stream (temperature > 0).
+    pub seed: u64,
+}
+
+impl DecodeRequest {
+    /// Greedy decoding defaults.
+    pub fn greedy(prompt: impl Into<String>, max_new: usize) -> Self {
+        Self {
+            prompt: prompt.into(),
+            max_new,
+            temperature: 0.0,
+            top_k: 0,
+            stop: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Deterministic per-request token sampler.
+struct Sampler {
+    temperature: f32,
+    top_k: usize,
+    rng: Rng,
+}
+
+impl Sampler {
+    fn new(req: &DecodeRequest) -> Self {
+        Self {
+            temperature: req.temperature,
+            top_k: req.top_k,
+            rng: Rng::seed(req.seed ^ 0x5A3F_7E11),
+        }
+    }
+
+    fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        // top-k filter (0 = everything), softmax at temperature, CDF draw
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.top_k > 0 && self.top_k < logits.len() {
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(self.top_k);
+        }
+        let maxv = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> =
+            idx.iter().map(|&i| (((logits[i] - maxv) / self.temperature) as f64).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.f64() * total;
+        for (k, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return idx[k] as i32;
+            }
+        }
+        idx[idx.len() - 1] as i32
+    }
+}
+
+/// A merged (base-layout) model ready for forward passes and decoding.
 pub struct GenModel {
     pub model: String,
     pub b: usize,
     pub t: usize,
-    fwd: std::sync::Arc<dyn Executable>,
-    eval: std::sync::Arc<dyn Executable>,
+    fwd: Arc<dyn Executable>,
+    eval: Arc<dyn Executable>,
     pub params: HashMap<String, Tensor>,
     vocab: usize,
+    decoder: Option<Arc<dyn DecoderProvider>>,
 }
 
 impl GenModel {
@@ -31,7 +120,21 @@ impl GenModel {
         let eval = rt
             .load(&format!("eval_{model}_{b}x{t}"))
             .context("eval artifact")?;
-        Ok(Self { model: model.to_string(), b, t, fwd, eval, params, vocab: mm.dims.vocab })
+        Ok(Self {
+            model: model.to_string(),
+            b,
+            t,
+            fwd,
+            eval,
+            params,
+            vocab: mm.dims.vocab,
+            decoder: rt.decoder(),
+        })
+    }
+
+    /// Whether generation runs the KV-cached incremental path.
+    pub fn has_decoder(&self) -> bool {
+        self.decoder.is_some()
     }
 
     /// Masked LM loss + token accuracy on one batch.
@@ -47,54 +150,160 @@ impl GenModel {
         Ok((loss, acc))
     }
 
-    /// Greedy-decode up to `max_new` tokens for up to `b` prompts at once.
-    ///
-    /// The forward artifact has a fixed (b, t) shape, so decoding is
-    /// recompute-per-token; prompts and answers are short so this stays
-    /// cheap (answers ≤ 12 bytes).
+    /// Greedy-decode up to `max_new` tokens per prompt (KV-cached when
+    /// the backend provides a decoder, full recompute otherwise).
     pub fn generate(&self, prompts: &[String], max_new: usize) -> Result<Vec<String>> {
+        let reqs: Vec<DecodeRequest> =
+            prompts.iter().map(|p| DecodeRequest::greedy(p.clone(), max_new)).collect();
+        self.generate_stream(&reqs, |_, _| {})
+    }
+
+    /// Decode every request, invoking `on_token(request_index, token)` as
+    /// each token is produced (the engine's streaming hook). Returns the
+    /// decoded text per request.
+    pub fn generate_stream(
+        &self,
+        reqs: &[DecodeRequest],
+        mut on_token: impl FnMut(usize, i32),
+    ) -> Result<Vec<String>> {
+        self.run_decode(reqs, self.decoder.is_some(), &mut on_token)
+    }
+
+    /// Reference path: full fixed-shape recompute per token, never the KV
+    /// cache. Public so tests can assert cached/uncached bit-identity.
+    pub fn generate_full_recompute(
+        &self,
+        reqs: &[DecodeRequest],
+        mut on_token: impl FnMut(usize, i32),
+    ) -> Result<Vec<String>> {
+        self.run_decode(reqs, false, &mut on_token)
+    }
+
+    /// Full-sequence logits for the current `rows` buffer.
+    fn full_logits(&self, rows: &[Vec<i32>]) -> Result<Vec<f32>> {
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        let mut pool = self.params.clone();
+        pool.insert("tokens".into(), Tensor::i32(vec![self.b, self.t], flat));
+        let out = self.fwd.run_named(&pool)?;
+        Ok(out["logits"].as_f32()?.to_vec())
+    }
+
+    fn run_decode(
+        &self,
+        reqs: &[DecodeRequest],
+        use_cache: bool,
+        on_token: &mut dyn FnMut(usize, i32),
+    ) -> Result<Vec<String>> {
         let tk = Tokenizer;
-        let mut results = Vec::with_capacity(prompts.len());
-        for chunk in prompts.chunks(self.b) {
+        let vocab = self.vocab;
+        let mut results = Vec::with_capacity(reqs.len());
+        let pad_req = DecodeRequest::greedy("", 0);
+        for (chunk_idx, chunk) in reqs.chunks(self.b).enumerate() {
             let mut rows: Vec<Vec<i32>> = Vec::with_capacity(self.b);
             let mut pos: Vec<usize> = Vec::with_capacity(self.b);
             let mut done: Vec<bool> = Vec::with_capacity(self.b);
+            let mut samplers: Vec<Sampler> = Vec::with_capacity(self.b);
             for i in 0..self.b {
-                let p = chunk.get(i).map(|s| s.as_str()).unwrap_or("");
-                let (toks, gp) = encode_prompt(&tk, p, self.t);
+                let req = chunk.get(i);
+                let (toks, gp) = encode_prompt(&tk, req.map_or("", |r| r.prompt.as_str()), self.t);
                 rows.push(toks);
                 pos.push(gp.min(self.t - 1));
-                done.push(i >= chunk.len());
+                done.push(req.is_none());
+                samplers.push(Sampler::new(req.unwrap_or(&pad_req)));
             }
-            for _ in 0..max_new {
+            let mut generated: Vec<Vec<i32>> = vec![Vec::new(); self.b];
+            let max_new_cap = chunk.iter().map(|r| r.max_new).max().unwrap_or(0);
+
+            let mut session: Option<Box<dyn DecodeSession + '_>> = if use_cache {
+                match &self.decoder {
+                    Some(p) => Some(p.open_session(&self.model, &self.params, self.b, self.t)?),
+                    None => None,
+                }
+            } else {
+                None
+            };
+
+            // Next-token logits per row (readout position = pos - 1).
+            let mut cur = vec![0.0f32; self.b * vocab];
+            if let Some(sess) = session.as_deref_mut() {
+                // prefill: feed prompt tokens; capture logits where the
+                // fed token is the last prompt token
+                let maxp = (0..self.b).filter(|&r| !done[r]).map(|r| pos[r]).max().unwrap_or(0);
+                for step_i in 0..maxp {
+                    let toks: Vec<Option<i32>> = (0..self.b)
+                        .map(|r| {
+                            if !done[r] && step_i < pos[r] {
+                                Some(rows[r][step_i])
+                            } else {
+                                None
+                            }
+                        })
+                        .collect();
+                    let lg = sess.step(&toks)?;
+                    for r in 0..self.b {
+                        if !done[r] && step_i + 1 == pos[r] {
+                            cur[r * vocab..(r + 1) * vocab]
+                                .copy_from_slice(&lg[r * vocab..(r + 1) * vocab]);
+                        }
+                    }
+                }
+            } else {
+                let lg = self.full_logits(&rows)?;
+                for r in 0..self.b {
+                    if !done[r] {
+                        let off = (r * self.t + pos[r] - 1) * vocab;
+                        cur[r * vocab..(r + 1) * vocab].copy_from_slice(&lg[off..off + vocab]);
+                    }
+                }
+            }
+
+            for _ in 0..max_new_cap {
                 if done.iter().all(|&d| d) {
                     break;
                 }
-                let flat: Vec<i32> = rows.iter().flatten().copied().collect();
-                let mut pool = self.params.clone();
-                pool.insert("tokens".into(), Tensor::i32(vec![self.b, self.t], flat));
-                let out = self.fwd.run_named(&pool)?;
-                let logits = out["logits"].as_f32()?.to_vec();
-                for i in 0..self.b {
-                    if done[i] || pos[i] >= self.t {
-                        done[i] = true;
+                // sample one token per live row
+                let mut next: Vec<Option<i32>> = vec![None; self.b];
+                for r in 0..self.b {
+                    if done[r] || pos[r] >= self.t || generated[r].len() >= chunk[r].max_new {
+                        done[r] = true;
                         continue;
                     }
-                    // next-token distribution at position pos-1
-                    let row_off = (i * self.t + pos[i] - 1) * self.vocab;
-                    let slice = &logits[row_off..row_off + self.vocab];
-                    let arg = argmax(slice) as i32;
-                    if arg == EOS || arg == PAD {
-                        done[i] = true;
+                    let tok = samplers[r].sample(&cur[r * vocab..(r + 1) * vocab]);
+                    if tok == EOS || tok == PAD || chunk[r].stop == Some(tok) {
+                        done[r] = true;
                         continue;
                     }
-                    rows[i][pos[i]] = arg;
-                    pos[i] += 1;
+                    rows[r][pos[r]] = tok;
+                    pos[r] += 1;
+                    generated[r].push(tok);
+                    on_token(chunk_idx * self.b + r, tok);
+                    next[r] = Some(tok);
+                }
+                if next.iter().all(|t| t.is_none()) {
+                    continue;
+                }
+                // advance logits past the freshly appended tokens
+                if let Some(sess) = session.as_deref_mut() {
+                    let lg = sess.step(&next)?;
+                    for r in 0..self.b {
+                        if next[r].is_some() {
+                            cur[r * vocab..(r + 1) * vocab]
+                                .copy_from_slice(&lg[r * vocab..(r + 1) * vocab]);
+                        }
+                    }
+                } else {
+                    let lg = self.full_logits(&rows)?;
+                    for r in 0..self.b {
+                        if next[r].is_some() {
+                            let off = (r * self.t + pos[r] - 1) * vocab;
+                            cur[r * vocab..(r + 1) * vocab]
+                                .copy_from_slice(&lg[off..off + vocab]);
+                        }
+                    }
                 }
             }
-            for (i, row) in rows.iter().enumerate().take(chunk.len()) {
-                let (_, gp) = encode_prompt(&tk, &chunk[i], self.t);
-                results.push(tk.decode_until_eos(&row[gp..pos[i].max(gp)]));
+            for g in generated.iter().take(chunk.len()) {
+                results.push(tk.decode_until_eos(g));
             }
         }
         Ok(results)

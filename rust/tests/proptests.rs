@@ -13,9 +13,10 @@ use repro::data::tokenizer::{Tokenizer, EOS, PAD, SEP};
 use repro::data::{Example, Split, World, ARITHMETIC, COMMONSENSE, INSTRUCT};
 use repro::kernels;
 use repro::linalg::Mat;
-use repro::runtime::Tensor;
+use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
 use repro::serve::AdapterBatcher;
 use repro::sparsity;
+use repro::train::{DecodeRequest, GenModel};
 use repro::util::rng::Rng;
 
 const CASES: usize = 60;
@@ -490,5 +491,73 @@ fn prop_task_splits_disjoint() {
             inter.len(),
             inter.first()
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV-cached incremental decode vs full recompute
+// ---------------------------------------------------------------------------
+
+/// The serving hot-path contract: greedy (and seeded temperature)
+/// generation through the KV-cached decode session is **bit-identical**
+/// to full-sequence recompute through the `fwd` artifact — same texts,
+/// same token streams, on random prompts over the builtin metas.
+#[test]
+fn prop_kv_cached_decode_matches_full_recompute() {
+    for (model, cases) in [("tiny", 10usize), ("small", 2)] {
+        let rt = NativeBackend::builtin();
+        for case in 0..cases {
+            let mut rng = Rng::seed(0xD3C0 + case as u64);
+            let init = rt.load(&format!("init_{model}")).unwrap();
+            let outs = init.run(&[Tensor::scalar_i32(case as i32)]).unwrap();
+            let params: std::collections::HashMap<String, Tensor> =
+                init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+            let gm = GenModel::new(&rt, model, params).unwrap();
+            assert!(gm.has_decoder(), "native backend must provide a decoder");
+
+            // random printable prompts of random lengths (some empty, some
+            // long enough to near the window), random per-request params;
+            // tiny sometimes spills into a second chunk, small stays at a
+            // single short chunk to bound the full-recompute reference cost
+            let (n_reqs, max_gen) = if model == "tiny" {
+                (1 + rng.below(gm.b + 2), 9)
+            } else {
+                (1 + rng.below(3), 4)
+            };
+            let reqs: Vec<DecodeRequest> = (0..n_reqs)
+                .map(|i| {
+                    let len = rng.below(gm.t.min(24));
+                    let prompt: String =
+                        (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                    let mut r = DecodeRequest::greedy(prompt, 1 + rng.below(max_gen));
+                    if i % 3 == 2 {
+                        r.temperature = 0.8;
+                        r.top_k = 1 + rng.below(16);
+                        r.seed = 0xBEEF + i as u64;
+                    }
+                    if i % 4 == 3 {
+                        r.stop = Some(rng.below(256) as i32);
+                    }
+                    r
+                })
+                .collect();
+
+            let mut cached_tokens: Vec<(usize, i32)> = Vec::new();
+            let cached = gm
+                .generate_stream(&reqs, |i, t| cached_tokens.push((i, t)))
+                .unwrap();
+            let mut full_tokens: Vec<(usize, i32)> = Vec::new();
+            let full = gm
+                .generate_full_recompute(&reqs, |i, t| full_tokens.push((i, t)))
+                .unwrap();
+            assert_eq!(
+                cached, full,
+                "{model} case {case}: decoded texts diverge between kv-cache and recompute"
+            );
+            assert_eq!(
+                cached_tokens, full_tokens,
+                "{model} case {case}: streamed token sequences diverge"
+            );
+        }
     }
 }

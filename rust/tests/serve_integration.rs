@@ -1,177 +1,324 @@
-//! Serving-stack integration: router + batcher + engine with live S²FT
-//! adapter switches mid-stream.
+//! Serving-stack integration through the public `serve::Engine` API:
+//! pool scheduling, streamed replies, per-request sampling and the
+//! runtime adapter lifecycle (register/unregister/fuse/switch) with live
+//! S²FT adapter switches mid-stream.
 //!
 //! Runs hermetically on the native backend (default features); the pjrt
-//! module replays the same scenarios against real AOT artifacts when they
-//! exist.
+//! module replays the core scenarios against real AOT artifacts when
+//! they exist.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
-use repro::adapter::{AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use repro::adapter::{AnyAdapter, S2ftAdapter, S2ftLayerDelta};
 use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
-use repro::serve::{Router, ServeRequest};
+use repro::serve::{Engine, EngineConfig, GenEvent, GenRequest, BASE_ADAPTER};
 use repro::train::GenModel;
 use repro::util::rng::Rng;
 
-/// Spawn a router whose engine is built by `make_backend` (runs inside the
-/// engine thread, PJRT-compatible).
-fn spawn_router<F>(make_backend: F, n_adapters: usize, max_batch: usize) -> Router
+/// Synthetic tiny-model S²FT adapter deltas, deterministic per rng state.
+fn tiny_adapter(rng: &mut Rng) -> AnyAdapter {
+    let rt = NativeBackend::builtin();
+    let mm = rt.artifacts().model("tiny").unwrap();
+    let (d, hd) = (mm.dims.d_model, mm.head_dim());
+    let layers = (0..mm.dims.n_layers)
+        .map(|_| {
+            let heads = rng.choose(mm.dims.n_heads, 1);
+            let wo_rows = repro::sparsity::expand_head_perm(&heads, hd);
+            S2ftLayerDelta {
+                wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                wo_rows,
+                wd_rows: rng.choose(mm.dims.d_ff, 2),
+                wd_delta: (0..2 * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+            }
+        })
+        .collect();
+    AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d })
+}
+
+/// Spawn an engine whose workers are built by `make_backend` (runs
+/// inside each worker thread, PJRT-compatible), with `n_adapters`
+/// registered at runtime.
+fn spawn_engine<F>(make_backend: F, n_adapters: usize, workers: usize, max_batch: usize) -> Engine
 where
-    F: FnOnce() -> anyhow::Result<Box<dyn Executor>> + Send + 'static,
+    F: Fn() -> anyhow::Result<Box<dyn Executor>> + Send + Sync + 'static,
 {
-    Router::spawn(max_batch, Duration::from_millis(2), move || {
+    let cfg = EngineConfig::new()
+        .workers(workers)
+        .max_batch(max_batch)
+        .window(Duration::from_millis(2));
+    let engine = Engine::spawn(cfg, move |_wid| {
         let rt = make_backend()?;
         let init = rt.load("init_tiny")?;
         let outs = init.run(&[Tensor::scalar_i32(3)])?;
         let params: HashMap<String, Tensor> =
             init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
-        let mm = rt.artifacts().model("tiny")?;
-        let (d, hd) = (mm.dims.d_model, mm.head_dim());
-        let mut store = AdapterStore::new();
-        let mut rng = Rng::seed(77);
-        for a in 0..n_adapters {
-            let layers = (0..mm.dims.n_layers)
-                .map(|_| {
-                    let heads = rng.choose(mm.dims.n_heads, 1);
-                    let wo_rows = repro::sparsity::expand_head_perm(&heads, hd);
-                    S2ftLayerDelta {
-                        wo_delta: (0..wo_rows.len() * d)
-                            .map(|_| rng.normal_f32() * 1e-3)
-                            .collect(),
-                        wo_rows,
-                        wd_rows: rng.choose(mm.dims.d_ff, 2),
-                        wd_delta: (0..2 * d).map(|_| rng.normal_f32() * 1e-3).collect(),
-                    }
-                })
-                .collect();
-            store.insert(format!("a{a}"), AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d }));
-        }
         let snapshot = params.clone();
         let gm = GenModel::new(rt.as_ref(), "tiny", params)?;
-        Ok((gm, store, snapshot))
-    })
+        Ok((gm, snapshot))
+    });
+    let mut rng = Rng::seed(77);
+    for a in 0..n_adapters {
+        engine.register(format!("a{a}"), tiny_adapter(&mut rng));
+    }
+    engine
 }
 
-fn router_serves_all_requests_across_adapters(router: Router) {
-    let mut rx = Vec::new();
+fn engine_serves_all_requests_across_adapters(engine: Engine) {
+    let mut streams = Vec::new();
     for i in 0..9 {
-        rx.push(router.submit(ServeRequest {
-            adapter: format!("a{}", i % 3),
-            prompt: format!("q: item {i}?"),
-            max_new: 3,
-        }));
+        streams.push(engine.submit(
+            GenRequest::new(format!("a{}", i % 3), format!("q: item {i}?")).max_new(3),
+        ));
     }
     let mut served = 0;
-    for r in rx {
-        let reply = r.recv().expect("reply");
+    for s in streams {
+        let reply = s.wait().expect("reply");
         assert!(reply.batch_size >= 1 && reply.batch_size <= 2);
         served += 1;
     }
     assert_eq!(served, 9);
-    let m = router.metrics();
+    let m = engine.metrics();
     assert_eq!(m.requests, 9);
     assert!(m.batches >= 5, "batcher should cap at max_batch=2: {}", m.batches);
     assert!(m.switches >= 3, "must have switched between 3 adapters");
     assert!(m.percentile_ms(0.5) > 0.0);
-    assert_eq!(m.latencies_ms.len(), 9);
-    router.shutdown().unwrap();
+    assert_eq!(m.latencies_ms().len(), 9);
+    engine.shutdown().unwrap();
 }
 
-fn router_base_requests_use_pristine_weights(router: Router) {
-    // adapter request then base request: engine must unfuse in between
-    let r1 = router
-        .call(ServeRequest { adapter: "a0".into(), prompt: "q: x?".into(), max_new: 2 })
-        .unwrap();
-    let r2 = router
-        .call(ServeRequest { adapter: "base".into(), prompt: "q: x?".into(), max_new: 2 })
+fn engine_base_requests_use_pristine_weights(engine: Engine) {
+    // adapter request then base request: worker must unfuse in between
+    let r1 = engine.call(GenRequest::new("a0", "q: x?").max_new(2)).unwrap();
+    let r2 = engine
+        .call(GenRequest::new(BASE_ADAPTER, "q: x?").max_new(2))
         .unwrap();
     // both served; determinism of each path is covered elsewhere — here we
     // assert the engine survives the fuse/unfuse round trip
-    assert!(r1.text.len() <= 2 && r2.text.len() <= 2);
-    let m = router.metrics();
+    assert!(r1.tokens <= 2 && r2.tokens <= 2);
+    assert_eq!(r1.adapter, "a0");
+    assert_eq!(r2.adapter, BASE_ADAPTER);
+    let m = engine.metrics();
     assert_eq!(m.requests, 2);
-    router.shutdown().unwrap();
+    engine.shutdown().unwrap();
 }
 
-fn shutdown_drains_cleanly(router: Router) {
-    let pending = router.submit(ServeRequest {
-        adapter: "a1".into(),
-        prompt: "q: last?".into(),
-        max_new: 2,
-    });
-    router.shutdown().unwrap();
+fn shutdown_drains_cleanly(engine: Engine) {
+    let pending = engine.submit(GenRequest::new("a1", "q: last?").max_new(2));
+    engine.shutdown().unwrap();
     // the queued request was served before shutdown completed
-    assert!(pending.recv().is_ok());
+    assert!(pending.wait().is_ok());
 }
 
-/// Sequential calls make the switch count exact: every adapter change is
-/// one store switch, repeats are free.
-fn switch_count_matches_adapter_changes(router: Router) {
+/// Sequential calls on one worker make the switch count exact: every
+/// adapter change is one store switch, repeats are free.
+fn switch_count_matches_adapter_changes(engine: Engine) {
     for (i, adapter) in ["a0", "a1", "a1", "a0", "a2"].iter().enumerate() {
-        router
-            .call(ServeRequest {
-                adapter: adapter.to_string(),
-                prompt: format!("q: {i}?"),
-                max_new: 1,
-            })
+        engine
+            .call(GenRequest::new(*adapter, format!("q: {i}?")).max_new(1))
             .unwrap();
     }
-    let m = router.metrics();
+    let m = engine.metrics();
     assert_eq!(m.requests, 5);
     // a0 -> a1 (skip dup) -> a0 -> a2 = 4 switches
     assert_eq!(m.switches, 4, "switch count must match adapter changes");
-    router.shutdown().unwrap();
+    engine.shutdown().unwrap();
 }
 
 mod native {
     use super::*;
 
-    fn native_router(n_adapters: usize, max_batch: usize) -> Router {
-        spawn_router(
+    fn native_engine(n_adapters: usize, workers: usize, max_batch: usize) -> Engine {
+        spawn_engine(
             || Ok(Box::new(NativeBackend::builtin()) as Box<dyn Executor>),
             n_adapters,
+            workers,
             max_batch,
         )
     }
 
     #[test]
-    fn router_serves_all_requests_across_adapters() {
-        super::router_serves_all_requests_across_adapters(native_router(3, 2));
+    fn engine_serves_all_requests_across_adapters() {
+        super::engine_serves_all_requests_across_adapters(native_engine(3, 1, 2));
     }
 
     #[test]
-    fn router_base_requests_use_pristine_weights() {
-        super::router_base_requests_use_pristine_weights(native_router(1, 4));
+    fn engine_base_requests_use_pristine_weights() {
+        super::engine_base_requests_use_pristine_weights(native_engine(1, 1, 4));
     }
 
     #[test]
     fn shutdown_drains_cleanly() {
-        super::shutdown_drains_cleanly(native_router(2, 4));
+        super::shutdown_drains_cleanly(native_engine(2, 1, 4));
     }
 
     #[test]
     fn switch_count_matches_adapter_changes() {
-        super::switch_count_matches_adapter_changes(native_router(3, 4));
+        super::switch_count_matches_adapter_changes(native_engine(3, 1, 4));
     }
 
-    /// Concurrent submits from several threads all complete (the router
-    /// side is just channel sends; the single engine thread serializes).
+    /// A multi-worker pool serves everything; every adapter participates
+    /// under round-robin load (the paper's parallel-serve mode: different
+    /// adapters fused on different workers concurrently).
+    #[test]
+    fn multi_worker_pool_serves_and_spreads_load() {
+        let engine = native_engine(3, 3, 2);
+        let mut streams = Vec::new();
+        for i in 0..24 {
+            streams.push(engine.submit(
+                GenRequest::new(format!("a{}", i % 3), format!("q: item {i}?")).max_new(2),
+            ));
+        }
+        let mut workers_seen = std::collections::HashSet::new();
+        let mut adapters_seen = std::collections::HashSet::new();
+        for s in streams {
+            let r = s.wait().expect("reply");
+            workers_seen.insert(r.worker);
+            adapters_seen.insert(r.adapter);
+        }
+        let m = engine.metrics();
+        assert_eq!(m.requests, 24);
+        assert_eq!(adapters_seen.len(), 3);
+        assert!(
+            !workers_seen.is_empty() && workers_seen.iter().all(|&w| w < 3),
+            "worker ids out of range: {workers_seen:?}"
+        );
+        engine.shutdown().unwrap();
+    }
+
+    /// Streamed replies: token events arrive in order, concatenate to the
+    /// final text, and end with exactly one Done.
+    #[test]
+    fn streaming_events_compose_the_reply() {
+        let engine = native_engine(1, 1, 4);
+        let stream = engine.submit(GenRequest::new("a0", "q: stream?").max_new(6));
+        let mut text = String::new();
+        let mut tokens = 0usize;
+        let mut reply = None;
+        for ev in stream {
+            match ev {
+                GenEvent::Token { token, text: piece } => {
+                    assert!((0..=260).contains(&token));
+                    text.push_str(&piece);
+                    tokens += 1;
+                    assert!(reply.is_none(), "tokens after Done");
+                }
+                GenEvent::Done(r) => reply = Some(r),
+                GenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        let reply = reply.expect("missing Done event");
+        assert_eq!(reply.tokens, tokens);
+        assert_eq!(reply.text, text, "streamed pieces must compose the reply");
+        engine.shutdown().unwrap();
+    }
+
+    /// Per-request sampling: temperature+seed are deterministic and a
+    /// stop token truncates generation.
+    #[test]
+    fn per_request_sampling_params() {
+        let engine = native_engine(1, 1, 4);
+        let hot = |seed| {
+            GenRequest::new("a0", "q: sample?")
+                .max_new(6)
+                .temperature(1.5)
+                .top_k(8)
+                .seed(seed)
+        };
+        let a = engine.call(hot(7)).unwrap();
+        let b = engine.call(hot(7)).unwrap();
+        assert_eq!(a.text, b.text, "same seed => same sample");
+
+        // stop token: grab the first greedy token off the stream, then
+        // ask the same (deterministic) request to stop on it
+        let first = engine
+            .submit(GenRequest::new("a0", "q: stop?").max_new(4))
+            .find_map(|ev| match ev {
+                GenEvent::Token { token, .. } => Some(token),
+                _ => None,
+            });
+        if let Some(first) = first {
+            let stopped = engine
+                .call(GenRequest::new("a0", "q: stop?").max_new(4).stop(first))
+                .unwrap();
+            assert_eq!(stopped.tokens, 0, "stop token must halt before emitting it");
+        }
+        engine.shutdown().unwrap();
+    }
+
+    /// Runtime lifecycle: an unknown adapter fails only its own request
+    /// (transactional switch), register makes it servable, fuse-mode
+    /// creates a combined adapter, unregister removes it again.
+    #[test]
+    fn runtime_register_fuse_unregister() {
+        let engine = native_engine(2, 1, 4);
+        // unknown adapter: the request errors, the engine stays up
+        let err = engine.call(GenRequest::new("newcomer", "q: ?").max_new(1));
+        assert!(err.is_err());
+        assert!(engine.call(GenRequest::new("a0", "q: ok?").max_new(1)).is_ok());
+
+        // register at runtime
+        let mut rng = Rng::seed(123);
+        engine.register("newcomer", super::tiny_adapter(&mut rng));
+        let r = engine
+            .call(GenRequest::new("newcomer", "q: now?").max_new(1))
+            .unwrap();
+        assert_eq!(r.adapter, "newcomer");
+
+        // fuse-mode: weighted combination is immediately servable
+        engine.fuse("blend", &[("a0", 0.5), ("a1", 0.5)]).unwrap();
+        assert!(engine.adapters().contains(&"blend".to_string()));
+        assert!(engine.call(GenRequest::new("blend", "q: blend?").max_new(1)).is_ok());
+        assert!(engine.fuse("bad", &[("missing", 1.0)]).is_err());
+
+        // unregister: subsequent requests fail, the rest keep serving
+        engine.unregister("newcomer").unwrap();
+        assert!(engine.call(GenRequest::new("newcomer", "q: gone?").max_new(1)).is_err());
+        assert!(engine.call(GenRequest::new("a1", "q: still?").max_new(1)).is_ok());
+        engine.shutdown().unwrap();
+    }
+
+    /// Zero-window engines cut batches immediately and still serve
+    /// correctly (the empty-window scheduling edge).
+    #[test]
+    fn zero_window_engine_serves() {
+        let cfg = EngineConfig::new().workers(1).max_batch(4).window(Duration::ZERO);
+        let engine = Engine::spawn(cfg, |_| {
+            let rt = NativeBackend::builtin();
+            let init = rt.load("init_tiny")?;
+            let outs = init.run(&[Tensor::scalar_i32(3)])?;
+            let params: HashMap<String, Tensor> =
+                init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+            let snapshot = params.clone();
+            let gm = GenModel::new(&rt, "tiny", params)?;
+            Ok((gm, snapshot))
+        });
+        for i in 0..4 {
+            let r = engine
+                .call(GenRequest::new(BASE_ADAPTER, format!("q: {i}?")).max_new(1))
+                .unwrap();
+            assert_eq!(r.batch_size, 1);
+        }
+        assert_eq!(engine.metrics().requests, 4);
+        engine.shutdown().unwrap();
+    }
+
+    /// Concurrent submits from several threads all complete across a
+    /// 2-worker pool.
     #[test]
     fn concurrent_submits_complete() {
-        let router = std::sync::Arc::new(native_router(2, 4));
+        let engine = std::sync::Arc::new(native_engine(2, 2, 4));
         let mut handles = Vec::new();
         for w in 0..4 {
-            let r = router.clone();
+            let e = engine.clone();
             handles.push(std::thread::spawn(move || {
                 let mut got = 0;
                 for i in 0..3 {
-                    let reply = r
-                        .call(ServeRequest {
-                            adapter: format!("a{}", (w + i) % 2),
-                            prompt: format!("q: w{w} i{i}?"),
-                            max_new: 1,
-                        })
+                    let reply = e
+                        .call(
+                            GenRequest::new(format!("a{}", (w + i) % 2), format!("q: w{w} i{i}?"))
+                                .max_new(1),
+                        )
                         .expect("reply");
                     assert!(reply.batch_size >= 1);
                     got += 1;
@@ -181,10 +328,10 @@ mod native {
         }
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 12);
-        let m = router.metrics();
+        let m = engine.metrics();
         assert_eq!(m.requests, 12);
         assert!(m.switches >= 1);
-        std::sync::Arc::try_unwrap(router)
+        std::sync::Arc::try_unwrap(engine)
             .ok()
             .expect("sole owner")
             .shutdown()
@@ -211,29 +358,35 @@ mod pjrt {
         Some(dir)
     }
 
-    fn pjrt_router(dir: &'static str, n_adapters: usize, max_batch: usize) -> Router {
-        spawn_router(
+    fn pjrt_engine(
+        dir: &'static str,
+        n_adapters: usize,
+        workers: usize,
+        max_batch: usize,
+    ) -> Engine {
+        spawn_engine(
             move || Ok(Box::new(Runtime::new(dir)?) as Box<dyn Executor>),
             n_adapters,
+            workers,
             max_batch,
         )
     }
 
     #[test]
-    fn router_serves_all_requests_across_adapters() {
+    fn engine_serves_all_requests_across_adapters() {
         let Some(dir) = artifacts_dir() else { return };
-        super::router_serves_all_requests_across_adapters(pjrt_router(dir, 3, 2));
+        super::engine_serves_all_requests_across_adapters(pjrt_engine(dir, 3, 1, 2));
     }
 
     #[test]
-    fn router_base_requests_use_pristine_weights() {
+    fn engine_base_requests_use_pristine_weights() {
         let Some(dir) = artifacts_dir() else { return };
-        super::router_base_requests_use_pristine_weights(pjrt_router(dir, 1, 4));
+        super::engine_base_requests_use_pristine_weights(pjrt_engine(dir, 1, 1, 4));
     }
 
     #[test]
     fn shutdown_drains_cleanly() {
         let Some(dir) = artifacts_dir() else { return };
-        super::shutdown_drains_cleanly(pjrt_router(dir, 2, 4));
+        super::shutdown_drains_cleanly(pjrt_engine(dir, 2, 1, 4));
     }
 }
