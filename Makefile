@@ -45,9 +45,11 @@ bench-smoke:
 bench-baseline:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench kernels
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench serve
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench fig5_training
 	cp rust/results/bench_kernels.json rust/benches/baseline/kernels.json
 	cp rust/results/bench_serve.json rust/benches/baseline/serve.json
-	@echo "baselines updated: rust/benches/baseline/{kernels,serve}.json (commit them)"
+	cp rust/results/bench_fig5_training.json rust/benches/baseline/fig5_training.json
+	@echo "baselines updated: rust/benches/baseline/{kernels,serve,fig5_training}.json (commit them)"
 
 bench-compare:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
@@ -56,6 +58,9 @@ bench-compare:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
 	  --current rust/results/bench_serve.json \
 	  --baseline rust/benches/baseline/serve.json
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
+	  --current rust/results/bench_fig5_training.json \
+	  --baseline rust/benches/baseline/fig5_training.json --warn 1.5 --fail 3.0
 
 serve-smoke:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve \

@@ -4,12 +4,40 @@
 //! `repro experiment fig5` harness covers the `base`-model sweep with
 //! memory accounting; this bench gives tight per-step latency
 //! distributions for regressions.
+//!
+//! Two comparison axes ride along for the native backend:
+//!
+//! * truncated vs full walk — `train_step/s2ft` (plan-truncated backward,
+//!   sliced activation cache) against `train_step/s2ft_fullwalk`
+//!   (`S2FT_FULL_BACKWARD=1`: cache everything, walk to layer 0). The
+//!   trainable gradients are bit-identical (proptest-enforced); only
+//!   memory/latency differ. Measured activation-cache bytes print next to
+//!   each lane — the paper's Fig 5 memory story.
+//! * concentrated selection — `train_step/s2ft_top1[_fullwalk]` trains
+//!   only the *top* layer's wo/wd: the truncated walk stops immediately
+//!   below it and skips the other layers' backward entirely, which is
+//!   where the paper's partial-backprop latency win shows up.
 
+use std::collections::HashMap;
+
+use repro::adapter::s2ft_counts;
 use repro::data::{lm_batch, pretrain_corpus, Tokenizer};
-use repro::runtime::{open_backend, Executable, Executor, Tensor};
+use repro::runtime::native::builtin;
+use repro::runtime::native::set_full_backward_override;
+use repro::runtime::{open_backend, Executable, Executor, NativeBackend, Tensor};
 use repro::train::Trainer;
 use repro::util::bench::BenchSuite;
 use repro::util::rng::Rng;
+
+fn act_bytes_note(name: &str, tr: &Trainer) {
+    if let (Some(c), Some(p)) = (tr.activation_bytes(), tr.activation_peak_bytes()) {
+        println!(
+            "    {name}: activation cache {:.2} MB, live peak {:.2} MB",
+            c as f64 / 1e6,
+            p as f64 / 1e6
+        );
+    }
+}
 
 fn main() {
     let rt = match open_backend("artifacts") {
@@ -41,6 +69,7 @@ fn main() {
         "Fig 5 (bench): one optimizer step, model=small {b}x{t}, backend {}\n",
         rt.platform()
     );
+    set_full_backward_override(Some(false));
     for method in ["fullft", "lora", "dora", "spft", "lisa", "galore", "s2ft", "s2ft-pallas"] {
         if mm.methods.get(method).is_none() {
             continue;
@@ -61,8 +90,91 @@ fn main() {
             let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
             trainer.train_step(&batch).expect("train step");
         });
+        act_bytes_note(method, &trainer);
+        // truncated-vs-full reference lane: identical gradients, but the
+        // cache retains everything and the walk runs to layer 0
+        if method == "s2ft" && rt.platform() == "native" {
+            set_full_backward_override(Some(true));
+            let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+            trainer.train_step(&batch).expect("full-walk warmup");
+            suite.bench("train_step/s2ft_fullwalk", || {
+                let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+                trainer.train_step(&batch).expect("full-walk step");
+            });
+            act_bytes_note("s2ft_fullwalk", &trainer);
+            set_full_backward_override(Some(false));
+        }
         rt.evict(&format!("train_{model}_{method}_{b}x{t}"));
     }
-    println!("\nPaper shape: s2ft < lora/dora < fullft in step latency.");
+
+    // Concentrated selection: only the top layer's wo/wd train, so the
+    // truncated walk never descends below it (native backend only — this
+    // layout has no AOT artifact).
+    if rt.platform() == "native" {
+        let nb = NativeBackend::builtin();
+        let mm = nb.artifacts().model(model).expect("model meta").clone();
+        let uniform = &mm.methods["s2ft"];
+        let top = mm.dims.n_layers - 1;
+        // same unit budget as the uniform s2ft method, applied to the top
+        // layer only (s2ft_counts speaks head/channel units, exactly what
+        // s2ft_layout_per_layer expects)
+        let mut counts_per_layer = vec![HashMap::new(); mm.dims.n_layers];
+        counts_per_layer[top] = s2ft_counts(&mm, uniform);
+        let (trainable, frozen, perms) = builtin::s2ft_layout_per_layer(
+            &mm.dims,
+            &mm.base_params,
+            &counts_per_layer,
+        );
+        let mut meth = uniform.clone();
+        meth.trainable_params = trainable.iter().map(|s| s.numel()).sum();
+        meth.opt = trainable.clone();
+        meth.trainable = trainable;
+        meth.frozen = frozen;
+        meth.perms = perms;
+        let mut meta = builtin::builtin_meta();
+        meta.models
+            .get_mut(model)
+            .expect("model")
+            .methods
+            .insert("s2fttop".to_string(), meth.clone());
+        let nb = NativeBackend::with_meta(meta);
+        let (b, t) = nb.artifacts().model(model).expect("model").default_batch();
+        let exe = nb
+            .load(&format!("train_{model}_s2fttop_{b}x{t}"))
+            .expect("top-layer train executable");
+        // weights from the builtin init (the outer backend may be driven
+        // by a meta.json whose `small` differs from the builtin one)
+        let init = nb.load(&format!("init_{model}")).expect("init");
+        let outs = init.run(&[Tensor::scalar_i32(1)]).expect("init run");
+        let nb_base: HashMap<String, Tensor> =
+            init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        let mut pool = builtin::identity_split_pool(&nb_base, &meth);
+        pool.insert("step".to_string(), Tensor::scalar_f32(0.0));
+        let mut rng = Rng::seed(5);
+        for (name, full_walk) in [("s2ft_top1", false), ("s2ft_top1_fullwalk", true)] {
+            set_full_backward_override(Some(full_walk));
+            suite.bench(&format!("train_step/{name}"), || {
+                // batch travels in the overlay: the timed lane measures
+                // the step itself, not a whole-pool clone per iteration
+                let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+                let mut overlay = HashMap::new();
+                overlay.insert("tokens".to_string(), batch.tokens);
+                overlay.insert("targets".to_string(), batch.targets);
+                overlay.insert("loss_mask".to_string(), batch.loss_mask);
+                let out = exe.run_named_with(&pool, &overlay).expect("top-layer step");
+                assert!(out.contains_key("loss"));
+            });
+        }
+        set_full_backward_override(None);
+        println!(
+            "\n  top-layer selection: the truncated walk stops below L{top}; \
+             the full walk still backprops {} layers",
+            mm.dims.n_layers
+        );
+    }
+
+    println!("\nPaper shape: s2ft < lora/dora < fullft in step latency; truncated");
+    println!("s2ft activation cache well below fullft; top-layer truncation beats");
+    println!("the full walk outright.");
     suite.save();
 }

@@ -1,9 +1,12 @@
 //! Figure 5: training efficiency — peak memory and per-step latency for
 //! Full FT / LoRA / S²FT on the `base` model across (batch, seq) shapes.
 //!
-//! Memory is reported two ways: analytic live-state bytes (params + frozen
-//! + optimizer moments, exactly what the method layouts imply) and process
-//! peak-RSS delta. Latency is the measured train-step wall time.
+//! Memory is reported three ways: analytic live-state bytes (params +
+//! frozen + optimizer moments, exactly what the method layouts imply —
+//! batch inputs never enter the pool, so this is stable across steps),
+//! *measured* activation bytes (what the native backend's plan-driven
+//! cache actually retained for the backward pass, plus its live peak),
+//! and process peak-RSS. Latency is the measured train-step wall time.
 
 use anyhow::Result;
 
@@ -37,12 +40,13 @@ pub fn run_fig5(artifacts: &str, quick: bool) -> Result<()> {
 
     println!("\n=== Figure 5: training efficiency on `{MODEL}` ({:.1}M params) ===", mm.param_count as f64 / 1e6);
     println!(
-        "{:<8} {:>5} {:>5} {:>12} {:>12} {:>12} {:>10}",
-        "method", "B", "T", "ms/step", "state MB", "opt MB", "tok/s"
+        "{:<8} {:>5} {:>5} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "method", "B", "T", "ms/step", "state MB", "opt MB", "act MB", "act pk MB", "tok/s"
     );
     let mut records = Vec::new();
     let mut baseline_ms: Option<f64> = None;
     let mut baseline_mb: Option<f64> = None;
+    let mut baseline_act: Option<f64> = None;
     for &(b, t) in &shapes {
         for &method in &methods {
             let train_name = format!("train_{MODEL}_{method}_{b}x{t}");
@@ -67,14 +71,30 @@ pub fn run_fig5(artifacts: &str, quick: bool) -> Result<()> {
             let ms = trainer.metrics.ms_per_step();
             let state_mb = trainer.state_bytes() as f64 / 1e6;
             let opt_mb = trainer.opt_bytes() as f64 / 1e6;
+            // measured activation cache (native backend; AOT reports none)
+            let act_mb = trainer.activation_bytes().map(|v| v as f64 / 1e6);
+            let act_pk_mb = trainer.activation_peak_bytes().map(|v| v as f64 / 1e6);
+            let fmt_opt = |v: Option<f64>| match v {
+                Some(v) => format!("{v:.1}"),
+                None => "-".to_string(),
+            };
             let tps = trainer.metrics.tokens_per_sec();
             println!(
-                "{:<8} {:>5} {:>5} {:>12.1} {:>12.1} {:>12.1} {:>10.0}",
-                method, b, t, ms, state_mb, opt_mb, tps
+                "{:<8} {:>5} {:>5} {:>12.1} {:>12.1} {:>12.1} {:>10} {:>10} {:>10.0}",
+                method,
+                b,
+                t,
+                ms,
+                state_mb,
+                opt_mb,
+                fmt_opt(act_mb),
+                fmt_opt(act_pk_mb),
+                tps
             );
             if method == "fullft" && (b, t) == shapes[0] {
                 baseline_ms = Some(ms);
                 baseline_mb = Some(state_mb);
+                baseline_act = act_mb;
             }
             records.push(Json::obj(vec![
                 ("method", Json::str(method)),
@@ -83,6 +103,14 @@ pub fn run_fig5(artifacts: &str, quick: bool) -> Result<()> {
                 ("ms_per_step", Json::num(ms)),
                 ("state_mb", Json::num(state_mb)),
                 ("opt_mb", Json::num(opt_mb)),
+                (
+                    "act_mb",
+                    act_mb.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "act_peak_mb",
+                    act_pk_mb.map(Json::num).unwrap_or(Json::Null),
+                ),
                 ("tokens_per_sec", Json::num(tps)),
                 (
                     "peak_rss_mb",
@@ -102,8 +130,15 @@ pub fn run_fig5(artifacts: &str, quick: bool) -> Result<()> {
                 && r.get("batch").unwrap().as_usize().unwrap() == shapes[0].0
                 && r.get("seq").unwrap().as_usize().unwrap() == shapes[0].1
             {
+                let ra = r.get("act_mb").ok().and_then(|v| v.as_f64().ok());
+                let act_ratio = match (baseline_act, ra) {
+                    (Some(base), Some(act)) if act > 0.0 => {
+                        format!(", measured act {:.2}x smaller", base / act)
+                    }
+                    _ => String::new(),
+                };
                 println!(
-                    "  {m}: latency {:.2}x faster, state {:.2}x smaller",
+                    "  {m}: latency {:.2}x faster, state {:.2}x smaller{act_ratio}",
                     bms / r.get("ms_per_step").unwrap().as_f64().unwrap(),
                     bmb / r.get("state_mb").unwrap().as_f64().unwrap(),
                 );

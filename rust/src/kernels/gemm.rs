@@ -201,6 +201,25 @@ pub fn gemm_tn_outcols_with_threads(
     out
 }
 
+/// Sliced-cache copy: the first `lim` columns of each row of `A (rows,
+/// cols)`, packed into a `(rows, lim)` buffer.
+///
+/// This is the cache-time half of the S²FT partial-gradient contract:
+/// the trainable-first co-permutation puts the trainable channels first,
+/// so retaining `A[:, :lim]` at forward time is enough to later compute
+/// `gemm_tn(sliced, dY, rows, lim, kb, lim)` — bit-identical to
+/// `gemm_tn(full, dY, rows, cols, kb, lim)`, but the frozen channels are
+/// never held across the forward/backward gap.
+pub fn slice_cols(a: &[f32], rows: usize, cols: usize, lim: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * cols, "slice_cols: A shape");
+    debug_assert!(lim <= cols, "slice_cols: lim {lim} > cols {cols}");
+    let mut out = vec![0.0f32; rows * lim];
+    for (r, orow) in out.chunks_exact_mut(lim.max(1)).enumerate() {
+        orow.copy_from_slice(&a[r * cols..r * cols + lim]);
+    }
+    out
+}
+
 /// Fused GEMV accumulate: `y (n) += scale · (x (k) @ W (k,n))` on the
 /// calling thread — the per-request adapter-delta shape (one activation
 /// row against a small dense delta).
@@ -292,6 +311,37 @@ mod tests {
                 (0..ka).flat_map(|i| full[i * kb..i * kb + lim].to_vec()).collect();
             assert_eq!(part, want, "lim {lim}");
             assert_eq!(part, reference::gemm_tn_outcols(&a, &b, rows, ka, kb, lim));
+        }
+    }
+
+    #[test]
+    fn slice_cols_keeps_leading_columns() {
+        // (2,3) -> first 2 cols
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(slice_cols(&a, 2, 3, 2), vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(slice_cols(&a, 2, 3, 0), Vec::<f32>::new());
+        assert_eq!(slice_cols(&a, 2, 3, 3), a);
+    }
+
+    #[test]
+    fn gemm_tn_on_sliced_cache_is_bit_identical_to_gemm_time_slice() {
+        // the cache-time slice contract: slicing A before the GEMM gives
+        // the exact bits of the lim-limited GEMM over the full A
+        let mut rng = Rng::seed(16);
+        let (rows, ka, kb) = (11, 9, 6);
+        let a = randv(&mut rng, rows * ka);
+        let b = randv(&mut rng, rows * kb);
+        for lim in [0usize, 1, 4, ka] {
+            let at_gemm_time = gemm_tn(&a, &b, rows, ka, kb, lim);
+            let sliced = slice_cols(&a, rows, ka, lim);
+            let at_cache_time = gemm_tn(&sliced, &b, rows, lim, kb, lim);
+            assert!(
+                at_gemm_time
+                    .iter()
+                    .zip(&at_cache_time)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "lim {lim}"
+            );
         }
     }
 

@@ -15,7 +15,10 @@
 //! * [`gemm_tn_outcols`] — `C = Aᵀ @ B[:, :lim]`, the column-split
 //!   partial-gradient kernel (trainable head/channel columns);
 //!
-//! plus [`gemv_acc`] (fused `y += scale·(x @ W)` for the per-request
+//! plus [`slice_cols`] (the cache-time activation slice: retaining
+//! `A[:, :lim]` at forward time makes the later `gemm_tn` over the slice
+//! bit-identical to the `lim`-limited GEMM over the full buffer),
+//! [`gemv_acc`] (fused `y += scale·(x @ W)` for the per-request
 //! adapter deltas) and the causal-attention pair
 //! [`causal_attn_fwd`]/[`causal_attn_bwd`] used by the native model
 //! interpreter.
@@ -48,7 +51,9 @@ pub mod reference;
 pub use attn::{attn_decode, causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
 pub use attn::{causal_attn_fwd, causal_attn_fwd_with_threads};
 pub use gemm::{gemm, gemm_nt, gemm_nt_with_threads, gemm_tn, gemm_tn_outcols};
-pub use gemm::{gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_threads, gemv_acc};
+pub use gemm::{
+    gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_threads, gemv_acc, slice_cols,
+};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;

@@ -255,8 +255,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             }
         }
     }
+    let act = match (trainer.activation_bytes(), trainer.activation_peak_bytes()) {
+        (Some(c), Some(p)) => {
+            format!(", act {:.1} MB (peak {:.1} MB)", c as f64 / 1e6, p as f64 / 1e6)
+        }
+        _ => String::new(),
+    };
     println!(
-        "done: {} steps, tail loss {:.4}, {:.1} ms/step, state {:.1} MB (opt {:.1} MB)",
+        "done: {} steps, tail loss {:.4}, {:.1} ms/step, state {:.1} MB (opt {:.1} MB){act}",
         trainer.metrics.steps(),
         trainer.metrics.tail_loss(10),
         trainer.metrics.ms_per_step(),

@@ -91,11 +91,27 @@ pub trait Executable: Send + Sync {
 
     /// Execute with named inputs pulled from a tensor pool.
     fn run_named(&self, pool: &HashMap<String, Tensor>) -> Result<HashMap<String, Tensor>> {
+        self.run_named_with(pool, &HashMap::new())
+    }
+
+    /// Execute with named inputs pulled from `overlay` first, then `pool`.
+    ///
+    /// Callers with per-step inputs (batch tensors, step counters, layer
+    /// masks) pass them in the overlay so the persistent pool holds
+    /// *state only* — this is what keeps `Trainer::state_bytes()` an
+    /// honest Fig 5 number instead of one that silently absorbs batch
+    /// inputs after the first step.
+    fn run_named_with(
+        &self,
+        pool: &HashMap<String, Tensor>,
+        overlay: &HashMap<String, Tensor>,
+    ) -> Result<HashMap<String, Tensor>> {
         let spec = self.spec();
         let mut args = Vec::with_capacity(spec.inputs.len());
         for s in &spec.inputs {
-            let t = pool
+            let t = overlay
                 .get(&s.name)
+                .or_else(|| pool.get(&s.name))
                 .ok_or_else(|| anyhow!("{}: missing input {:?}", self.name(), s.name))?;
             args.push(t.clone());
         }

@@ -7,6 +7,7 @@
 use std::collections::HashMap;
 
 use crate::runtime::meta::{Meta, MethodMeta, ModelDims, ModelMeta, NamedShape};
+use crate::runtime::Tensor;
 use crate::sparsity;
 
 /// The native methods: fullft and s2ft (the paper's method). Other
@@ -150,11 +151,25 @@ pub fn is_mha(p: &str) -> bool {
 }
 
 /// The s2ft (trainable, frozen, perms) shape sections for a unit-count
-/// budget — python `method_layout`, s2ft arm.
+/// budget — python `method_layout`, s2ft arm. Uniform across layers.
 pub fn s2ft_layout(
     dims: &ModelDims,
     base: &[NamedShape],
     counts: &HashMap<String, usize>,
+) -> (Vec<NamedShape>, Vec<NamedShape>, Vec<NamedShape>) {
+    let per_layer = vec![counts.clone(); dims.n_layers];
+    s2ft_layout_per_layer(dims, base, &per_layer)
+}
+
+/// [`s2ft_layout`] with an explicit unit-count budget *per layer* —
+/// layers with an empty map stay fully frozen. This is how tests and
+/// benches build concentrated selections (e.g. top-layer-only) that
+/// exercise the truncated backward walk; `aot.py` only ever emits the
+/// uniform layout.
+pub fn s2ft_layout_per_layer(
+    dims: &ModelDims,
+    base: &[NamedShape],
+    counts_per_layer: &[HashMap<String, usize>],
 ) -> (Vec<NamedShape>, Vec<NamedShape>, Vec<NamedShape>) {
     let hd = dims.d_model / dims.n_heads;
     let base_shape = |name: &str| -> Vec<usize> {
@@ -163,10 +178,13 @@ pub fn s2ft_layout(
     let mut trn: Vec<NamedShape> = Vec::new();
     let mut frz: Vec<NamedShape> = base.to_vec();
     let mut perms: Vec<NamedShape> = Vec::new();
-    let has_mha = counts.keys().any(|p| is_mha(p));
-    let has_ffn = counts.keys().any(|p| !is_mha(p));
-    for i in 0..dims.n_layers {
+    for (i, counts) in counts_per_layer.iter().enumerate().take(dims.n_layers) {
+        let has_mha = counts.iter().any(|(p, &c)| c > 0 && is_mha(p));
+        let has_ffn = counts.iter().any(|(p, &c)| c > 0 && !is_mha(p));
         for (p, &c) in counts {
+            if c == 0 {
+                continue;
+            }
             let name = format!("L{i}.{p}");
             let shape = base_shape(&name);
             let (din, dout) = (shape[0], shape[1]);
@@ -191,6 +209,53 @@ pub fn s2ft_layout(
     frz.sort_by(|a, b| a.name.cmp(&b.name));
     perms.sort_by(|a, b| a.name.cmp(&b.name));
     (trn, frz, perms)
+}
+
+/// Split base-layout weights at the *identity* selection (`_t` = the
+/// leading rows/columns of each trainable tensor's base weight) for a
+/// hand-built layout, and zero the optimizer moments — the
+/// executable-level pool that tests and benches drive a `train_M_m_BxT`
+/// executable with, bypassing `prepare` (which would also permute).
+///
+/// Panics on a malformed layout (trainable name without a base tensor);
+/// this is test/bench support, not a production path.
+pub fn identity_split_pool(
+    base: &HashMap<String, Tensor>,
+    meth: &MethodMeta,
+) -> HashMap<String, Tensor> {
+    let mut pool = base.clone();
+    for s in &meth.trainable {
+        let name = s.name.strip_suffix("_t").expect("trainable name ends in _t");
+        let proj = name.rsplit('.').next().unwrap_or("");
+        let w = pool.remove(name).expect("base tensor for split");
+        let (din, dout) = (w.shape[0], w.shape[1]);
+        let wv = w.as_f32().expect("f32 weight");
+        if is_row_split(proj) {
+            let rows = s.shape[0];
+            pool.insert(
+                format!("{name}_t"),
+                Tensor::f32(vec![rows, dout], wv[..rows * dout].to_vec()),
+            );
+            pool.insert(
+                format!("{name}_f"),
+                Tensor::f32(vec![din - rows, dout], wv[rows * dout..].to_vec()),
+            );
+        } else {
+            let cols = s.shape[1];
+            let (mut tv, mut fv) = (Vec::new(), Vec::new());
+            for r in 0..din {
+                tv.extend_from_slice(&wv[r * dout..r * dout + cols]);
+                fv.extend_from_slice(&wv[r * dout + cols..(r + 1) * dout]);
+            }
+            pool.insert(format!("{name}_t"), Tensor::f32(vec![din, cols], tv));
+            pool.insert(format!("{name}_f"), Tensor::f32(vec![din, dout - cols], fv));
+        }
+    }
+    for o in &meth.opt {
+        pool.insert(format!("m.{}", o.name), Tensor::zeros(o.shape.clone()));
+        pool.insert(format!("v.{}", o.name), Tensor::zeros(o.shape.clone()));
+    }
+    pool
 }
 
 #[cfg(test)]

@@ -1,0 +1,126 @@
+//! Byte-accurate activation-memory accounting for the native train step.
+//!
+//! The paper's Fig. 5 memory claim is about *activations*, not just
+//! parameter/optimizer state: S²FT's partial back-propagation only has to
+//! cache the trainable slice of each activation, and caches nothing below
+//! the shallowest trainable layer. [`ActivationMeter`] measures what the
+//! interpreter actually holds:
+//!
+//! * [`ActivationMeter::retain_layer`] records the bytes a layer's forward
+//!   cache keeps alive until the backward pass consumes it (the
+//!   plan-sliced buffers, summed into [`ActivationMeter::cache_total`]);
+//! * [`ActivationMeter::alloc`] / [`ActivationMeter::free`] track the
+//!   transient working set (full-width buffers while a layer is being
+//!   computed, gradient buffers in the backward walk), whose high-water
+//!   mark is [`ActivationMeter::peak`].
+//!
+//! The numbers surface as the `act_bytes` / `act_peak_bytes` outputs of
+//! the native `train_M_m_BxT` executable and flow through
+//! `TrainMetrics::to_json` into `repro experiment fig5`, next to the
+//! analytic state-bytes figure.
+//!
+//! Accounting scope: this is an *activation* meter. `cache_total` /
+//! `per_layer` are exact (actual buffer lengths of everything the cache
+//! holds). The peak covers every named O(N·d)-and-larger activation or
+//! activation-gradient buffer in the forward and backward passes. It
+//! deliberately excludes (a) weight-gradient accumulators — they are
+//! parameter-scale, bounded by the method's trainable parameters, and
+//! belong to the analytic `state_bytes` side of the Fig 5 story — and
+//! (b) the unnamed GEMM temporaries inside `dx1`/`dx2` accumulation
+//! chains, RoPE cos/sin tables, and O(N)/O(d) norm scratch (at most
+//! about one `N·d` buffer of undercount).
+
+/// Live/peak byte accounting for one forward+backward pass.
+#[derive(Debug, Clone, Default)]
+pub struct ActivationMeter {
+    /// Bytes currently live (retained cache + transients).
+    live: u64,
+    /// High-water mark of `live` over the pass.
+    pub peak: u64,
+    /// Total bytes the forward cache retained for the backward pass.
+    pub cache_total: u64,
+    /// Retained cache bytes per layer (index = layer).
+    pub per_layer: Vec<u64>,
+}
+
+impl ActivationMeter {
+    pub fn new(n_layers: usize) -> Self {
+        Self { live: 0, peak: 0, cache_total: 0, per_layer: vec![0; n_layers] }
+    }
+
+    /// Account `bytes` of freshly allocated buffer space.
+    pub fn alloc(&mut self, bytes: u64) {
+        self.live += bytes;
+        self.peak = self.peak.max(self.live);
+    }
+
+    /// Account `bytes` of released buffer space.
+    pub fn free(&mut self, bytes: u64) {
+        self.live = self.live.saturating_sub(bytes);
+    }
+
+    /// Mark `bytes` of the currently-live working set as retained by the
+    /// forward cache of `layer` (they stay live until the backward pass
+    /// frees them with [`ActivationMeter::free`]).
+    pub fn retain_layer(&mut self, layer: usize, bytes: u64) {
+        if layer < self.per_layer.len() {
+            self.per_layer[layer] = bytes;
+        }
+        self.cache_total += bytes;
+    }
+
+    /// Retained bytes not attributed to a specific layer (final norm /
+    /// head buffers).
+    pub fn retain_final(&mut self, bytes: u64) {
+        self.cache_total += bytes;
+    }
+
+    /// Bytes currently live (tests / diagnostics).
+    pub fn live_bytes(&self) -> u64 {
+        self.live
+    }
+}
+
+/// Bytes of an f32 buffer (the meter's unit of account).
+pub fn f32_bytes(len: usize) -> u64 {
+    (len * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut m = ActivationMeter::new(2);
+        m.alloc(100);
+        m.alloc(50);
+        assert_eq!(m.peak, 150);
+        m.free(120);
+        assert_eq!(m.live_bytes(), 30);
+        m.alloc(10);
+        assert_eq!(m.peak, 150, "peak must not decrease");
+    }
+
+    #[test]
+    fn retained_layers_sum_into_cache_total() {
+        let mut m = ActivationMeter::new(3);
+        m.alloc(400);
+        m.retain_layer(0, 100);
+        m.retain_layer(2, 50);
+        m.retain_final(8);
+        assert_eq!(m.cache_total, 158);
+        assert_eq!(m.per_layer, vec![100, 0, 50]);
+        // out-of-range layers still count toward the total
+        m.retain_layer(9, 7);
+        assert_eq!(m.cache_total, 165);
+    }
+
+    #[test]
+    fn free_saturates_at_zero() {
+        let mut m = ActivationMeter::new(0);
+        m.alloc(10);
+        m.free(25);
+        assert_eq!(m.live_bytes(), 0);
+    }
+}

@@ -4,11 +4,21 @@
 //! *names* (`init_M`, `fwd_M_BxT`, `eval_M_BxT`, `prepare_M_m_BxT`,
 //! `train_M_m_BxT`, `merge_M_m`) and executes the corresponding model
 //! semantics directly on [`Tensor`]s: seeded init, LLaMA-style
-//! forward/eval, an AdamW train step with S²FT partial backprop (only the
-//! trainable-first rows/columns get weight gradients), and the
+//! forward/eval, an AdamW train step with S²FT partial backprop, and the
 //! method-layout merge. Supported methods: `fullft` and `s2ft` (selection
 //! strategies R and W); the remaining baselines exist only as AOT
 //! artifacts under the `pjrt` feature.
+//!
+//! The train step's backward is *plan-truncated* (paper §4): a cache plan
+//! derived from the gradient plan slices `act`/`attn` down to the
+//! trainable channels at forward time, retains nothing below the
+//! shallowest trainable layer, and the backward walk stops there, skipping
+//! every dX-only GEMM no surviving gradient reads. An [`ActivationMeter`]
+//! measures the retained cache and live peak byte-accurately; the numbers
+//! surface as the native train executables' `act_bytes` /
+//! `act_peak_bytes` outputs. `S2FT_FULL_BACKWARD=1` forces the
+//! cache-everything, walk-to-zero reference (bit-identical trainable
+//! gradients, proptest-enforced).
 //!
 //! Specs are synthesized on demand from the model/method layout sections,
 //! so any (batch, seq) shape works — there is no artifact enumeration
@@ -16,9 +26,12 @@
 
 pub mod builtin;
 mod decode;
+pub mod meter;
 mod model;
 
 pub use decode::NativeDecodeSession;
+pub use meter::ActivationMeter;
+pub use model::set_full_backward_override;
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -256,6 +269,10 @@ fn synthesize_spec(mm: &ModelMeta, kind: &Kind) -> ArtifactMeta {
             for o in &m.opt {
                 outputs.push(ts(&format!("new_v.{}", o.name), o.shape.clone(), "f32"));
             }
+            // measured activation memory (native-only outputs; AOT specs
+            // from meta.json simply omit them and the trainer copes)
+            outputs.push(ts("act_bytes", vec![], "i32"));
+            outputs.push(ts("act_peak_bytes", vec![], "i32"));
             outputs.push(ts("loss", vec![], "f32"));
             (inputs, outputs)
         }

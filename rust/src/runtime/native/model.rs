@@ -1,9 +1,10 @@
 //! Native numerics: the LLaMA-style model semantics interpreted directly
-//! on host tensors — seeded init, cached forward, masked cross-entropy,
-//! manual backprop with S²FT *partial* weight gradients (paper §3.3: the
-//! activation is sliced before the dW GEMM, so frozen rows never get a
-//! gradient, let alone an update), AdamW, and the method-layout
-//! prepare/merge co-permutations (paper §3.1–3.2).
+//! on host tensors — seeded init, plan-cached forward, masked
+//! cross-entropy, truncated manual backprop with S²FT *partial* weight
+//! gradients (paper §3.3/§4: the activation is sliced down to the
+//! trainable channels when it is cached, nothing is cached below the
+//! shallowest trainable layer, and the backward walk stops there), AdamW,
+//! and the method-layout prepare/merge co-permutations (paper §3.1–3.2).
 //!
 //! Conventions match `python/compile/model.py` exactly: `y = x @ W` with
 //! `W: (d_in, d_out)`; FFN channel `c` is column `c` of wu/wg and row `c`
@@ -15,7 +16,8 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::kernels::{
-    causal_attn_bwd, causal_attn_fwd, gemm, gemm_nt, gemm_tn, gemm_tn_outcols, AttnDims,
+    causal_attn_bwd, causal_attn_fwd, gemm, gemm_nt, gemm_tn, gemm_tn_outcols, slice_cols,
+    AttnDims,
 };
 use crate::runtime::meta::{MethodMeta, ModelMeta};
 use crate::runtime::Tensor;
@@ -23,6 +25,7 @@ use crate::sparsity;
 use crate::util::rng::Rng;
 
 use super::builtin::{is_mha, is_row_split, FFN_PROJS, MHA_PROJS};
+use super::meter::{f32_bytes, ActivationMeter};
 
 type Named<'a> = HashMap<&'a str, &'a Tensor>;
 type WeightMap<'a> = HashMap<String, &'a [f32]>;
@@ -203,9 +206,155 @@ pub(super) fn sigmoid(x: f32) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
-// Forward (cached)
+// Cache plan: which forward buffers the backward pass will actually read
 // ---------------------------------------------------------------------------
 
+/// Per-layer retention/backward plan (all false/0 = layer is below the
+/// shallowest trainable layer; nothing is cached and the backward walk
+/// never reaches it).
+#[derive(Debug, Clone, Default)]
+struct LayerPlan {
+    /// `act` channels to retain — the trainable `wd` rows sit first under
+    /// the co-permutation, so the cache keeps only `act[:, :act_ch]`.
+    act_ch: usize,
+    /// `attn` columns to retain — the trainable `wo` rows.
+    attn_ch: usize,
+    /// retain `x1` (the wq/wk/wv weight gradients read it in full)
+    x1: bool,
+    /// run the SiLU chain (retain `x2`, recompute `u`/`g` from it):
+    /// needed for wu/wg gradients or to continue into `dx2`
+    silu: bool,
+    /// compute `dx2` → norm2 → `dh_mid` (retains `h_mid`/`inv2`)
+    dx2: bool,
+    /// run the attention backward (retains `qr`/`kr`/`v`/`probs`)
+    attn_dx: bool,
+    /// propagate `dh` into the layer below (retains `h_in`/`inv1`)
+    dh_below: bool,
+}
+
+/// Plan for the whole pass, derived from the [`GradPlan`]: decides which
+/// buffers [`forward`] retains and where [`backward`] stops walking.
+struct CachePlan {
+    /// Retain every buffer (incl. `u`/`g`/`xf`) and walk to layer 0 —
+    /// full FT, or the `S2FT_FULL_BACKWARD` reference walk.
+    retain_all: bool,
+    /// Retain the final-norm buffers (`h_final`/`invf`) for backprop;
+    /// false for inference-only forwards, which retain nothing.
+    training: bool,
+    /// Shallowest layer with any trainable units (`n_layers` when none):
+    /// the backward walk stops here and no earlier layer caches anything.
+    stop: usize,
+    layers: Vec<LayerPlan>,
+}
+
+const LAYER_PROJS: [&str; 7] = ["wq", "wk", "wv", "wo", "wu", "wg", "wd"];
+
+impl CachePlan {
+    /// Forward-only: cache nothing anywhere.
+    fn inference(n_layers: usize) -> CachePlan {
+        CachePlan {
+            retain_all: false,
+            training: false,
+            stop: n_layers,
+            layers: vec![LayerPlan::default(); n_layers],
+        }
+    }
+
+    /// Retain everything, walk every layer (full FT; also the reference
+    /// behavior the partial plan is proptested bit-identical against).
+    fn full_walk(mm: &ModelMeta) -> CachePlan {
+        let lp = LayerPlan {
+            act_ch: mm.dims.d_ff,
+            attn_ch: mm.dims.d_model,
+            x1: true,
+            silu: true,
+            dx2: true,
+            attn_dx: true,
+            dh_below: true,
+        };
+        CachePlan {
+            retain_all: true,
+            training: true,
+            stop: 0,
+            layers: vec![lp; mm.dims.n_layers],
+        }
+    }
+
+    /// Derive the minimal retention plan for a gradient plan. The paper's
+    /// partial back-propagation (§4): weight-gradient inputs are sliced to
+    /// the trainable channels at cache time, dX chains run only where a
+    /// gradient still has to flow, and the walk truncates at the
+    /// shallowest trainable layer.
+    fn training(plan: &GradPlan, mm: &ModelMeta, force_full_walk: bool) -> CachePlan {
+        if plan.full || force_full_walk {
+            return Self::full_walk(mm);
+        }
+        let l = mm.dims.n_layers;
+        let any: Vec<bool> =
+            (0..l).map(|i| LAYER_PROJS.iter().any(|p| plan.units(i, p) > 0)).collect();
+        let stop = any.iter().position(|&a| a).unwrap_or(l);
+        let layers = (0..l)
+            .map(|i| {
+                if i < stop {
+                    return LayerPlan::default();
+                }
+                let u = |p: &str| plan.units(i, p);
+                let below = i > stop; // a trainable layer exists strictly below
+                let attn_projs = u("wq") > 0 || u("wk") > 0 || u("wv") > 0;
+                let dx2 = below || u("wo") > 0 || attn_projs;
+                LayerPlan {
+                    act_ch: u("wd").min(mm.dims.d_ff),
+                    attn_ch: u("wo").min(mm.dims.d_model),
+                    x1: attn_projs,
+                    silu: dx2 || u("wu") > 0 || u("wg") > 0,
+                    dx2,
+                    attn_dx: below || attn_projs,
+                    dh_below: below,
+                }
+            })
+            .collect();
+        CachePlan { retain_all: false, training: true, stop, layers }
+    }
+}
+
+/// In-process override for the full-walk reference switch:
+/// 0 = unset (defer to the environment), 1 = forced off, 2 = forced on.
+static FULL_WALK_OVERRIDE: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Force (or un-force, with `None`) the cache-everything walk-to-zero
+/// reference backward without touching the process environment — the
+/// hook tests and benches use, since `std::env::set_var` races with any
+/// concurrent `getenv` on other threads.
+pub fn set_full_backward_override(v: Option<bool>) {
+    let enc = match v {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    FULL_WALK_OVERRIDE.store(enc, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// `S2FT_FULL_BACKWARD=1` (or [`set_full_backward_override`]) forces the
+/// pre-plan reference behavior: cache every buffer and walk every layer
+/// down to 0 (weight gradients stay partial). Used by the
+/// `fig5_training` truncated-vs-full bench lanes and the bit-identity
+/// proptests.
+fn force_full_walk() -> bool {
+    match FULL_WALK_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => std::env::var("S2FT_FULL_BACKWARD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward (plan-cached)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
 struct LayerCache {
     h_in: Vec<f32>,
     inv1: Vec<f32>,
@@ -214,20 +363,41 @@ struct LayerCache {
     kr: Vec<f32>,
     v: Vec<f32>,
     probs: Vec<f32>, // (b, heads, t, t)
-    attn: Vec<f32>,  // concatenated head outputs (N, d), pre-wo
+    attn: Vec<f32>,  // head outputs pre-wo: (N, attn_ch) plan slice
     h_mid: Vec<f32>,
     inv2: Vec<f32>,
     x2: Vec<f32>,
-    u: Vec<f32>,
+    u: Vec<f32>, // retained only under `retain_all` (else recomputed)
     g: Vec<f32>,
-    act: Vec<f32>,
+    act: Vec<f32>, // (N, act_ch) plan slice
+}
+
+impl LayerCache {
+    fn bytes(&self) -> u64 {
+        f32_bytes(
+            self.h_in.len()
+                + self.inv1.len()
+                + self.x1.len()
+                + self.qr.len()
+                + self.kr.len()
+                + self.v.len()
+                + self.probs.len()
+                + self.attn.len()
+                + self.h_mid.len()
+                + self.inv2.len()
+                + self.x2.len()
+                + self.u.len()
+                + self.g.len()
+                + self.act.len(),
+        )
+    }
 }
 
 struct Cache {
     layers: Vec<LayerCache>,
     h_final: Vec<f32>,
     invf: Vec<f32>,
-    xf: Vec<f32>,
+    xf: Vec<f32>, // retained only under `retain_all` (embed gradient)
     logits: Vec<f32>,
 }
 
@@ -237,8 +407,46 @@ fn weight<'a>(w: &WeightMap<'a>, name: &str) -> Result<&'a [f32]> {
         .ok_or_else(|| anyhow!("native: missing weight {name:?}"))
 }
 
-/// Full cached forward pass in (possibly permuted) base layout.
-fn forward(mm: &ModelMeta, w: &WeightMap, tokens: &[i32], b: usize, t: usize) -> Result<Cache> {
+/// Keep `v` in the cache if `cond`, else free it (metered).
+fn keep(cond: bool, v: Vec<f32>, meter: &mut ActivationMeter) -> Vec<f32> {
+    if cond {
+        v
+    } else {
+        meter.free(f32_bytes(v.len()));
+        Vec::new()
+    }
+}
+
+/// Keep the first `ch` of `cols` columns of `v` (the cache-time slice);
+/// `ch == cols` keeps the buffer whole without copying.
+fn keep_sliced(
+    ch: usize,
+    rows: usize,
+    cols: usize,
+    v: Vec<f32>,
+    meter: &mut ActivationMeter,
+) -> Vec<f32> {
+    if ch >= cols {
+        return v;
+    }
+    let s = slice_cols(&v, rows, cols, ch);
+    meter.alloc(f32_bytes(s.len()));
+    meter.free(f32_bytes(v.len()));
+    s
+}
+
+/// Cached forward pass in (possibly permuted) base layout. `cplan`
+/// decides, per layer, which buffers survive into the returned [`Cache`];
+/// `meter` tracks retained cache bytes and the live high-water mark.
+fn forward(
+    mm: &ModelMeta,
+    w: &WeightMap,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    cplan: &CachePlan,
+    meter: &mut ActivationMeter,
+) -> Result<Cache> {
     let d = mm.dims.d_model;
     let heads = mm.dims.n_heads;
     let hd = d / heads;
@@ -252,6 +460,7 @@ fn forward(mm: &ModelMeta, w: &WeightMap, tokens: &[i32], b: usize, t: usize) ->
 
     let embed = weight(w, "embed")?;
     let mut h = vec![0.0f32; n * d];
+    meter.alloc(f32_bytes(n * d));
     for (i, &tok) in tokens.iter().enumerate() {
         let tok = tok as usize;
         if tok >= vocab {
@@ -264,52 +473,80 @@ fn forward(mm: &ModelMeta, w: &WeightMap, tokens: &[i32], b: usize, t: usize) ->
 
     let mut layers = Vec::with_capacity(mm.dims.n_layers);
     for i in 0..mm.dims.n_layers {
+        let lp = &cplan.layers[i];
+        let ra = cplan.retain_all;
         let h_in = h;
         let (x1, inv1) =
             rms_norm_fwd(&h_in, weight(w, &format!("L{i}.norm1"))?, n, d, eps);
+        meter.alloc(f32_bytes(x1.len() + inv1.len()));
         let mut qr = gemm(&x1, weight(w, &format!("L{i}.wq"))?, n, d, d);
         let mut kr = gemm(&x1, weight(w, &format!("L{i}.wk"))?, n, d, d);
         let v = gemm(&x1, weight(w, &format!("L{i}.wv"))?, n, d, d);
+        meter.alloc(f32_bytes(3 * n * d));
         apply_rope(&mut qr, b, t, heads, hd, &cos, &sin, false);
         apply_rope(&mut kr, b, t, heads, hd, &cos, &sin, false);
 
         let (probs, attn) = causal_attn_fwd(&qr, &kr, &v, &AttnDims { b, t, heads, hd }, scale);
+        meter.alloc(f32_bytes(probs.len() + attn.len()));
 
         let mut h_mid = h_in.clone();
-        add_assign(&mut h_mid, &gemm(&attn, weight(w, &format!("L{i}.wo"))?, n, d, d));
+        meter.alloc(f32_bytes(h_mid.len()));
+        let wo_out = gemm(&attn, weight(w, &format!("L{i}.wo"))?, n, d, d);
+        meter.alloc(f32_bytes(wo_out.len()));
+        add_assign(&mut h_mid, &wo_out);
+        meter.free(f32_bytes(wo_out.len()));
+        drop(wo_out);
         let (x2, inv2) =
             rms_norm_fwd(&h_mid, weight(w, &format!("L{i}.norm2"))?, n, d, eps);
+        meter.alloc(f32_bytes(x2.len() + inv2.len()));
         let u = gemm(&x2, weight(w, &format!("L{i}.wu"))?, n, d, ff);
         let g = gemm(&x2, weight(w, &format!("L{i}.wg"))?, n, d, ff);
+        meter.alloc(f32_bytes(2 * n * ff));
         let mut act = vec![0.0f32; n * ff];
+        meter.alloc(f32_bytes(act.len()));
         for j in 0..n * ff {
             act[j] = u[j] * g[j] * sigmoid(g[j]);
         }
         let mut h_out = h_mid.clone();
-        add_assign(&mut h_out, &gemm(&act, weight(w, &format!("L{i}.wd"))?, n, ff, d));
+        meter.alloc(f32_bytes(h_out.len()));
+        let wd_out = gemm(&act, weight(w, &format!("L{i}.wd"))?, n, ff, d);
+        meter.alloc(f32_bytes(wd_out.len()));
+        add_assign(&mut h_out, &wd_out);
+        meter.free(f32_bytes(wd_out.len()));
+        drop(wd_out);
 
-        layers.push(LayerCache {
-            h_in,
-            inv1,
-            x1,
-            qr,
-            kr,
-            v,
-            probs,
-            attn,
-            h_mid,
-            inv2,
-            x2,
-            u,
-            g,
-            act,
-        });
+        // Retention: move whole buffers the plan needs, slice `attn`/`act`
+        // to the trainable channels, free the rest.
+        let lc = LayerCache {
+            h_in: keep(lp.dh_below, h_in, meter),
+            inv1: keep(lp.dh_below, inv1, meter),
+            x1: keep(lp.x1, x1, meter),
+            qr: keep(lp.attn_dx, qr, meter),
+            kr: keep(lp.attn_dx, kr, meter),
+            v: keep(lp.attn_dx, v, meter),
+            probs: keep(lp.attn_dx, probs, meter),
+            attn: keep_sliced(lp.attn_ch, n, d, attn, meter),
+            h_mid: keep(lp.dx2, h_mid, meter),
+            inv2: keep(lp.dx2, inv2, meter),
+            x2: keep(lp.silu, x2, meter),
+            u: keep(ra, u, meter),
+            g: keep(ra, g, meter),
+            act: keep_sliced(lp.act_ch, n, ff, act, meter),
+        };
+        meter.retain_layer(i, lc.bytes());
+        layers.push(lc);
         h = h_out;
     }
 
     let (xf, invf) = rms_norm_fwd(&h, weight(w, "norm_f")?, n, d, eps);
+    meter.alloc(f32_bytes(xf.len() + invf.len()));
     let logits = gemm_nt(&xf, embed, n, d, vocab);
-    Ok(Cache { layers, h_final: h, invf, xf, logits })
+    meter.alloc(f32_bytes(logits.len()));
+    let h_final = keep(cplan.training, h, meter);
+    let invf = keep(cplan.training, invf, meter);
+    let xf = keep(cplan.retain_all, xf, meter);
+    meter.retain_final(f32_bytes(h_final.len() + invf.len() + xf.len()));
+    Ok(Cache { layers, h_final, invf, xf, logits })
 }
 
 /// Masked mean cross-entropy + (optionally) dlogits, + masked ncorrect.
@@ -385,7 +622,9 @@ pub fn forward_logits(
     t: usize,
 ) -> Result<Tensor> {
     let w = base_weight_map(mm, named)?;
-    let cache = forward(mm, &w, tokens.as_i32()?, b, t)?;
+    let mut meter = ActivationMeter::new(mm.dims.n_layers);
+    let cplan = CachePlan::inference(mm.dims.n_layers);
+    let cache = forward(mm, &w, tokens.as_i32()?, b, t, &cplan, &mut meter)?;
     Ok(Tensor::f32(vec![b, t, mm.dims.vocab], cache.logits))
 }
 
@@ -394,7 +633,9 @@ pub fn eval_batch(mm: &ModelMeta, named: &Named, b: usize, t: usize) -> Result<(
     let tokens = get(named, "tokens")?.as_i32()?;
     let targets = get(named, "targets")?.as_i32()?;
     let mask = getf(named, "loss_mask")?;
-    let cache = forward(mm, &w, tokens, b, t)?;
+    let mut meter = ActivationMeter::new(mm.dims.n_layers);
+    let cplan = CachePlan::inference(mm.dims.n_layers);
+    let cache = forward(mm, &w, tokens, b, t, &cplan, &mut meter)?;
     let (loss, ncorrect, _) =
         loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, false);
     Ok((loss, ncorrect))
@@ -446,14 +687,25 @@ impl GradPlan {
 
 /// Backward pass. Returns gradients keyed by *trainable tensor name*:
 /// base names under full FT, `L{i}.{p}_t` slices under S²FT.
+///
+/// The walk is plan-truncated: it starts at the top layer and stops at
+/// `cplan.stop` (the shallowest layer with any trainable units), skipping
+/// every dX-only chain the plan marks unnecessary. Consumes the cache,
+/// freeing each layer's buffers (and metering the release) as soon as
+/// they have been read — trainable gradients are bit-identical to the
+/// full walk because every skipped computation feeds only dX flows that
+/// no surviving gradient reads, and every retained buffer is either whole
+/// or a leading-channel slice consumed by the same `lim`-limited GEMM.
 #[allow(clippy::too_many_arguments)]
 fn backward(
     mm: &ModelMeta,
     w: &WeightMap,
-    cache: &Cache,
+    mut cache: Cache,
     dlogits: &[f32],
     tokens: &[i32],
     plan: &GradPlan,
+    cplan: &CachePlan,
+    meter: &mut ActivationMeter,
     b: usize,
     t: usize,
 ) -> Result<HashMap<String, Vec<f32>>> {
@@ -471,6 +723,7 @@ fn backward(
 
     // logits = xf @ embedᵀ (tied embedding)
     let dxf = gemm(dlogits, embed, n, vocab, d);
+    meter.alloc(f32_bytes(dxf.len()));
     if plan.full {
         grads.insert("embed".to_string(), gemm_tn(dlogits, &cache.xf, n, vocab, d, vocab));
     }
@@ -484,12 +737,27 @@ fn backward(
         d,
         dgf.as_deref_mut(),
     );
+    meter.alloc(f32_bytes(dh.len()));
+    meter.free(f32_bytes(dxf.len()));
+    drop(dxf);
     if let Some(dgf) = dgf {
         grads.insert("norm_f".to_string(), dgf);
     }
+    // the final-norm buffers are consumed; release them now
+    meter.free(f32_bytes(cache.h_final.len() + cache.invf.len() + cache.xf.len()));
+    cache.h_final = Vec::new();
+    cache.invf = Vec::new();
+    cache.xf = Vec::new();
 
-    for i in (0..mm.dims.n_layers).rev() {
-        let lc = &cache.layers[i];
+    'walk: for i in (cplan.stop..mm.dims.n_layers).rev() {
+        let lc = std::mem::take(&mut cache.layers[i]);
+        // u/g (cached only under retain_all) are consumed and dropped
+        // mid-iteration by the SiLU chain, so they are metered separately
+        // from the rest of the layer cache (freed at iteration end).
+        let ug_bytes = f32_bytes(lc.u.len() + lc.g.len());
+        let lc_rest = lc.bytes() - ug_bytes;
+        let lp = &cplan.layers[i];
+        let ra = cplan.retain_all;
 
         // ---- FFN: h_out = h_mid + act @ wd -------------------------------
         let dffn = &dh; // gradient wrt (act @ wd)
@@ -497,61 +765,125 @@ fn backward(
         if plan.full {
             grads.insert(format!("L{i}.wd"), gemm_tn(&lc.act, dffn, n, ff, d, ff));
         } else if wd_units > 0 {
-            // partial backprop: slice activation channels BEFORE the GEMM
+            // partial backprop: the activation channels were sliced at
+            // cache time (or at GEMM time under the full-walk reference)
+            let ka = if ra { ff } else { lp.act_ch };
             grads.insert(
                 format!("L{i}.wd_t"),
-                gemm_tn(&lc.act, dffn, n, ff, d, wd_units),
+                gemm_tn(&lc.act, dffn, n, ka, d, wd_units),
             );
         }
-        let dact = gemm_nt(dffn, weight(w, &format!("L{i}.wd"))?, n, d, ff);
-        let mut du = vec![0.0f32; n * ff];
-        let mut dgpre = vec![0.0f32; n * ff];
-        for j in 0..n * ff {
-            let sg = sigmoid(lc.g[j]);
-            let sil = lc.g[j] * sg;
-            du[j] = dact[j] * sil;
-            dgpre[j] = dact[j] * lc.u[j] * sg * (1.0 + lc.g[j] * (1.0 - sg));
-        }
-        for (proj, dproj) in [("wu", &du), ("wg", &dgpre)] {
-            let units = plan.units(i, proj);
-            if plan.full {
-                grads.insert(format!("L{i}.{proj}"), gemm_tn(&lc.x2, dproj, n, d, ff, d));
-            } else if units > 0 {
-                grads.insert(
-                    format!("L{i}.{proj}_t"),
-                    gemm_tn_outcols(&lc.x2, dproj, n, d, ff, units),
-                );
+
+        // ---- SiLU chain: everything upstream of the FFN entry ------------
+        // du feeds the wu gradient and dx2; dgpre feeds the wg gradient
+        // and dx2 (and is the only consumer of the recomputed u). At a
+        // boundary layer with just one of wu/wg trainable, the other
+        // half of the chain is dX-only work and is skipped.
+        let need_du = lp.dx2 || plan.units(i, "wu") > 0;
+        let need_dgpre = lp.dx2 || plan.units(i, "wg") > 0;
+        let mut dh_mid_norm: Option<Vec<f32>> = None;
+        if lp.silu {
+            let (u, g) = if ra {
+                (lc.u, lc.g) // cached under the full walk
+            } else {
+                // plan-sliced cache dropped u/g: recompute from the
+                // retained x2 (same GEMM over the same inputs, so the
+                // downstream gradients stay bit-identical)
+                let u = if need_dgpre {
+                    gemm(&lc.x2, weight(w, &format!("L{i}.wu"))?, n, d, ff)
+                } else {
+                    Vec::new()
+                };
+                let g = gemm(&lc.x2, weight(w, &format!("L{i}.wg"))?, n, d, ff);
+                meter.alloc(f32_bytes(u.len() + g.len()));
+                (u, g)
+            };
+            let dact = gemm_nt(dffn, weight(w, &format!("L{i}.wd"))?, n, d, ff);
+            let mut du = if need_du { vec![0.0f32; n * ff] } else { Vec::new() };
+            let mut dgpre = if need_dgpre { vec![0.0f32; n * ff] } else { Vec::new() };
+            meter.alloc(f32_bytes(n * ff + du.len() + dgpre.len()));
+            for j in 0..n * ff {
+                let sg = sigmoid(g[j]);
+                let sil = g[j] * sg;
+                if need_du {
+                    du[j] = dact[j] * sil;
+                }
+                if need_dgpre {
+                    dgpre[j] = dact[j] * u[j] * sg * (1.0 + g[j] * (1.0 - sg));
+                }
             }
+            // frees the recomputed buffers, or (under retain_all) the
+            // cached ones carved out of the layer-cache accounting above
+            meter.free(f32_bytes(u.len() + g.len()));
+            drop((u, g, dact));
+            meter.free(f32_bytes(n * ff)); // dact
+            for (proj, dproj) in [("wu", &du), ("wg", &dgpre)] {
+                let units = plan.units(i, proj);
+                if plan.full {
+                    grads.insert(format!("L{i}.{proj}"), gemm_tn(&lc.x2, dproj, n, d, ff, d));
+                } else if units > 0 {
+                    grads.insert(
+                        format!("L{i}.{proj}_t"),
+                        gemm_tn_outcols(&lc.x2, dproj, n, d, ff, units),
+                    );
+                }
+            }
+            if lp.dx2 {
+                let mut dx2 = gemm_nt(&du, weight(w, &format!("L{i}.wu"))?, n, ff, d);
+                add_assign(&mut dx2, &gemm_nt(&dgpre, weight(w, &format!("L{i}.wg"))?, n, ff, d));
+                meter.alloc(f32_bytes(dx2.len()));
+                let mut dn2 = plan.full.then(|| vec![0.0f32; d]);
+                dh_mid_norm = Some(rms_norm_bwd(
+                    &lc.h_mid,
+                    weight(w, &format!("L{i}.norm2"))?,
+                    &lc.inv2,
+                    &dx2,
+                    n,
+                    d,
+                    dn2.as_deref_mut(),
+                ));
+                meter.free(f32_bytes(dx2.len()));
+                meter.alloc(f32_bytes(n * d)); // dh_mid_norm
+                if let Some(dn2) = dn2 {
+                    grads.insert(format!("L{i}.norm2"), dn2);
+                }
+            }
+            meter.free(f32_bytes(du.len() + dgpre.len()));
         }
-        let mut dx2 = gemm_nt(&du, weight(w, &format!("L{i}.wu"))?, n, ff, d);
-        add_assign(&mut dx2, &gemm_nt(&dgpre, weight(w, &format!("L{i}.wg"))?, n, ff, d));
-        let mut dn2 = plan.full.then(|| vec![0.0f32; d]);
-        let dh_mid_norm = rms_norm_bwd(
-            &lc.h_mid,
-            weight(w, &format!("L{i}.norm2"))?,
-            &lc.inv2,
-            &dx2,
-            n,
-            d,
-            dn2.as_deref_mut(),
-        );
-        if let Some(dn2) = dn2 {
-            grads.insert(format!("L{i}.norm2"), dn2);
-        }
-        let mut dh_mid = dh; // residual path
+        let Some(dh_mid_norm) = dh_mid_norm else {
+            // Boundary layer with only FFN-entry projections trainable:
+            // no gradient flows past h_mid, so the walk ends here.
+            debug_assert_eq!(i, cplan.stop);
+            meter.free(lc_rest + f32_bytes(dh.len()));
+            break 'walk;
+        };
+        // residual path (take leaves `dh` empty so the post-loop embed
+        // gradient read stays well-formed on the break paths)
+        let mut dh_mid = std::mem::take(&mut dh);
         add_assign(&mut dh_mid, &dh_mid_norm);
+        meter.free(f32_bytes(dh_mid_norm.len()));
+        drop(dh_mid_norm);
 
         // ---- Attention: h_mid = h_in + attn @ wo -------------------------
         let wo_units = plan.units(i, "wo");
         if plan.full {
             grads.insert(format!("L{i}.wo"), gemm_tn(&lc.attn, &dh_mid, n, d, d, d));
         } else if wo_units > 0 {
+            let ka = if ra { d } else { lp.attn_ch };
             grads.insert(
                 format!("L{i}.wo_t"),
-                gemm_tn(&lc.attn, &dh_mid, n, d, d, wo_units),
+                gemm_tn(&lc.attn, &dh_mid, n, ka, d, wo_units),
             );
         }
+        if !lp.attn_dx {
+            // Boundary layer whose attention inputs are all frozen: the
+            // dX GEMM through wo and the attention backward are skipped.
+            debug_assert_eq!(i, cplan.stop);
+            meter.free(lc_rest + f32_bytes(dh_mid.len()));
+            break 'walk;
+        }
         let da = gemm_nt(&dh_mid, weight(w, &format!("L{i}.wo"))?, n, d, d);
+        meter.alloc(f32_bytes(da.len()));
 
         let (mut dqr, mut dkr, dv) = causal_attn_bwd(
             &lc.probs,
@@ -562,6 +894,9 @@ fn backward(
             &AttnDims { b, t, heads, hd },
             scale,
         );
+        meter.alloc(f32_bytes(3 * n * d));
+        meter.free(f32_bytes(da.len()));
+        drop(da);
         apply_rope(&mut dqr, b, t, heads, hd, &cos, &sin, true);
         apply_rope(&mut dkr, b, t, heads, hd, &cos, &sin, true);
 
@@ -576,9 +911,18 @@ fn backward(
                 );
             }
         }
+        if !lp.dh_below {
+            // Boundary layer: all gradients are in; nothing to push down.
+            debug_assert_eq!(i, cplan.stop);
+            meter.free(lc_rest + f32_bytes(dh_mid.len() + 3 * n * d));
+            break 'walk;
+        }
         let mut dx1 = gemm_nt(&dqr, weight(w, &format!("L{i}.wq"))?, n, d, d);
         add_assign(&mut dx1, &gemm_nt(&dkr, weight(w, &format!("L{i}.wk"))?, n, d, d));
         add_assign(&mut dx1, &gemm_nt(&dv, weight(w, &format!("L{i}.wv"))?, n, d, d));
+        meter.alloc(f32_bytes(dx1.len()));
+        meter.free(f32_bytes(3 * n * d)); // dqr, dkr, dv
+        drop((dqr, dkr, dv));
         let mut dn1 = plan.full.then(|| vec![0.0f32; d]);
         let dh_in_norm = rms_norm_bwd(
             &lc.h_in,
@@ -589,11 +933,17 @@ fn backward(
             d,
             dn1.as_deref_mut(),
         );
+        meter.free(f32_bytes(dx1.len()));
+        drop(dx1);
+        meter.alloc(f32_bytes(dh_in_norm.len()));
         if let Some(dn1) = dn1 {
             grads.insert(format!("L{i}.norm1"), dn1);
         }
         dh = dh_mid;
         add_assign(&mut dh, &dh_in_norm);
+        meter.free(f32_bytes(dh_in_norm.len()));
+        // the rest of this layer's cache is fully consumed
+        meter.free(lc_rest);
     }
 
     if plan.full {
@@ -679,16 +1029,35 @@ pub fn train_step(
     let targets = get(named, "targets")?.as_i32()?;
     let mask = getf(named, "loss_mask")?;
     let step = getf(named, "step")?[0];
+    // AdamW bias correction runs at t = step + 1 (the wire contract is a
+    // 0-based step counter, matching the python `train_step`), so t starts
+    // at 1 on the very first step. Reject anything that would make t < 1:
+    // 1 - β^0 = 0 zeroes the corrections and the moment scaling divides
+    // by it, turning the whole update to inf/NaN.
+    let tt = (step + 1.0) as f64;
+    if !tt.is_finite() || tt < 1.0 {
+        bail!(
+            "native: AdamW bias-correction step t = step+1 must be >= 1 \
+             (got step = {step}; the trainer passes its 0-based step count)"
+        );
+    }
 
-    let cache = forward(mm, &w, tokens, b, t)?;
+    let plan = GradPlan::from_method(mm, meth);
+    let cplan = CachePlan::training(&plan, mm, force_full_walk());
+    let mut meter = ActivationMeter::new(mm.dims.n_layers);
+    let mut cache = forward(mm, &w, tokens, b, t, &cplan, &mut meter)?;
     let (loss, _, dlogits) =
         loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, true);
     let dlogits = dlogits.expect("gradient requested");
-    let plan = GradPlan::from_method(mm, meth);
-    let grads = backward(mm, &w, &cache, &dlogits, tokens, &plan, b, t)?;
+    meter.alloc(f32_bytes(dlogits.len()));
+    // the backward pass never reads the logits: free them before it runs
+    meter.free(f32_bytes(cache.logits.len()));
+    cache.logits = Vec::new();
+    let grads = backward(mm, &w, cache, &dlogits, tokens, &plan, &cplan, &mut meter, b, t)?;
+    meter.free(f32_bytes(dlogits.len()));
+    drop(dlogits);
 
     // AdamW (python `_adam` + decoupled weight decay), t = step + 1.
-    let tt = (step + 1.0) as f64;
     let (b1, b2) = (meth.beta1 as f32, meth.beta2 as f32);
     let bc1 = (1.0 - meth.beta1.powf(tt)) as f32;
     let bc2 = (1.0 - meth.beta2.powf(tt)) as f32;
@@ -714,6 +1083,13 @@ pub fn train_step(
         out.insert(format!("new_m.{name}"), Tensor::f32(s.shape.clone(), om));
         out.insert(format!("new_v.{name}"), Tensor::f32(s.shape.clone(), ov));
     }
+    // Measured activation memory (Fig 5): bytes the plan-driven cache
+    // retained across the forward/backward gap, and the live high-water
+    // mark over the whole pass. i32 saturation keeps the wire dtype exact
+    // (counts are exact below 2 GiB, far above any builtin shape).
+    let clamp = |v: u64| v.min(i32::MAX as u64) as i32;
+    out.insert("act_bytes".to_string(), Tensor::scalar_i32(clamp(meter.cache_total)));
+    out.insert("act_peak_bytes".to_string(), Tensor::scalar_i32(clamp(meter.peak)));
     out.insert("loss".to_string(), Tensor::scalar_f32(loss));
     Ok(out)
 }

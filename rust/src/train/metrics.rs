@@ -9,6 +9,12 @@ pub struct TrainMetrics {
     pub losses: Vec<f32>,
     pub total_tokens: usize,
     pub total_time: Duration,
+    /// Measured activation-cache bytes (forward buffers retained for the
+    /// backward pass) of the most recent step, when the executable
+    /// reports them (native backend).
+    pub act_cache_bytes: Option<u64>,
+    /// Measured peak live activation bytes of the most recent step.
+    pub act_peak_bytes: Option<u64>,
 }
 
 impl TrainMetrics {
@@ -20,6 +26,18 @@ impl TrainMetrics {
         self.losses.push(loss);
         self.total_tokens += tokens;
         self.total_time += elapsed;
+    }
+
+    /// Record the measured activation memory of a step.
+    pub fn record_activation(&mut self, cache_bytes: u64, peak_bytes: u64) {
+        self.act_cache_bytes = Some(cache_bytes);
+        self.act_peak_bytes = Some(peak_bytes);
+    }
+
+    /// Steps whose recorded loss was not finite (divergence, masked-out
+    /// batches); flagged in [`TrainMetrics::to_json`].
+    pub fn non_finite_steps(&self) -> usize {
+        self.losses.iter().filter(|l| !l.is_finite()).count()
     }
 
     pub fn steps(&self) -> usize {
@@ -54,18 +72,37 @@ impl TrainMetrics {
         self.total_time.as_secs_f64() * 1e3 / self.losses.len() as f64
     }
 
+    /// Serialize. Non-finite losses are never emitted as bare `NaN`/`inf`
+    /// (invalid JSON): they become `null` in the curve, the scalar loss
+    /// fields are nulled when non-finite, and a `non_finite_steps` count
+    /// flags that it happened.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let finite_or_null = |v: f32| {
+            if v.is_finite() {
+                Json::num(v as f64)
+            } else {
+                Json::Null
+            }
+        };
+        let mut fields = vec![
             ("steps", Json::num(self.steps() as f64)),
-            ("last_loss", Json::num(self.last_loss() as f64)),
-            ("tail_loss", Json::num(self.tail_loss(10) as f64)),
+            ("last_loss", finite_or_null(self.last_loss())),
+            ("tail_loss", finite_or_null(self.tail_loss(10))),
+            ("non_finite_steps", Json::num(self.non_finite_steps() as f64)),
             ("tokens_per_sec", Json::num(self.tokens_per_sec())),
             ("ms_per_step", Json::num(self.ms_per_step())),
             (
                 "loss_curve",
-                Json::arr_f64(self.losses.iter().map(|&l| l as f64)),
+                Json::Arr(self.losses.iter().map(|&l| finite_or_null(l)).collect()),
             ),
-        ])
+        ];
+        if let Some(b) = self.act_cache_bytes {
+            fields.push(("act_cache_bytes", Json::num(b as f64)));
+        }
+        if let Some(b) = self.act_peak_bytes {
+            fields.push(("act_peak_bytes", Json::num(b as f64)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -83,5 +120,32 @@ mod tests {
         assert_eq!(m.tail_loss(2), 1.5);
         assert!(m.tokens_per_sec() > 0.0);
         assert!((m.ms_per_step() - 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn to_json_never_emits_bare_nan() {
+        let mut m = TrainMetrics::new();
+        m.record_step(2.0, 100, Duration::from_millis(10));
+        m.record_step(f32::NAN, 100, Duration::from_millis(10));
+        m.record_step(f32::INFINITY, 100, Duration::from_millis(10));
+        assert_eq!(m.non_finite_steps(), 2);
+        let s = m.to_json().to_string_pretty();
+        assert!(!s.contains("NaN") && !s.contains("inf"), "invalid JSON: {s}");
+        assert!(s.contains("non_finite_steps"));
+        // the curve keeps positional alignment via nulls
+        assert!(s.contains("null"));
+        // round-trips through the parser
+        assert!(Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn activation_bytes_surface_in_json() {
+        let mut m = TrainMetrics::new();
+        m.record_step(1.0, 10, Duration::from_millis(1));
+        assert!(m.to_json().get("act_cache_bytes").is_err());
+        m.record_activation(1234, 5678);
+        let j = m.to_json();
+        assert_eq!(j.get("act_cache_bytes").unwrap().as_f64().unwrap(), 1234.0);
+        assert_eq!(j.get("act_peak_bytes").unwrap().as_f64().unwrap(), 5678.0);
     }
 }

@@ -10,6 +10,18 @@ use crate::util::rng::Rng;
 
 use super::metrics::TrainMetrics;
 
+/// Read a scalar byte-count output (i32 from the native backend, but be
+/// liberal in what we accept from other executables).
+fn scalar_bytes(t: &Tensor) -> Option<u64> {
+    if let Ok(v) = t.as_i32() {
+        v.first().map(|&x| x.max(0) as u64)
+    } else if let Ok(v) = t.as_f32() {
+        v.first().map(|&x| x.max(0.0) as u64)
+    } else {
+        None
+    }
+}
+
 /// One fine-tuning run of `method` on `model`, at the artifact batch
 /// shape `(b, t)`. Holds the method-layout state (trainable, frozen,
 /// optimizer moments, permutations) as host tensors between steps.
@@ -115,12 +127,19 @@ impl Trainer {
     }
 
     /// Run one optimizer step; returns the loss.
+    ///
+    /// Per-step inputs (batch tensors, the step counter, LISA's layer
+    /// mask) travel in a transient overlay, never the persistent pool —
+    /// so [`Trainer::state_bytes`] reports live *state* only and is
+    /// identical before and after a step.
     pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
         let started = std::time::Instant::now();
-        self.pool.insert("step".into(), Tensor::scalar_f32(self.step as f32));
-        self.pool.insert("tokens".into(), batch.tokens.clone());
-        self.pool.insert("targets".into(), batch.targets.clone());
-        self.pool.insert("loss_mask".into(), batch.loss_mask.clone());
+        let mut inputs: HashMap<String, Tensor> = HashMap::new();
+        // 0-based step count: executables bias-correct at t = step + 1
+        inputs.insert("step".into(), Tensor::scalar_f32(self.step as f32));
+        inputs.insert("tokens".into(), batch.tokens.clone());
+        inputs.insert("targets".into(), batch.targets.clone());
+        inputs.insert("loss_mask".into(), batch.loss_mask.clone());
         if self.is_lisa {
             // LISA: sample 1/4 of the blocks active this step (+ embeddings).
             let active = (self.n_layers / 4).max(1);
@@ -130,18 +149,23 @@ impl Trainer {
                 mask[c] = 1.0;
             }
             mask[self.n_layers] = 1.0;
-            self.pool
-                .insert("layer_mask".into(), Tensor::f32(vec![self.n_layers + 1], mask));
+            inputs.insert("layer_mask".into(), Tensor::f32(vec![self.n_layers + 1], mask));
         }
         if self.is_galore {
             // fixed projection: constant seed for the whole run
-            self.pool.insert("proj_seed".into(), Tensor::scalar_f32(1.0));
+            inputs.insert("proj_seed".into(), Tensor::scalar_f32(1.0));
         }
-        let out = self.train_exe.run_named(&self.pool)?;
-        let mut loss = f32::NAN;
+        let out = self.train_exe.run_named_with(&self.pool, &inputs)?;
+        let mut loss: Option<f32> = None;
+        let mut act_bytes: Option<u64> = None;
+        let mut act_peak: Option<u64> = None;
         for (name, tensor) in out {
             if name == "loss" {
-                loss = tensor.scalar_value_f32()?;
+                loss = Some(tensor.scalar_value_f32()?);
+            } else if name == "act_bytes" {
+                act_bytes = scalar_bytes(&tensor);
+            } else if name == "act_peak_bytes" {
+                act_peak = scalar_bytes(&tensor);
             } else if let Some(rest) = name.strip_prefix("new_m.") {
                 self.pool.insert(format!("m.{rest}"), tensor);
             } else if let Some(rest) = name.strip_prefix("new_v.") {
@@ -150,9 +174,20 @@ impl Trainer {
                 self.pool.insert(rest.to_string(), tensor);
             }
         }
+        // A train executable that emits no "loss" is malformed: recording
+        // NaN would silently poison the metrics.
+        let loss = loss.ok_or_else(|| {
+            anyhow!(
+                "train executable {:?} emitted no \"loss\" output",
+                self.train_exe.name()
+            )
+        })?;
         self.step += 1;
         let tokens = batch.tokens.numel();
         self.metrics.record_step(loss, tokens, started.elapsed());
+        if let (Some(cache), Some(peak)) = (act_bytes, act_peak) {
+            self.metrics.record_activation(cache, peak);
+        }
         Ok(loss)
     }
 
@@ -167,9 +202,21 @@ impl Trainer {
     }
 
     /// Bytes of live training state (trainable+frozen+opt), the Fig 5
-    /// analytic memory number.
+    /// analytic memory number. Per-step batch inputs never enter the
+    /// pool, so this is stable across [`Trainer::train_step`] calls.
     pub fn state_bytes(&self) -> usize {
         self.pool.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Measured activation-cache bytes of the last step (native backend
+    /// train executables report them; `None` on AOT artifacts).
+    pub fn activation_bytes(&self) -> Option<u64> {
+        self.metrics.act_cache_bytes
+    }
+
+    /// Measured peak live activation bytes of the last step.
+    pub fn activation_peak_bytes(&self) -> Option<u64> {
+        self.metrics.act_peak_bytes
     }
 
     /// Bytes of optimizer state only.

@@ -561,3 +561,181 @@ fn prop_kv_cached_decode_matches_full_recompute() {
         }
     }
 }
+
+/// Truncated + plan-sliced backward vs the cache-everything full walk
+/// (`set_full_backward_override`, the in-process equivalent of
+/// `S2FT_FULL_BACKWARD=1`): every trainable gradient, updated parameter
+/// and optimizer moment must be *bit-identical* across random per-layer
+/// S²FT selections, including the all-layers-trainable and
+/// single-top-layer edge cases — and full FT must be unaffected.
+///
+/// Kept as one #[test] because the reference-walk override is process
+/// global state: splitting it across tests would race under the
+/// parallel test runner.
+#[test]
+fn prop_truncated_backward_bit_identical_to_full_walk() {
+    use repro::data::{lm_batch, pretrain_corpus};
+    use repro::runtime::native::builtin::{self, is_mha};
+    use repro::runtime::native::set_full_backward_override;
+
+    let tk = Tokenizer;
+    let corpus = pretrain_corpus(2, 60_000);
+
+    // one train step through the named method, with/without the full walk
+    let step_outputs = |meta: repro::runtime::Meta,
+                        tag: &str,
+                        pool: &HashMap<String, Tensor>,
+                        full_walk: bool|
+     -> HashMap<String, Tensor> {
+        set_full_backward_override(Some(full_walk));
+        let nb = NativeBackend::with_meta(meta);
+        let (b, t) = nb.artifacts().model("tiny").unwrap().default_batch();
+        let exe = nb.load(&format!("train_tiny_{tag}_{b}x{t}")).unwrap();
+        let out = exe.run_named(pool).unwrap();
+        set_full_backward_override(None);
+        out
+    };
+
+    let base_meta = builtin::builtin_meta();
+    let mm = base_meta.models["tiny"].clone();
+    let (b, t) = mm.default_batch();
+    let nb = NativeBackend::with_meta(base_meta.clone());
+    let init = nb.load("init_tiny").unwrap();
+    let outs = init.run(&[Tensor::scalar_i32(3)]).unwrap();
+    let base: HashMap<String, Tensor> =
+        init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+
+    let projs = ["wq", "wk", "wv", "wo", "wu", "wg", "wd"];
+    let l = mm.dims.n_layers;
+    // per-layer unit budgets: random sweeps + forced edge cases
+    //   case 0: every layer, every projection trainable (stop = 0, full cache widths)
+    //   case 1: single top layer only (maximal truncation)
+    //   case 2: single bottom layer only (boundary at layer 0)
+    //   3..: random subsets/counts, lower layers often empty
+    type LayerCounts = Vec<HashMap<String, usize>>;
+    let mut cases: Vec<LayerCounts> = Vec::new();
+    // (widths stay one unit below full so the `_f` complement is never a
+    // zero-sized tensor, which the Tensor type cannot represent)
+    cases.push(
+        (0..l)
+            .map(|_| {
+                projs
+                    .iter()
+                    .map(|&p| {
+                        let c = if is_mha(p) { mm.dims.n_heads - 1 } else { mm.dims.d_ff - 1 };
+                        (p.to_string(), c)
+                    })
+                    .collect()
+            })
+            .collect(),
+    );
+    let top_only = |p: &str, c: usize| -> LayerCounts {
+        let mut v = vec![HashMap::new(); l];
+        v[l - 1].insert(p.to_string(), c);
+        v
+    };
+    cases.push(top_only("wo", 1));
+    // boundary layers where only half the SiLU chain carries a gradient
+    // (exercises the du/dgpre need-gating)
+    cases.push(top_only("wu", 3));
+    cases.push(top_only("wg", 4));
+    cases.push(top_only("wd", 2));
+    {
+        let mut v = vec![HashMap::new(); l];
+        v[0].insert("wd".to_string(), 5);
+        v[0].insert("wo".to_string(), 1);
+        cases.push(v);
+    }
+    let mut rng = Rng::seed(0x51F7_CA5E);
+    for _ in 0..5 {
+        let mut v: LayerCounts = Vec::new();
+        for _ in 0..l {
+            let mut m = HashMap::new();
+            for &p in &projs {
+                if rng.below(3) == 0 {
+                    let max = if is_mha(p) { mm.dims.n_heads } else { mm.dims.d_ff };
+                    let c = 1 + rng.below(max - 1); // never full width (see above)
+                    m.insert(p.to_string(), c);
+                }
+            }
+            v.push(m);
+        }
+        if v.iter().all(|m| m.is_empty()) {
+            v[l - 1].insert("wd".to_string(), 1);
+        }
+        cases.push(v);
+    }
+
+    let mut batch_rng = Rng::seed(77);
+    for (case, counts) in cases.iter().enumerate() {
+        let (trainable, frozen, perms) =
+            builtin::s2ft_layout_per_layer(&mm.dims, &mm.base_params, counts);
+        let mut meth = mm.methods["s2ft"].clone();
+        meth.trainable_params = trainable.iter().map(|s| s.numel()).sum();
+        meth.opt = trainable.clone();
+        meth.trainable = trainable;
+        meth.frozen = frozen;
+        meth.perms = perms;
+        let mut meta = base_meta.clone();
+        meta.models.get_mut("tiny").unwrap().methods.insert("s2ftcase".to_string(), meth.clone());
+
+        let mut pool = builtin::identity_split_pool(&base, &meth);
+        let batch = lm_batch(&tk, &corpus, &mut batch_rng, b, t);
+        pool.insert("step".to_string(), Tensor::scalar_f32(0.0));
+        pool.insert("tokens".to_string(), batch.tokens);
+        pool.insert("targets".to_string(), batch.targets);
+        pool.insert("loss_mask".to_string(), batch.loss_mask);
+
+        let truncated = step_outputs(meta.clone(), "s2ftcase", &pool, false);
+        let full_walk = step_outputs(meta, "s2ftcase", &pool, true);
+        assert_eq!(truncated.len(), full_walk.len(), "case {case}: output sets differ");
+        for (name, tt) in &truncated {
+            let ft = &full_walk[name];
+            if name == "act_bytes" || name == "act_peak_bytes" {
+                // the measured memory is exactly what is allowed to differ
+                let (a, f) =
+                    (tt.as_i32().unwrap()[0], ft.as_i32().unwrap()[0]);
+                assert!(
+                    a <= f,
+                    "case {case}: truncated cache {a} larger than full walk {f}"
+                );
+                continue;
+            }
+            let (av, bv) = (tt.as_f32().unwrap(), ft.as_f32().unwrap());
+            assert_eq!(av.len(), bv.len(), "case {case}: {name} length");
+            assert!(
+                av.iter().zip(bv).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: {name} not bit-identical between truncated and full walk"
+            );
+        }
+    }
+
+    // full FT is unaffected by the reference-walk switch
+    let mut pool: HashMap<String, Tensor> = base.clone();
+    for o in &mm.methods["fullft"].opt {
+        pool.insert(format!("m.{}", o.name), Tensor::zeros(o.shape.clone()));
+        pool.insert(format!("v.{}", o.name), Tensor::zeros(o.shape.clone()));
+    }
+    let batch = lm_batch(&tk, &corpus, &mut batch_rng, b, t);
+    pool.insert("step".to_string(), Tensor::scalar_f32(0.0));
+    pool.insert("tokens".to_string(), batch.tokens);
+    pool.insert("targets".to_string(), batch.targets);
+    pool.insert("loss_mask".to_string(), batch.loss_mask);
+    let a = step_outputs(base_meta.clone(), "fullft", &pool, false);
+    let bo = step_outputs(base_meta, "fullft", &pool, true);
+    for (name, tt) in &a {
+        if name == "act_bytes" || name == "act_peak_bytes" {
+            assert_eq!(
+                tt.as_i32().unwrap()[0],
+                bo[name].as_i32().unwrap()[0],
+                "fullft retains everything either way"
+            );
+            continue;
+        }
+        let (av, bv) = (tt.as_f32().unwrap(), bo[name].as_f32().unwrap());
+        assert!(
+            av.iter().zip(bv).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "fullft {name} changed under the reference-walk switch"
+        );
+    }
+}

@@ -264,6 +264,114 @@ mod native {
             "random-init eval loss {loss} vs ln(vocab) {expect}"
         );
     }
+
+    /// Regression: per-step inputs (tokens/targets/loss_mask/step — and
+    /// LISA's layer_mask) must never leak into the persistent pool, so
+    /// the Fig 5 analytic number `state_bytes()` is identical before and
+    /// after a train step.
+    #[test]
+    fn state_bytes_identical_before_and_after_train_step() {
+        let rt = backend();
+        for method in ["fullft", "s2ft"] {
+            let base = base_params(&rt, 7);
+            let (b, t) = rt.artifacts().model("tiny").unwrap().default_batch();
+            let tk = Tokenizer;
+            let corpus = pretrain_corpus(1, 50_000);
+            let mut rng = Rng::seed(9);
+            let calib = lm_batch(&tk, &corpus, &mut rng, b, t);
+            let mut trainer = Trainer::new(&rt, "tiny", method, &base, 5, &calib).unwrap();
+            let before = trainer.state_bytes();
+            let opt_before = trainer.opt_bytes();
+            for _ in 0..2 {
+                let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+                trainer.train_step(&batch).unwrap();
+            }
+            assert_eq!(
+                before,
+                trainer.state_bytes(),
+                "{method}: state_bytes absorbed batch inputs"
+            );
+            assert_eq!(opt_before, trainer.opt_bytes(), "{method}: opt_bytes drifted");
+        }
+    }
+
+    /// AdamW first step runs bias correction at t = 1 (not 0): the very
+    /// first update and both moments must come out finite.
+    #[test]
+    fn first_train_step_is_finite() {
+        let rt = backend();
+        for method in ["fullft", "s2ft"] {
+            let (trainer, _) = train_n(&rt, method, 1);
+            assert!(trainer.metrics.last_loss().is_finite(), "{method}: loss");
+            let mm = rt.artifacts().model("tiny").unwrap();
+            for s in &mm.method(method).unwrap().trainable {
+                for pre in ["", "m.", "v."] {
+                    let t = trainer.tensor(&format!("{pre}{}", s.name)).unwrap();
+                    assert!(
+                        t.as_f32().unwrap().iter().all(|v| v.is_finite()),
+                        "{method}: {pre}{} not finite after the first step",
+                        s.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// A step counter that would put the AdamW bias correction at t < 1
+    /// is rejected instead of silently producing inf/NaN moments.
+    #[test]
+    fn negative_step_is_rejected() {
+        let rt = backend();
+        let base = base_params(&rt, 7);
+        let (b, t) = rt.artifacts().model("tiny").unwrap().default_batch();
+        let exe = rt.load(&format!("train_tiny_fullft_{b}x{t}")).unwrap();
+        let mm = rt.artifacts().model("tiny").unwrap();
+        let mut pool = base.clone();
+        for o in &mm.method("fullft").unwrap().opt {
+            pool.insert(format!("m.{}", o.name), Tensor::zeros(o.shape.clone()));
+            pool.insert(format!("v.{}", o.name), Tensor::zeros(o.shape.clone()));
+        }
+        let tk = Tokenizer;
+        let corpus = pretrain_corpus(1, 50_000);
+        let mut rng = Rng::seed(4);
+        let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+        pool.insert("tokens".to_string(), batch.tokens);
+        pool.insert("targets".to_string(), batch.targets);
+        pool.insert("loss_mask".to_string(), batch.loss_mask);
+        pool.insert("step".to_string(), Tensor::scalar_f32(-1.0));
+        let err = exe.run_named(&pool).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("bias-correction"),
+            "unexpected error: {err:#}"
+        );
+        // step = 0 (t = 1) is the valid first step
+        pool.insert("step".to_string(), Tensor::scalar_f32(0.0));
+        assert!(exe.run_named(&pool).is_ok());
+    }
+
+    /// Fig 5 measured-memory claim on the native backend: the plan-driven
+    /// cache keeps S²FT's retained activation bytes at least 2x below
+    /// full FT at the same shape, and the peak never exceeds full FT's.
+    #[test]
+    fn s2ft_activation_cache_at_least_2x_below_fullft() {
+        let rt = backend();
+        let (full, _) = train_n(&rt, "fullft", 1);
+        let (s2ft, _) = train_n(&rt, "s2ft", 1);
+        let (fa, sa) = (
+            full.activation_bytes().expect("native reports act bytes"),
+            s2ft.activation_bytes().expect("native reports act bytes"),
+        );
+        assert!(
+            sa * 2 <= fa,
+            "s2ft activation cache {sa} B not 2x below fullft {fa} B"
+        );
+        let (fp, sp) = (
+            full.activation_peak_bytes().unwrap(),
+            s2ft.activation_peak_bytes().unwrap(),
+        );
+        assert!(sp <= fp, "s2ft peak {sp} B above fullft peak {fp} B");
+        assert!(sa <= sp && fa <= fp, "cache bytes cannot exceed live peak");
+    }
 }
 
 // --- pjrt backend (full method set, requires artifacts) --------------------
