@@ -7,6 +7,8 @@
 #   make fmt lint doc   formatting / clippy / rustdoc gates (same as CI)
 #   make bench          run every harness=false bench (JSON in rust/results/)
 #   make bench-smoke    same with the short CI wall budget
+#   make bench-smoke-scalar  smoke run with the portable tile forced
+#                       (S2FT_SIMD=0 — the CI scalar matrix lane)
 #   make bench-baseline regenerate the committed regression baselines
 #   make bench-compare  gate kernels + serve results vs the baselines
 #   make serve-smoke    engine-pool serving end-to-end (hermetic, native)
@@ -15,7 +17,7 @@ CARGO ?= cargo
 MANIFEST = rust/Cargo.toml
 
 .PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint doc clean \
-	bench bench-smoke bench-baseline bench-compare serve-smoke
+	bench bench-smoke bench-smoke-scalar bench-baseline bench-compare serve-smoke
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -41,6 +43,9 @@ bench:
 
 bench-smoke:
 	S2FT_BENCH_BUDGET_MS=300 $(CARGO) bench --manifest-path $(MANIFEST)
+
+bench-smoke-scalar:
+	S2FT_BENCH_BUDGET_MS=300 S2FT_SIMD=0 $(CARGO) bench --manifest-path $(MANIFEST)
 
 bench-baseline:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench kernels

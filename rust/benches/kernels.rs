@@ -7,12 +7,18 @@
 //! paper's partial-gradient saving (§3.3): dW cost scales with the
 //! trainable slice, not the full layer.
 //!
+//! Also covered: the SIMD/scalar dispatch boundary (`*/scalar` lanes pin
+//! the portable tile via `*_with_dispatch`; setting `S2FT_SIMD=0` forces
+//! it for the whole run, as the CI scalar matrix lane does) and the
+//! KV-cached `attn_decode` hot path at base dims.
+//!
 //! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
 //! `make bench-baseline` regenerates the committed regression baseline
 //! from this target's JSON.
 
-use repro::kernels::{gemm_nt_with_threads, gemm_tn_outcols_with_threads, gemm_tn_with_threads};
-use repro::kernels::{gemm_with_threads, reference};
+use repro::kernels::{attn_decode, gemm_nt_with_dispatch, gemm_nt_with_threads};
+use repro::kernels::{gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_dispatch};
+use repro::kernels::{gemm_with_threads, reference, simd_enabled};
 use repro::util::bench::{black_box, BenchSuite};
 use repro::util::rng::Rng;
 
@@ -25,8 +31,10 @@ fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
 fn main() {
     let mut suite = BenchSuite::new("kernels");
     println!(
-        "kernel micro-benches: threads 1 vs {PAR_THREADS} (available parallelism {})\n",
-        std::thread::available_parallelism().map_or(1, |n| n.get())
+        "kernel micro-benches: threads 1 vs {PAR_THREADS} (available parallelism {}), \
+         simd dispatch {}\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get()),
+        if simd_enabled() { "on" } else { "off (scalar tile)" }
     );
 
     // (m, k, n) = (b·t, d_model, d_model) per builtin model — the
@@ -51,6 +59,17 @@ fn main() {
         suite.bench(&format!("gemm/{name}/threads=1"), || {
             black_box(gemm_with_threads(&a, &b, m, k, n, 1));
         });
+        if name == "base" {
+            // the dispatch boundary, pinned per call: the portable tile's
+            // cost relative to the std::arch path (results are
+            // bit-identical either way — only time may differ)
+            suite.bench(&format!("gemm/{name}/threads=1/scalar"), || {
+                black_box(gemm_with_dispatch(&a, &b, m, k, n, 1, false));
+            });
+            suite.bench(&format!("gemm_nt/{name}/threads=1/scalar"), || {
+                black_box(gemm_nt_with_dispatch(&a, &bt, m, k, n, 1, false));
+            });
+        }
         suite.bench(&format!("gemm/{name}/threads={PAR_THREADS}"), || {
             black_box(gemm_with_threads(&a, &b, m, k, n, PAR_THREADS));
         });
@@ -88,6 +107,23 @@ fn main() {
                 black_box(gemm_tn_with_threads(&act, &dy, rows, ka, kb, lim, 1));
             });
         }
+    }
+
+    // KV-cached decode attention at base-model dims: 16 active requests,
+    // every cache at the last position of a 512-token window.
+    {
+        let (heads, hd, t_max, m) = (8usize, 64usize, 512usize, 16usize);
+        let d = heads * hd;
+        let mut rng = Rng::seed(0xDEC0);
+        let q = randv(&mut rng, m * d);
+        let k_cache = randv(&mut rng, m * t_max * d);
+        let v_cache = randv(&mut rng, m * t_max * d);
+        let rows: Vec<usize> = (0..m).collect();
+        let pos = vec![t_max - 1; m];
+        let scale = 1.0 / (hd as f32).sqrt();
+        suite.bench("attn_decode/base", || {
+            black_box(attn_decode(&q, &k_cache, &v_cache, &rows, &pos, heads, hd, t_max, scale));
+        });
     }
 
     let median = |name: &str| {

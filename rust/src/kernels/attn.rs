@@ -113,15 +113,15 @@ fn fwd_block(
                 for p in prow.iter_mut().take(tq + 1) {
                     *p /= denom;
                 }
+                // no zero-probability skip: every term reaches the
+                // accumulator so the row stays bit-identical to the
+                // unskipped reduction (and mirrors `attn_decode` exactly)
                 let aoff = (lb * t + tq) * d + hh * hd;
-                for tk in 0..=tq {
-                    let p = prow[tk];
-                    if p == 0.0 {
-                        continue;
-                    }
+                for (tk, &p) in prow.iter().enumerate().take(tq + 1) {
                     let voff = (bi * t + tk) * d + hh * hd;
-                    for j in 0..hd {
-                        attn[aoff + j] += p * v[voff + j];
+                    let arow = &mut attn[aoff..aoff + hd];
+                    for (o, &vv) in arow.iter_mut().zip(&v[voff..voff + hd]) {
+                        *o += p * vv;
                     }
                 }
             }
@@ -213,24 +213,28 @@ fn bwd_block(
                         s += da[doff + j] * v[voff + j];
                     }
                     *dp = s;
+                    // unguarded: zero probabilities still contribute
+                    // their (possibly signed-zero / NaN) products
                     let p = prow[tk];
-                    if p != 0.0 {
-                        for j in 0..hd {
-                            dv[lvoff + j] += p * da[doff + j];
-                        }
+                    let dvrow = &mut dv[lvoff..lvoff + hd];
+                    for (o, &g) in dvrow.iter_mut().zip(&da[doff..doff + hd]) {
+                        *o += p * g;
                     }
                 }
                 let dot: f32 = dpro.iter().zip(prow).map(|(dp, p)| dp * p).sum();
                 for (tk, dp) in dpro.iter().enumerate() {
                     let ds = prow[tk] * (dp - dot) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
                     let koff = (bi * t + tk) * d + hh * hd;
                     let lkoff = (lb * t + tk) * d + hh * hd;
-                    for j in 0..hd {
-                        dqr[ldoff + j] += ds * kr[koff + j];
-                        dkr[lkoff + j] += ds * qr[doff + j];
+                    // split accumulations: each element's own chain still
+                    // walks tk ascending, so per-element order is intact
+                    let qrow = &mut dqr[ldoff..ldoff + hd];
+                    for (o, &kv) in qrow.iter_mut().zip(&kr[koff..koff + hd]) {
+                        *o += ds * kv;
+                    }
+                    let krow = &mut dkr[lkoff..lkoff + hd];
+                    for (o, &qv) in krow.iter_mut().zip(&qr[doff..doff + hd]) {
+                        *o += ds * qv;
                     }
                 }
             }
@@ -249,10 +253,11 @@ fn bwd_block(
 /// `(m, d)`.
 ///
 /// Accumulation order per output element — score loop, running max,
-/// exp/denominator pass, normalization, weighted-value sum with the
-/// zero-probability skip — exactly mirrors the `tq`-th query row of
-/// [`causal_attn_fwd`], so greedy decode through this kernel is
-/// bit-identical to full-sequence recompute.
+/// exp/denominator pass, normalization, unskipped weighted-value sum —
+/// exactly mirrors the `tq`-th query row of [`causal_attn_fwd`], so
+/// greedy decode through this kernel is bit-identical to full-sequence
+/// recompute. The value loops are plain elementwise zip chains, which
+/// LLVM autovectorizes without reordering any per-element reduction.
 #[allow(clippy::too_many_arguments)]
 pub fn attn_decode(
     q: &[f32],
@@ -304,9 +309,6 @@ pub fn attn_decode(
                 }
                 let oh = &mut orow[hh * hd..hh * hd + hd];
                 for (tk, &pr) in prow.iter().enumerate() {
-                    if pr == 0.0 {
-                        continue;
-                    }
                     let vh = &v_cache[cbase + tk * d + hh * hd..][..hd];
                     for (o, &vv) in oh.iter_mut().zip(vh) {
                         *o += pr * vv;

@@ -1,13 +1,22 @@
-//! The four GEMM shapes, cache-blocked and output-partitioned.
+//! The four GEMM shapes as packed, register-tiled micro-kernel drivers.
 //!
-//! Each kernel keeps one accumulator per output element and walks the
-//! reduction axis in ascending order, so the result is bit-identical to
-//! the naive triple loop ([`super::reference`]) and independent of the
-//! thread count. The `gemm` micro-kernel processes four A-rows per pass
-//! over a B-row, cutting B memory traffic 4× while the four output rows
-//! (4·n·4 bytes) stay resident in L1.
+//! Every shape is canonicalized onto the same machinery: the streaming
+//! operand is packed once into `NR`-wide column panels, each worker packs
+//! `MR`-row tiles of the broadcast operand, and [`super::micro::tile`]
+//! computes `MR × NR` output blocks with all accumulators in registers
+//! ([`super::pack`] documents the layouts). Each accumulator lane is one
+//! output element summed in ascending reduction order with separately
+//! rounded mul/add, so results are **bit-identical to the naive triple
+//! loop** ([`super::reference`]) for *every* input — signed zeros,
+//! subnormals, infinities and NaNs included — and independent of both the
+//! thread count and the SIMD/scalar dispatch decision.
+//!
+//! The historical `av == 0.0` zero-skip fast paths are gone: they matched
+//! `-0.0` and dropped `0·±inf` / `0·NaN` products, silently violating
+//! that contract (the regression tests below pin the repaired semantics).
 
-use super::{configured_threads, for_each_row_chunk};
+use super::pack::{MR, NR};
+use super::{configured_threads, for_each_row_chunk, micro, pack};
 
 /// `A (m,k) @ B (k,n)` with the configured worker count.
 pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -25,58 +34,41 @@ pub fn gemm_with_threads(
     n: usize,
     threads: usize,
 ) -> Vec<f32> {
+    gemm_with_dispatch(a, b, m, k, n, threads, micro::simd_enabled())
+}
+
+/// [`gemm_with_threads`] with an explicit SIMD/scalar dispatch decision
+/// (`simd: true` silently falls back to the portable tile on CPUs
+/// without the feature). Both paths are bit-identical by contract; this
+/// entry point exists so tests and benches can pin either side.
+pub fn gemm_with_dispatch(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    simd: bool,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k, "gemm: A shape");
     debug_assert_eq!(b.len(), k * n, "gemm: B shape");
     let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        // empty reduction: the reference stores an explicit +0.0
+        return out;
+    }
+    let pb = pack::pack_b_panels(b, n, n, k);
     for_each_row_chunk(&mut out, n, threads, 2 * m * k * n, |row0, chunk| {
-        gemm_rows(a, b, row0, k, n, chunk);
+        panel_tiles(
+            |r0, nrows, buf| pack::pack_a_rows(a, k, row0 + r0, nrows, k, buf),
+            k,
+            &pb,
+            n,
+            chunk,
+            simd,
+        );
     });
     out
-}
-
-/// Rows `[row0, row0 + chunk_rows)` of `A @ B` into `out`.
-fn gemm_rows(a: &[f32], b: &[f32], row0: usize, k: usize, n: usize, out: &mut [f32]) {
-    let rows = out.len() / n;
-    let mut r = 0;
-    // 4-row micro-kernel: each B row is streamed once per quad.
-    while r + 4 <= rows {
-        let quad = &mut out[r * n..(r + 4) * n];
-        let (o0, quad) = quad.split_at_mut(n);
-        let (o1, quad) = quad.split_at_mut(n);
-        let (o2, o3) = quad.split_at_mut(n);
-        let a0 = &a[(row0 + r) * k..][..k];
-        let a1 = &a[(row0 + r + 1) * k..][..k];
-        let a2 = &a[(row0 + r + 2) * k..][..k];
-        let a3 = &a[(row0 + r + 3) * k..][..k];
-        let quads = a0.iter().zip(a1).zip(a2).zip(a3).enumerate();
-        for (kk, (((&v0, &v1), &v2), &v3)) in quads {
-            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
-                continue; // fully-masked quad column (e.g. padded dlogits)
-            }
-            let br = &b[kk * n..][..n];
-            for (j, &bv) in br.iter().enumerate() {
-                o0[j] += v0 * bv;
-                o1[j] += v1 * bv;
-                o2[j] += v2 * bv;
-                o3[j] += v3 * bv;
-            }
-        }
-        r += 4;
-    }
-    // Remainder rows: plain ikj with a zero-skip.
-    for rr in r..rows {
-        let arow = &a[(row0 + rr) * k..][..k];
-        let orow = &mut out[rr * n..][..n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let br = &b[kk * n..][..n];
-            for (o, &bv) in orow.iter_mut().zip(br) {
-                *o += av * bv;
-            }
-        }
-    }
 }
 
 /// `A (m,k) @ Bᵀ` with `B (n,k)` — row-dot products.
@@ -93,20 +85,42 @@ pub fn gemm_nt_with_threads(
     n: usize,
     threads: usize,
 ) -> Vec<f32> {
+    gemm_nt_with_dispatch(a, b, m, k, n, threads, micro::simd_enabled())
+}
+
+/// [`gemm_nt_with_threads`] with an explicit SIMD/scalar dispatch
+/// decision. `B` is packed transposed (`pack_bt_panels`), after which
+/// the driver is exactly [`gemm_with_dispatch`]'s — the ascending-`k`
+/// walk over the packed panel reproduces the naive row-dot reduction
+/// order bit-for-bit.
+pub fn gemm_nt_with_dispatch(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    simd: bool,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k, "gemm_nt: A shape");
     debug_assert_eq!(b.len(), n * k, "gemm_nt: B shape");
     let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        // k == 0 is every row-dot over zero terms: the reference stores
+        // an explicit `s = +0.0` per element, which the pre-zeroed
+        // output reproduces exactly (regression-tested below).
+        return out;
+    }
+    let pbt = pack::pack_bt_panels(b, n, k);
     for_each_row_chunk(&mut out, n, threads, 2 * m * k * n, |row0, chunk| {
-        for (rr, orow) in chunk.chunks_mut(n).enumerate() {
-            let arow = &a[(row0 + rr) * k..][..k];
-            for (o, brow) in orow.iter_mut().zip(b.chunks(k.max(1))) {
-                let mut s = 0.0f32;
-                for (x, y) in arow.iter().zip(brow) {
-                    s += x * y;
-                }
-                *o = s;
-            }
-        }
+        panel_tiles(
+            |r0, nrows, buf| pack::pack_a_rows(a, k, row0 + r0, nrows, k, buf),
+            k,
+            &pbt,
+            n,
+            chunk,
+            simd,
+        );
     });
     out
 }
@@ -131,25 +145,40 @@ pub fn gemm_tn_with_threads(
     lim: usize,
     threads: usize,
 ) -> Vec<f32> {
+    gemm_tn_with_dispatch(a, b, rows, ka, kb, lim, threads, micro::simd_enabled())
+}
+
+/// [`gemm_tn_with_threads`] with an explicit SIMD/scalar dispatch
+/// decision. The broadcast operand is `A`'s leading columns (packed via
+/// `pack_a_cols`); the reduction walks `rows` ascending.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_with_dispatch(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+    threads: usize,
+    simd: bool,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), rows * ka, "gemm_tn: A shape");
     debug_assert_eq!(b.len(), rows * kb, "gemm_tn: B shape");
     debug_assert!(lim <= ka, "gemm_tn: lim {lim} > ka {ka}");
     let mut out = vec![0.0f32; lim * kb];
+    if lim == 0 || kb == 0 || rows == 0 {
+        return out; // empty output or empty reduction (explicit +0.0)
+    }
+    let pb = pack::pack_b_panels(b, kb, kb, rows);
     for_each_row_chunk(&mut out, kb, threads, 2 * rows * lim * kb, |i0, chunk| {
-        let nlim = chunk.len() / kb;
-        for r in 0..rows {
-            let arow = &a[r * ka + i0..][..nlim];
-            let brow = &b[r * kb..][..kb];
-            for (ii, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let orow = &mut chunk[ii * kb..][..kb];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
+        panel_tiles(
+            |r0, ncols, buf| pack::pack_a_cols(a, ka, i0 + r0, ncols, rows, buf),
+            rows,
+            &pb,
+            kb,
+            chunk,
+            simd,
+        );
     });
     out
 }
@@ -178,27 +207,74 @@ pub fn gemm_tn_outcols_with_threads(
     lim: usize,
     threads: usize,
 ) -> Vec<f32> {
+    gemm_tn_outcols_with_dispatch(a, b, rows, ka, kb, lim, threads, micro::simd_enabled())
+}
+
+/// [`gemm_tn_outcols_with_threads`] with an explicit SIMD/scalar dispatch
+/// decision. Only `B`'s leading `lim` columns are packed, so the panel
+/// pass never touches frozen columns.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_outcols_with_dispatch(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    ka: usize,
+    kb: usize,
+    lim: usize,
+    threads: usize,
+    simd: bool,
+) -> Vec<f32> {
     debug_assert_eq!(a.len(), rows * ka, "gemm_tn_outcols: A shape");
     debug_assert_eq!(b.len(), rows * kb, "gemm_tn_outcols: B shape");
     debug_assert!(lim <= kb, "gemm_tn_outcols: lim {lim} > kb {kb}");
     let mut out = vec![0.0f32; ka * lim];
+    if ka == 0 || lim == 0 || rows == 0 {
+        return out; // empty output or empty reduction (explicit +0.0)
+    }
+    let pb = pack::pack_b_panels(b, kb, lim, rows);
     for_each_row_chunk(&mut out, lim, threads, 2 * rows * ka * lim, |i0, chunk| {
-        let ni = chunk.len() / lim;
-        for r in 0..rows {
-            let arow = &a[r * ka + i0..][..ni];
-            let brow = &b[r * kb..][..lim];
-            for (ii, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let orow = &mut chunk[ii * lim..][..lim];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
+        panel_tiles(
+            |r0, ncols, buf| pack::pack_a_cols(a, ka, i0 + r0, ncols, rows, buf),
+            rows,
+            &pb,
+            lim,
+            chunk,
+            simd,
+        );
     });
     out
+}
+
+/// Drive the micro-kernel over one worker's output rows: pack an
+/// `MR`-wide tile of the broadcast operand (`pack_tile(first_local_row,
+/// nrows, buf)` fills a `depth * MR` panel), sweep the pre-packed B
+/// panels, and copy the valid `nrows × w` window of each register tile
+/// into `out`. Padded lanes are computed and discarded.
+fn panel_tiles<F: Fn(usize, usize, &mut [f32])>(
+    pack_tile: F,
+    depth: usize,
+    pb: &[f32],
+    row_len: usize,
+    out: &mut [f32],
+    simd: bool,
+) {
+    let rows = out.len() / row_len;
+    let mut pa = vec![0.0f32; depth * MR];
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut r0 = 0;
+    while r0 < rows {
+        let tr = MR.min(rows - r0);
+        pack_tile(r0, tr, &mut pa);
+        for (jp, pbp) in pb.chunks_exact(depth * NR).enumerate() {
+            let j0 = jp * NR;
+            let w = NR.min(row_len - j0);
+            micro::tile(&pa, pbp, &mut acc, simd);
+            for (rr, arow) in acc.iter().enumerate().take(tr) {
+                out[(r0 + rr) * row_len + j0..][..w].copy_from_slice(&arow[..w]);
+            }
+        }
+        r0 += MR;
+    }
 }
 
 /// Sliced-cache copy: the first `lim` columns of each row of `A (rows,
@@ -223,14 +299,16 @@ pub fn slice_cols(a: &[f32], rows: usize, cols: usize, lim: usize) -> Vec<f32> {
 /// Fused GEMV accumulate: `y (n) += scale · (x (k) @ W (k,n))` on the
 /// calling thread — the per-request adapter-delta shape (one activation
 /// row against a small dense delta).
+///
+/// Accumulates straight into the caller's `y` in ascending `k` with no
+/// zero-skip: the historical `v == 0.0 { continue }` left a caller-held
+/// `-0.0` untouched where IEEE addition flips it to `+0.0`, and dropped
+/// `0·NaN` products (regression-tested below).
 pub fn gemv_acc(x: &[f32], w: &[f32], n: usize, scale: f32, y: &mut [f32]) {
     debug_assert_eq!(y.len(), n, "gemv_acc: y shape");
     debug_assert_eq!(w.len(), x.len() * n, "gemv_acc: W shape");
     for (kk, &xv) in x.iter().enumerate() {
         let v = xv * scale;
-        if v == 0.0 {
-            continue;
-        }
         let wrow = &w[kk * n..][..n];
         for (o, &wv) in y.iter_mut().zip(wrow) {
             *o += v * wv;
@@ -248,6 +326,16 @@ mod tests {
         (0..n).map(|_| rng.normal_f32()).collect()
     }
 
+    /// Bitwise equality, except any-NaN == any-NaN: IEEE 754 and LLVM
+    /// leave NaN payload/sign propagation unspecified across differently
+    /// compiled code, so tests assert *that* a NaN surfaces, not which.
+    fn bits_eq_mod_nan(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()))
+    }
+
     #[test]
     fn gemm_known_values() {
         // [1 2; 3 4] @ [1 1; 1 1] = [3 3; 7 7]
@@ -258,9 +346,10 @@ mod tests {
 
     #[test]
     fn gemm_quad_and_remainder_match_reference() {
-        // rows chosen to exercise the 4-row micro-kernel plus a remainder
+        // rows/cols chosen to exercise full MR×NR tiles plus both padded
+        // edges (row remainder and right-edge column panel)
         let mut rng = Rng::seed(11);
-        for (m, k, n) in [(1, 3, 2), (4, 5, 6), (6, 7, 3), (9, 4, 8), (12, 1, 1)] {
+        for (m, k, n) in [(1, 3, 2), (4, 5, 6), (6, 7, 3), (9, 4, 8), (12, 1, 1), (5, 9, 35)] {
             let a = randv(&mut rng, m * k);
             let b = randv(&mut rng, k * n);
             assert_eq!(
@@ -274,7 +363,7 @@ mod tests {
     #[test]
     fn gemm_nt_matches_reference() {
         let mut rng = Rng::seed(12);
-        for (m, k, n) in [(5, 4, 3), (8, 6, 7), (3, 1, 9)] {
+        for (m, k, n) in [(5, 4, 3), (8, 6, 7), (3, 1, 9), (7, 5, 33)] {
             let a = randv(&mut rng, m * k);
             let b = randv(&mut rng, n * k);
             assert_eq!(
@@ -282,6 +371,19 @@ mod tests {
                 reference::gemm_nt(&a, &b, m, k, n)
             );
         }
+    }
+
+    #[test]
+    fn gemm_nt_degenerate_k_stores_explicit_zeros() {
+        // k == 0: every dot product is the empty sum. The reference
+        // stores an explicit +0.0 per element; the kernel must produce
+        // the same +0.0 bits rather than leaving rows unwritten.
+        let out = gemm_nt_with_threads(&[], &[], 2, 0, 3, 1);
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|v| v.to_bits() == 0), "expected all +0.0 bits");
+        assert_eq!(out, reference::gemm_nt(&[], &[], 2, 0, 3));
+        // same contract for the plain-gemm degenerate shapes
+        assert_eq!(gemm_with_threads(&[], &[], 2, 0, 3, 1), reference::gemm(&[], &[], 2, 0, 3));
     }
 
     #[test]
@@ -370,5 +472,100 @@ mod tests {
             let many_nt = gemm_nt_with_threads(&a, &bt, m, k, n, t);
             assert!(one_nt.iter().zip(&many_nt).all(|(x, y)| x.to_bits() == y.to_bits()));
         }
+    }
+
+    #[test]
+    fn simd_and_scalar_dispatch_are_bit_identical() {
+        let mut rng = Rng::seed(21);
+        for (m, k, n) in [(7, 33, 18), (16, 16, 16), (5, 1, 40), (12, 20, 3)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let bt = randv(&mut rng, n * k);
+            assert_eq!(
+                gemm_with_dispatch(&a, &b, m, k, n, 1, true),
+                gemm_with_dispatch(&a, &b, m, k, n, 1, false),
+                "gemm {m}x{k}x{n}"
+            );
+            assert_eq!(
+                gemm_nt_with_dispatch(&a, &bt, m, k, n, 1, true),
+                gemm_nt_with_dispatch(&a, &bt, m, k, n, 1, false),
+                "gemm_nt {m}x{k}x{n}"
+            );
+            assert_eq!(
+                gemm_tn_with_dispatch(&a, &a, m, k, k, k.min(5), 1, true),
+                gemm_tn_with_dispatch(&a, &a, m, k, k, k.min(5), 1, false),
+                "gemm_tn {m}x{k}"
+            );
+            assert_eq!(
+                gemm_tn_outcols_with_dispatch(&a, &a, m, k, k, k.min(3), 1, true),
+                gemm_tn_outcols_with_dispatch(&a, &a, m, k, k, k.min(3), 1, false),
+                "gemm_tn_outcols {m}x{k}"
+            );
+        }
+    }
+
+    /// Pre-fix, `if av == 0.0 { continue }` dropped `0·inf = NaN` and
+    /// `0·NaN = NaN` products (and matched `-0.0`): the output stayed
+    /// `+0.0` where the naive reference propagates NaN. This test fails
+    /// on the zero-skip code.
+    #[test]
+    fn gemm_zero_times_nonfinite_propagates_like_reference() {
+        // b rows: [1, inf], [NaN, -2], [0.5, 1] — every output column 0
+        // crosses the NaN row through a zero A value.
+        let b = vec![1.0, f32::INFINITY, f32::NAN, -2.0, 0.5, 1.0];
+        for m in [1usize, 4, 5] {
+            // all-zero A rows (the quad/remainder skip trigger), with a
+            // signed zero in row 0 for the `-0.0 == 0.0` variant
+            let mut a = vec![0.0f32; m * 3];
+            a[2] = -0.0;
+            let got = gemm_with_threads(&a, &b, m, 3, 2, 1);
+            let want = reference::gemm(&a, &b, m, 3, 2);
+            assert!(want.iter().any(|v| v.is_nan()), "case must exercise NaN propagation");
+            assert!(
+                got.iter().any(|v| v.is_nan()),
+                "m={m}: zero-skip regression — 0·NaN product was dropped"
+            );
+            assert!(bits_eq_mod_nan(&got, &want), "m={m}");
+        }
+    }
+
+    /// Same contract for both partial-gradient kernels: a trainable
+    /// column of exact zeros must still propagate `0·inf = NaN` from the
+    /// upstream gradient. Fails on the pre-fix zero-skip code.
+    #[test]
+    fn gemm_tn_zero_times_nonfinite_propagates_like_reference() {
+        // A (2,2) column 0 is [+0.0, -0.0]; B (2,1) holds [inf, 1]
+        let a = vec![0.0, 3.0, -0.0, 4.0];
+        let b = vec![f32::INFINITY, 1.0];
+        let got = gemm_tn_with_threads(&a, &b, 2, 2, 1, 2, 1);
+        let want = reference::gemm_tn(&a, &b, 2, 2, 1, 2);
+        assert!(got[0].is_nan(), "0·inf dropped by gemm_tn");
+        assert!(bits_eq_mod_nan(&got, &want));
+
+        let gotc = gemm_tn_outcols_with_threads(&a, &b, 2, 2, 1, 1, 1);
+        let wantc = reference::gemm_tn_outcols(&a, &b, 2, 2, 1, 1);
+        assert!(gotc[0].is_nan(), "0·inf dropped by gemm_tn_outcols");
+        assert!(bits_eq_mod_nan(&gotc, &wantc));
+    }
+
+    /// `gemv_acc` accumulates into caller-owned memory, so the zero-skip
+    /// diverged on *finite* inputs too: IEEE says `-0.0 + (+0.0 · 1.0) =
+    /// +0.0`, but skipping the zero product left `y = -0.0` untouched.
+    /// Fails on the pre-fix zero-skip code.
+    #[test]
+    fn gemv_acc_zero_product_still_updates_accumulator() {
+        let mut y = vec![-0.0f32];
+        gemv_acc(&[0.0], &[1.0], 1, 1.0, &mut y);
+        assert_eq!(y[0].to_bits(), 0.0f32.to_bits(), "-0.0 + 0.0 must flip to +0.0");
+
+        let mut y2 = vec![0.0f32];
+        gemv_acc(&[0.0], &[f32::NAN], 1, 1.0, &mut y2);
+        assert!(y2[0].is_nan(), "0·NaN dropped by gemv_acc");
+
+        // scale-induced zero products must reach the accumulator too
+        let mut y3 = vec![-0.0f32, -0.0];
+        gemv_acc(&[5.0], &[1.0, -1.0], 2, 0.0, &mut y3);
+        assert_eq!(y3[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(y3[1].to_bits(), (-0.0f32).to_bits(), "-0.0 + -0.0 stays -0.0");
     }
 }

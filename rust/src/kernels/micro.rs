@@ -1,0 +1,174 @@
+//! The register-tiled micro-kernel and its SIMD/scalar runtime dispatch.
+//!
+//! One tile computes an `MR × NR` block of output elements from packed
+//! panels ([`super::pack`]): for every reduction step it broadcasts `MR`
+//! A values and multiplies them against one `NR`-wide B row, keeping all
+//! `MR * NR` accumulators live in registers across the whole depth loop.
+//!
+//! # The dispatch contract
+//!
+//! Both paths — the portable tile (written so LLVM autovectorizes the
+//! fixed-width inner loops) and the `std::arch` AVX2 tile — compute every
+//! accumulator lane as **one scalar chain in ascending reduction order,
+//! rounding the product and the sum separately** (`mul` then `add`, never
+//! a fused multiply-add). Each lane is an independent output element, so
+//! the two paths are bit-identical to each other *and* to the naive
+//! triple-loop references for every input, and the runtime dispatch
+//! decision can never change results.
+//!
+//! Dispatch order: the `S2FT_SIMD` environment variable (`0` / `off` /
+//! `scalar` / `false` forces the portable tile; read once per process),
+//! then [`simd_supported`] (compiled on `x86_64` and AVX2 detected at
+//! runtime). Non-`x86_64` targets always take the portable tile.
+
+use std::sync::OnceLock;
+
+use super::pack::{MR, NR};
+
+/// True when a `std::arch` micro-kernel is compiled in **and** the CPU
+/// supports it at runtime (AVX2 on `x86_64`).
+#[cfg(target_arch = "x86_64")]
+pub fn simd_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// True when a `std::arch` micro-kernel is compiled in **and** the CPU
+/// supports it at runtime (AVX2 on `x86_64`).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_supported() -> bool {
+    false
+}
+
+/// The process-wide dispatch decision: [`simd_supported`] unless the
+/// `S2FT_SIMD` environment variable disables it (`0`, `off`, `scalar`,
+/// `false`; read once per process). The explicit `*_with_dispatch` kernel
+/// entry points bypass this for per-call control (tests, benches, the CI
+/// scalar lane).
+pub fn simd_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let forced_off = std::env::var("S2FT_SIMD")
+            .map(|v| matches!(v.trim(), "0" | "off" | "scalar" | "false"))
+            .unwrap_or(false);
+        simd_supported() && !forced_off
+    })
+}
+
+/// Compute one packed tile into `acc` through the selected path. `pa` is
+/// a `depth * MR` A panel, `pb` a `depth * NR` B panel; `acc[r][j]`
+/// receives `sum_step pa[step * MR + r] * pb[step * NR + j]`, every lane
+/// accumulated from `+0.0` in ascending `step` order. `simd: true` falls
+/// back to the portable tile when the CPU lacks the feature.
+#[inline]
+pub(crate) fn tile(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR], simd: bool) {
+    #[cfg(target_arch = "x86_64")]
+    if simd && simd_supported() {
+        // SAFETY: AVX2 support was verified at runtime just above.
+        unsafe { tile_avx2(pa, pb, acc) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    tile_scalar(pa, pb, acc);
+}
+
+/// Portable tile: fixed-width (`NR`) inner loops over a local accumulator
+/// array, written so LLVM autovectorizes them; the per-lane operation
+/// sequence (mul, then add, ascending step) is exactly the AVX2 tile's.
+#[inline]
+pub(crate) fn tile_scalar(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR, "tile: panel depth mismatch");
+    let mut c = [[0.0f32; NR]; MR];
+    for (av, bv) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (cr, &a) in c.iter_mut().zip(av) {
+            for (cc, &b) in cr.iter_mut().zip(bv) {
+                *cc += a * b;
+            }
+        }
+    }
+    *acc = c;
+}
+
+/// AVX2 tile: two 8-lane vectors per row of the register block, explicit
+/// `mul` + `add` (never `fmadd` — the fused rounding would diverge from
+/// the scalar tile and the naive references).
+///
+/// # Safety
+/// The caller must ensure the CPU supports AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_avx2(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+    let depth = pa.len() / MR;
+    debug_assert_eq!(depth, pb.len() / NR, "tile: panel depth mismatch");
+    let pa = pa.as_ptr();
+    let pb = pb.as_ptr();
+    let mut c = [[_mm256_setzero_ps(); 2]; MR];
+    for step in 0..depth {
+        let b0 = _mm256_loadu_ps(pb.add(step * NR));
+        let b1 = _mm256_loadu_ps(pb.add(step * NR + 8));
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*pa.add(step * MR + r));
+            cr[0] = _mm256_add_ps(cr[0], _mm256_mul_ps(a, b0));
+            cr[1] = _mm256_add_ps(cr[1], _mm256_mul_ps(a, b1));
+        }
+    }
+    for (cr, arow) in c.iter().zip(acc.iter_mut()) {
+        _mm256_storeu_ps(arow.as_mut_ptr(), cr[0]);
+        _mm256_storeu_ps(arow.as_mut_ptr().add(8), cr[1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_tile(pa: &[f32], pb: &[f32]) -> [[f32; NR]; MR] {
+        let depth = pa.len() / MR;
+        let mut acc = [[0.0f32; NR]; MR];
+        for step in 0..depth {
+            for (r, arow) in acc.iter_mut().enumerate() {
+                for (j, cc) in arow.iter_mut().enumerate() {
+                    *cc += pa[step * MR + r] * pb[step * NR + j];
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn both_paths_match_the_naive_tile_bitwise() {
+        let depth = 9;
+        let pa: Vec<f32> = (0..depth * MR).map(|i| (i as f32).sin()).collect();
+        let pb: Vec<f32> = (0..depth * NR).map(|i| (i as f32 * 0.7).cos()).collect();
+        let want = naive_tile(&pa, &pb);
+        for simd in [false, true] {
+            let mut acc = [[f32::NAN; NR]; MR];
+            tile(&pa, &pb, &mut acc, simd);
+            for (ar, wr) in acc.iter().zip(&want) {
+                for (a, w) in ar.iter().zip(wr) {
+                    assert_eq!(a.to_bits(), w.to_bits(), "simd={simd}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_depth_tile_clears_the_accumulator() {
+        for simd in [false, true] {
+            let mut acc = [[f32::NAN; NR]; MR];
+            tile(&[], &[], &mut acc, simd);
+            assert!(acc.iter().all(|r| r.iter().all(|v| v.to_bits() == 0)), "simd={simd}");
+        }
+    }
+
+    #[test]
+    fn dispatch_env_probe_is_consistent() {
+        // simd_enabled() may be on or off depending on the machine/env,
+        // but it must never claim SIMD without hardware support.
+        assert!(!simd_enabled() || simd_supported());
+    }
+}

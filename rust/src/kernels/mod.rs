@@ -5,8 +5,8 @@
 //! densely": the trainable slice is carved out *before* the dW GEMM, and
 //! the remaining work is a plain dense matmul. That only pays off if the
 //! dense matmuls themselves are engineered, so this module provides
-//! cache-blocked, multi-threaded implementations of the four GEMM shapes
-//! the codebase needs:
+//! packed, register-tiled, multi-threaded implementations of the four
+//! GEMM shapes the codebase needs:
 //!
 //! * [`gemm`] — `C = A (m,k) @ B (k,n)`, the forward projections;
 //! * [`gemm_nt`] — `C = A (m,k) @ Bᵀ` with `B (n,k)`, logits + dX;
@@ -32,28 +32,50 @@
 //! Small problems (below [`MIN_PAR_WORK`] multiply-adds) stay on the
 //! calling thread to avoid spawn overhead.
 //!
+//! # The micro-kernel pipeline
+//!
+//! The GEMMs are packed, register-tiled drivers: the streaming operand is
+//! packed once into `NR`-wide column panels (`kernels/pack.rs`), each
+//! worker packs `MR`-row tiles of the broadcast operand, and the
+//! micro-kernel tile (`kernels/micro.rs`) computes `MR × NR` output
+//! blocks with all accumulators in registers. The tile
+//! has two implementations — a portable autovectorizing loop and a
+//! `std::arch` AVX2 path — selected at runtime ([`simd_enabled`]:
+//! `S2FT_SIMD=0|off|scalar|false` forces the portable path, otherwise
+//! AVX2 is used when detected). `*_with_dispatch` kernel variants pin the
+//! decision per call for tests, benches and the CI scalar lane.
+//!
 //! # Determinism
 //!
 //! Parallelism only ever partitions the *output* — never the reduction
-//! axis — so every output element is accumulated in exactly the same
-//! order regardless of thread count. Results are bit-identical between
-//! `S2FT_THREADS=1` and `S2FT_THREADS=N` (asserted by the proptests in
-//! `tests/proptests.rs`), which keeps the JAX-reference numeric tests
-//! meaningful under any machine configuration.
+//! axis — and both tile paths round every product and sum separately (no
+//! FMA contraction) in the same ascending reduction order, so every
+//! output element is one fixed scalar chain. Results are **bit-identical
+//! to the naive triple loop** in [`reference`] for *every* input —
+//! signed zeros, subnormals, infinities and NaNs included — and
+//! independent of both thread count and the SIMD/scalar dispatch
+//! decision (asserted by the proptests in `tests/proptests.rs`). This
+//! keeps the JAX-reference numeric tests meaningful under any machine
+//! configuration. The historical `av == 0.0` skip fast paths were
+//! removed for violating exactly this contract (they matched `-0.0` and
+//! dropped `0·±inf` / `0·NaN` products).
 //!
 //! The [`reference`] module holds naive triple-loop oracles used by tests
 //! and benches.
 
 mod attn;
 mod gemm;
+mod micro;
+mod pack;
 pub mod reference;
 
 pub use attn::{attn_decode, causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
 pub use attn::{causal_attn_fwd, causal_attn_fwd_with_threads};
-pub use gemm::{gemm, gemm_nt, gemm_nt_with_threads, gemm_tn, gemm_tn_outcols};
-pub use gemm::{
-    gemm_tn_outcols_with_threads, gemm_tn_with_threads, gemm_with_threads, gemv_acc, slice_cols,
-};
+pub use gemm::{gemm, gemm_nt, gemm_nt_with_dispatch, gemm_nt_with_threads, gemm_tn};
+pub use gemm::{gemm_tn_outcols, gemm_tn_outcols_with_dispatch, gemm_tn_outcols_with_threads};
+pub use gemm::{gemm_tn_with_dispatch, gemm_tn_with_threads, gemm_with_dispatch};
+pub use gemm::{gemm_with_threads, gemv_acc, slice_cols};
+pub use micro::{simd_enabled, simd_supported};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -67,9 +89,12 @@ pub const MIN_PAR_WORK: usize = 1 << 16;
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Override the kernel worker count for this process (the CLI `--threads`
-/// flag lands here). Takes precedence over `S2FT_THREADS`.
+/// flag lands here). Takes precedence over `S2FT_THREADS`. Passing `0`
+/// clears the override and resets to the environment fallback
+/// (`S2FT_THREADS`, else available parallelism) — it does not mean "one
+/// thread".
 pub fn set_threads(n: usize) {
-    THREAD_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
 }
 
 /// Worker count kernels use by default: [`set_threads`] override, else
@@ -121,19 +146,33 @@ pub(crate) fn for_each_row_chunk(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// `THREAD_OVERRIDE` is process-global state: every test that writes
+    /// it (or asserts on [`configured_threads`]) takes this lock so a
+    /// concurrently running sibling can't observe a half-finished
+    /// override.
+    static THREADS_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn configured_threads_positive() {
+        let _guard = THREADS_LOCK.lock().unwrap();
         assert!(configured_threads() >= 1);
     }
 
     #[test]
     fn set_threads_overrides() {
-        // run last-wins semantics through the atomic; restore a sane value
+        // last-wins semantics through the atomic, serialized against
+        // sibling tests that read the global
+        let _guard = THREADS_LOCK.lock().unwrap();
         set_threads(3);
         assert_eq!(configured_threads(), 3);
         set_threads(1);
         assert_eq!(configured_threads(), 1);
+        // 0 clears the override: back to the environment fallback, which
+        // is always at least one worker
+        set_threads(0);
+        assert!(configured_threads() >= 1);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Panel packing for the register-tiled GEMM micro-kernel.
+//!
+//! Every GEMM shape in this module is reduced to the same canonical
+//! micro-kernel operand layout before the hot loop runs:
+//!
+//! * the **A panel** holds one `MR`-row (or `MR`-column, for the
+//!   transposed-A shapes) tile of the broadcast operand, laid out
+//!   depth-major: `pa[step * MR + r]` is the value row `r` contributes at
+//!   reduction step `step`. The micro-kernel reads `MR` consecutive
+//!   floats per step and broadcasts each across a vector register.
+//! * a **B panel** holds `NR` output columns of the streaming operand,
+//!   also depth-major: `pb[step * NR + j]` is the value column `j`
+//!   contributes at reduction step `step`. The micro-kernel loads `NR`
+//!   consecutive floats per step as two 8-lane vectors.
+//!
+//! Edge tiles are zero-padded to the full `MR`/`NR` width so the
+//! micro-kernel never branches on tile shape; the drivers simply do not
+//! copy the padded lanes out. Padding never contaminates real outputs —
+//! padded A rows and padded B columns only ever feed accumulator lanes
+//! that are discarded.
+//!
+//! Packing is what makes the inner loop fast *and* keeps it honest: the
+//! reduction still walks the depth axis in ascending order, one scalar
+//! chain per output element, so the packed kernels stay bit-identical to
+//! the naive references in [`super::reference`].
+
+/// Rows per register tile — the broadcast operand width.
+pub(crate) const MR: usize = 4;
+
+/// Output columns per register tile — two 8-lane f32 vectors.
+pub(crate) const NR: usize = 16;
+
+/// Pack `nrows` rows of row-major `a` (row stride `stride`, starting at
+/// `row0`, `depth` values per row) into the depth-major A-panel layout.
+/// `buf` must hold `depth * MR` floats; rows past `nrows` are zeroed.
+pub(crate) fn pack_a_rows(
+    a: &[f32],
+    stride: usize,
+    row0: usize,
+    nrows: usize,
+    depth: usize,
+    buf: &mut [f32],
+) {
+    debug_assert!(nrows >= 1 && nrows <= MR, "pack_a_rows: nrows {nrows}");
+    debug_assert!(buf.len() >= depth * MR, "pack_a_rows: buf too small");
+    if nrows < MR {
+        buf[..depth * MR].fill(0.0);
+    }
+    for r in 0..nrows {
+        let arow = &a[(row0 + r) * stride..][..depth];
+        for (kk, &v) in arow.iter().enumerate() {
+            buf[kk * MR + r] = v;
+        }
+    }
+}
+
+/// Pack `ncols` columns of row-major `a` (row stride `stride`, columns
+/// `col0..`, `depth` rows) into the depth-major A-panel layout — the
+/// transposed-A (`gemm_tn`/`gemm_tn_outcols`) counterpart of
+/// [`pack_a_rows`]. `buf` must hold `depth * MR` floats; columns past
+/// `ncols` are zeroed.
+pub(crate) fn pack_a_cols(
+    a: &[f32],
+    stride: usize,
+    col0: usize,
+    ncols: usize,
+    depth: usize,
+    buf: &mut [f32],
+) {
+    debug_assert!(ncols >= 1 && ncols <= MR, "pack_a_cols: ncols {ncols}");
+    debug_assert!(buf.len() >= depth * MR, "pack_a_cols: buf too small");
+    if ncols < MR {
+        buf[..depth * MR].fill(0.0);
+    }
+    for (r, dst) in buf.chunks_exact_mut(MR).enumerate().take(depth) {
+        dst[..ncols].copy_from_slice(&a[r * stride + col0..][..ncols]);
+    }
+}
+
+/// Pack all `cols` columns of row-major `b` (row stride `stride`,
+/// `depth` rows) into consecutive `NR`-wide B panels. Panel `jp` covers
+/// output columns `jp * NR ..`, occupies `depth * NR` floats, and is
+/// zero-padded on the right edge.
+pub(crate) fn pack_b_panels(b: &[f32], stride: usize, cols: usize, depth: usize) -> Vec<f32> {
+    debug_assert!(cols >= 1 && depth >= 1, "pack_b_panels: degenerate shape");
+    let npanels = cols.div_ceil(NR);
+    let mut out = vec![0.0f32; npanels * depth * NR];
+    for (jp, panel) in out.chunks_exact_mut(depth * NR).enumerate() {
+        let j0 = jp * NR;
+        let w = NR.min(cols - j0);
+        for (kk, prow) in panel.chunks_exact_mut(NR).enumerate() {
+            prow[..w].copy_from_slice(&b[kk * stride + j0..][..w]);
+        }
+    }
+    out
+}
+
+/// Pack the transpose of row-major `b (nrows, depth)` into `NR`-wide B
+/// panels of `Bᵀ (depth, nrows)` — the [`super::gemm_nt`] packer. Output
+/// column `j` of panel `jp` streams row `jp * NR + j` of `b`, so the
+/// micro-kernel's ascending-depth walk reproduces the naive row-dot
+/// reduction order exactly.
+pub(crate) fn pack_bt_panels(b: &[f32], nrows: usize, depth: usize) -> Vec<f32> {
+    debug_assert!(nrows >= 1 && depth >= 1, "pack_bt_panels: degenerate shape");
+    let npanels = nrows.div_ceil(NR);
+    let mut out = vec![0.0f32; npanels * depth * NR];
+    for (jp, panel) in out.chunks_exact_mut(depth * NR).enumerate() {
+        let j0 = jp * NR;
+        let w = NR.min(nrows - j0);
+        for j in 0..w {
+            let src = &b[(j0 + j) * depth..][..depth];
+            for (kk, &v) in src.iter().enumerate() {
+                panel[kk * NR + j] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_rows_depth_major_with_zero_padding() {
+        // a = 2x3 row-major; pack both rows into an MR=4 panel
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut buf = vec![7.0f32; 3 * MR];
+        pack_a_rows(&a, 3, 0, 2, 3, &mut buf);
+        for kk in 0..3 {
+            assert_eq!(buf[kk * MR], a[kk], "row 0 step {kk}");
+            assert_eq!(buf[kk * MR + 1], a[3 + kk], "row 1 step {kk}");
+            assert_eq!(buf[kk * MR + 2], 0.0, "padded row");
+            assert_eq!(buf[kk * MR + 3], 0.0, "padded row");
+        }
+    }
+
+    #[test]
+    fn a_cols_match_a_rows_of_transpose() {
+        // packing columns of a equals packing rows of aᵀ
+        let (rows, cols) = (5usize, 3usize);
+        let a: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let at: Vec<f32> = (0..cols * rows).map(|i| a[(i % rows) * cols + i / rows]).collect();
+        let mut by_cols = vec![0.0f32; rows * MR];
+        let mut by_rows = vec![0.0f32; rows * MR];
+        pack_a_cols(&a, cols, 1, 2, rows, &mut by_cols);
+        pack_a_rows(&at, rows, 1, 2, rows, &mut by_rows);
+        assert_eq!(by_cols, by_rows);
+    }
+
+    #[test]
+    fn b_panels_cover_all_columns_padded() {
+        let (depth, cols) = (2usize, NR + 3);
+        let b: Vec<f32> = (0..depth * cols).map(|i| i as f32 + 1.0).collect();
+        let packed = pack_b_panels(&b, cols, cols, depth);
+        assert_eq!(packed.len(), 2 * depth * NR);
+        for kk in 0..depth {
+            for j in 0..cols {
+                let (jp, jj) = (j / NR, j % NR);
+                assert_eq!(packed[jp * depth * NR + kk * NR + jj], b[kk * cols + j]);
+            }
+            for jj in 3..NR {
+                assert_eq!(packed[depth * NR + kk * NR + jj], 0.0, "right-edge padding");
+            }
+        }
+    }
+
+    #[test]
+    fn bt_panels_transpose_b() {
+        let (nrows, depth) = (3usize, 4usize);
+        let b: Vec<f32> = (0..nrows * depth).map(|i| i as f32).collect();
+        let packed = pack_bt_panels(&b, nrows, depth);
+        assert_eq!(packed.len(), depth * NR);
+        for kk in 0..depth {
+            for j in 0..nrows {
+                assert_eq!(packed[kk * NR + j], b[j * depth + kk], "bᵀ[{kk}][{j}]");
+            }
+        }
+    }
+}

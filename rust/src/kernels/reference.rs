@@ -1,9 +1,12 @@
 //! Naive triple-loop GEMM oracles.
 //!
-//! Deliberately unblocked and single-threaded: these are the ground truth
-//! the optimized kernels are proptested against (elementwise, bit-exact —
-//! both sides accumulate each output element in ascending reduction
-//! order) and the "before" side of the kernel micro-benchmarks.
+//! Deliberately unblocked, unskipping and single-threaded: these are the
+//! ground truth the optimized kernels are proptested against
+//! (elementwise, bit-exact — both sides accumulate each output element
+//! in ascending reduction order, rounding every product and sum
+//! separately) and the "before" side of the kernel micro-benchmarks.
+//! The contract covers *all* inputs, non-finite values and signed zeros
+//! included, so the oracles must never skip a term.
 
 /// `A (m,k) @ B (k,n)`.
 pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -48,6 +51,20 @@ pub fn gemm_tn(a: &[f32], b: &[f32], rows: usize, ka: usize, kb: usize, lim: usi
         }
     }
     out
+}
+
+/// `y (n) += scale · (x (k) @ W (k,n))` into the caller's accumulator,
+/// ascending `k`, scaling `x` before the product — the [`super::gemv_acc`]
+/// oracle. Accumulating into caller-owned memory is part of the contract:
+/// a `y` lane holding `-0.0` must flip to `+0.0` when a (possibly zero)
+/// product is added.
+pub fn gemv_acc(x: &[f32], w: &[f32], n: usize, scale: f32, y: &mut [f32]) {
+    for (kk, &xv) in x.iter().enumerate() {
+        let v = xv * scale;
+        for j in 0..n {
+            y[j] += v * w[kk * n + j];
+        }
+    }
 }
 
 /// `Aᵀ @ B[:, :lim]` with `A (rows, ka)`, `B (rows, kb)` → `(ka, lim)`.

@@ -40,10 +40,13 @@
 //!
 //! Every dense GEMM — native forward/backward, the linear-algebra
 //! substrate, multi-adapter serving — routes through the shared
-//! [`kernels`] subsystem: cache-blocked, multi-threaded (scoped
-//! `std::thread`, sized by `S2FT_THREADS` / `--threads`), and
-//! bit-identical across thread counts because only the output is ever
-//! partitioned, never the reduction axis.
+//! [`kernels`] subsystem: packed register-tiled micro-kernels with
+//! runtime SIMD/scalar dispatch (AVX2 when detected; `S2FT_SIMD=0`
+//! forces the portable tile), multi-threaded (scoped `std::thread`,
+//! sized by `S2FT_THREADS` / `--threads`), and bit-identical across
+//! thread counts *and* the dispatch boundary because only the output is
+//! ever partitioned — never the reduction axis — and every accumulator
+//! lane is one fixed-order scalar chain.
 
 pub mod adapter;
 pub mod config;

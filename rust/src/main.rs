@@ -135,7 +135,9 @@ Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
 variants, see `repro info`). Artifacts default to ./artifacts.
 
 Every command accepts --threads N to size the shared GEMM kernel worker
-pool (default: S2FT_THREADS env, else all cores). bench-compare diffs a
+pool (default: S2FT_THREADS env, else all cores; 0 resets to that
+fallback). S2FT_SIMD=0 forces the portable scalar micro-kernel tile
+(results are bit-identical either way). bench-compare diffs a
 bench JSON against a committed baseline and exits non-zero past --fail
 (default 2.0x median; --warn 1.3x prints warnings only).
 

@@ -82,8 +82,9 @@ pub fn init_params(mm: &ModelMeta, seed: i32) -> HashMap<String, Tensor> {
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels — all GEMMs route through `crate::kernels` (cache-blocked,
-// multi-threaded, bit-identical across thread counts). The S²FT partial
+// Dense kernels — all GEMMs route through `crate::kernels` (packed,
+// register-tiled, multi-threaded, bit-identical across thread counts
+// and the SIMD/scalar dispatch boundary). The S²FT partial
 // gradients use `gemm_tn`/`gemm_tn_outcols`, which slice the trainable
 // rows/columns *before* the dW GEMM (paper §3.3).
 // ---------------------------------------------------------------------------

@@ -279,8 +279,52 @@ fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
 }
 
+/// Adversarial *finite* values: signed zeros, subnormals and mixed
+/// magnitudes — everything the historical zero-skip fast paths mishandled
+/// short of NaN/inf. Finite-only outputs admit strict bit equality.
+fn advv_finite(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1.0e-40,                  // positive subnormal
+            3 => -f32::MIN_POSITIVE / 2.0, // negative subnormal
+            4 => 1.0e30,
+            5 => -1.0e30,
+            _ => rng.normal_f32(),
+        })
+        .collect()
+}
+
+/// [`advv_finite`] plus non-finite values — outputs may contain NaN, so
+/// comparisons go through [`bits_eq_mod_nan`].
+fn advv_full(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match rng.below(10) {
+            0 => f32::INFINITY,
+            1 => f32::NEG_INFINITY,
+            2 => f32::NAN,
+            3 => 0.0,
+            4 => -0.0,
+            5 => 1.0e-40,
+            _ => rng.normal_f32(),
+        })
+        .collect()
+}
+
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bitwise equality except any-NaN == any-NaN: IEEE 754 leaves NaN
+/// payload/sign propagation unspecified, and LLVM does not pin it across
+/// differently compiled code, so non-finite properties assert *that* a
+/// NaN surfaces rather than which payload.
+fn bits_eq_mod_nan(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()))
 }
 
 /// Every parallel GEMM kernel matches the naive triple-loop reference
@@ -368,6 +412,218 @@ fn prop_kernels_thread_count_bit_identical() {
         let tn1 = kernels::gemm_tn_with_threads(&a, &a, m, k, k, k, 1);
         let oc1 = kernels::gemm_tn_outcols_with_threads(&a, &a, m, k, k, k, 1);
         for threads in [2usize, 3, 4, 7] {
+            assert!(
+                bits_eq(&g1, &kernels::gemm_with_threads(&a, &b, m, k, n, threads)),
+                "case {case}: gemm t={threads}"
+            );
+            assert!(
+                bits_eq(&nt1, &kernels::gemm_nt_with_threads(&a, &bt, m, k, n, threads)),
+                "case {case}: gemm_nt t={threads}"
+            );
+            assert!(
+                bits_eq(&tn1, &kernels::gemm_tn_with_threads(&a, &a, m, k, k, k, threads)),
+                "case {case}: gemm_tn t={threads}"
+            );
+            assert!(
+                bits_eq(&oc1, &kernels::gemm_tn_outcols_with_threads(&a, &a, m, k, k, k, threads)),
+                "case {case}: gemm_tn_outcols t={threads}"
+            );
+        }
+    }
+}
+
+/// The repaired zero-skip contract on *finite* adversarial inputs: with
+/// signed zeros, subnormals and mixed magnitudes in play, every kernel —
+/// including `gemv_acc`, whose caller-owned accumulator is where the old
+/// skip diverged on purely finite data — is strictly bit-identical to
+/// its naive reference.
+#[test]
+fn prop_kernels_match_reference_on_adversarial_finite() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(8600 + case as u64);
+        let m = 1 + rng.below(20);
+        let k = 1 + rng.below(20);
+        let n = 1 + rng.below(20);
+        let threads = 1 + rng.below(5);
+        let a = advv_finite(&mut rng, m * k);
+        let b = advv_finite(&mut rng, k * n);
+        let bt = advv_finite(&mut rng, n * k);
+        assert!(
+            bits_eq(
+                &kernels::gemm_with_threads(&a, &b, m, k, n, threads),
+                &kernels::reference::gemm(&a, &b, m, k, n),
+            ),
+            "case {case}: gemm {m}x{k}x{n}"
+        );
+        assert!(
+            bits_eq(
+                &kernels::gemm_nt_with_threads(&a, &bt, m, k, n, threads),
+                &kernels::reference::gemm_nt(&a, &bt, m, k, n),
+            ),
+            "case {case}: gemm_nt {m}x{k}x{n}"
+        );
+        // A (m,k), B (m,n) in the transposed-A shapes
+        let b2 = advv_finite(&mut rng, m * n);
+        let lim = 1 + rng.below(k);
+        assert!(
+            bits_eq(
+                &kernels::gemm_tn_with_threads(&a, &b2, m, k, n, lim, threads),
+                &kernels::reference::gemm_tn(&a, &b2, m, k, n, lim),
+            ),
+            "case {case}: gemm_tn lim={lim}"
+        );
+        let limc = 1 + rng.below(n);
+        assert!(
+            bits_eq(
+                &kernels::gemm_tn_outcols_with_threads(&a, &b2, m, k, n, limc, threads),
+                &kernels::reference::gemm_tn_outcols(&a, &b2, m, k, n, limc),
+            ),
+            "case {case}: gemm_tn_outcols lim={limc}"
+        );
+        // gemv_acc: adversarial caller-owned y (may hold -0.0) and an
+        // adversarial scale (0.0 / -0.0 among the candidates)
+        let x = advv_finite(&mut rng, k);
+        let w = advv_finite(&mut rng, k * n);
+        let scale = match rng.below(4) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => -1.0,
+            _ => rng.normal_f32(),
+        };
+        let y0 = advv_finite(&mut rng, n);
+        let mut y_kernel = y0.clone();
+        kernels::gemv_acc(&x, &w, n, scale, &mut y_kernel);
+        let mut y_ref = y0;
+        kernels::reference::gemv_acc(&x, &w, n, scale, &mut y_ref);
+        assert!(bits_eq(&y_kernel, &y_ref), "case {case}: gemv_acc scale={scale}");
+    }
+}
+
+/// Non-finite propagation: with ±inf and NaN in the inputs the kernels
+/// must surface NaN exactly where the naive reference does (`0·inf` and
+/// `0·NaN` products were silently dropped by the old zero-skips) and
+/// match bitwise everywhere else.
+#[test]
+fn prop_kernels_match_reference_on_nonfinite() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(8700 + case as u64);
+        let m = 1 + rng.below(16);
+        let k = 1 + rng.below(16);
+        let n = 1 + rng.below(16);
+        let threads = 1 + rng.below(5);
+        let a = advv_full(&mut rng, m * k);
+        let b = advv_full(&mut rng, k * n);
+        let bt = advv_full(&mut rng, n * k);
+        assert!(
+            bits_eq_mod_nan(
+                &kernels::gemm_with_threads(&a, &b, m, k, n, threads),
+                &kernels::reference::gemm(&a, &b, m, k, n),
+            ),
+            "case {case}: gemm {m}x{k}x{n}"
+        );
+        assert!(
+            bits_eq_mod_nan(
+                &kernels::gemm_nt_with_threads(&a, &bt, m, k, n, threads),
+                &kernels::reference::gemm_nt(&a, &bt, m, k, n),
+            ),
+            "case {case}: gemm_nt {m}x{k}x{n}"
+        );
+        let b2 = advv_full(&mut rng, m * n);
+        let lim = 1 + rng.below(k);
+        assert!(
+            bits_eq_mod_nan(
+                &kernels::gemm_tn_with_threads(&a, &b2, m, k, n, lim, threads),
+                &kernels::reference::gemm_tn(&a, &b2, m, k, n, lim),
+            ),
+            "case {case}: gemm_tn lim={lim}"
+        );
+        let limc = 1 + rng.below(n);
+        assert!(
+            bits_eq_mod_nan(
+                &kernels::gemm_tn_outcols_with_threads(&a, &b2, m, k, n, limc, threads),
+                &kernels::reference::gemm_tn_outcols(&a, &b2, m, k, n, limc),
+            ),
+            "case {case}: gemm_tn_outcols lim={limc}"
+        );
+        let x = advv_full(&mut rng, k);
+        let w = advv_full(&mut rng, k * n);
+        let y0 = advv_full(&mut rng, n);
+        let mut y_kernel = y0.clone();
+        kernels::gemv_acc(&x, &w, n, 1.0, &mut y_kernel);
+        let mut y_ref = y0;
+        kernels::reference::gemv_acc(&x, &w, n, 1.0, &mut y_ref);
+        assert!(bits_eq_mod_nan(&y_kernel, &y_ref), "case {case}: gemv_acc");
+    }
+}
+
+/// The dispatch boundary: forcing the SIMD tile and the portable tile via
+/// `*_with_dispatch` yields strictly identical bits on adversarial finite
+/// inputs — the runtime AVX2/scalar decision can never change results.
+/// Shapes reach past one `NR`-wide panel and one `MR`-row tile so full
+/// tiles, row remainders and right-edge panels all cross the boundary.
+#[test]
+fn prop_kernels_dispatch_boundary_bit_identical() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed(8800 + case as u64);
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(24);
+        let n = 1 + rng.below(40);
+        let threads = 1 + rng.below(4);
+        let a = advv_finite(&mut rng, m * k);
+        let b = advv_finite(&mut rng, k * n);
+        let bt = advv_finite(&mut rng, n * k);
+        assert!(
+            bits_eq(
+                &kernels::gemm_with_dispatch(&a, &b, m, k, n, threads, true),
+                &kernels::gemm_with_dispatch(&a, &b, m, k, n, threads, false),
+            ),
+            "case {case}: gemm {m}x{k}x{n}"
+        );
+        assert!(
+            bits_eq(
+                &kernels::gemm_nt_with_dispatch(&a, &bt, m, k, n, threads, true),
+                &kernels::gemm_nt_with_dispatch(&a, &bt, m, k, n, threads, false),
+            ),
+            "case {case}: gemm_nt {m}x{k}x{n}"
+        );
+        let b2 = advv_finite(&mut rng, m * n);
+        let lim = 1 + rng.below(k);
+        assert!(
+            bits_eq(
+                &kernels::gemm_tn_with_dispatch(&a, &b2, m, k, n, lim, threads, true),
+                &kernels::gemm_tn_with_dispatch(&a, &b2, m, k, n, lim, threads, false),
+            ),
+            "case {case}: gemm_tn lim={lim}"
+        );
+        let limc = 1 + rng.below(n);
+        assert!(
+            bits_eq(
+                &kernels::gemm_tn_outcols_with_dispatch(&a, &b2, m, k, n, limc, threads, true),
+                &kernels::gemm_tn_outcols_with_dispatch(&a, &b2, m, k, n, limc, threads, false),
+            ),
+            "case {case}: gemm_tn_outcols lim={limc}"
+        );
+    }
+}
+
+/// Thread counts 1/2/4/8 on adversarial finite inputs, above the parallel
+/// threshold: same code path on every worker, so equality is strict even
+/// with signed zeros and subnormals in play.
+#[test]
+fn prop_kernels_thread_counts_bit_identical_on_adversarial() {
+    for case in 0..8 {
+        let mut rng = Rng::seed(8900 + case as u64);
+        let m = 33 + rng.below(31);
+        let k = 33 + rng.below(31);
+        let n = 33 + rng.below(31);
+        let a = advv_finite(&mut rng, m * k);
+        let b = advv_finite(&mut rng, k * n);
+        let bt = advv_finite(&mut rng, n * k);
+        let g1 = kernels::gemm_with_threads(&a, &b, m, k, n, 1);
+        let nt1 = kernels::gemm_nt_with_threads(&a, &bt, m, k, n, 1);
+        let tn1 = kernels::gemm_tn_with_threads(&a, &a, m, k, k, k, 1);
+        let oc1 = kernels::gemm_tn_outcols_with_threads(&a, &a, m, k, k, k, 1);
+        for threads in [2usize, 4, 8] {
             assert!(
                 bits_eq(&g1, &kernels::gemm_with_threads(&a, &b, m, k, n, threads)),
                 "case {case}: gemm t={threads}"
