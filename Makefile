@@ -12,12 +12,16 @@
 #   make bench-baseline regenerate the committed regression baselines
 #   make bench-compare  gate kernels + serve results vs the baselines
 #   make serve-smoke    engine-pool serving end-to-end (hermetic, native)
+#   make analyze        static-analysis gate (bit-identity invariant lints)
+#   make miri           nightly: UB-check the unsafe kernel modules
+#   make tsan           nightly: ThreadSanitizer over the stress tests
 
 CARGO ?= cargo
 MANIFEST = rust/Cargo.toml
 
 .PHONY: build test test-pjrt artifacts artifacts-fig5 fmt lint doc clean \
-	bench bench-smoke bench-smoke-scalar bench-baseline bench-compare serve-smoke
+	bench bench-smoke bench-smoke-scalar bench-baseline bench-compare serve-smoke \
+	analyze miri tsan
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -70,6 +74,25 @@ bench-compare:
 serve-smoke:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve \
 	  --backend native --model tiny --workers 2 --adapters 3 --requests 32 --stream
+
+# Static-analysis gate: deny-by-default lints for the bit-identity
+# invariants (float-literal equality, mul_add, SAFETY comments,
+# nondeterminism sources, bench/baseline drift). Exits non-zero on any
+# finding; same invocation as the CI step.
+analyze:
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- analyze
+
+# Dynamic lanes the linter cannot cover (both need a nightly toolchain:
+# `rustup +nightly component add miri rust-src`).
+miri:
+	$(CARGO) +nightly miri test --manifest-path $(MANIFEST) --lib -- \
+	  kernels::pack kernels::micro
+
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" S2FT_STRESS_ITERS=3 \
+	  $(CARGO) +nightly test --manifest-path $(MANIFEST) \
+	  -Zbuild-std --target x86_64-unknown-linux-gnu \
+	  --release --test stress_concurrency
 
 # Build-time only: lower every (model, method) to HLO text + meta.json.
 # Requires a python environment with jax installed; the rust side never

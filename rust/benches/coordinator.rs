@@ -2,6 +2,7 @@
 //! never bottleneck serving — batcher decisions, adapter store switches,
 //! tokenizer, batch construction, JSON parse of meta.json.
 
+// s2ft-analyze: allow(bench-baseline) reason="diagnostic micro-benchmarks; no committed baseline yet — promote to the regression gate once medians stabilize"
 use std::collections::HashMap;
 use std::time::Duration;
 

@@ -4,6 +4,7 @@
 //! the base GEMM; LoRA pays two chained small GEMVs per request, S²FT one
 //! gather + dense delta pass. Sweep the number of concurrent adapters.
 
+// s2ft-analyze: allow(bench-baseline) reason="paper-figure sweep, not a regression lane; medians depend on the sweep dims so no baseline is committed"
 use repro::adapter::parallel::{
     base_forward, lora_parallel, s2ft_parallel, LoraReqAdapter, S2ftReqAdapter,
 };

@@ -6,6 +6,7 @@
 //! (sparsity 32 vs rank 16). The "CPU / IO-bound" panel (6b) is modeled by
 //! also reporting bytes touched per switch.
 
+// s2ft-analyze: allow(bench-baseline) reason="paper-figure sweep, not a regression lane; medians depend on the sweep dims so no baseline is committed"
 use repro::linalg::Mat;
 use repro::sparsity::{scatter_add_rows, scatter_sub_rows};
 use repro::util::bench::{black_box, BenchSuite};

@@ -1,0 +1,511 @@
+//! A small comment/string-aware Rust tokenizer for the `repro analyze`
+//! lints.
+//!
+//! This is *not* a full Rust lexer — it only needs to be precise about
+//! the things the lints care about: comments (line/block, doc or not,
+//! with line spans), string/char literals (so lint patterns inside
+//! strings are never mistaken for code), float vs integer literals, and
+//! identifier boundaries. Everything else degrades to single-character
+//! punctuation tokens, which is all the lint passes consume.
+//!
+//! Handled precisely: nested block comments, raw strings (`r"…"`,
+//! `r#"…"#`), byte strings and byte chars, char-vs-lifetime
+//! disambiguation, numeric literals (`0x1E` is an int, `1e3` and `1f32`
+//! are floats, `0..n` is two ints and a range), and the multi-character
+//! operators the lints match on (`==`, `!=`, `::`).
+
+/// Token classes the lint passes distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `HashMap`, `mul_add`, …).
+    Ident,
+    /// Integer literal, including hex/octal/binary forms.
+    Int,
+    /// Float literal (`0.0`, `1e3`, `2.`, `1f32`).
+    Float,
+    /// String literal of any flavor; `text` holds the (roughly
+    /// unescaped) contents without quotes.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime or loop label (`'a`, `'static`, `'outer`).
+    Lifetime,
+    /// Punctuation; multi-char only for `==`, `!=`, `::`.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment, kept out of the token stream so lint patterns never
+/// match commented-out code.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Contents without the comment markers.
+    pub text: String,
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// 1-based line the comment ends on (equals `line` for line
+    /// comments).
+    pub end_line: usize,
+    /// `///`, `//!`, `/** … */` or `/*! … */`.
+    pub doc: bool,
+}
+
+/// Result of [`lex`]: the token stream plus the comment side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become single-char
+/// punctuation, unterminated literals end at end-of-file.
+pub fn lex(src: &str) -> Lexed {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut out = Lexed::default();
+
+    let at = |i: usize, ch: char| i < n && c[i] == ch;
+
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if ch.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // ---- line comments ------------------------------------------------
+        if ch == '/' && at(i + 1, '/') {
+            let mut j = i + 2;
+            // `///x` and `//!x` are docs, but `////…` is a plain comment
+            let doc = (at(j, '/') && !at(j + 1, '/')) || at(j, '!');
+            if doc {
+                j += 1;
+            }
+            let start = j;
+            while j < n && c[j] != '\n' {
+                j += 1;
+            }
+            let text: String = c[start..j].iter().collect();
+            out.comments.push(Comment { text, line, end_line: line, doc });
+            i = j;
+            continue;
+        }
+
+        // ---- block comments (nested) --------------------------------------
+        if ch == '/' && at(i + 1, '*') {
+            let start_line = line;
+            let mut j = i + 2;
+            let doc = (at(j, '*') && !at(j + 1, '/')) || at(j, '!');
+            let text_start = j;
+            let mut depth = 1usize;
+            while j < n && depth > 0 {
+                if c[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if c[j] == '/' && at(j + 1, '*') {
+                    depth += 1;
+                    j += 2;
+                } else if c[j] == '*' && at(j + 1, '/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text_end = if depth == 0 { j - 2 } else { j };
+            let text: String = c[text_start..text_end.max(text_start)].iter().collect();
+            out.comments.push(Comment { text, line: start_line, end_line: line, doc });
+            i = j;
+            continue;
+        }
+
+        // ---- raw strings: r"…", r#"…"#, br#"…"# ---------------------------
+        if ch == 'r' || (ch == 'b' && at(i + 1, 'r')) {
+            let p = if ch == 'r' { i + 1 } else { i + 2 };
+            let mut hashes = 0usize;
+            while at(p + hashes, '#') {
+                hashes += 1;
+            }
+            if at(p + hashes, '"') {
+                let start_line = line;
+                let mut j = p + hashes + 1;
+                let text_start = j;
+                let mut text_end = n;
+                while j < n {
+                    if c[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if c[j] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && at(j + 1 + h, '#') {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            text_end = j;
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let text: String = c[text_start..text_end.min(n)].iter().collect();
+                out.tokens.push(Tok { kind: TokKind::Str, text, line: start_line });
+                i = j;
+                continue;
+            }
+            // plain identifier starting with r/b — fall through below
+        }
+
+        // ---- byte string / byte char --------------------------------------
+        if ch == 'b' && (at(i + 1, '"') || at(i + 1, '\'')) {
+            // skip the `b` prefix and lex the literal itself
+            i += 1;
+            if c[i] == '"' {
+                let (tok, ni, nl) = lex_string(&c, i, line);
+                out.tokens.push(tok);
+                i = ni;
+                line = nl;
+            } else {
+                let (tok, ni) = lex_char(&c, i, line);
+                out.tokens.push(tok);
+                i = ni;
+            }
+            continue;
+        }
+
+        // ---- string literal ------------------------------------------------
+        if ch == '"' {
+            let (tok, ni, nl) = lex_string(&c, i, line);
+            out.tokens.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+
+        // ---- char literal vs lifetime --------------------------------------
+        if ch == '\'' {
+            if at(i + 1, '\\') || (i + 2 < n && c[i + 2] == '\'' && c[i + 1] != '\'') {
+                let (tok, ni) = lex_char(&c, i, line);
+                out.tokens.push(tok);
+                i = ni;
+            } else {
+                let mut j = i + 1;
+                while j < n && is_ident_char(c[j]) {
+                    j += 1;
+                }
+                let text: String = c[i..j].iter().collect();
+                out.tokens.push(Tok { kind: TokKind::Lifetime, text, line });
+                i = j;
+            }
+            continue;
+        }
+
+        // ---- numeric literal -----------------------------------------------
+        if ch.is_ascii_digit() {
+            let (tok, ni) = lex_number(&c, i, line);
+            out.tokens.push(tok);
+            i = ni;
+            continue;
+        }
+
+        // ---- identifier / keyword ------------------------------------------
+        if is_ident_start(ch) {
+            let mut j = i + 1;
+            while j < n && is_ident_char(c[j]) {
+                j += 1;
+            }
+            let text: String = c[i..j].iter().collect();
+            out.tokens.push(Tok { kind: TokKind::Ident, text, line });
+            i = j;
+            continue;
+        }
+
+        // ---- punctuation ----------------------------------------------------
+        let eq_like = (ch == '=' || ch == '!') && at(i + 1, '=');
+        let two = eq_like || (ch == ':' && at(i + 1, ':'));
+        let len = if two { 2 } else { 1 };
+        let text: String = c[i..i + len].iter().collect();
+        out.tokens.push(Tok { kind: TokKind::Punct, text, line });
+        i += len;
+    }
+
+    out
+}
+
+/// Lex a normal (or byte) string starting at the opening quote.
+/// Returns the token, the index past the closing quote, and the updated
+/// line counter.
+fn lex_string(c: &[char], start: usize, mut line: usize) -> (Tok, usize, usize) {
+    let n = c.len();
+    let start_line = line;
+    let mut j = start + 1;
+    let mut text = String::new();
+    while j < n {
+        match c[j] {
+            '"' => {
+                j += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                text.push('\n');
+                j += 1;
+            }
+            '\\' if j + 1 < n => {
+                let e = c[j + 1];
+                match e {
+                    'n' => text.push('\n'),
+                    't' => text.push('\t'),
+                    'r' => text.push('\r'),
+                    '0' => text.push('\0'),
+                    '\n' => line += 1, // line-continuation: swallow
+                    'u' => {
+                        // \u{…}: copy raw, advance to the brace close
+                        text.push('\\');
+                        text.push('u');
+                        let mut k = j + 2;
+                        while k < n && c[k] != '}' && c[k] != '\n' {
+                            text.push(c[k]);
+                            k += 1;
+                        }
+                        if k < n && c[k] == '}' {
+                            text.push('}');
+                            k += 1;
+                        }
+                        j = k;
+                        continue;
+                    }
+                    other => text.push(other),
+                }
+                j += 2;
+            }
+            other => {
+                text.push(other);
+                j += 1;
+            }
+        }
+    }
+    (Tok { kind: TokKind::Str, text, line: start_line }, j, line)
+}
+
+/// Lex a char (or byte-char) literal starting at the opening quote.
+/// The caller has already decided this is a char, not a lifetime.
+fn lex_char(c: &[char], start: usize, line: usize) -> (Tok, usize) {
+    let n = c.len();
+    let mut j = start + 1;
+    let text_start = j;
+    if j < n && c[j] == '\\' {
+        j += 1;
+        if j < n && c[j] == 'u' {
+            while j < n && c[j] != '}' && c[j] != '\n' {
+                j += 1;
+            }
+            if j < n && c[j] == '}' {
+                j += 1;
+            }
+        } else if j < n {
+            j += 1;
+        }
+    } else if j < n {
+        j += 1;
+    }
+    let text: String = c[text_start..j].iter().collect();
+    if j < n && c[j] == '\'' {
+        j += 1;
+    }
+    (Tok { kind: TokKind::Char, text, line }, j)
+}
+
+/// Lex a numeric literal starting at a digit. Distinguishes floats from
+/// ints: a fractional part, an exponent, or an `f32`/`f64` suffix makes
+/// a float; `0x…` hex digits never start an exponent; `0..n` leaves the
+/// range dots alone; `1.max(2)` stays an int (the dot starts a method
+/// call, not a fraction).
+fn lex_number(c: &[char], start: usize, line: usize) -> (Tok, usize) {
+    let n = c.len();
+    let mut j = start;
+    let mut float = false;
+
+    if c[j] == '0' && j + 1 < n && matches!(c[j + 1], 'x' | 'o' | 'b') {
+        j += 2;
+        while j < n && (c[j].is_ascii_alphanumeric() || c[j] == '_') {
+            j += 1;
+        }
+        let text: String = c[start..j].iter().collect();
+        return (Tok { kind: TokKind::Int, text, line }, j);
+    }
+
+    while j < n && (c[j].is_ascii_digit() || c[j] == '_') {
+        j += 1;
+    }
+    if j < n && c[j] == '.' {
+        let after = c.get(j + 1).copied();
+        let dot_is_fraction = match after {
+            Some(a) => a.is_ascii_digit() || !(a == '.' || is_ident_start(a)),
+            None => true,
+        };
+        if dot_is_fraction {
+            float = true;
+            j += 1;
+            while j < n && (c[j].is_ascii_digit() || c[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    if j < n && matches!(c[j], 'e' | 'E') {
+        let mut k = j + 1;
+        if k < n && matches!(c[k], '+' | '-') {
+            k += 1;
+        }
+        if k < n && c[k].is_ascii_digit() {
+            float = true;
+            j = k;
+            while j < n && (c[j].is_ascii_digit() || c[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // type suffix (i32, u8, f32, usize, …)
+    let suffix_start = j;
+    while j < n && is_ident_char(c[j]) {
+        j += 1;
+    }
+    let suffix: String = c[suffix_start..j].iter().collect();
+    if suffix.starts_with("f32") || suffix.starts_with("f64") {
+        float = true;
+    }
+    let kind = if float { TokKind::Float } else { TokKind::Int };
+    let text: String = c[start..j].iter().collect();
+    (Tok { kind, text, line }, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_leave_the_token_stream() {
+        let lx = lex("let x = 1; // trailing == 0.0\n/* block\n== 0.0 */ let y;");
+        for t in &lx.tokens {
+            assert!(!(t.kind == TokKind::Punct && t.text == "=="), "{}", t.text);
+        }
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].text.contains("trailing == 0.0"));
+        assert!(!lx.comments[0].doc);
+        assert_eq!(lx.comments[1].line, 2);
+        assert_eq!(lx.comments[1].end_line, 3);
+    }
+
+    #[test]
+    fn doc_comments_are_flagged() {
+        let lx = lex("/// docs here\n//! inner\n//// not doc\n// plain\nfn f() {}");
+        let docs: Vec<bool> = lx.comments.iter().map(|cm| cm.doc).collect();
+        assert_eq!(docs, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate() {
+        let lx = lex("/* a /* nested */ b */ ident");
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.tokens.len(), 1);
+        assert_eq!(lx.tokens[0].text, "ident");
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let toks = kinds("let s = \"== 0.0 unsafe\"; let r = r#\"x != 0.0 \"quoted\" \"#;");
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[1].contains("\"quoted\""));
+        for (k, t) in &toks {
+            assert!(!(*k == TokKind::Punct && (t == "==" || t == "!=")), "{t}");
+        }
+        assert!(!toks.iter().any(|(k, t)| *k == TokKind::Ident && t == "unsafe"));
+    }
+
+    #[test]
+    fn chars_vs_lifetimes() {
+        let toks = kinds("let a: Vec<'x'> = f::<'a, 'static>('\\n', '\\'', 'b');");
+        let chars: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Char)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        let lifes: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Lifetime)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(chars, vec!["x", "\\n", "\\'", "b"]);
+        assert_eq!(lifes, vec!["'a", "'static"]);
+    }
+
+    #[test]
+    fn float_vs_int_literals() {
+        let toks = kinds("0.0 1e3 2. 1f32 0x1E 0b10 7 0..n 1.max(2) 3.5e-2 9usize");
+        let floats: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Float)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        let ints: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Int)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(floats, vec!["0.0", "1e3", "2.", "1f32", "3.5e-2"]);
+        assert_eq!(ints, vec!["0x1E", "0b10", "7", "0", "1", "2", "9usize"]);
+    }
+
+    #[test]
+    fn multichar_puncts_and_lines() {
+        let lx = lex("a == b\n c != d :: e = f");
+        let got: Vec<(&str, usize)> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| (t.text.as_str(), t.line))
+            .collect();
+        assert_eq!(got, [("==", 1), ("!=", 2), ("::", 2), ("=", 2)]);
+    }
+
+    #[test]
+    fn ge_le_do_not_fuse_into_eq() {
+        // `>=` lexes as `>` then `=`; the float-eq lint only looks at
+        // `==`/`!=` tokens, so no `==` token may appear here.
+        let toks = kinds("if x >= 0.0 && y <= 1.0 {}");
+        assert!(!toks.iter().any(|(_, t)| t == "=="));
+    }
+}

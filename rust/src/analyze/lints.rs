@@ -1,0 +1,610 @@
+//! The deny-by-default lint passes behind `repro analyze`.
+//!
+//! Each pass consumes the token/comment streams from
+//! [`super::lexer::lex`] and emits [`Finding`]s. Scoping is by path
+//! relative to the package root:
+//!
+//! * [`FLOAT_EQ`] / [`FMA`] — non-test code in `src/kernels/` and
+//!   `src/runtime/native/`: no float-literal equality (`== 0.0` /
+//!   `!= 0.0`, the PR 5 zero-skip bug class) and no fused multiply-add
+//!   (`mul_add`, `_mm*_fmadd_*`), both of which break the documented
+//!   bit-identity-to-naive-reference contract.
+//! * [`SAFETY`] — everywhere: each `unsafe` block or fn must be
+//!   immediately preceded by a `// SAFETY:` comment (a rustdoc
+//!   `# Safety` section above an `unsafe fn`'s attributes also counts).
+//! * [`NONDET`] — non-test code in the modules documented as
+//!   bit-identical (`src/kernels/`, `src/linalg/`,
+//!   `src/runtime/native/decode.rs`): no wall-clock reads (`Instant`,
+//!   `SystemTime`), no `thread::current()` identity, no
+//!   `HashMap`/`HashSet` (iteration order is randomized per process).
+//! * [`BENCH_BASELINE`] — every lane registered via `.bench("…")` in
+//!   `benches/*.rs` must match an entry in the committed
+//!   `benches/baseline/<target>.json` and vice versa, so no perf lane
+//!   silently escapes the CI regression gate.
+
+use super::lexer::{Comment, Lexed, Tok, TokKind};
+use super::report::Finding;
+use crate::util::json::Json;
+
+/// Float-literal equality in bit-identical kernel code.
+pub const FLOAT_EQ: &str = "float-eq";
+/// Fused multiply-add in bit-identical kernel code.
+pub const FMA: &str = "fma";
+/// `unsafe` without an adjacent `// SAFETY:` proof.
+pub const SAFETY: &str = "safety-comment";
+/// Nondeterminism source in a bit-identical module.
+pub const NONDET: &str = "nondet";
+/// Bench lane without a committed baseline entry (or vice versa).
+pub const BENCH_BASELINE: &str = "bench-baseline";
+
+/// Every suppressible lint, for allow-annotation validation.
+pub const KNOWN_LINTS: &[&str] = &[FLOAT_EQ, FMA, SAFETY, NONDET, BENCH_BASELINE];
+
+const FLOAT_EQ_WHY: &str = "float-literal equality in bit-identical code \
+                            (matches -0.0; compare bits or restructure)";
+const FMA_WHY: &str = "fuses multiply-add rounding; kernels must round the product \
+                       and the sum separately to match the naive reference";
+const HASH_WHY: &str = "iteration order is randomized per process; use BTreeMap/Vec \
+                        or justify a keyed-lookup-only allow";
+
+fn float_scope(rel: &str) -> bool {
+    rel.starts_with("src/kernels/") || rel.starts_with("src/runtime/native/")
+}
+
+fn nondet_scope(rel: &str) -> bool {
+    rel.starts_with("src/kernels/")
+        || rel.starts_with("src/linalg/")
+        || rel == "src/runtime/native/decode.rs"
+}
+
+fn tok_is(t: Option<&Tok>, k: TokKind, s: &str) -> bool {
+    t.is_some_and(|t| t.kind == k && t.text == s)
+}
+
+/// Line ranges covered by `#[cfg(test)]` / `#[test]` items, so the
+/// kernel lints only police shipping code. An attribute followed by `;`
+/// before any `{` (e.g. `#[cfg(test)] use …;`) spans just itself.
+fn test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let punct = |i: usize, s: &str| tok_is(toks.get(i), TokKind::Punct, s);
+    let ident = |i: usize, s: &str| tok_is(toks.get(i), TokKind::Ident, s);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(punct(i, "#") && punct(i + 1, "[")) {
+            i += 1;
+            continue;
+        }
+        let after = if ident(i + 2, "test") && punct(i + 3, "]") {
+            Some(i + 4)
+        } else if ident(i + 2, "cfg")
+            && punct(i + 3, "(")
+            && ident(i + 4, "test")
+            && punct(i + 5, ")")
+            && punct(i + 6, "]")
+        {
+            Some(i + 7)
+        } else {
+            None
+        };
+        let Some(mut j) = after else {
+            i += 2;
+            continue;
+        };
+        // skip to the item's opening brace; a `;` first means a
+        // braceless item (use/decl) — cover only up to that line
+        while j < toks.len() && !(punct(j, "{") || punct(j, ";")) {
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].text == ";" {
+            out.push((toks[i].line, toks.get(j).map_or(toks[i].line, |t| t.line)));
+            i = j;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut depth = 0i64;
+        let mut k = j;
+        while k < toks.len() {
+            if punct(k, "{") {
+                depth += 1;
+            } else if punct(k, "}") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let end = k.min(toks.len() - 1);
+        out.push((start_line, toks[end].line));
+        i = k + 1;
+    }
+    out
+}
+
+fn in_ranges(line: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(s, e)| s <= line && line <= e)
+}
+
+/// Run every per-file lint pass that applies to `rel`.
+pub fn lint_file(rel: &str, lx: &Lexed) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let tests = test_ranges(&lx.tokens);
+    if float_scope(rel) {
+        float_eq_pass(rel, lx, &tests, &mut out);
+        fma_pass(rel, lx, &tests, &mut out);
+    }
+    if nondet_scope(rel) {
+        nondet_pass(rel, lx, &tests, &mut out);
+    }
+    safety_pass(rel, lx, &mut out);
+    out
+}
+
+/// `== 0.0` / `!= 0.0` against any float literal: the PR 5 bug class
+/// (`-0.0` compares equal to `0.0`, so zero-skip fast paths silently
+/// change results for signed zeros and non-finite operands).
+fn float_eq_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    let toks = &lx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Punct || (t.text != "==" && t.text != "!=") {
+            continue;
+        }
+        if in_ranges(t.line, tests) {
+            continue;
+        }
+        let prev_float = i > 0 && toks[i - 1].kind == TokKind::Float;
+        // look through unary minus and parens on the right-hand side
+        let mut j = i + 1;
+        while j < toks.len() && (tok_is(toks.get(j), TokKind::Punct, "-") || punct_open(toks, j)) {
+            j += 1;
+        }
+        let next_float = toks.get(j).is_some_and(|t| t.kind == TokKind::Float);
+        if prev_float || next_float {
+            let lhs = i.checked_sub(1).map(|p| toks[p].text.clone()).unwrap_or_default();
+            let rhs = toks.get(j).map(|p| p.text.clone()).unwrap_or_default();
+            let msg = format!("`{lhs} {} {rhs}` — {FLOAT_EQ_WHY}", t.text);
+            out.push(Finding::new(FLOAT_EQ, rel, t.line, msg));
+        }
+    }
+}
+
+fn punct_open(toks: &[Tok], j: usize) -> bool {
+    tok_is(toks.get(j), TokKind::Punct, "(")
+}
+
+/// `mul_add` / `_mm*_fmadd_*` / `fmaf`: fused rounding diverges from
+/// the separately-rounded naive reference.
+fn fma_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for t in &lx.tokens {
+        if t.kind != TokKind::Ident || in_ranges(t.line, tests) {
+            continue;
+        }
+        if t.text == "mul_add" || t.text == "fmaf" || t.text.contains("fmadd") {
+            let msg = format!("`{}` {FMA_WHY}", t.text);
+            out.push(Finding::new(FMA, rel, t.line, msg));
+        }
+    }
+}
+
+/// Wall clocks, thread identity and randomized-iteration containers in
+/// modules whose outputs are asserted bit-identical across runs.
+fn nondet_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    let toks = &lx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_ranges(t.line, tests) {
+            continue;
+        }
+        let name = t.text.as_str();
+        let thread_current = name == "thread"
+            && tok_is(toks.get(i + 1), TokKind::Punct, "::")
+            && tok_is(toks.get(i + 2), TokKind::Ident, "current");
+        let msg = if thread_current {
+            Some("`thread::current()` identity is nondeterministic across runs".to_string())
+        } else if name == "HashMap" || name == "HashSet" {
+            Some(format!("`{name}` {HASH_WHY}"))
+        } else if name == "Instant" || name == "SystemTime" {
+            Some(format!("wall-clock source `{name}` in a bit-identical module"))
+        } else {
+            None
+        };
+        if let Some(message) = msg {
+            out.push(Finding::new(NONDET, rel, t.line, message));
+        }
+    }
+}
+
+/// Every `unsafe` token needs a `// SAFETY:` comment ending within the
+/// 3 lines above it (same line allowed), or — for `unsafe fn` whose doc
+/// block sits above `#[target_feature]`-style attributes — a rustdoc
+/// `# Safety` section ending within 10 lines above.
+fn safety_pass(rel: &str, lx: &Lexed, out: &mut Vec<Finding>) {
+    for t in &lx.tokens {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let covered = lx.comments.iter().any(|cm| covers_unsafe(cm, t.line));
+        if !covered {
+            let msg = "`unsafe` without an adjacent `// SAFETY:` comment".to_string();
+            out.push(Finding::new(SAFETY, rel, t.line, msg));
+        }
+    }
+}
+
+fn covers_unsafe(cm: &Comment, unsafe_line: usize) -> bool {
+    if cm.end_line > unsafe_line {
+        return false;
+    }
+    let gap = unsafe_line - cm.end_line;
+    if cm.text.contains("SAFETY:") && gap <= 3 {
+        return true;
+    }
+    cm.doc && cm.text.contains("# Safety") && gap <= 10
+}
+
+// ---------------------------------------------------------------------------
+// bench-baseline
+// ---------------------------------------------------------------------------
+
+/// Lane-name patterns registered by a bench target: each `.bench("…")`
+/// call site, with `format!` placeholders widened to `*` globs.
+/// Returns `(patterns, findings)` — a call whose lane name is not a
+/// literal within reach is itself a finding (it could never be checked
+/// against the baseline).
+pub fn bench_patterns(rel: &str, lx: &Lexed) -> (Vec<(String, usize)>, Vec<Finding>) {
+    let toks = &lx.tokens;
+    let mut pats = Vec::new();
+    let mut bad = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "bench" {
+            continue;
+        }
+        if i == 0 || toks[i - 1].text != "." || !punct_open(toks, i + 1) {
+            continue;
+        }
+        // the lane name is the first string literal in the argument
+        // head: covers `.bench("x", …)` and `.bench(&format!("x{y}"), …)`
+        let hi = toks.len().min(i + 8);
+        let lit = toks[i + 2..hi].iter().find(|t| t.kind == TokKind::Str);
+        match lit {
+            Some(s) => pats.push((lane_pattern(&s.text), s.line)),
+            None => {
+                let msg = "lane name is not a string literal; the baseline cannot be checked";
+                bad.push(Finding::new(BENCH_BASELINE, rel, t.line, msg.to_string()));
+            }
+        }
+    }
+    (pats, bad)
+}
+
+/// Convert a `format!` template to a glob: `{…}` placeholders become
+/// `*`, `{{`/`}}` become literal braces.
+fn lane_pattern(fmt: &str) -> String {
+    let b: Vec<char> = fmt.chars().collect();
+    let mut out = String::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            '{' if b.get(i + 1) == Some(&'{') => {
+                out.push('{');
+                i += 2;
+            }
+            '}' if b.get(i + 1) == Some(&'}') => {
+                out.push('}');
+                i += 2;
+            }
+            '{' => {
+                while i < b.len() && b[i] != '}' {
+                    i += 1;
+                }
+                i += 1;
+                out.push('*');
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// `/`-segmented glob match: segments must pair up exactly, `*` within
+/// a segment matches any run of characters.
+fn glob_match(pat: &str, name: &str) -> bool {
+    let ps: Vec<&str> = pat.split('/').collect();
+    let ns: Vec<&str> = name.split('/').collect();
+    ps.len() == ns.len() && ps.iter().zip(&ns).all(|(p, n)| seg_match(p, n))
+}
+
+fn seg_match(pat: &str, s: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    let t: Vec<char> = s.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while ti < t.len() {
+        if pi < p.len() && p[pi] == '*' {
+            star = pi;
+            mark = ti;
+            pi += 1;
+        } else if pi < p.len() && p[pi] == t[ti] {
+            pi += 1;
+            ti += 1;
+        } else if star != usize::MAX {
+            pi = star + 1;
+            mark += 1;
+            ti = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// Cross-check a bench target's registered lane patterns against its
+/// committed baseline. `baseline` is `None` when
+/// `benches/baseline/<stem>.json` does not exist.
+pub fn check_bench_lanes(
+    bench_rel: &str,
+    stem: &str,
+    patterns: &[(String, usize)],
+    baseline: Option<&Json>,
+    json_rel: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(json) = baseline else {
+        let line = patterns.first().map_or(1, |p| p.1);
+        let n_lanes = patterns.len();
+        let msg = format!("registers {n_lanes} lane(s) but {json_rel} is missing; gate or allow");
+        out.push(Finding::new(BENCH_BASELINE, bench_rel, line, msg));
+        return out;
+    };
+    if json.opt("skipped").is_some() {
+        let msg = format!("baseline for `{stem}` is a skip record; regenerate from a real run");
+        out.push(Finding::new(BENCH_BASELINE, json_rel, 1, msg));
+        return out;
+    }
+    let entries = match json.as_arr() {
+        Ok(a) => a,
+        Err(err) => {
+            let msg = format!("malformed baseline: {err}");
+            out.push(Finding::new(BENCH_BASELINE, json_rel, 1, msg));
+            return out;
+        }
+    };
+    let mut names = Vec::new();
+    for e in entries {
+        match e.get("name").and_then(|v| v.as_str().map(str::to_string)) {
+            Ok(name) => names.push(name),
+            Err(err) => {
+                let msg = format!("malformed baseline entry: {err}");
+                out.push(Finding::new(BENCH_BASELINE, json_rel, 1, msg));
+                return out;
+            }
+        }
+    }
+    for (pat, line) in patterns {
+        if !names.iter().any(|n| glob_match(pat, n)) {
+            let msg = format!("lane `{pat}` has no entry in {json_rel}; refresh the baseline");
+            out.push(Finding::new(BENCH_BASELINE, bench_rel, *line, msg));
+        }
+    }
+    for name in &names {
+        if !patterns.iter().any(|(pat, _)| glob_match(pat, name)) {
+            let msg = format!("baseline entry `{name}` matches no lane registered in {bench_rel}");
+            out.push(Finding::new(BENCH_BASELINE, json_rel, 1, msg));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(rel, &lex(src))
+    }
+
+    fn lints(rel: &str, src: &str) -> Vec<String> {
+        findings(rel, src).into_iter().map(|f| f.lint).collect()
+    }
+
+    // -- float-eq -----------------------------------------------------------
+
+    #[test]
+    fn float_eq_catches_the_pr5_zero_skip() {
+        // the exact bug class PR 5 removed: a zero-skip fast path inside
+        // a kernel loop
+        let src = "pub fn dot(a: &[f32], b: &[f32]) -> f32 {\n\
+                   let mut s = 0.0f32;\n\
+                   for (i, &av) in a.iter().enumerate() {\n\
+                   if av == 0.0 { continue; }\n\
+                   s += av * b[i];\n\
+                   }\n\
+                   s\n\
+                   }\n";
+        let f = findings("src/kernels/gemm.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, FLOAT_EQ);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("av == 0.0"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn float_eq_catches_reversed_negated_and_ne_forms() {
+        let cases = ["0.0 == x", "x != 0.0", "x == -0.0", "x == (0.0)", "x != 1.5e3"];
+        for expr in cases {
+            let src = format!("pub fn f(x: f32) -> bool {{ {expr} }}\n");
+            let got = lints("src/runtime/native/model.rs", &src);
+            assert_eq!(got, vec![FLOAT_EQ], "{expr}");
+        }
+    }
+
+    #[test]
+    fn float_eq_ignores_tests_comments_strings_and_other_modules() {
+        // inside #[cfg(test)]
+        let test_mod = "#[cfg(test)]\nmod tests {\n fn f(x: f32) -> bool { x == 0.0 }\n}\n";
+        assert!(lints("src/kernels/gemm.rs", test_mod).is_empty());
+        // in a comment or string
+        let commented = "// old code: x == 0.0\nconst S: &str = \"x == 0.0\";\n";
+        assert!(lints("src/kernels/gemm.rs", commented).is_empty());
+        // out of scope
+        let live = "pub fn f(x: f32) -> bool { x == 0.0 }\n";
+        assert!(lints("src/util/json.rs", live).is_empty());
+        // int comparisons and bit comparisons stay legal
+        let ok = "pub fn f(x: f32, n: usize) -> bool { n == 0 && x.to_bits() == 0 }\n";
+        assert!(lints("src/kernels/gemm.rs", ok).is_empty());
+    }
+
+    // -- fma ----------------------------------------------------------------
+
+    #[test]
+    fn fma_catches_mul_add_and_intrinsics() {
+        let src = "pub fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+        assert_eq!(lints("src/kernels/micro.rs", src), vec![FMA]);
+        let simd = "unsafe fn t() { let v = _mm256_fmadd_ps(a, b, c); }\n";
+        let got = lints("src/kernels/micro.rs", simd);
+        // the fixture's unsafe also lacks a SAFETY comment
+        assert!(got.contains(&FMA.to_string()), "{got:?}");
+    }
+
+    // -- safety-comment -----------------------------------------------------
+
+    #[test]
+    fn safety_requires_adjacent_comment() {
+        let bad = "pub fn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+        let f = findings("src/kernels/pack.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, SAFETY);
+
+        let good = "pub fn f(p: *const f32) -> f32 {\n\
+                    // SAFETY: caller guarantees p is valid\n\
+                    unsafe { *p }\n\
+                    }\n";
+        assert!(findings("src/kernels/pack.rs", good).is_empty());
+
+        // doc `# Safety` above attributes covers an unsafe fn
+        let doc = "/// # Safety\n\
+                   /// caller must prove avx2\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn t() {}\n";
+        assert!(findings("src/kernels/micro.rs", doc).is_empty());
+
+        // a SAFETY comment too far above does not count
+        let far = "// SAFETY: stale\n\nfn pad() {}\n\nfn pad2() {}\n\n\
+                   pub fn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+        assert_eq!(lints("src/kernels/pack.rs", far), vec![SAFETY]);
+    }
+
+    // -- nondet -------------------------------------------------------------
+
+    #[test]
+    fn nondet_catches_clocks_maps_and_thread_identity() {
+        let cases = [
+            ("use std::time::Instant;\n", "Instant"),
+            ("use std::time::SystemTime;\n", "SystemTime"),
+            ("use std::collections::HashMap;\n", "HashMap"),
+            ("fn f() { let s = std::collections::HashSet::new(); }\n", "HashSet"),
+            ("fn f() { let id = std::thread::current().id(); }\n", "current"),
+        ];
+        for (src, what) in cases {
+            assert_eq!(lints("src/kernels/gemm.rs", src), vec![NONDET], "{what}");
+        }
+        // `thread::spawn` is fine — only `current` is identity
+        let spawn = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lints("src/kernels/gemm.rs", spawn).is_empty());
+        // decode.rs is in scope, the rest of runtime/native is not
+        let map = "use std::collections::HashMap;\n";
+        assert_eq!(lints("src/runtime/native/decode.rs", map), vec![NONDET]);
+        assert!(lints("src/runtime/native/model.rs", map).is_empty());
+    }
+
+    // -- test-region detection ----------------------------------------------
+
+    #[test]
+    fn cfg_test_use_without_braces_spans_one_line() {
+        // `#[cfg(test)] use …;` must not swallow the rest of the file
+        let src = "#[cfg(test)]\nuse crate::oracle;\n\
+                   pub fn f(x: f32) -> bool { x == 0.0 }\n";
+        assert_eq!(lints("src/kernels/gemm.rs", src), vec![FLOAT_EQ]);
+    }
+
+    // -- bench-baseline -----------------------------------------------------
+
+    fn arr(names: &[&str]) -> Json {
+        let mut rows = Vec::new();
+        for n in names {
+            rows.push(Json::obj(vec![("name", Json::str(*n)), ("median_ns", Json::num(1.0))]));
+        }
+        Json::Arr(rows)
+    }
+
+    fn check(pats: &[(String, usize)], baseline: Option<&Json>) -> Vec<Finding> {
+        check_bench_lanes("benches/k.rs", "k", pats, baseline, "benches/baseline/k.json")
+    }
+
+    #[test]
+    fn bench_patterns_read_literals_and_format_templates() {
+        let src = "fn main() {\n\
+                   let mut s = BenchSuite::new(\"kernels\");\n\
+                   s.bench(\"gemm_naive/tiny\", || {});\n\
+                   for t in [1, 4] {\n\
+                   s.bench(&format!(\"gemm/{name}/threads={t}\"), || {});\n\
+                   }\n\
+                   }\n";
+        let (pats, bad) = bench_patterns("benches/kernels.rs", &lex(src));
+        assert!(bad.is_empty(), "{bad:?}");
+        let names: Vec<&str> = pats.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(names, vec!["gemm_naive/tiny", "gemm/*/threads=*"]);
+    }
+
+    #[test]
+    fn bench_lanes_match_both_directions() {
+        let pats = vec![("gemm/*/threads=*".to_string(), 5), ("attn/base".to_string(), 9)];
+        let ok = arr(&["gemm/tiny/threads=1", "gemm/base/threads=4", "attn/base"]);
+        let f = check(&pats, Some(&ok));
+        assert!(f.is_empty(), "{f:?}");
+
+        // an orphan baseline entry is a finding…
+        let extra = arr(&["gemm/tiny/threads=1", "attn/base", "gemv/acc"]);
+        let f = check(&pats, Some(&extra));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("gemv/acc"), "{}", f[0].message);
+
+        // …and so is a lane with no baseline entry
+        let missing = arr(&["attn/base"]);
+        let f = check(&pats, Some(&missing));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("gemm/*/threads=*"), "{}", f[0].message);
+
+        // a missing baseline file flags the bench target itself
+        let f = check(&pats, None);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].path, "benches/k.rs");
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn skip_record_baselines_are_findings() {
+        let skip = Json::obj(vec![("suite", Json::str("k")), ("skipped", Json::str("no env"))]);
+        let pats = vec![("x/y".to_string(), 3)];
+        let f = check(&pats, Some(&skip));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("skip record"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn glob_segments_must_pair_exactly() {
+        assert!(glob_match("gemm/*", "gemm/tiny"));
+        assert!(!glob_match("gemm/*", "gemm/tiny/threads=1"));
+        assert!(glob_match("a/*/c=*", "a/b/c=12"));
+        assert!(!glob_match("a/*/c=*", "a/b/d=12"));
+        assert!(glob_match("lit", "lit"));
+        assert!(!glob_match("lit", "li"));
+        assert_eq!(lane_pattern("a{x}/b{{c}}/{y}"), "a*/b{c}/*");
+    }
+}

@@ -1,0 +1,245 @@
+//! `repro analyze` — the project's static-analysis gate.
+//!
+//! Scans `src/**` and `benches/**` of the rust package with a
+//! comment/string-aware tokenizer ([`lex`]) and enforces the invariants
+//! earlier PRs established by hand as deny-by-default lints (see
+//! [`KNOWN_LINTS`] and the pass docs in `lints.rs`): no float-literal
+//! equality or fused multiply-adds in bit-identical kernel code, a
+//! `// SAFETY:` comment on every `unsafe`, no nondeterminism sources in
+//! the deterministic modules, and a bench lane ↔ committed baseline
+//! bijection so no perf lane escapes the CI regression gate.
+//!
+//! Escape hatch: one plain line comment per file per lint, of the form
+//! documented on [`Allow`], suppresses that lint for the file and is
+//! listed in the report. Malformed or unused annotations are themselves
+//! findings, so the hatch cannot rot silently.
+//!
+//! The subsystem is dependency-free and pure stable Rust: [`run`] walks
+//! the tree, lexes each file once, applies the passes and returns a
+//! [`Report`]; the `repro analyze` subcommand renders it and exits
+//! nonzero on any finding.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+mod lexer;
+mod lints;
+mod report;
+
+pub use lexer::{lex, Comment, Lexed, Tok, TokKind};
+pub use lints::KNOWN_LINTS;
+pub use report::{Allow, Finding, Report};
+
+/// Where to scan. `root` is the package root: the directory holding
+/// `src/` and (usually) `benches/`.
+#[derive(Debug, Clone)]
+pub struct AnalyzeConfig {
+    pub root: PathBuf,
+}
+
+impl AnalyzeConfig {
+    /// Locate the package root from the current directory: `rust/` when
+    /// run from the repo root, else `.` when run inside the package.
+    pub fn discover() -> Result<Self> {
+        for cand in ["rust", "."] {
+            let root = PathBuf::from(cand);
+            if root.join("src").is_dir() {
+                return Ok(Self { root });
+            }
+        }
+        bail!("no rust package root found (run from the repo root or pass --root)")
+    }
+}
+
+/// Analyze a single in-memory file the way [`run`] does, minus the
+/// tree-wide passes (bench↔baseline pairing, stale-allow detection).
+/// Returns the surviving findings and the parsed allows.
+pub fn analyze_source(rel: &str, src: &str) -> (Vec<Finding>, Vec<Allow>) {
+    let lx = lexer::lex(src);
+    let (mut allows, mut findings) = report::parse_allows(rel, &lx.comments, lints::KNOWN_LINTS);
+    let raw = lints::lint_file(rel, &lx);
+    findings.extend(report::apply_allows(raw, &mut allows));
+    (findings, allows)
+}
+
+/// Walk the tree under `cfg.root`, run every lint pass and the
+/// bench↔baseline cross-check, and return the full [`Report`] with
+/// findings sorted by `(path, line, lint)`.
+pub fn run(cfg: &AnalyzeConfig) -> Result<Report> {
+    let root = &cfg.root;
+    let src_root = root.join("src");
+    if !src_root.is_dir() {
+        bail!("{} has no src/ directory; pass --root <package dir>", root.display());
+    }
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    let bench_root = root.join("benches");
+    if bench_root.is_dir() {
+        collect_rs(&bench_root, &mut files)?;
+    }
+
+    let mut findings = Vec::new();
+    // per scanned file: (relative path, its allows); bench targets also
+    // record (index into per_file, stem, lane patterns) for the pairing
+    // pass, which must run after every file's allows are parsed
+    let mut per_file: Vec<(String, Vec<Allow>)> = Vec::new();
+    let mut bench_info: Vec<(usize, String, Vec<(String, usize)>)> = Vec::new();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let lx = lexer::lex(&src);
+        let (mut allows, bad) = report::parse_allows(&rel, &lx.comments, lints::KNOWN_LINTS);
+        findings.extend(bad);
+        let raw = lints::lint_file(&rel, &lx);
+        findings.extend(report::apply_allows(raw, &mut allows));
+        if rel.starts_with("benches/") {
+            let (pats, bad) = lints::bench_patterns(&rel, &lx);
+            findings.extend(report::apply_allows(bad, &mut allows));
+            bench_info.push((per_file.len(), stem_of(path), pats));
+        }
+        per_file.push((rel, allows));
+    }
+
+    // bench target ↔ committed baseline bijection
+    let baseline_dir = bench_root.join("baseline");
+    let mut paired = BTreeSet::new();
+    for (idx, stem, pats) in &bench_info {
+        paired.insert(stem.clone());
+        let json_rel = format!("benches/baseline/{stem}.json");
+        let json_path = baseline_dir.join(format!("{stem}.json"));
+        let mut baseline = None;
+        if json_path.is_file() {
+            let text = fs::read_to_string(&json_path)
+                .with_context(|| format!("read {}", json_path.display()))?;
+            match Json::parse(&text) {
+                Ok(j) => baseline = Some(j),
+                Err(err) => {
+                    let msg = format!("unreadable baseline: {err}");
+                    findings.push(Finding::new(lints::BENCH_BASELINE, &json_rel, 1, msg));
+                    continue;
+                }
+            }
+        }
+        let (rel, allows) = &mut per_file[*idx];
+        let raw = lints::check_bench_lanes(rel, stem, pats, baseline.as_ref(), &json_rel);
+        findings.extend(report::apply_allows(raw, allows));
+    }
+
+    // committed baselines no bench target registers lanes for
+    if baseline_dir.is_dir() {
+        let mut jsons = Vec::new();
+        for e in fs::read_dir(&baseline_dir).context("read baseline dir")? {
+            jsons.push(e?.path());
+        }
+        jsons.sort();
+        for p in jsons {
+            if p.extension().and_then(|s| s.to_str()) != Some("json") {
+                continue;
+            }
+            let stem = stem_of(&p);
+            if !paired.contains(&stem) {
+                let rel = format!("benches/baseline/{stem}.json");
+                let msg = "baseline has no bench target registering matching lanes".to_string();
+                findings.push(Finding::new(lints::BENCH_BASELINE, &rel, 1, msg));
+            }
+        }
+    }
+
+    // an allow that suppressed nothing is itself a finding
+    let files_scanned = per_file.len();
+    let mut all_allows = Vec::new();
+    for (_, allows) in per_file {
+        for a in allows {
+            if !a.used {
+                let msg = format!("allow({}) suppresses nothing; delete it", a.lint);
+                findings.push(Finding::new(report::STALE_ALLOW, &a.path, a.line, msg));
+            }
+            all_allows.push(a);
+        }
+    }
+
+    findings.sort_by(|x, y| (&x.path, x.line, &x.lint).cmp(&(&y.path, y.line, &y.lint)));
+    Ok(Report { files_scanned, findings, allows: all_allows })
+}
+
+/// Recursively collect `.rs` files under `dir` in sorted order, so the
+/// report (and therefore CI output) is stable across filesystems.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for e in fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+fn stem_of(p: &Path) -> String {
+    let stem = p.file_stem().and_then(|s| s.to_str());
+    stem.unwrap_or("").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analyze_source_applies_allows() {
+        // the marker below sits inside a string literal, so the
+        // analyzer never reads it as a live annotation when scanning
+        // this file itself
+        let src = "// s2ft-analyze: allow(float-eq) reason=\"legacy compare\"\n\
+                   pub fn f(x: f32) -> bool { x == 0.0 }\n";
+        let (findings, allows) = analyze_source("src/kernels/gemm.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(allows.len(), 1);
+        assert!(allows[0].used);
+    }
+
+    #[test]
+    fn analyze_source_reports_without_allow() {
+        let src = "pub fn f(x: f32) -> bool { x == 0.0 }\n";
+        let (findings, allows) = analyze_source("src/kernels/gemm.rs", src);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].lint, lints::FLOAT_EQ);
+        assert!(allows.is_empty());
+    }
+
+    #[test]
+    fn run_flags_stale_allows_and_orphan_baselines() {
+        let dir = std::env::temp_dir().join(format!("s2ft-analyze-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("src")).unwrap();
+        fs::create_dir_all(dir.join("benches/baseline")).unwrap();
+        let lib = "// s2ft-analyze: allow(fma) reason=\"never used\"\npub fn f() {}\n";
+        fs::write(dir.join("src/lib.rs"), lib).unwrap();
+        fs::write(dir.join("benches/baseline/ghost.json"), "[]").unwrap();
+
+        let report = run(&AnalyzeConfig { root: dir.clone() }).unwrap();
+        let _ = fs::remove_dir_all(&dir);
+
+        assert_eq!(report.files_scanned, 1);
+        let got: Vec<&str> = report.findings.iter().map(|f| f.lint.as_str()).collect();
+        assert_eq!(got, vec![lints::BENCH_BASELINE, report::STALE_ALLOW]);
+        assert_eq!(report.findings[0].path, "benches/baseline/ghost.json");
+        assert_eq!(report.allows.len(), 1);
+        assert!(!report.allows[0].used);
+        assert!(!report.ok());
+    }
+}

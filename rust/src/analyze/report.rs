@@ -1,0 +1,272 @@
+//! Findings, allow-annotations and the rendered `repro analyze` report.
+
+use std::fmt::Write as _;
+
+use super::lexer::Comment;
+
+/// Finding emitted for an annotation whose syntax could not be parsed.
+/// Not suppressible.
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+/// Finding emitted for an allow-annotation that suppressed nothing.
+/// Not suppressible — stale escape hatches must be deleted.
+pub const STALE_ALLOW: &str = "stale-allow";
+
+/// One lint violation, addressed as `path:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Lint name (`float-eq`, `safety-comment`, …).
+    pub lint: String,
+    /// Path relative to the package root (`src/…` or `benches/…`).
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(lint: &str, path: &str, line: usize, message: String) -> Self {
+        Self { lint: lint.to_string(), path: path.to_string(), line, message }
+    }
+}
+
+/// A parsed per-file escape hatch. The annotation grammar is one plain
+/// (non-doc) line comment of the form
+///
+/// ```text
+/// <marker> allow(<lint>) reason="<non-empty justification>"
+/// ```
+///
+/// where the marker is the literal project tag `s2ft-analyze:`. It
+/// suppresses findings of that lint *in the same file* and is itself
+/// listed in the report; an annotation that suppresses nothing becomes
+/// a [`STALE_ALLOW`] finding.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub path: String,
+    pub line: usize,
+    pub lint: String,
+    pub reason: String,
+    /// Set once the allow suppressed at least one finding.
+    pub used: bool,
+}
+
+/// Everything `repro analyze` learned about the tree. `findings` empty
+/// means the gate passes.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Surviving violations, sorted by `(path, line, lint)`.
+    pub findings: Vec<Finding>,
+    /// Every escape hatch in effect, in scan order.
+    pub allows: Vec<Allow>,
+}
+
+impl Report {
+    /// True when the tree is clean and the gate should exit 0.
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one `path:line: [lint] message` per
+    /// finding, then the escape hatches in effect, then the verdict.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "repro analyze: {} file(s) scanned, {} finding(s), {} allow(s)",
+            self.files_scanned,
+            self.findings.len(),
+            self.allows.len(),
+        );
+        for f in &self.findings {
+            let _ = writeln!(s, "{}:{}: [{}] {}", f.path, f.line, f.lint, f.message);
+        }
+        if !self.allows.is_empty() {
+            let _ = writeln!(s, "escape hatches in effect:");
+            for a in &self.allows {
+                let _ = writeln!(s, "  {}:{}: allow({}) — {}", a.path, a.line, a.lint, a.reason);
+            }
+        }
+        if self.ok() {
+            let _ = writeln!(s, "OK: all invariants hold");
+        }
+        s
+    }
+}
+
+/// The project tag that introduces an allow-annotation. Built from
+/// pieces so the analyzer's own sources never contain the literal
+/// marker outside of string context.
+fn marker() -> String {
+    format!("{}{}", "s2ft-", "analyze:")
+}
+
+fn malformed(rel: &str, line: usize, message: String) -> Finding {
+    Finding::new(MALFORMED_ALLOW, rel, line, message)
+}
+
+/// Parse every allow-annotation in `comments`. Only plain (non-doc)
+/// comments participate — documentation *describing* the syntax can
+/// never arm an escape hatch. Returns the allows plus
+/// [`MALFORMED_ALLOW`] findings for annotations that carry the marker
+/// but not the grammar.
+pub fn parse_allows(
+    rel: &str,
+    comments: &[Comment],
+    known: &[&str],
+) -> (Vec<Allow>, Vec<Finding>) {
+    let tag = marker();
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for cm in comments {
+        if cm.doc {
+            continue;
+        }
+        let t = cm.text.trim();
+        let Some(rest) = t.strip_prefix(tag.as_str()) else { continue };
+        let rest = rest.trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            let msg = format!("annotation must read `allow(<lint>) reason=\"…\"`, got `{rest}`");
+            bad.push(malformed(rel, cm.line, msg));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            bad.push(malformed(rel, cm.line, "unclosed `allow(` in annotation".to_string()));
+            continue;
+        };
+        let name = inner[..close].trim();
+        if !known.contains(&name) {
+            let msg = format!("unknown lint `{name}` (known: {})", known.join(", "));
+            bad.push(malformed(rel, cm.line, msg));
+            continue;
+        }
+        let tail = inner[close + 1..].trim_start();
+        let Some(r) = tail.strip_prefix("reason=\"") else {
+            let msg = format!("allow({name}) needs a reason=\"…\" justification");
+            bad.push(malformed(rel, cm.line, msg));
+            continue;
+        };
+        let Some(endq) = r.find('"') else {
+            let msg = "unterminated reason string in annotation".to_string();
+            bad.push(malformed(rel, cm.line, msg));
+            continue;
+        };
+        let reason = r[..endq].trim().to_string();
+        if reason.is_empty() {
+            bad.push(malformed(rel, cm.line, format!("allow({name}) has an empty reason")));
+            continue;
+        }
+        let lint = name.to_string();
+        allows.push(Allow { path: rel.to_string(), line: cm.line, lint, reason, used: false });
+    }
+    (allows, bad)
+}
+
+/// Drop findings covered by a same-file allow of the same lint, marking
+/// those allows used. Returns the survivors.
+pub fn apply_allows(findings: Vec<Finding>, allows: &mut [Allow]) -> Vec<Finding> {
+    let mut kept = Vec::new();
+    for f in findings {
+        let hit = allows.iter_mut().find(|a| a.lint == f.lint);
+        match hit {
+            Some(a) => a.used = true,
+            None => kept.push(f),
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::lex;
+
+    const KNOWN: &[&str] = &["nondet", "bench-baseline"];
+
+    fn fixture_comment(body: &str) -> String {
+        // build the annotation without embedding the live marker in
+        // this file's source
+        format!("// {} {body}\nfn f() {{}}\n", marker())
+    }
+
+    #[test]
+    fn parses_well_formed_allow() {
+        let src = fixture_comment("allow(nondet) reason=\"keyed lookup only\"");
+        let lx = lex(&src);
+        let (allows, bad) = parse_allows("src/x.rs", &lx.comments, KNOWN);
+        assert!(bad.is_empty(), "{bad:?}");
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].lint, "nondet");
+        assert_eq!(allows[0].reason, "keyed lookup only");
+        assert_eq!(allows[0].line, 1);
+        assert!(!allows[0].used);
+    }
+
+    #[test]
+    fn rejects_unknown_lint_and_missing_reason() {
+        for body in [
+            "allow(spelling) reason=\"x\"",
+            "allow(nondet)",
+            "allow(nondet) reason=\"\"",
+            "deny(nondet)",
+            "allow(nondet reason=\"x\"",
+        ] {
+            let src = fixture_comment(body);
+            let lx = lex(&src);
+            let (allows, bad) = parse_allows("src/x.rs", &lx.comments, KNOWN);
+            assert!(allows.is_empty(), "{body} should not parse");
+            assert_eq!(bad.len(), 1, "{body} should be one malformed finding");
+            assert_eq!(bad[0].lint, MALFORMED_ALLOW);
+        }
+    }
+
+    #[test]
+    fn doc_comments_never_arm_allows() {
+        let src = format!("/// {} allow(nondet) reason=\"docs\"\nfn f() {{}}\n", marker());
+        let lx = lex(&src);
+        let (allows, bad) = parse_allows("src/x.rs", &lx.comments, KNOWN);
+        assert!(allows.is_empty());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn apply_allows_suppresses_and_marks_used() {
+        let findings = vec![
+            Finding::new("nondet", "src/x.rs", 3, "HashMap".into()),
+            Finding::new("float-eq", "src/x.rs", 9, "== 0.0".into()),
+        ];
+        let allow = Allow {
+            path: "src/x.rs".into(),
+            line: 1,
+            lint: "nondet".into(),
+            reason: "r".into(),
+            used: false,
+        };
+        let mut allows = vec![allow];
+        let left = apply_allows(findings, &mut allows);
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].lint, "float-eq");
+        assert!(allows[0].used);
+    }
+
+    #[test]
+    fn render_lists_findings_and_allows() {
+        let allow = Allow {
+            path: "src/d.rs".into(),
+            line: 2,
+            lint: "nondet".into(),
+            reason: "why".into(),
+            used: true,
+        };
+        let report = Report {
+            files_scanned: 2,
+            findings: vec![Finding::new("float-eq", "src/k.rs", 7, "bad".into())],
+            allows: vec![allow],
+        };
+        let s = report.render();
+        assert!(s.contains("src/k.rs:7: [float-eq] bad"));
+        assert!(s.contains("allow(nondet)"));
+        assert!(!s.contains("OK:"));
+        assert!(!report.ok());
+    }
+}

@@ -97,6 +97,9 @@ pub(crate) fn tile_scalar(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
 /// The caller must ensure the CPU supports AVX2.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: `#[target_feature]` makes every call unsafe; the only caller is
+// the dispatch in `tile`, which runs this after `simd_supported()`
+// confirms AVX2 at runtime.
 unsafe fn tile_avx2(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
     use std::arch::x86_64::{
         _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,

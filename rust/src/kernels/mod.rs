@@ -58,7 +58,9 @@
 //! keeps the JAX-reference numeric tests meaningful under any machine
 //! configuration. The historical `av == 0.0` skip fast paths were
 //! removed for violating exactly this contract (they matched `-0.0` and
-//! dropped `0·±inf` / `0·NaN` products).
+//! dropped `0·±inf` / `0·NaN` products); `repro analyze` now machine
+//! checks this module for float-literal equality, `mul_add` contraction
+//! and nondeterminism sources so the bug class cannot return.
 //!
 //! The [`reference`] module holds naive triple-loop oracles used by tests
 //! and benches.

@@ -47,8 +47,14 @@
 //! thread counts *and* the dispatch boundary because only the output is
 //! ever partitioned — never the reduction axis — and every accumulator
 //! lane is one fixed-order scalar chain.
+//!
+//! Those invariants are machine-checked: the [`analyze`] module (exposed
+//! as `repro analyze`) lints the tree for float-literal equality, fused
+//! multiply-adds, missing `// SAFETY:` comments, nondeterminism sources
+//! in bit-identical modules and bench-lane/baseline drift.
 
 pub mod adapter;
+pub mod analyze;
 pub mod config;
 pub mod data;
 pub mod experiments;

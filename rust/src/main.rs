@@ -9,6 +9,7 @@
 //!   repro serve --model M [--weights DIR] [--requests N] [--adapters K]
 //!               [--workers W] [--max-batch B] [--stream]
 //!   repro experiment <id> [--quick]
+//!   repro analyze [--root DIR]
 
 use std::collections::HashMap;
 
@@ -102,6 +103,7 @@ fn main() {
         "adapter" => cmd_adapter(&args),
         "experiment" => cmd_experiment(&args),
         "bench-compare" => cmd_bench_compare(&args),
+        "analyze" => cmd_analyze(&args),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -130,6 +132,7 @@ USAGE:
               --adapter FILE --out PATH]
   repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
   repro bench-compare [--current FILE] [--baseline FILE] [--warn R] [--fail R]
+  repro analyze [--root DIR]
 
 Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
 variants, see `repro info`). Artifacts default to ./artifacts.
@@ -140,6 +143,12 @@ fallback). S2FT_SIMD=0 forces the portable scalar micro-kernel tile
 (results are bit-identical either way). bench-compare diffs a
 bench JSON against a committed baseline and exits non-zero past --fail
 (default 2.0x median; --warn 1.3x prints warnings only).
+
+analyze is the static-analysis gate: it lints src/ and benches/ for the
+project's bit-identity invariants (float-literal equality, mul_add,
+missing SAFETY comments, nondeterminism sources, bench/baseline drift)
+and exits non-zero on any finding. --root points at the package dir
+(auto-detected: ./rust or .).
 
 Backends (--backend native|pjrt|auto): the native pure-rust interpreter
 runs fullft + s2ft with no artifacts, python or XLA; pjrt (cargo feature)
@@ -444,6 +453,22 @@ fn cmd_bench_compare(args: &Args) -> Result<()> {
         bail!("no overlapping benchmarks between {cur_path} and {base_path}");
     }
     println!("\nbaseline comparison passed ({} benchmarks)", cmp.deltas.len());
+    Ok(())
+}
+
+/// Static-analysis gate: lint the package for bit-identity invariant
+/// violations (see the `repro::analyze` module docs) and exit non-zero
+/// on any finding.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cfg = match args.get("root") {
+        Some(root) => repro::analyze::AnalyzeConfig { root: root.into() },
+        None => repro::analyze::AnalyzeConfig::discover()?,
+    };
+    let report = repro::analyze::run(&cfg)?;
+    print!("{}", report.render());
+    if !report.ok() {
+        bail!("{} invariant violation(s)", report.findings.len());
+    }
     Ok(())
 }
 

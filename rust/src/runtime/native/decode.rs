@@ -16,6 +16,7 @@
 //! attention mixes positions, and it only looks backward — a prefix's
 //! activations never depend on what comes after it.
 
+// s2ft-analyze: allow(nondet) reason="weight maps are keyed lookup only — never iterated — so HashMap order cannot reach the decoded tokens"
 use std::collections::HashMap;
 use std::sync::Arc;
 

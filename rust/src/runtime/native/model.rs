@@ -550,6 +550,17 @@ fn forward(
     Ok(Cache { layers, h_final, invf, xf, logits })
 }
 
+/// Loss-mask predicate: a position contributes only when its mask weight
+/// is strictly positive. Written without float-literal equality (the
+/// PR 5 bug class, rejected by `repro analyze` in this module): `-0.0`,
+/// negatives and NaN all count as masked, mirroring the `mask[i] > 0.0`
+/// guards on the loss and gradient accumulation below so the skip can
+/// never disagree with them.
+#[inline]
+fn is_masked(m: f32) -> bool {
+    m <= 0.0 || m.is_nan()
+}
+
 /// Masked mean cross-entropy + (optionally) dlogits, + masked ncorrect.
 fn loss_ncorrect_grad(
     logits: &[f32],
@@ -582,7 +593,7 @@ fn loss_ncorrect_grad(
         if arg == tgt {
             ncorrect += mask[i];
         }
-        if mask[i] == 0.0 && dlogits.is_none() {
+        if is_masked(mask[i]) && dlogits.is_none() {
             continue;
         }
         let lse: f32 = maxv + row.iter().map(|&x| (x - maxv).exp()).sum::<f32>().ln();
@@ -1375,4 +1386,48 @@ pub fn merge(mm: &ModelMeta, meth: &MethodMeta, named: &Named) -> Result<HashMap
         }
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{is_masked, loss_ncorrect_grad};
+
+    #[test]
+    fn is_masked_truth_table() {
+        assert!(is_masked(0.0));
+        assert!(is_masked(-0.0));
+        assert!(is_masked(-1.0));
+        assert!(is_masked(f32::NAN));
+        assert!(!is_masked(1.0));
+        assert!(!is_masked(0.5));
+        assert!(!is_masked(f32::INFINITY));
+    }
+
+    /// A `-0.0` mask entry must behave exactly like `0.0`: the old
+    /// `mask[i] == 0.0` compare got that right only by accident (float
+    /// `==` matches both zeros); this pins the behaviour through
+    /// `is_masked`, bitwise, on both the eval and the gradient path.
+    #[test]
+    fn negative_zero_mask_is_bit_identical_to_positive_zero() {
+        let n = 3;
+        let vocab = 4;
+        let logits = vec![
+            0.1, -0.7, 2.0, 0.3, // row 0 (kept)
+            1.5, 0.2, -0.4, 0.9, // row 1 (masked)
+            -2.0, 0.0, 0.25, 1.0, // row 2 (kept)
+        ];
+        let targets = vec![2, 0, 3];
+        let pos = vec![1.0f32, 0.0, 1.0];
+        let neg = vec![1.0f32, -0.0, 1.0];
+        for want_grad in [false, true] {
+            let (l0, c0, g0) = loss_ncorrect_grad(&logits, &targets, &pos, n, vocab, want_grad);
+            let (l1, c1, g1) = loss_ncorrect_grad(&logits, &targets, &neg, n, vocab, want_grad);
+            assert_eq!(l0.to_bits(), l1.to_bits());
+            assert_eq!(c0.to_bits(), c1.to_bits());
+            let b0: Option<Vec<u32>> = g0.map(|v| v.iter().map(|x| x.to_bits()).collect());
+            let b1: Option<Vec<u32>> = g1.map(|v| v.iter().map(|x| x.to_bits()).collect());
+            assert_eq!(b0.is_some(), want_grad);
+            assert_eq!(b0, b1);
+        }
+    }
 }

@@ -1,0 +1,25 @@
+//! The static-analysis gate, self-applied: `repro analyze` must pass on
+//! this very tree. This is the same check CI runs via the subcommand;
+//! having it in `cargo test` means a violation fails the ordinary test
+//! suite too, with the full report in the failure message.
+
+use std::path::PathBuf;
+
+use repro::analyze::{run, AnalyzeConfig};
+
+#[test]
+fn analyze_passes_on_this_tree() {
+    let cfg = AnalyzeConfig { root: PathBuf::from(env!("CARGO_MANIFEST_DIR")) };
+    let report = run(&cfg).expect("analyze must complete");
+    assert!(report.findings.is_empty(), "tree must be lint-clean:\n{}", report.render());
+    // sanity: the walk really covered the tree (src/ + benches/)
+    assert!(report.files_scanned > 40, "only {} files scanned", report.files_scanned);
+    // every escape hatch in the tree is live, justified and accounted
+    // for: the decode.rs weight-map allow plus the three diagnostic
+    // bench targets without committed baselines
+    assert_eq!(report.allows.len(), 4, "allows: {:#?}", report.allows);
+    for a in &report.allows {
+        assert!(a.used, "stale allow would be a finding: {a:?}");
+        assert!(!a.reason.is_empty());
+    }
+}

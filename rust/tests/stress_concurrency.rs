@@ -1,0 +1,318 @@
+//! Concurrency stress tests — the primary workload for the CI
+//! ThreadSanitizer lane (`make tsan`), also run under plain `cargo test`.
+//!
+//! Three shared-state surfaces are exercised:
+//!
+//! * the kernels thread pool: `set_threads` override churn racing
+//!   concurrent GEMMs, which must stay bit-identical to the naive
+//!   reference at every thread count;
+//! * the serve engine: drop/shutdown with in-flight streaming requests
+//!   across 4 workers (no hang, exactly one terminal event per stream,
+//!   metrics consistent with what was served) and adapter
+//!   register/fuse/unregister churn under concurrent submits;
+//! * the shared `AdapterStore`: concurrent per-worker switch/deactivate
+//!   churn that must restore base weights bitwise.
+//!
+//! `S2FT_STRESS_ITERS` scales the iteration counts down for the TSan
+//! lane (shadow-memory slowdown is roughly an order of magnitude).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use repro::adapter::{AdapterSlot, AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
+use repro::kernels::{self, reference};
+use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
+use repro::serve::{Engine, EngineConfig, GenEvent, GenRequest};
+use repro::train::GenModel;
+use repro::util::rng::Rng;
+
+/// Iteration count, overridable via `S2FT_STRESS_ITERS` so the TSan CI
+/// lane can stay inside its time budget.
+fn stress_iters(default: usize) -> usize {
+    let v = std::env::var("S2FT_STRESS_ITERS").ok();
+    v.and_then(|s| s.parse().ok()).unwrap_or(default).max(1)
+}
+
+/// Run `f` on a fresh thread and panic if it does not finish in time —
+/// a hang in a concurrency test must fail loudly, not stall the suite.
+fn with_deadline<F>(secs: u64, name: &str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // the worker panicked before signalling; surface its panic
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+            panic!("{name}: worker exited without completing");
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!("{name}: deadline of {secs}s exceeded"),
+    }
+}
+
+/// Synthetic tiny-model S²FT adapter deltas, deterministic per rng state.
+fn tiny_adapter(rng: &mut Rng) -> AnyAdapter {
+    let rt = NativeBackend::builtin();
+    let mm = rt.artifacts().model("tiny").unwrap();
+    let (d, hd) = (mm.dims.d_model, mm.head_dim());
+    let layers = (0..mm.dims.n_layers)
+        .map(|_| {
+            let heads = rng.choose(mm.dims.n_heads, 1);
+            let wo_rows = repro::sparsity::expand_head_perm(&heads, hd);
+            S2ftLayerDelta {
+                wo_delta: (0..wo_rows.len() * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+                wo_rows,
+                wd_rows: rng.choose(mm.dims.d_ff, 2),
+                wd_delta: (0..2 * d).map(|_| rng.normal_f32() * 1e-3).collect(),
+            }
+        })
+        .collect();
+    AnyAdapter::S2ft(S2ftAdapter { layers, d_model: d })
+}
+
+/// Native-backend engine with `n_adapters` registered, short batching
+/// window to keep the stress tests brisk.
+fn native_engine(n_adapters: usize, workers: usize, max_batch: usize) -> Engine {
+    let cfg = EngineConfig::new()
+        .workers(workers)
+        .max_batch(max_batch)
+        .window(Duration::from_millis(1));
+    let engine = Engine::spawn(cfg, |_wid| {
+        let rt = NativeBackend::builtin();
+        let init = rt.load("init_tiny")?;
+        let outs = init.run(&[Tensor::scalar_i32(3)])?;
+        let params: HashMap<String, Tensor> =
+            init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        let snapshot = params.clone();
+        let gm = GenModel::new(&rt, "tiny", params)?;
+        Ok((gm, snapshot))
+    });
+    let mut rng = Rng::seed(0x57AE55);
+    for a in 0..n_adapters {
+        engine.register(format!("a{a}"), tiny_adapter(&mut rng));
+    }
+    engine
+}
+
+/// Kernels pool: `set_threads` churn racing concurrent GEMMs. The pool
+/// size is a relaxed atomic read per call, so every GEMM sees *some*
+/// thread count — and the bit-identity contract says the count must not
+/// matter. 64³ multiply-adds exceeds the MIN_PAR_WORK threshold, so the
+/// parallel path genuinely engages.
+#[test]
+fn set_threads_churn_keeps_gemm_bit_identical() {
+    let iters = stress_iters(40);
+    let (m, k, n) = (64usize, 64, 64);
+    let mut rng = Rng::seed(0xC0FFEE);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let refr = reference::gemm(&a, &b, m, k, n);
+    let want: Vec<u32> = refr.iter().map(|x| x.to_bits()).collect();
+    with_deadline(120, "set_threads churn", move || {
+        let stop = AtomicBool::new(false);
+        thread::scope(|s| {
+            let churn = s.spawn(|| {
+                let mut t = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    kernels::set_threads(t);
+                    // 0 resets to the S2FT_THREADS / all-cores fallback
+                    t = if t >= 4 { 0 } else { t + 1 };
+                    thread::yield_now();
+                }
+                kernels::set_threads(0);
+            });
+            let mut workers = Vec::new();
+            for _ in 0..4 {
+                workers.push(s.spawn(|| {
+                    for _ in 0..iters {
+                        let got = kernels::gemm(&a, &b, m, k, n);
+                        for (g, w) in got.iter().zip(&want) {
+                            assert_eq!(g.to_bits(), *w, "GEMM drifted under thread churn");
+                        }
+                    }
+                }));
+            }
+            for w in workers {
+                w.join().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+            churn.join().unwrap();
+        });
+    });
+}
+
+/// Dropping an engine with a full queue must not hang, and every stream
+/// still ends in exactly one terminal event (`Done` for drained work,
+/// `Error` if the pool gave up on it) — never zero, never two.
+#[test]
+fn engine_drop_with_inflight_streams_terminates_every_stream() {
+    let iters = stress_iters(24);
+    with_deadline(180, "engine drop with in-flight streams", move || {
+        let engine = native_engine(3, 4, 4);
+        let mut streams = Vec::new();
+        for i in 0..iters {
+            let id = format!("a{}", i % 3);
+            streams.push(engine.submit(GenRequest::new(id, format!("q: {i}?")).max_new(4)));
+        }
+        drop(engine); // shutdown with the queue still full
+        for s in streams {
+            let mut terminals = 0usize;
+            for ev in s {
+                match ev {
+                    GenEvent::Done(_) | GenEvent::Error(_) => terminals += 1,
+                    GenEvent::Token { .. } => {}
+                }
+            }
+            assert_eq!(terminals, 1, "every stream must end in exactly one terminal");
+        }
+    });
+}
+
+/// Explicit shutdown path: everything submitted before the drain is
+/// served, and the metrics agree exactly with what the streams saw
+/// (requests, latency samples). Metrics are updated before `Done` is
+/// delivered, so this is race-free by construction.
+#[test]
+fn engine_shutdown_drains_and_metrics_count_every_served_request() {
+    let iters = stress_iters(16);
+    with_deadline(180, "engine shutdown drain", move || {
+        let engine = native_engine(2, 4, 4);
+        let mut streams = Vec::new();
+        for i in 0..iters {
+            let id = format!("a{}", i % 2);
+            streams.push(engine.submit(GenRequest::new(id, format!("q: {i}?")).max_new(2)));
+        }
+        let mut done = 0usize;
+        for s in streams {
+            if s.wait().is_ok() {
+                done += 1;
+            }
+        }
+        assert_eq!(done, iters, "all submitted requests must serve");
+        let m = engine.metrics();
+        assert_eq!(m.requests, done, "metrics must count every served request");
+        assert_eq!(m.latencies_ms().len(), done);
+        assert!(m.batches >= 1 && m.batches <= done);
+        engine.shutdown().unwrap();
+    });
+}
+
+/// Runtime adapter lifecycle churn (register / fuse / unregister a hot
+/// id) racing concurrent submits on stable ids: nothing is lost, the
+/// stable ids never fail, and the served count matches the metrics.
+#[test]
+fn adapter_lifecycle_churn_under_concurrent_submits() {
+    let iters = stress_iters(6);
+    with_deadline(240, "adapter lifecycle churn", move || {
+        let engine = Arc::new(native_engine(3, 4, 2));
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let engine = engine.clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                let mut rng = Rng::seed(0x5EED);
+                while !stop.load(Ordering::Relaxed) {
+                    engine.register("hot", tiny_adapter(&mut rng));
+                    let _ = engine.fuse("blend", &[("a0", 0.5), ("hot", 0.5)]);
+                    let _ = engine.unregister("hot");
+                    thread::yield_now();
+                }
+            })
+        };
+        let mut submitters = Vec::new();
+        for w in 0..4 {
+            let engine = engine.clone();
+            submitters.push(thread::spawn(move || {
+                let mut done = 0usize;
+                let mut errs = 0usize;
+                for i in 0..iters {
+                    let id = format!("a{}", (w + i) % 3);
+                    match engine.call(GenRequest::new(id, "q?").max_new(1)) {
+                        Ok(_) => done += 1,
+                        Err(_) => errs += 1,
+                    }
+                }
+                (done, errs)
+            }));
+        }
+        let mut done = 0usize;
+        let mut errs = 0usize;
+        for h in submitters {
+            let (d, e) = h.join().unwrap();
+            done += d;
+            errs += e;
+        }
+        stop.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+        assert_eq!(done + errs, 4 * iters, "no request may be lost");
+        assert_eq!(errs, 0, "stable adapter ids must never fail to serve");
+        let m = engine.metrics();
+        assert_eq!(m.requests, done);
+        Arc::try_unwrap(engine)
+            .ok()
+            .expect("sole owner")
+            .shutdown()
+            .unwrap();
+    });
+}
+
+/// Shared `AdapterStore` under concurrent per-worker switch churn: after
+/// any switch sequence plus a deactivate, the live weights must equal
+/// the pristine snapshot *bitwise*. Zero base weights make that exact:
+/// `0 + v - v` is `+0.0` in every lane, so any drift is a real bug.
+#[test]
+fn adapter_store_churn_restores_base_weights_bitwise() {
+    let iters = stress_iters(200);
+    with_deadline(120, "adapter store churn", move || {
+        let d = 8usize;
+        let store = AdapterStore::new();
+        let mut rng = Rng::seed(0xAB);
+        for a in 0..4 {
+            let wd_rows = rng.choose(d, 2);
+            let wd_delta: Vec<f32> = (0..2 * d).map(|_| rng.normal_f32()).collect();
+            let layer = S2ftLayerDelta { wo_rows: vec![], wo_delta: vec![], wd_rows, wd_delta };
+            let adapter = AnyAdapter::S2ft(S2ftAdapter { layers: vec![layer], d_model: d });
+            store.insert(format!("a{a}"), adapter);
+        }
+        let base = || {
+            let mut p = HashMap::new();
+            p.insert("L0.wo".to_string(), Tensor::zeros(vec![d, d]));
+            p.insert("L0.wd".to_string(), Tensor::zeros(vec![d, d]));
+            p
+        };
+        thread::scope(|s| {
+            for w in 0..4 {
+                let store = &store;
+                let base = &base;
+                s.spawn(move || {
+                    let snapshot = base();
+                    let mut params = base();
+                    let mut slot = AdapterSlot::new();
+                    for i in 0..iters {
+                        let id = format!("a{}", (w + i) % 4);
+                        slot.switch_to(store, &id, &mut params, &snapshot).unwrap();
+                    }
+                    slot.deactivate(&mut params, &snapshot).unwrap();
+                    for name in ["L0.wo", "L0.wd"] {
+                        let got = params[name].as_f32().unwrap();
+                        let want = snapshot[name].as_f32().unwrap();
+                        for (g, v) in got.iter().zip(want) {
+                            assert_eq!(g.to_bits(), v.to_bits(), "{name} must restore bitwise");
+                        }
+                    }
+                });
+            }
+        });
+        assert!(store.switches() >= 4, "churn must actually switch");
+    });
+}
