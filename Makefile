@@ -10,7 +10,7 @@
 #   make bench-smoke-scalar  smoke run with the portable tile forced
 #                       (S2FT_SIMD=0 — the CI scalar matrix lane)
 #   make bench-baseline regenerate the committed regression baselines
-#   make bench-compare  gate kernels + serve results vs the baselines
+#   make bench-compare  gate kernels/serve/serve_load results vs baselines
 #   make serve-smoke    engine-pool serving end-to-end (hermetic, native)
 #   make analyze        static-analysis gate (bit-identity invariant lints)
 #   make miri           nightly: UB-check the unsafe kernel modules
@@ -54,11 +54,13 @@ bench-smoke-scalar:
 bench-baseline:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench kernels
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench serve
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench serve_load
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench fig5_training
 	cp rust/results/bench_kernels.json rust/benches/baseline/kernels.json
 	cp rust/results/bench_serve.json rust/benches/baseline/serve.json
+	cp rust/results/bench_serve_load.json rust/benches/baseline/serve_load.json
 	cp rust/results/bench_fig5_training.json rust/benches/baseline/fig5_training.json
-	@echo "baselines updated: rust/benches/baseline/{kernels,serve,fig5_training}.json (commit them)"
+	@echo "baselines updated: rust/benches/baseline/{kernels,serve,serve_load,fig5_training}.json (commit them)"
 
 bench-compare:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
@@ -67,6 +69,9 @@ bench-compare:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
 	  --current rust/results/bench_serve.json \
 	  --baseline rust/benches/baseline/serve.json
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
+	  --current rust/results/bench_serve_load.json \
+	  --baseline rust/benches/baseline/serve_load.json --warn 1.5 --fail 3.0
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- bench-compare \
 	  --current rust/results/bench_fig5_training.json \
 	  --baseline rust/benches/baseline/fig5_training.json --warn 1.5 --fail 3.0

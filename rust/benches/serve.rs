@@ -1,6 +1,7 @@
 //! Serving benches: KV-cached decode vs full recompute, and engine-pool
-//! wave throughput at 1/2/4 workers (the multi-worker scaling datum the
-//! baseline gate tracks).
+//! closed-loop burst throughput at 1/2/4 workers (the multi-worker
+//! scaling datum the baseline gate tracks). Open-loop Poisson load with
+//! KV-pool churn lives in `serve_load.rs`.
 //!
 //! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
 //! `make bench-baseline` regenerates the committed regression baseline
@@ -62,10 +63,11 @@ fn main() {
         black_box(gm.generate_full_recompute(&reqs, |_, _| {}).unwrap());
     });
 
-    // --- engine pool: a 32-request wave across 4 adapters ---------------
+    // --- engine pool: a 32-request burst across 4 adapters, served by
+    // --- continuous batching (or legacy waves on decoder-less backends)
     for workers in [1usize, 2, 4] {
         let engine = spawn_engine(workers, 4);
-        suite.bench(&format!("engine/tiny/wave32/workers={workers}"), || {
+        suite.bench(&format!("engine/tiny/burst32/workers={workers}"), || {
             let streams: Vec<_> = (0..32)
                 .map(|i| {
                     engine.submit(

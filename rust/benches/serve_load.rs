@@ -1,0 +1,127 @@
+//! Open-loop serving load bench: Poisson arrivals against the
+//! continuous-batching engine.
+//!
+//! Unlike `serve.rs` (closed-loop: submit a wave, wait, repeat), this
+//! target models an *open* system — requests arrive on a Poisson clock
+//! whether or not the engine has kept up — which is what exposes
+//! queueing latency and KV-pool churn. Two lanes:
+//!
+//! * `load/tiny/poisson/streams=128/workers=4` — 128 in-flight streams
+//!   across 4 workers with an auto-sized KV pool (no eviction), the
+//!   headline throughput/latency datum.
+//! * `load/tiny/churn/streams=64/kv_blocks=6` — a deliberately tiny
+//!   6-block pool on one worker, so admission, reservation and eviction
+//!   backpressure all cycle continuously.
+//!
+//! Each lane prints p50/p99 request latency, aggregate tok/s and the
+//! eviction/KV-peak counters after its timed runs. Knobs:
+//! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
+//! `make bench-baseline` regenerates the committed regression baseline
+//! from this target's JSON (see README "Benchmarks & baselines").
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
+use repro::serve::{synthetic_adapter, Engine, EngineConfig, GenRequest};
+use repro::train::GenModel;
+use repro::util::bench::BenchSuite;
+use repro::util::rng::Rng;
+
+fn tiny_params(rt: &NativeBackend) -> HashMap<String, Tensor> {
+    let init = rt.load("init_tiny").unwrap();
+    let outs = init.run(&[Tensor::scalar_i32(5)]).unwrap();
+    init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect()
+}
+
+fn spawn_engine(cfg: EngineConfig, n_adapters: usize) -> Engine {
+    let engine = Engine::spawn(cfg, |_wid| {
+        let rt = NativeBackend::builtin();
+        let params = tiny_params(&rt);
+        let snapshot = params.clone();
+        let gm = GenModel::new(&rt, "tiny", params)?;
+        Ok((gm, snapshot))
+    });
+    let rt = NativeBackend::builtin();
+    let mm = rt.artifacts().model("tiny").unwrap().clone();
+    let mut rng = Rng::seed(0xBE17);
+    for a in 0..n_adapters {
+        engine.register(format!("a{a}"), synthetic_adapter(&mm, &mut rng));
+    }
+    engine
+}
+
+/// Submit `n` requests with exponential (Poisson-process) inter-arrival
+/// gaps of mean `mean_gap_us`, then drain every stream. Evicted streams
+/// on the tight-pool lane terminate with an error; the load generator
+/// tolerates both outcomes.
+fn open_loop(engine: &Engine, rng: &mut Rng, n: usize, n_adapters: usize, mean_gap_us: f64) {
+    let streams: Vec<_> = (0..n)
+        .map(|i| {
+            let gap_us = -(1.0 - rng.f64()).ln() * mean_gap_us;
+            std::thread::sleep(Duration::from_nanos((gap_us * 1e3) as u64));
+            let max_new = [2usize, 4, 8][i % 3];
+            let adapter = format!("a{}", i % n_adapters);
+            engine.submit(GenRequest::new(adapter, format!("q: item {i}?")).max_new(max_new))
+        })
+        .collect();
+    for s in streams {
+        let _ = s.wait();
+    }
+}
+
+fn report(engine: &Engine, wall: Duration) {
+    let m = engine.metrics();
+    println!(
+        "  p50 {:.2} ms, p99 {:.2} ms, {:.0} tok/s, {} served, {} eviction(s), kv peak {:.1} KB",
+        m.percentile_ms(0.5),
+        m.percentile_ms(0.99),
+        m.tokens as f64 / wall.as_secs_f64().max(1e-9),
+        m.requests,
+        m.evictions,
+        m.kv_peak_bytes() as f64 / 1e3
+    );
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("serve_load").slow();
+    println!(
+        "open-loop serving load (available parallelism {})\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    );
+    let mut rng = Rng::seed(0x10AD);
+
+    // --- headline: 128 Poisson streams, 4 workers, ample pool -----------
+    {
+        let cfg = EngineConfig::new()
+            .workers(4)
+            .max_batch(8)
+            .window(Duration::from_millis(1));
+        let engine = spawn_engine(cfg, 4);
+        let t0 = Instant::now();
+        suite.bench("load/tiny/poisson/streams=128/workers=4", || {
+            open_loop(&engine, &mut rng, 128, 4, 150.0);
+        });
+        report(&engine, t0.elapsed());
+        engine.shutdown().unwrap();
+    }
+
+    // --- churn: one worker, 6-block pool, eviction backpressure ---------
+    {
+        let cfg = EngineConfig::new()
+            .workers(1)
+            .max_batch(4)
+            .window(Duration::from_millis(1))
+            .kv_block_tokens(4)
+            .kv_blocks(6);
+        let engine = spawn_engine(cfg, 2);
+        let t0 = Instant::now();
+        suite.bench("load/tiny/churn/streams=64/kv_blocks=6", || {
+            open_loop(&engine, &mut rng, 64, 2, 100.0);
+        });
+        report(&engine, t0.elapsed());
+        engine.shutdown().unwrap();
+    }
+
+    suite.save();
+}

@@ -21,6 +21,11 @@
 //!   `benches/*.rs` must match an entry in the committed
 //!   `benches/baseline/<target>.json` and vice versa, so no perf lane
 //!   silently escapes the CI regression gate.
+//! * [`PUB_DOC`] — non-test code in `src/serve/`: every `pub` item
+//!   (fn, struct, enum, trait, const, …) must carry a rustdoc comment,
+//!   so the serving API documented in `docs/serving.md` cannot grow
+//!   undocumented surface. `pub use` re-exports, `pub(crate)`-style
+//!   restricted visibility and struct fields are exempt.
 
 use super::lexer::{Comment, Lexed, Tok, TokKind};
 use super::report::Finding;
@@ -36,9 +41,11 @@ pub const SAFETY: &str = "safety-comment";
 pub const NONDET: &str = "nondet";
 /// Bench lane without a committed baseline entry (or vice versa).
 pub const BENCH_BASELINE: &str = "bench-baseline";
+/// Undocumented `pub` item in the serving API.
+pub const PUB_DOC: &str = "pub-doc";
 
 /// Every suppressible lint, for allow-annotation validation.
-pub const KNOWN_LINTS: &[&str] = &[FLOAT_EQ, FMA, SAFETY, NONDET, BENCH_BASELINE];
+pub const KNOWN_LINTS: &[&str] = &[FLOAT_EQ, FMA, SAFETY, NONDET, BENCH_BASELINE, PUB_DOC];
 
 const FLOAT_EQ_WHY: &str = "float-literal equality in bit-identical code \
                             (matches -0.0; compare bits or restructure)";
@@ -49,6 +56,10 @@ const HASH_WHY: &str = "iteration order is randomized per process; use BTreeMap/
 
 fn float_scope(rel: &str) -> bool {
     rel.starts_with("src/kernels/") || rel.starts_with("src/runtime/native/")
+}
+
+fn pub_doc_scope(rel: &str) -> bool {
+    rel.starts_with("src/serve/")
 }
 
 fn nondet_scope(rel: &str) -> bool {
@@ -136,8 +147,103 @@ pub fn lint_file(rel: &str, lx: &Lexed) -> Vec<Finding> {
     if nondet_scope(rel) {
         nondet_pass(rel, lx, &tests, &mut out);
     }
+    if pub_doc_scope(rel) {
+        pub_doc_pass(rel, lx, &tests, &mut out);
+    }
     safety_pass(rel, lx, &mut out);
     out
+}
+
+/// Item keywords that make a `pub` token the start of a documentable
+/// API item (as opposed to a struct field or a visibility qualifier).
+const ITEM_KINDS: &[&str] =
+    &["fn", "struct", "enum", "union", "trait", "mod", "type", "static", "use"];
+
+/// Classify the tokens after a `pub`: `Some(kind)` for a real item,
+/// `None` for struct fields (`pub name: T`). `const` is tentative so
+/// `pub const fn` classifies as `fn`; `unsafe`/`async`/`extern` (and an
+/// ABI string) are modifiers to scan through.
+fn pub_item_kind(toks: &[Tok], i: usize) -> Option<String> {
+    let mut kind: Option<String> = None;
+    for t in toks.iter().skip(i + 1).take(6) {
+        if t.kind == TokKind::Str {
+            continue; // `extern "C" fn`
+        }
+        if t.kind != TokKind::Ident {
+            break; // `:` of a field, `<` of a type, …
+        }
+        match t.text.as_str() {
+            k if ITEM_KINDS.contains(&k) => {
+                kind = Some(k.to_string());
+                break;
+            }
+            "const" => kind = Some("const".to_string()),
+            "unsafe" | "async" | "extern" => {}
+            _ => break, // field or binding name
+        }
+    }
+    kind
+}
+
+/// First line of the item a `pub` at token index `i` belongs to: walks
+/// backward over any `#[…]` attribute groups so a doc comment above
+/// `#[derive(…)]` still counts as adjacent.
+fn attr_anchor_line(toks: &[Tok], mut i: usize) -> usize {
+    let mut anchor = toks[i].line;
+    while i > 0 {
+        let mut j = i - 1;
+        if !tok_is(toks.get(j), TokKind::Punct, "]") {
+            break;
+        }
+        let mut depth = 1i64;
+        while j > 0 && depth > 0 {
+            j -= 1;
+            if tok_is(toks.get(j), TokKind::Punct, "]") {
+                depth += 1;
+            } else if tok_is(toks.get(j), TokKind::Punct, "[") {
+                depth -= 1;
+            }
+        }
+        if depth != 0 || j == 0 || !tok_is(toks.get(j - 1), TokKind::Punct, "#") {
+            break;
+        }
+        i = j - 1;
+        anchor = toks[i].line;
+    }
+    anchor
+}
+
+/// Undocumented `pub` items in the serving API. A rustdoc comment must
+/// end on the line directly above the item (attributes included) or on
+/// the item's own line.
+fn pub_doc_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    let toks = &lx.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "pub" || in_ranges(t.line, tests) {
+            continue;
+        }
+        if punct_open(toks, i + 1) {
+            continue; // pub(crate) / pub(super) — not public API
+        }
+        let Some(kind) = pub_item_kind(toks, i) else {
+            continue; // struct field
+        };
+        if kind == "use" {
+            continue; // re-export; the origin item carries the docs
+        }
+        let anchor = attr_anchor_line(toks, i);
+        let covered = lx
+            .comments
+            .iter()
+            .any(|cm| cm.doc && cm.end_line <= anchor && anchor - cm.end_line <= 1);
+        if !covered {
+            let msg = format!(
+                "`pub {kind}` without a rustdoc comment — the serving API \
+                 (src/serve/) is documented surface; see docs/serving.md"
+            );
+            out.push(Finding::new(PUB_DOC, rel, t.line, msg));
+        }
+    }
 }
 
 /// `== 0.0` / `!= 0.0` against any float literal: the PR 5 bug class
@@ -521,6 +627,65 @@ mod tests {
         let map = "use std::collections::HashMap;\n";
         assert_eq!(lints("src/runtime/native/decode.rs", map), vec![NONDET]);
         assert!(lints("src/runtime/native/model.rs", map).is_empty());
+    }
+
+    // -- pub-doc ------------------------------------------------------------
+
+    #[test]
+    fn pub_doc_requires_rustdoc_in_serve() {
+        let bad = "pub fn serve() {}\n";
+        assert_eq!(lints("src/serve/engine.rs", bad), vec![PUB_DOC]);
+        // the same source is fine outside src/serve/
+        assert!(lints("src/train/eval.rs", bad).is_empty());
+        let good = "/// Serves forever.\npub fn serve() {}\n";
+        assert!(findings("src/serve/engine.rs", good).is_empty());
+        // plain `//` comments are not rustdoc
+        let plain = "// serves forever\npub fn serve() {}\n";
+        assert_eq!(lints("src/serve/engine.rs", plain), vec![PUB_DOC]);
+    }
+
+    #[test]
+    fn pub_doc_sees_through_attributes() {
+        let derived = "/// A gauge.\n\
+                       #[derive(Debug, Clone, Copy, Default)]\n\
+                       pub struct G {\n    pub x: usize,\n}\n";
+        // the struct doc covers through the derive; the bare pub field
+        // is a field, not an item, so it is exempt
+        assert!(findings("src/serve/metrics.rs", derived).is_empty());
+        let bare = "#[derive(Debug)]\npub struct G;\n";
+        let f = findings("src/serve/metrics.rs", bare);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].lint, PUB_DOC);
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("pub struct"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn pub_doc_skips_reexports_restricted_visibility_and_tests() {
+        let skip = "/// Module docs live on the origin items.\n\
+                    pub use engine::Engine;\n\
+                    pub(crate) fn helper() {}\n\
+                    pub(super) struct S;\n\
+                    #[cfg(test)]\nmod tests {\n    pub fn fixture() {}\n}\n";
+        assert!(findings("src/serve/mod.rs", skip).is_empty());
+    }
+
+    #[test]
+    fn pub_doc_classifies_const_items_and_const_fns() {
+        let item = "pub const BLOCK: usize = 16;\n";
+        let f = findings("src/serve/kvpool.rs", item);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("pub const"), "{}", f[0].message);
+        let cfn = "pub const fn block() -> usize { 16 }\n";
+        let f = findings("src/serve/kvpool.rs", cfn);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("pub fn"), "{}", f[0].message);
+        let modified = "/// ABI shim.\npub unsafe extern \"C\" fn shim() {}\n";
+        // documented, and the unsafe carries a doc (not a SAFETY comment,
+        // so the safety lint still fires — filter to pub-doc here)
+        let pd =
+            findings("src/serve/kvpool.rs", modified).iter().filter(|f| f.lint == PUB_DOC).count();
+        assert_eq!(pd, 0);
     }
 
     // -- test-region detection ----------------------------------------------

@@ -6,8 +6,9 @@
 //! [`KNOWN_LINTS`] and the pass docs in `lints.rs`): no float-literal
 //! equality or fused multiply-adds in bit-identical kernel code, a
 //! `// SAFETY:` comment on every `unsafe`, no nondeterminism sources in
-//! the deterministic modules, and a bench lane ↔ committed baseline
-//! bijection so no perf lane escapes the CI regression gate.
+//! the deterministic modules, a bench lane ↔ committed baseline
+//! bijection so no perf lane escapes the CI regression gate, and
+//! rustdoc on every `pub` item of the serving API (`src/serve/`).
 //!
 //! Escape hatch: one plain line comment per file per lint, of the form
 //! documented on [`Allow`], suppresses that lint for the file and is

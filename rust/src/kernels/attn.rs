@@ -320,6 +320,85 @@ pub fn attn_decode(
     out
 }
 
+/// [`attn_decode`] over a block-paged KV pool instead of contiguous
+/// per-row caches.
+///
+/// `k_pool`/`v_pool` are one layer's `(blocks · block_tokens, d)` slabs
+/// from the serve KV pool; query `j`'s logical position `tk` lives at
+/// physical row `tables[j][tk / block_tokens] · block_tokens +
+/// tk % block_tokens`. `tables[j]` must cover positions `0..=pos[j]`.
+///
+/// Everything except that address translation — loop structure, score /
+/// max / exp / normalize / weighted-value order — is byte-for-byte the
+/// contiguous kernel, so paged decode stays bit-identical to the
+/// contiguous session (asserted by `paged_matches_contiguous_bitwise`
+/// and the generation proptests).
+#[allow(clippy::too_many_arguments)]
+pub fn attn_decode_paged(
+    q: &[f32],
+    k_pool: &[f32],
+    v_pool: &[f32],
+    tables: &[&[u32]],
+    pos: &[usize],
+    heads: usize,
+    hd: usize,
+    block_tokens: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let d = heads * hd;
+    let m = tables.len();
+    debug_assert_eq!(q.len(), m * d);
+    debug_assert_eq!(pos.len(), m);
+    let mut out = vec![0.0f32; m * d];
+    let work: usize = pos.iter().map(|&p| 2 * (p + 1) * d).sum();
+    super::for_each_row_chunk(&mut out, d, configured_threads(), work, |row0, chunk| {
+        for (lj, orow) in chunk.chunks_mut(d).enumerate() {
+            let j = row0 + lj;
+            let (table, p) = (tables[j], pos[j]);
+            debug_assert!(table.len() * block_tokens > p, "block table short of pos");
+            // one score buffer per row, reused across heads (every entry
+            // is rewritten by the score loop before it is read)
+            let mut prow = vec![0.0f32; p + 1];
+            for hh in 0..heads {
+                let qh = &q[j * d + hh * hd..][..hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for (tk, pr) in prow.iter_mut().enumerate() {
+                    let phys =
+                        table[tk / block_tokens] as usize * block_tokens + tk % block_tokens;
+                    let kh = &k_pool[phys * d + hh * hd..][..hd];
+                    let mut s = 0.0f32;
+                    for (x, y) in qh.iter().zip(kh) {
+                        s += x * y;
+                    }
+                    let s = s * scale;
+                    *pr = s;
+                    if s > maxv {
+                        maxv = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for pr in prow.iter_mut() {
+                    *pr = (*pr - maxv).exp();
+                    denom += *pr;
+                }
+                for pr in prow.iter_mut() {
+                    *pr /= denom;
+                }
+                let oh = &mut orow[hh * hd..hh * hd + hd];
+                for (tk, &pr) in prow.iter().enumerate() {
+                    let phys =
+                        table[tk / block_tokens] as usize * block_tokens + tk % block_tokens;
+                    let vh = &v_pool[phys * d + hh * hd..][..hd];
+                    for (o, &vv) in oh.iter_mut().zip(vh) {
+                        *o += pr * vv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +456,54 @@ mod tests {
                 assert!(
                     want.iter().zip(got).all(|(x, y)| x.to_bits() == y.to_bits()),
                     "decode mismatch at b={bi} tq={tq}"
+                );
+            }
+        }
+    }
+
+    /// Paged decode over a shuffled physical block layout must reproduce
+    /// the contiguous decode kernel bit-for-bit: the block table is pure
+    /// address translation, never arithmetic.
+    #[test]
+    fn paged_matches_contiguous_bitwise() {
+        let dims = AttnDims { b: 3, t: 7, heads: 2, hd: 4 };
+        let (qr, kr, v) = setup(&dims, 11);
+        let scale = 1.0 / (dims.hd as f32).sqrt();
+        let d = dims.d();
+        for bt in [1usize, 2, 3, 7] {
+            // scatter each row's cache into non-contiguous, interleaved
+            // blocks: row bi's logical block g lives at physical block
+            // (g * b + bi) — a worst-case fragmented layout
+            let blocks_per_row = dims.t.div_ceil(bt);
+            let nblocks = blocks_per_row * dims.b;
+            let mut kp = vec![0.0f32; nblocks * bt * d];
+            let mut vp = vec![0.0f32; nblocks * bt * d];
+            let tables: Vec<Vec<u32>> = (0..dims.b)
+                .map(|bi| (0..blocks_per_row).map(|g| (g * dims.b + bi) as u32).collect())
+                .collect();
+            for bi in 0..dims.b {
+                for tk in 0..dims.t {
+                    let phys = tables[bi][tk / bt] as usize * bt + tk % bt;
+                    let src = (bi * dims.t + tk) * d;
+                    kp[phys * d..phys * d + d].copy_from_slice(&kr[src..src + d]);
+                    vp[phys * d..phys * d + d].copy_from_slice(&v[src..src + d]);
+                }
+            }
+            for tq in 0..dims.t {
+                let rows: Vec<usize> = (0..dims.b).collect();
+                let pos = vec![tq; dims.b];
+                let q: Vec<f32> = (0..dims.b)
+                    .flat_map(|bi| qr[(bi * dims.t + tq) * d..][..d].to_vec())
+                    .collect();
+                let want =
+                    attn_decode(&q, &kr, &v, &rows, &pos, dims.heads, dims.hd, dims.t, scale);
+                let trefs: Vec<&[u32]> = tables.iter().map(|t| t.as_slice()).collect();
+                let got = attn_decode_paged(
+                    &q, &kp, &vp, &trefs, &pos, dims.heads, dims.hd, bt, scale,
+                );
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "paged decode drifted at bt={bt} tq={tq}"
                 );
             }
         }

@@ -71,7 +71,8 @@ mod micro;
 mod pack;
 pub mod reference;
 
-pub use attn::{attn_decode, causal_attn_bwd, causal_attn_bwd_with_threads, AttnDims};
+pub use attn::{attn_decode, attn_decode_paged, causal_attn_bwd, causal_attn_bwd_with_threads};
+pub use attn::AttnDims;
 pub use attn::{causal_attn_fwd, causal_attn_fwd_with_threads};
 pub use gemm::{gemm, gemm_nt, gemm_nt_with_dispatch, gemm_nt_with_threads, gemm_tn};
 pub use gemm::{gemm_tn_outcols, gemm_tn_outcols_with_dispatch, gemm_tn_outcols_with_threads};

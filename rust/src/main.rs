@@ -146,9 +146,9 @@ bench JSON against a committed baseline and exits non-zero past --fail
 
 analyze is the static-analysis gate: it lints src/ and benches/ for the
 project's bit-identity invariants (float-literal equality, mul_add,
-missing SAFETY comments, nondeterminism sources, bench/baseline drift)
-and exits non-zero on any finding. --root points at the package dir
-(auto-detected: ./rust or .).
+missing SAFETY comments, nondeterminism sources, bench/baseline drift,
+undocumented pub items in the serving API) and exits non-zero on any
+finding. --root points at the package dir (auto-detected: ./rust or .).
 
 Backends (--backend native|pjrt|auto): the native pure-rust interpreter
 runs fullft + s2ft with no artifacts, python or XLA; pjrt (cargo feature)

@@ -38,6 +38,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::serve::kvpool::{KvPoolConfig, PoolExhausted, PoolUsage};
+
 /// Handle to the parsed meta.json plus (for artifact-backed backends) the
 /// directory the HLO files live in. The native backend synthesizes its
 /// meta in-process and uses a placeholder directory.
@@ -198,6 +200,58 @@ pub trait DecodeSession {
     fn step(&mut self, tokens: &[Option<i32>]) -> Result<Vec<f32>>;
 }
 
+/// A continuous-batching decode session over a shared block-paged KV
+/// pool (see [`crate::serve::kvpool`]). Unlike [`DecodeSession`], whose
+/// rows are bound for the whole session, paged rows are *slots*:
+/// streams [`PagedDecodeSession::admit`] into a free row, draw cache
+/// blocks lazily via [`PagedDecodeSession::reserve`], and
+/// [`PagedDecodeSession::retire`] returns their blocks to the pool —
+/// so the serve engine can admit and finish requests mid-flight while
+/// every step stays one batched forward across all active rows.
+///
+/// Bit-identity contract: for the same per-row token schedule, logits
+/// match [`DecodeSession`] (and full recompute) bit-for-bit — the block
+/// table is address translation only.
+pub trait PagedDecodeSession {
+    /// Row-slot capacity (max concurrently-admitted streams).
+    fn rows(&self) -> usize;
+
+    /// Maximum positions per stream.
+    fn max_seq(&self) -> usize;
+
+    /// Cache length (= next position) for `row` (0 if not admitted).
+    fn pos(&self, row: usize) -> usize;
+
+    /// Whether `row` currently hosts an admitted stream.
+    fn is_active(&self, row: usize) -> bool;
+
+    /// Bind a fresh stream (position 0, empty block table) to a free
+    /// row. Fails if the row is already occupied. Allocates nothing:
+    /// blocks are drawn by [`PagedDecodeSession::reserve`].
+    fn admit(&mut self, row: usize) -> Result<()>;
+
+    /// Release `row`'s stream and return its blocks to the pool.
+    /// No-op when the row is not admitted.
+    fn retire(&mut self, row: usize);
+
+    /// Ensure each listed row's block table covers its next position,
+    /// allocating from the pool as needed. On
+    /// [`crate::serve::kvpool::PoolExhausted`] no arithmetic state has
+    /// been touched (tables may have grown — harmless), so the caller
+    /// can evict a stream and retry. Must be called before
+    /// [`PagedDecodeSession::step`] feeds those rows.
+    fn reserve(&mut self, rows: &[usize]) -> std::result::Result<(), PoolExhausted>;
+
+    /// Feed `tokens[row]` at each `Some` row's next position and return
+    /// logits as a `(rows, vocab)` row-major buffer — same semantics as
+    /// [`DecodeSession::step`]. Stepped rows must be admitted and
+    /// reserved.
+    fn step(&mut self, tokens: &[Option<i32>]) -> Result<Vec<f32>>;
+
+    /// Exact pool accounting (capacity / used / peak bytes).
+    fn pool_usage(&self) -> PoolUsage;
+}
+
 /// Factory for [`DecodeSession`]s. Split from [`Executor`] so a session
 /// can borrow the caller's weight pool (`'p`) without tying it to the
 /// backend's lifetime.
@@ -211,6 +265,21 @@ pub trait DecoderProvider: Send + Sync {
         b: usize,
         t_max: usize,
     ) -> Result<Box<dyn DecodeSession + 'p>>;
+
+    /// Open a paged continuous-batching session with `rows` stream
+    /// slots backed by a KV pool sized by `cfg`. Default: unsupported
+    /// (`Ok(None)`) — callers fall back to [`DecoderProvider::open_session`]
+    /// wave scheduling.
+    fn open_paged<'p>(
+        &self,
+        _model: &str,
+        _params: &'p HashMap<String, Tensor>,
+        _rows: usize,
+        _t_max: usize,
+        _cfg: KvPoolConfig,
+    ) -> Result<Option<Box<dyn PagedDecodeSession + 'p>>> {
+        Ok(None)
+    }
 }
 
 /// Open the best available backend for `artifact_dir`:

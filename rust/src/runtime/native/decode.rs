@@ -1,20 +1,35 @@
 //! KV-cached incremental decode for the native interpreter.
 //!
-//! [`NativeDecodeSession`] steps the LLaMA-style model one token per row
-//! at a time: each step embeds the new tokens, runs the per-layer
-//! projections at batch size = #active rows, appends rotated K / V to
-//! per-row caches and attends them through the single-query
-//! [`crate::kernels::attn_decode`] kernel — O(t) work per generated
-//! token versus the O(t²) full-sequence recompute of the `fwd` artifact.
+//! Two session flavors over the same arithmetic:
+//!
+//! * [`NativeDecodeSession`] — fixed rows with private contiguous
+//!   `(b, t_max, d)` K/V buffers (the original wave-scheduling path,
+//!   still what [`crate::train::GenModel::generate_stream`] drives);
+//! * [`NativePagedDecodeSession`] — continuous-batching slots whose K/V
+//!   lives in a shared block-paged [`KvPool`]
+//!   ([`crate::serve::kvpool`]): streams admit/retire mid-flight, draw
+//!   blocks lazily and attend through
+//!   [`crate::kernels::attn_decode_paged`].
+//!
+//! Each step embeds the new tokens, runs the per-layer projections at
+//! batch size = #active rows, appends rotated K / V to the cache and
+//! attends through the single-query decode kernel — O(t) work per
+//! generated token versus the O(t²) full-sequence recompute of the
+//! `fwd` artifact.
 //!
 //! Bit-identity contract: every arithmetic step (embedding copy, RMSNorm,
 //! GEMM reduction order, RoPE rotation, softmax max/exp/normalize order,
 //! weighted-value accumulation, residual adds, SwiGLU) reproduces the
 //! exact operation order of the full forward in `native/model.rs` for the
 //! same prefix, so greedy decode through a session matches full recompute
-//! bit-for-bit (asserted by the generation proptests). Only causal
-//! attention mixes positions, and it only looks backward — a prefix's
-//! activations never depend on what comes after it.
+//! bit-for-bit (asserted by the generation proptests). The paged session
+//! adds only block-table address translation on the K/V reads — never
+//! arithmetic — so paged and contiguous sessions are bit-identical for
+//! the same per-row token schedule regardless of which other streams
+//! come and go (asserted by `paged_session_matches_contiguous` below and
+//! the serve proptests). Only causal attention mixes positions, and it
+//! only looks backward — a prefix's activations never depend on what
+//! comes after it.
 
 // s2ft-analyze: allow(nondet) reason="weight maps are keyed lookup only — never iterated — so HashMap order cannot reach the decoded tokens"
 use std::collections::HashMap;
@@ -22,9 +37,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::kernels::{attn_decode, gemm, gemm_nt};
+use crate::kernels::{attn_decode, attn_decode_paged, gemm, gemm_nt};
 use crate::runtime::meta::{Meta, ModelMeta};
-use crate::runtime::{DecodeSession, DecoderProvider, Tensor};
+use crate::runtime::{DecodeSession, DecoderProvider, PagedDecodeSession, Tensor};
+use crate::serve::kvpool::{KvPool, KvPoolConfig, PoolExhausted, PoolUsage};
 
 use super::model::{rms_norm_fwd, rope_tables, sigmoid};
 
@@ -35,6 +51,16 @@ pub struct NativeDecoderProvider {
     pub(super) meta: Arc<Meta>,
 }
 
+impl NativeDecoderProvider {
+    fn model(&self, model: &str) -> Result<ModelMeta> {
+        self.meta
+            .models
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("model {model:?} not in meta"))
+    }
+}
+
 impl DecoderProvider for NativeDecoderProvider {
     fn open_session<'p>(
         &self,
@@ -43,12 +69,60 @@ impl DecoderProvider for NativeDecoderProvider {
         b: usize,
         t_max: usize,
     ) -> Result<Box<dyn DecodeSession + 'p>> {
-        let mm = self
-            .meta
-            .models
-            .get(model)
-            .ok_or_else(|| anyhow!("model {model:?} not in meta"))?;
-        Ok(Box::new(NativeDecodeSession::new(mm.clone(), params, b, t_max)?))
+        let mm = self.model(model)?;
+        Ok(Box::new(NativeDecodeSession::new(mm, params, b, t_max)?))
+    }
+
+    fn open_paged<'p>(
+        &self,
+        model: &str,
+        params: &'p HashMap<String, Tensor>,
+        rows: usize,
+        t_max: usize,
+        cfg: KvPoolConfig,
+    ) -> Result<Option<Box<dyn PagedDecodeSession + 'p>>> {
+        let mm = self.model(model)?;
+        Ok(Some(Box::new(NativePagedDecodeSession::new(mm, params, rows, t_max, cfg)?)))
+    }
+}
+
+/// Validate and borrow every base-layout weight slice a decode needs.
+fn borrow_weights<'p>(
+    mm: &ModelMeta,
+    params: &'p HashMap<String, Tensor>,
+) -> Result<HashMap<String, &'p [f32]>> {
+    let mut w = HashMap::new();
+    for s in &mm.base_params {
+        let t = params
+            .get(&s.name)
+            .ok_or_else(|| anyhow!("decode: missing weight {:?}", s.name))?;
+        if t.shape != s.shape {
+            bail!(
+                "decode: weight {:?} shape {:?} != expected {:?}",
+                s.name,
+                t.shape,
+                s.shape
+            );
+        }
+        w.insert(s.name.clone(), t.as_f32()?);
+    }
+    Ok(w)
+}
+
+/// In-place RoPE on one `(heads·hd)` row at absolute position `pos` —
+/// same pair rotation as the full forward's `apply_rope`.
+fn rope_row(cos: &[f32], sin: &[f32], x: &mut [f32], heads: usize, hd: usize, pos: usize) {
+    let half = hd / 2;
+    for hh in 0..heads {
+        let off = hh * hd;
+        for j in 0..half {
+            let c = cos[pos * half + j];
+            let s = sin[pos * half + j];
+            let x1 = x[off + 2 * j];
+            let x2 = x[off + 2 * j + 1];
+            x[off + 2 * j] = x1 * c - x2 * s;
+            x[off + 2 * j + 1] = x1 * s + x2 * c;
+        }
     }
 }
 
@@ -78,21 +152,7 @@ impl<'p> NativeDecodeSession<'p> {
         b: usize,
         t_max: usize,
     ) -> Result<Self> {
-        let mut w = HashMap::new();
-        for s in &mm.base_params {
-            let t = params
-                .get(&s.name)
-                .ok_or_else(|| anyhow!("decode: missing weight {:?}", s.name))?;
-            if t.shape != s.shape {
-                bail!(
-                    "decode: weight {:?} shape {:?} != expected {:?}",
-                    s.name,
-                    t.shape,
-                    s.shape
-                );
-            }
-            w.insert(s.name.clone(), t.as_f32()?);
-        }
+        let w = borrow_weights(&mm, params)?;
         let d = mm.dims.d_model;
         let hd = mm.head_dim();
         let n_layers = mm.dims.n_layers;
@@ -112,23 +172,6 @@ impl<'p> NativeDecodeSession<'p> {
 
     fn weight(&self, name: &str) -> &'p [f32] {
         self.w[name]
-    }
-
-    /// In-place RoPE on one `(heads·hd)` row at absolute position `pos`
-    /// — same pair rotation as the full forward's `apply_rope`.
-    fn rope_row(&self, x: &mut [f32], heads: usize, hd: usize, pos: usize) {
-        let half = hd / 2;
-        for hh in 0..heads {
-            let off = hh * hd;
-            for j in 0..half {
-                let c = self.cos[pos * half + j];
-                let s = self.sin[pos * half + j];
-                let x1 = x[off + 2 * j];
-                let x2 = x[off + 2 * j + 1];
-                x[off + 2 * j] = x1 * c - x2 * s;
-                x[off + 2 * j + 1] = x1 * s + x2 * c;
-            }
-        }
     }
 }
 
@@ -192,8 +235,8 @@ impl DecodeSession for NativeDecodeSession<'_> {
             let mut k = gemm(&x1, self.weight(&format!("L{i}.wk")), m, d, d);
             let v = gemm(&x1, self.weight(&format!("L{i}.wv")), m, d, d);
             for (j, (&r, &p)) in rows.iter().zip(&qpos).enumerate() {
-                self.rope_row(&mut q[j * d..(j + 1) * d], heads, hd, p);
-                self.rope_row(&mut k[j * d..(j + 1) * d], heads, hd, p);
+                rope_row(&self.cos, &self.sin, &mut q[j * d..(j + 1) * d], heads, hd, p);
+                rope_row(&self.cos, &self.sin, &mut k[j * d..(j + 1) * d], heads, hd, p);
                 let off = (r * self.t_max + p) * d;
                 self.k_cache[i][off..off + d].copy_from_slice(&k[j * d..(j + 1) * d]);
                 self.v_cache[i][off..off + d].copy_from_slice(&v[j * d..(j + 1) * d]);
@@ -234,5 +277,331 @@ impl DecodeSession for NativeDecodeSession<'_> {
             self.pos[r] += 1;
         }
         Ok(out)
+    }
+}
+
+/// Per-stream paged-cache state: the ordered physical block table plus
+/// the next logical position.
+struct StreamKv {
+    table: Vec<u32>,
+    pos: usize,
+}
+
+/// Continuous-batching decode session: row *slots* over a shared
+/// [`KvPool`]. Same arithmetic as [`NativeDecodeSession`]; K/V reads go
+/// through each stream's block table instead of a contiguous row.
+pub struct NativePagedDecodeSession<'p> {
+    mm: ModelMeta,
+    w: HashMap<String, &'p [f32]>,
+    rows: usize,
+    t_max: usize,
+    streams: Vec<Option<StreamKv>>,
+    pool: KvPool,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl<'p> NativePagedDecodeSession<'p> {
+    fn new(
+        mm: ModelMeta,
+        params: &'p HashMap<String, Tensor>,
+        rows: usize,
+        t_max: usize,
+        cfg: KvPoolConfig,
+    ) -> Result<Self> {
+        if cfg.block_tokens == 0 {
+            bail!("paged decode: block_tokens must be > 0");
+        }
+        let blocks = if cfg.blocks == 0 {
+            // auto-size: every slot can reach t_max, eviction-free
+            rows * t_max.div_ceil(cfg.block_tokens)
+        } else {
+            cfg.blocks
+        };
+        if blocks == 0 {
+            bail!("paged decode: pool needs at least one block");
+        }
+        let w = borrow_weights(&mm, params)?;
+        let d = mm.dims.d_model;
+        let hd = mm.head_dim();
+        let (cos, sin) = rope_tables(t_max, hd, mm.dims.rope_theta);
+        let pool = KvPool::new(mm.dims.n_layers, d, cfg.block_tokens, blocks);
+        Ok(Self {
+            w,
+            rows,
+            t_max,
+            streams: (0..rows).map(|_| None).collect(),
+            pool,
+            cos,
+            sin,
+            mm,
+        })
+    }
+
+    fn weight(&self, name: &str) -> &'p [f32] {
+        self.w[name]
+    }
+}
+
+impl PagedDecodeSession for NativePagedDecodeSession<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn max_seq(&self) -> usize {
+        self.t_max
+    }
+
+    fn pos(&self, row: usize) -> usize {
+        self.streams[row].as_ref().map_or(0, |s| s.pos)
+    }
+
+    fn is_active(&self, row: usize) -> bool {
+        self.streams[row].is_some()
+    }
+
+    fn admit(&mut self, row: usize) -> Result<()> {
+        if row >= self.rows {
+            bail!("paged decode: admit to row {row} >= capacity {}", self.rows);
+        }
+        if self.streams[row].is_some() {
+            bail!("paged decode: row {row} already admitted");
+        }
+        self.streams[row] = Some(StreamKv { table: Vec::new(), pos: 0 });
+        Ok(())
+    }
+
+    fn retire(&mut self, row: usize) {
+        if let Some(st) = self.streams[row].take() {
+            self.pool.release(&st.table);
+        }
+    }
+
+    fn reserve(&mut self, rows: &[usize]) -> std::result::Result<(), PoolExhausted> {
+        let bt = self.pool.block_tokens();
+        for &r in rows {
+            let Some(st) = self.streams.get_mut(r).and_then(|s| s.as_mut()) else {
+                continue; // not admitted — step() will report it
+            };
+            let needed = st.pos / bt + 1;
+            while st.table.len() < needed {
+                st.table.push(self.pool.alloc()?);
+            }
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[Option<i32>]) -> Result<Vec<f32>> {
+        let d = self.mm.dims.d_model;
+        let heads = self.mm.dims.n_heads;
+        let hd = d / heads;
+        let ff = self.mm.dims.d_ff;
+        let vocab = self.mm.dims.vocab;
+        let eps = self.mm.dims.norm_eps as f32;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let bt = self.pool.block_tokens();
+        if tokens.len() != self.rows {
+            bail!("paged decode: {} token slots != rows {}", tokens.len(), self.rows);
+        }
+
+        // active stepped rows and their (pre-append) positions
+        let mut rows = Vec::new();
+        let mut toks = Vec::new();
+        for (r, t) in tokens.iter().enumerate() {
+            if let Some(t) = *t {
+                let Some(st) = self.streams[r].as_ref() else {
+                    bail!("paged decode: row {r} stepped but not admitted");
+                };
+                if st.pos >= self.t_max {
+                    bail!("paged decode: row {r} exceeded t_max {}", self.t_max);
+                }
+                if st.table.len() * bt <= st.pos {
+                    bail!("paged decode: row {r} stepped without reserve()");
+                }
+                rows.push(r);
+                toks.push(t);
+            }
+        }
+        let mut out = vec![0.0f32; self.rows * vocab];
+        let m = rows.len();
+        if m == 0 {
+            return Ok(out);
+        }
+        let qpos: Vec<usize> =
+            rows.iter().map(|&r| self.streams[r].as_ref().unwrap().pos).collect();
+
+        let embed = self.weight("embed");
+        let mut h = vec![0.0f32; m * d];
+        for (j, &tok) in toks.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= vocab {
+                bail!("paged decode: token id {tok} out of vocab {vocab}");
+            }
+            h[j * d..(j + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+
+        for i in 0..self.mm.dims.n_layers {
+            let (x1, _) = rms_norm_fwd(&h, self.weight(&format!("L{i}.norm1")), m, d, eps);
+            let mut q = gemm(&x1, self.weight(&format!("L{i}.wq")), m, d, d);
+            let mut k = gemm(&x1, self.weight(&format!("L{i}.wk")), m, d, d);
+            let v = gemm(&x1, self.weight(&format!("L{i}.wv")), m, d, d);
+            for (j, (&r, &p)) in rows.iter().zip(&qpos).enumerate() {
+                rope_row(&self.cos, &self.sin, &mut q[j * d..(j + 1) * d], heads, hd, p);
+                rope_row(&self.cos, &self.sin, &mut k[j * d..(j + 1) * d], heads, hd, p);
+                let table = &self.streams[r].as_ref().unwrap().table;
+                let (block, slot) = (table[p / bt], p % bt);
+                self.pool
+                    .write(i, block, slot, &k[j * d..(j + 1) * d], &v[j * d..(j + 1) * d]);
+            }
+            let tables: Vec<&[u32]> = rows
+                .iter()
+                .map(|&r| self.streams[r].as_ref().unwrap().table.as_slice())
+                .collect();
+            let (kp, vp) = self.pool.layer_kv(i);
+            let attn = attn_decode_paged(&q, kp, vp, &tables, &qpos, heads, hd, bt, scale);
+            // h_mid = h + attn @ wo (residual add, same order as forward)
+            let wo_out = gemm(&attn, self.weight(&format!("L{i}.wo")), m, d, d);
+            for (hv, ov) in h.iter_mut().zip(&wo_out) {
+                *hv += ov;
+            }
+            let (x2, _) = rms_norm_fwd(&h, self.weight(&format!("L{i}.norm2")), m, d, eps);
+            let u = gemm(&x2, self.weight(&format!("L{i}.wu")), m, d, ff);
+            let g = gemm(&x2, self.weight(&format!("L{i}.wg")), m, d, ff);
+            let mut act = vec![0.0f32; m * ff];
+            for j in 0..m * ff {
+                act[j] = u[j] * g[j] * sigmoid(g[j]);
+            }
+            let wd_out = gemm(&act, self.weight(&format!("L{i}.wd")), m, ff, d);
+            for (hv, ov) in h.iter_mut().zip(&wd_out) {
+                *hv += ov;
+            }
+        }
+
+        let (xf, _) = rms_norm_fwd(&h, self.weight("norm_f"), m, d, eps);
+        let logits = gemm_nt(&xf, embed, m, d, vocab);
+        for (j, &r) in rows.iter().enumerate() {
+            out[r * vocab..(r + 1) * vocab].copy_from_slice(&logits[j * vocab..(j + 1) * vocab]);
+            self.streams[r].as_mut().unwrap().pos += 1;
+        }
+        Ok(out)
+    }
+
+    fn pool_usage(&self) -> PoolUsage {
+        self.pool.usage()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Executable, Executor, NativeBackend};
+
+    fn tiny_params() -> (NativeBackend, HashMap<String, Tensor>) {
+        let rt = NativeBackend::builtin();
+        let init = rt.load("init_tiny").unwrap();
+        let outs = init.run(&[Tensor::scalar_i32(5)]).unwrap();
+        let params: HashMap<String, Tensor> =
+            init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        (rt, params)
+    }
+
+    /// The paged session must reproduce the contiguous session
+    /// bit-for-bit under a staggered schedule with mid-flight admit /
+    /// retire / slot-reuse churn — the core continuous-batching
+    /// correctness contract.
+    /// One co-scheduled tick: feed `(paged_row, ref_stream, token)`
+    /// triples through the paged session and assert each row's logits
+    /// match that stream's solo contiguous reference bit-for-bit.
+    fn step_and_check(
+        bt: usize,
+        paged: &mut dyn PagedDecodeSession,
+        refs: &mut [Box<dyn DecodeSession + '_>],
+        feeds: &[(usize, usize, i32)],
+    ) {
+        let mut step = vec![None; 3];
+        for &(row, _, tok) in feeds {
+            step[row] = Some(tok);
+        }
+        let rows: Vec<usize> = feeds.iter().map(|f| f.0).collect();
+        paged.reserve(&rows).unwrap();
+        let got = paged.step(&step).unwrap();
+        for &(row, rs, tok) in feeds {
+            let want = refs[rs].step(&[Some(tok)]).unwrap();
+            let g = &got[row * 261..(row + 1) * 261];
+            assert!(
+                want.iter().zip(g).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "paged row {row} drifted from reference stream {rs} (bt={bt})"
+            );
+        }
+    }
+
+    #[test]
+    fn paged_session_matches_contiguous_under_churn() {
+        let (rt, params) = tiny_params();
+        let provider = rt.decoder().unwrap();
+        let t_max = 12usize;
+        let toks = |s: u64, i: usize| ((s * 37 + i as u64 * 11) % 256) as i32;
+        for bt in [1usize, 3, 16] {
+            let cfg = KvPoolConfig { block_tokens: bt, blocks: 0 };
+            let mut paged = provider.open_paged("tiny", &params, 3, t_max, cfg).unwrap().unwrap();
+            // reference: one contiguous session per stream (the schedule
+            // below steps streams at different times; per-row logits must
+            // not depend on co-scheduled rows)
+            let mut refs: Vec<_> = (0..3)
+                .map(|_| provider.open_session("tiny", &params, 1, t_max).unwrap())
+                .collect();
+
+            // stream 0 on row 0 (whole run), stream 1 on row 2 (retired
+            // early), stream 2 re-uses row 2 after stream 1 retires
+            paged.admit(0).unwrap();
+            paged.admit(2).unwrap();
+            for i in 0..4 {
+                let feeds = [(0, 0, toks(0, i)), (2, 1, toks(1, i))];
+                step_and_check(bt, paged.as_mut(), &mut refs, &feeds);
+            }
+            // stream 1 done: its blocks return to the pool; stream 2
+            // takes over row 2 with a fresh table while stream 0 keeps
+            // decoding — its bits must not move
+            paged.retire(2);
+            assert!(!paged.is_active(2));
+            paged.admit(2).unwrap();
+            for i in 0..5 {
+                let feeds = [(0, 0, toks(0, 4 + i)), (2, 2, toks(2, i))];
+                step_and_check(bt, paged.as_mut(), &mut refs, &feeds);
+            }
+            // solo ticks for stream 0 (rows step independently)
+            for i in 0..3 {
+                let feeds = [(0, 0, toks(0, 9 + i))];
+                step_and_check(bt, paged.as_mut(), &mut refs, &feeds);
+            }
+            assert_eq!(paged.pos(0), 12);
+            paged.retire(0);
+            paged.retire(2);
+            assert_eq!(paged.pool_usage().used_bytes, 0, "retire must reclaim all blocks");
+        }
+    }
+
+    /// reserve() surfaces the typed pool error and leaves the session
+    /// usable: retiring a stream frees enough blocks to continue.
+    #[test]
+    fn reserve_exhaustion_is_typed_and_recoverable() {
+        let (rt, params) = tiny_params();
+        let provider = rt.decoder().unwrap();
+        // 2 blocks of 2 tokens: two streams exhaust the pool at pos 2
+        let cfg = KvPoolConfig { block_tokens: 2, blocks: 2 };
+        let mut sess = provider.open_paged("tiny", &params, 2, 8, cfg).unwrap().unwrap();
+        sess.admit(0).unwrap();
+        sess.admit(1).unwrap();
+        for _ in 0..2 {
+            sess.reserve(&[0, 1]).unwrap();
+            sess.step(&[Some(1), Some(2)]).unwrap();
+        }
+        let err = sess.reserve(&[0, 1]).unwrap_err();
+        assert_eq!(err.free_blocks, 0);
+        assert_eq!(err.capacity_blocks, 2);
+        sess.retire(1);
+        sess.reserve(&[0]).unwrap();
+        sess.step(&[Some(3), None]).unwrap();
+        assert_eq!(sess.pos(0), 3);
     }
 }

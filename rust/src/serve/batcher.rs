@@ -24,27 +24,40 @@ pub enum SchedPolicy {
     Fifo,
 }
 
+/// One queued request: its routing adapter id, arrival time and payload.
 #[derive(Debug, Clone)]
 pub struct Queued<T> {
+    /// Adapter id the request is routed to.
     pub adapter: String,
+    /// Arrival time (drives the starvation guard and latency metrics).
     pub enqueued: Instant,
+    /// The caller's request payload.
     pub payload: T,
 }
 
+/// A cut batch: `items` all share `adapter`, FIFO order preserved.
 #[derive(Debug)]
 pub struct BatchPlan<T> {
+    /// The adapter every item in this plan is routed to.
     pub adapter: String,
+    /// The batch, in arrival order (at most `max_batch` items).
     pub items: Vec<Queued<T>>,
 }
 
+/// The shared work queue: one FIFO of [`Queued`] requests plus the
+/// grouping/starvation policy that cuts it into single-adapter batches.
 pub struct AdapterBatcher<T> {
     queue: VecDeque<Queued<T>>,
+    /// Most items a single [`BatchPlan`] may carry.
     pub max_batch: usize,
+    /// Age past which a queued request overrides group-size scheduling.
     pub max_wait: Duration,
+    /// Group-selection policy (see [`SchedPolicy`]).
     pub policy: SchedPolicy,
 }
 
 impl<T> AdapterBatcher<T> {
+    /// Empty batcher with the default [`SchedPolicy::AdapterAffinity`].
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         Self {
             queue: VecDeque::new(),
@@ -54,11 +67,13 @@ impl<T> AdapterBatcher<T> {
         }
     }
 
+    /// Builder-style policy override.
     pub fn with_policy(mut self, policy: SchedPolicy) -> Self {
         self.policy = policy;
         self
     }
 
+    /// Enqueue one request for `adapter`, stamped with its arrival time.
     pub fn push(&mut self, adapter: impl Into<String>, payload: T) {
         self.queue.push_back(Queued {
             adapter: adapter.into(),
@@ -67,10 +82,12 @@ impl<T> AdapterBatcher<T> {
         });
     }
 
+    /// Number of queued requests.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -137,6 +154,43 @@ impl<T> AdapterBatcher<T> {
             }
         }
         self.next_batch()
+    }
+
+    /// Continuous-batching top-up: drain up to `max` queued requests for
+    /// `adapter` (FIFO within the group, everything else keeps its slot)
+    /// *without* picking a new group.
+    ///
+    /// Returns empty — telling the caller to end its run and go back
+    /// through normal scheduling — when the scheduler would not pick
+    /// `adapter` next: under [`SchedPolicy::AdapterAffinity`] when some
+    /// other adapter's request is overdue, under [`SchedPolicy::Fifo`]
+    /// whenever the oldest queued request belongs to another adapter.
+    /// This mirrors the [`Self::next_batch_preferring`] starvation guard
+    /// so a worker topping up a long-running batch cannot starve other
+    /// adapters.
+    pub fn take_matching(&mut self, adapter: &str, max: usize) -> Vec<Queued<T>> {
+        if max == 0 || self.queue.is_empty() {
+            return Vec::new();
+        }
+        let front_other = self.queue.front().is_some_and(|q| q.adapter != adapter);
+        let yield_to_other = match self.policy {
+            SchedPolicy::AdapterAffinity => front_other && self.any_overdue(),
+            SchedPolicy::Fifo => front_other,
+        };
+        if yield_to_other {
+            return Vec::new();
+        }
+        let mut items = Vec::with_capacity(max.min(self.queue.len()));
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for q in self.queue.drain(..) {
+            if q.adapter == adapter && items.len() < max {
+                items.push(q);
+            } else {
+                rest.push_back(q);
+            }
+        }
+        self.queue = rest;
+        items
     }
 
     fn take_group(&mut self, adapter: String) -> BatchPlan<T> {
@@ -308,6 +362,48 @@ mod tests {
         assert_eq!(p.adapter, "x", "zero window: age beats preference");
         assert_eq!(b.next_batch().unwrap().adapter, "y");
         assert!(b.next_batch().is_none());
+    }
+
+    /// Top-up path: takes only matching items, caps at `max`, preserves
+    /// everyone else's FIFO slot.
+    #[test]
+    fn take_matching_drains_own_adapter_up_to_max() {
+        let mut b = AdapterBatcher::new(8, Duration::from_secs(60));
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("a", 3);
+        b.push("a", 4);
+        let got = b.take_matching("a", 2);
+        assert_eq!(got.iter().map(|q| q.payload).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.len(), 2);
+        // leftover keeps arrival order: b=2 first, then a=4
+        let rest = b.take_matching("a", 8);
+        assert_eq!(rest.iter().map(|q| q.payload).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(b.next_batch().unwrap().adapter, "b");
+        assert!(b.take_matching("a", 4).is_empty(), "empty queue yields nothing");
+        assert!(b.take_matching("a", 0).is_empty(), "max 0 yields nothing");
+    }
+
+    /// Top-up must respect the starvation guard: an overdue foreign
+    /// request at the front ends the run (affinity), and under Fifo any
+    /// foreign front does.
+    #[test]
+    fn take_matching_yields_to_starving_adapters() {
+        let mut b = AdapterBatcher::new(8, Duration::from_millis(1));
+        b.push("other", 1);
+        b.push("mine", 2);
+        std::thread::sleep(Duration::from_millis(3)); // "other" is overdue
+        assert!(b.take_matching("mine", 8).is_empty());
+        assert_eq!(b.len(), 2, "yielding must not consume the queue");
+
+        let mut f =
+            AdapterBatcher::new(8, Duration::from_secs(60)).with_policy(SchedPolicy::Fifo);
+        f.push("other", 1);
+        f.push("mine", 2);
+        assert!(f.take_matching("mine", 8).is_empty(), "Fifo yields to any foreign front");
+        f.push("late", 3);
+        let own = f.take_matching("other", 8);
+        assert_eq!(own.len(), 1, "own front is takeable under Fifo");
     }
 
     /// Windowing: once the wait budget expires, age dominates group size —

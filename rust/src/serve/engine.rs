@@ -1,5 +1,5 @@
-//! The public serving API: an N-worker engine pool with streamed replies
-//! and a runtime adapter lifecycle.
+//! The public serving API: an N-worker engine pool with streamed replies,
+//! continuous per-token batching and a runtime adapter lifecycle.
 //!
 //! ```text
 //!            Engine::submit(GenRequest) ──► ReplyStream (GenEvent::Token…Done)
@@ -9,6 +9,11 @@
 //!        ┌────────────┼────────────┐
 //!     worker 0     worker 1  …  worker N-1      (each: own GenModel weights
 //!        │            │            │             + AdapterSlot fused state)
+//!        │  ┌─────────┴──────────┐ │
+//!        │  │ continuous run:    │ │            per worker, per run:
+//!        │  │  admit ▸ step ▸    │ │             row slots over one paged
+//!        │  │  readout ▸ retire  │ │             KvPool; streams join/leave
+//!        │  └─────────┬──────────┘ │             between decode steps
 //!        └────────────┴────────────┘
 //!              Arc<AdapterStore>                 (thread-safe registry:
 //!                                                 register/unregister/fuse
@@ -16,16 +21,34 @@
 //! ```
 //!
 //! Each worker owns a full copy of the (merged, base-layout) weights and
-//! a [`AdapterSlot`]; the [`AdapterStore`] is shared. A worker asks the
-//! batcher for a batch *preferring its currently-fused adapter*, so under
+//! an [`AdapterSlot`]; the [`AdapterStore`] is shared. A worker asks the
+//! batcher for work *preferring its currently-fused adapter*, so under
 //! steady multi-adapter load the pool converges to one adapter per worker
 //! and switches only when the mix shifts — the paper §6.2 decoupling in
 //! all three modes at once: **fuse** ([`Engine::fuse`] merges adapters
-//! into a new servable one), **fast switch** (scatter_add per batch via
+//! into a new servable one), **fast switch** (scatter_add per run via
 //! the slot) and **parallel serve** (different adapters live on different
 //! workers concurrently).
+//!
+//! # Continuous batching
+//!
+//! On backends with a paged decode session (native), a worker run is a
+//! per-token loop, not a wave: every tick admits queued requests into
+//! free row slots, feeds one token per live stream through a single
+//! batched decode step, reads out finished streams and returns their
+//! row + KV blocks immediately. A short reply retires mid-run while its
+//! long batch-mates keep decoding, and newly arrived requests for the
+//! same adapter join without waiting for the batch to drain. K/V cache
+//! memory comes from a per-run [`crate::serve::kvpool::KvPool`]; when
+//! the pool runs dry the youngest stream is evicted with a terminal
+//! [`GenEvent::Error`] ([`crate::serve::ServeMetrics::evictions`]
+//! counts these). Backends without a paged session (PJRT artifact
+//! replay) keep the wave path: one `generate_stream` call per batch.
+//! Per-row logits are independent of co-scheduled rows (the kernels
+//! partition strictly by row), so continuous co-scheduling cannot
+//! change any stream's tokens — asserted bitwise by the serve tests.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -35,24 +58,51 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::adapter::{AdapterSlot, AdapterStore, AnyAdapter, S2ftAdapter};
+use crate::data::batch::encode_prompt;
+use crate::data::tokenizer::{EOS, PAD};
 use crate::data::Tokenizer;
-use crate::runtime::Tensor;
-use crate::train::{DecodeRequest, GenModel};
+use crate::runtime::{PagedDecodeSession, Tensor};
+use crate::train::{DecodeRequest, GenModel, TokenSampler};
 
 use super::batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
-use super::metrics::ServeMetrics;
+use super::kvpool::{KvPoolConfig, PoolUsage};
+use super::metrics::{KvPoolGauge, ServeMetrics};
 
 /// Reserved adapter id meaning "pristine base weights, nothing fused".
 pub const BASE_ADAPTER: &str = "base";
 
 /// Engine construction parameters (builder-style).
+///
+/// ```
+/// use std::time::Duration;
+/// use repro::serve::{EngineConfig, SchedPolicy};
+///
+/// let cfg = EngineConfig::new()
+///     .workers(2)
+///     .max_batch(16)              // row slots per worker
+///     .window(Duration::from_millis(2))
+///     .policy(SchedPolicy::AdapterAffinity)
+///     .kv_block_tokens(16)        // paged-KV block granularity
+///     .kv_blocks(0);              // 0 = auto-size (eviction-free)
+/// assert_eq!(cfg.workers, 2);
+/// assert_eq!(cfg.kv_block_tokens, 16);
+/// ```
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Worker threads, each with its own weight copy.
     pub workers: usize,
+    /// Row slots per worker: the most streams one worker co-decodes.
     pub max_batch: usize,
     /// How long a freshly-arrived request may wait for batch-mates.
     pub window: Duration,
+    /// How the batcher picks the next adapter group.
     pub policy: SchedPolicy,
+    /// Token positions per paged-KV block (continuous batching only).
+    pub kv_block_tokens: usize,
+    /// Blocks in each worker's KV pool; `0` auto-sizes so `max_batch`
+    /// streams can all reach the model context length (no eviction).
+    /// Smaller values cap cache memory and enable backpressure.
+    pub kv_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -62,32 +112,52 @@ impl Default for EngineConfig {
             max_batch: 8,
             window: Duration::from_millis(2),
             policy: SchedPolicy::AdapterAffinity,
+            kv_block_tokens: KvPoolConfig::default().block_tokens,
+            kv_blocks: 0,
         }
     }
 }
 
 impl EngineConfig {
+    /// Defaults: 1 worker, 8 row slots, 2 ms window, adapter affinity,
+    /// auto-sized KV pool.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Set the worker-thread count (minimum 1).
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
     }
 
+    /// Set the per-worker row-slot count (minimum 1).
     pub fn max_batch(mut self, n: usize) -> Self {
         self.max_batch = n.max(1);
         self
     }
 
+    /// Set the batching window (how long a request may wait for mates).
     pub fn window(mut self, w: Duration) -> Self {
         self.window = w;
         self
     }
 
+    /// Set the scheduling policy.
     pub fn policy(mut self, p: SchedPolicy) -> Self {
         self.policy = p;
+        self
+    }
+
+    /// Set the paged-KV block size in token positions (minimum 1).
+    pub fn kv_block_tokens(mut self, n: usize) -> Self {
+        self.kv_block_tokens = n.max(1);
+        self
+    }
+
+    /// Set the per-worker KV-pool block count (`0` = auto-size).
+    pub fn kv_blocks(mut self, n: usize) -> Self {
+        self.kv_blocks = n;
         self
     }
 }
@@ -95,10 +165,15 @@ impl EngineConfig {
 /// Per-request sampling parameters (see [`DecodeRequest`]).
 #[derive(Debug, Clone)]
 pub struct SamplingParams {
+    /// Maximum tokens to generate.
     pub max_new: usize,
+    /// `<= 0.0` = greedy argmax; otherwise softmax temperature.
     pub temperature: f32,
+    /// Restrict sampling to the k highest logits (`0` = whole vocab).
     pub top_k: usize,
+    /// Extra stop token (EOS and PAD always stop).
     pub stop: Option<i32>,
+    /// Seed for the per-request sampling stream.
     pub seed: u64,
 }
 
@@ -110,14 +185,31 @@ impl Default for SamplingParams {
 
 /// One generation request routed to `adapter` (use [`BASE_ADAPTER`] for
 /// the un-adapted base model).
+///
+/// ```
+/// use repro::serve::{GenRequest, BASE_ADAPTER};
+///
+/// let req = GenRequest::new(BASE_ADAPTER, "2+3=")
+///     .max_new(4)
+///     .temperature(0.8)
+///     .top_k(16)
+///     .stop(259)   // SEP
+///     .seed(7);
+/// assert_eq!(req.params.max_new, 4);
+/// assert_eq!(req.params.stop, Some(259));
+/// ```
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Adapter id to serve this request with.
     pub adapter: String,
+    /// The prompt text.
     pub prompt: String,
+    /// Sampling parameters (builder methods below).
     pub params: SamplingParams,
 }
 
 impl GenRequest {
+    /// A request with default (greedy, 8-token) sampling parameters.
     pub fn new(adapter: impl Into<String>, prompt: impl Into<String>) -> Self {
         Self {
             adapter: adapter.into(),
@@ -126,26 +218,31 @@ impl GenRequest {
         }
     }
 
+    /// Cap the generated tokens.
     pub fn max_new(mut self, n: usize) -> Self {
         self.params.max_new = n;
         self
     }
 
+    /// Set the sampling temperature (`<= 0.0` = greedy).
     pub fn temperature(mut self, t: f32) -> Self {
         self.params.temperature = t;
         self
     }
 
+    /// Restrict sampling to the `k` highest logits (`0` = whole vocab).
     pub fn top_k(mut self, k: usize) -> Self {
         self.params.top_k = k;
         self
     }
 
+    /// Add an extra stop token (EOS and PAD always stop).
     pub fn stop(mut self, tok: i32) -> Self {
         self.params.stop = Some(tok);
         self
     }
 
+    /// Seed the per-request sampling stream.
     pub fn seed(mut self, s: u64) -> Self {
         self.params.seed = s;
         self
@@ -157,23 +254,34 @@ impl GenRequest {
 #[derive(Debug, Clone)]
 pub enum GenEvent {
     /// One generated token, as it was produced.
-    Token { token: i32, text: String },
+    Token {
+        /// The token id.
+        token: i32,
+        /// Its decoded text.
+        text: String,
+    },
     /// Generation finished; the full reply.
     Done(GenReply),
-    /// The request failed (unknown adapter, engine stopped, ...).
+    /// The request failed (unknown adapter, engine stopped, KV-pool
+    /// eviction, ...). Terminal: nothing follows it.
     Error(String),
 }
 
+/// The completed reply delivered inside [`GenEvent::Done`].
 #[derive(Debug, Clone)]
 pub struct GenReply {
+    /// Decoded reply text (up to but excluding EOS).
     pub text: String,
     /// Tokens generated for this request.
     pub tokens: usize,
+    /// Submit-to-done wall time.
     pub latency: Duration,
-    /// Size of the batch this request was served in.
+    /// Live streams co-decoding when this request finished (wave size on
+    /// the legacy path).
     pub batch_size: usize,
     /// Pool worker that served it.
     pub worker: usize,
+    /// Adapter it was served with.
     pub adapter: String,
 }
 
@@ -184,13 +292,45 @@ pub struct ReplyStream {
 }
 
 impl ReplyStream {
-    /// Next event; `None` once the stream is finished (after
-    /// `Done`/`Error`, or if the engine dropped the request).
+    /// Next event, blocking until one arrives.
+    ///
+    /// Returns `None` once the stream is finished: every stream delivers
+    /// *exactly one* terminal event ([`GenEvent::Done`] or
+    /// [`GenEvent::Error`] — including on shutdown, worker failure and
+    /// KV-pool eviction), after which `recv` returns `None` forever. The
+    /// only way to observe `None` without a prior terminal event is a
+    /// worker death by panic, which [`Engine::shutdown`] reports.
+    ///
+    /// ```no_run
+    /// use repro::serve::{GenEvent, ReplyStream};
+    ///
+    /// fn drain(stream: &ReplyStream) {
+    ///     while let Some(ev) = stream.recv() {
+    ///         match ev {
+    ///             GenEvent::Token { text, .. } => print!("{text}"),
+    ///             GenEvent::Done(r) => println!(" [{} tokens]", r.tokens),
+    ///             GenEvent::Error(e) => eprintln!("failed: {e}"),
+    ///         }
+    ///     }
+    ///     // recv() is now None forever: the terminal event was consumed.
+    /// }
+    /// ```
     pub fn recv(&self) -> Option<GenEvent> {
         self.rx.recv().ok()
     }
 
-    /// Drain the stream and return the final reply.
+    /// Drain the stream and return the final reply (`Err` if the stream
+    /// ended with [`GenEvent::Error`] or was dropped without a terminal
+    /// event).
+    ///
+    /// ```no_run
+    /// use repro::serve::{Engine, GenRequest};
+    ///
+    /// fn call(engine: &Engine) -> anyhow::Result<String> {
+    ///     let reply = engine.submit(GenRequest::new("base", "2+3=")).wait()?;
+    ///     Ok(reply.text)
+    /// }
+    /// ```
     pub fn wait(self) -> Result<GenReply> {
         for ev in self {
             match ev {
@@ -282,6 +422,26 @@ impl Engine {
 
     /// Submit a request; token events and the final reply arrive on the
     /// returned stream.
+    ///
+    /// ```
+    /// use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
+    /// use repro::serve::{Engine, EngineConfig, GenRequest, BASE_ADAPTER};
+    /// use repro::train::GenModel;
+    ///
+    /// let engine = Engine::spawn(EngineConfig::new().workers(1), |_| {
+    ///     let rt = NativeBackend::builtin();
+    ///     let init = rt.load("init_tiny")?;
+    ///     let outs = init.run(&[Tensor::scalar_i32(1)])?;
+    ///     let params: std::collections::HashMap<_, _> =
+    ///         init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+    ///     let snapshot = params.clone();
+    ///     Ok((GenModel::new(&rt, "tiny", params)?, snapshot))
+    /// });
+    /// let reply = engine.submit(GenRequest::new(BASE_ADAPTER, "2+3=").max_new(4)).wait()?;
+    /// assert!(reply.tokens <= 4);
+    /// engine.shutdown()?;
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn submit(&self, req: GenRequest) -> ReplyStream {
         let (tx, rx) = channel();
         {
@@ -355,10 +515,13 @@ impl Engine {
         self.shared.store.ids()
     }
 
+    /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.handles.len()
     }
 
+    /// Snapshot of the engine-wide serving metrics (counters, latency
+    /// percentiles, KV-pool gauges).
     pub fn metrics(&self) -> ServeMetrics {
         let mut m = self.shared.metrics.lock().unwrap().clone();
         m.switches = self.shared.store.switches();
@@ -366,6 +529,24 @@ impl Engine {
     }
 
     /// Stop accepting work, drain the queue, join every worker.
+    ///
+    /// Requests already queued or in flight are still served; anything
+    /// the workers cannot drain is failed with a terminal
+    /// [`GenEvent::Error`], so no [`ReplyStream`] is left hanging.
+    /// Returns the first worker error, if any. Dropping the engine does
+    /// the same, discarding the error.
+    ///
+    /// ```no_run
+    /// use repro::serve::{Engine, GenRequest};
+    ///
+    /// fn serve_one(engine: Engine) -> anyhow::Result<()> {
+    ///     let stream = engine.submit(GenRequest::new("base", "2+3="));
+    ///     engine.shutdown()?;      // waits for the in-flight request
+    ///     let reply = stream.wait()?;
+    ///     println!("{}", reply.text);
+    ///     Ok(())
+    /// }
+    /// ```
     pub fn shutdown(mut self) -> Result<()> {
         self.shutdown_inner()
     }
@@ -406,7 +587,7 @@ fn worker_main(id: usize, shared: Arc<Shared>, builder: &WorkerBuilder) -> Resul
             let Some(plan) = next_plan(&shared, prefer.as_deref()) else {
                 break;
             };
-            serve_batch(id, &shared, &mut gm, &mut slot, &snapshot, plan);
+            serve_plan(id, &shared, &mut gm, &mut slot, &snapshot, plan);
         }
         Ok(())
     })();
@@ -446,7 +627,16 @@ fn next_plan(shared: &Shared, prefer: Option<&str>) -> Option<BatchPlan<Job>> {
     q.batcher.next_batch_preferring(prefer)
 }
 
-fn serve_batch(
+fn fail_all(items: Vec<Queued<Job>>, msg: &str) {
+    for item in items {
+        let _ = item.payload.events.send(GenEvent::Error(msg.to_string()));
+    }
+}
+
+/// Serve one scheduled plan: fuse the adapter, then run either the
+/// continuous paged path (native) or the legacy wave path (no paged
+/// session available).
+fn serve_plan(
     id: usize,
     shared: &Shared,
     gm: &mut GenModel,
@@ -454,12 +644,7 @@ fn serve_batch(
     snapshot: &HashMap<String, Tensor>,
     plan: BatchPlan<Job>,
 ) {
-    let fail_all = |items: Vec<Queued<Job>>, msg: String| {
-        for item in items {
-            let _ = item.payload.events.send(GenEvent::Error(msg.clone()));
-        }
-    };
-    // adapter-affinity switch (at most one per batch; scatter_add for S²FT)
+    // adapter-affinity switch (at most one per run; scatter_add for S²FT)
     let switched = if plan.adapter == BASE_ADAPTER {
         slot.deactivate(&mut gm.params, snapshot)
     } else {
@@ -468,9 +653,30 @@ fn serve_batch(
     if let Err(e) = switched {
         // transactional switch: previous adapter still fused, the engine
         // keeps serving — only this batch fails
-        return fail_all(plan.items, format!("adapter switch failed: {e:#}"));
+        return fail_all(plan.items, &format!("adapter switch failed: {e:#}"));
     }
 
+    if gm.has_decoder() {
+        let kvcfg = KvPoolConfig {
+            block_tokens: shared.cfg.kv_block_tokens.max(1),
+            blocks: shared.cfg.kv_blocks,
+        };
+        match gm.open_paged_session(shared.cfg.max_batch, kvcfg) {
+            Ok(Some(mut sess)) => {
+                return continuous_run(id, shared, gm, sess.as_mut(), &plan.adapter, plan.items);
+            }
+            Ok(None) => {} // decoder without a paged path: wave fallback
+            Err(e) => {
+                return fail_all(plan.items, &format!("paged decode unavailable: {e:#}"));
+            }
+        }
+    }
+    serve_wave(id, shared, gm, plan);
+}
+
+/// Legacy wave path: one `generate_stream` call over the whole batch
+/// (the only path AOT/PJRT artifact backends can serve).
+fn serve_wave(id: usize, shared: &Shared, gm: &GenModel, plan: BatchPlan<Job>) {
     let items = plan.items;
     let bs = items.len();
     let reqs: Vec<DecodeRequest> = items
@@ -495,7 +701,7 @@ fn serve_batch(
     });
     let texts = match texts {
         Ok(t) => t,
-        Err(e) => return fail_all(items, format!("generation failed: {e:#}")),
+        Err(e) => return fail_all(items, &format!("generation failed: {e:#}")),
     };
     {
         let mut m = shared.metrics.lock().unwrap();
@@ -517,4 +723,285 @@ fn serve_batch(
             adapter: item.adapter,
         }));
     }
+}
+
+/// One live stream inside a continuous run.
+struct Stream {
+    job: Job,
+    adapter: String,
+    /// Row slot in the paged session.
+    row: usize,
+    /// Encoded prompt (BOS + text + SEP, padded to t_max).
+    toks: Vec<i32>,
+    /// Prompt length actually fed (`gp.min(t_max - 1)`).
+    plen: usize,
+    /// Tokens fed so far = the session position after the last step.
+    fed: usize,
+    generated: Vec<i32>,
+    sampler: TokenSampler,
+    /// Last sampled token, to feed on the next tick.
+    pending_tok: Option<i32>,
+    /// Admission order; eviction picks the highest (youngest).
+    seq: u64,
+}
+
+fn kv_gauge(u: &PoolUsage) -> KvPoolGauge {
+    KvPoolGauge {
+        capacity_bytes: u.capacity_bytes,
+        used_bytes: u.used_bytes,
+        peak_bytes: u.peak_bytes,
+    }
+}
+
+/// The continuous-batching run loop (see the module docs): admit queued
+/// requests into free rows, feed one token per live stream per batched
+/// decode step, read out, retire finished streams and top up from the
+/// queue until neither live streams nor same-adapter work remain.
+///
+/// Decode semantics are identical to `GenModel`'s wave driver per row —
+/// same prompt encoding, same readout rules, same `TokenSampler` stream
+/// — so for the same request the continuous path produces the same
+/// tokens as `generate_stream`/`generate_full_recompute` (asserted by
+/// the serve integration tests).
+fn continuous_run(
+    id: usize,
+    shared: &Shared,
+    gm: &GenModel,
+    sess: &mut dyn PagedDecodeSession,
+    adapter: &str,
+    items: Vec<Queued<Job>>,
+) {
+    let tk = Tokenizer;
+    let vocab = gm.vocab();
+    let t_max = sess.max_seq();
+    let rows_cap = sess.rows();
+    let capacity_blocks = sess.pool_usage().capacity_blocks;
+    let block_tokens = sess.pool_usage().block_tokens;
+
+    let mut pending: VecDeque<Queued<Job>> = items.into();
+    let mut streams: Vec<Stream> = Vec::new();
+    // LIFO free list so row reuse is deterministic
+    let mut free_rows: Vec<usize> = (0..rows_cap).rev().collect();
+    let mut next_seq: u64 = 0;
+
+    // exactly-one-terminal-event guarantee: every exit from this loop
+    // either finishes, evicts or fails each stream it ever admitted
+    loop {
+        // --- admit pending requests into free rows -------------------
+        let mut processed_any = false;
+        while !pending.is_empty()
+            && !free_rows.is_empty()
+            && sess.pool_usage().free_blocks > 0
+        {
+            let item = pending.pop_front().expect("checked non-empty");
+            let job = item.payload;
+            let (toks, gp) = encode_prompt(&tk, &job.prompt, t_max);
+            let plen = gp.min(t_max - 1);
+            if job.params.max_new == 0 {
+                // nothing to generate: reply immediately, no row consumed
+                let latency = job.t0.elapsed();
+                {
+                    let mut m = shared.metrics.lock().unwrap();
+                    m.requests += 1;
+                    m.record_latency_ms(latency.as_secs_f64() * 1e3);
+                }
+                let _ = job.events.send(GenEvent::Done(GenReply {
+                    text: tk.decode_until_eos(&[]),
+                    tokens: 0,
+                    latency,
+                    batch_size: 1,
+                    worker: id,
+                    adapter: adapter.to_string(),
+                }));
+                processed_any = true;
+                continue;
+            }
+            // hard refusal: a request that cannot fit even in an empty
+            // pool would evict forever — fail it up front, typed message
+            let worst = (plen + job.params.max_new).min(t_max);
+            let needed = worst.div_ceil(block_tokens);
+            if needed > capacity_blocks {
+                let _ = job.events.send(GenEvent::Error(format!(
+                    "kv pool cannot fit request: needs {needed} block(s) of {block_tokens} \
+                     token(s), pool capacity {capacity_blocks} block(s)"
+                )));
+                continue;
+            }
+            let row = free_rows.pop().expect("checked non-empty");
+            if let Err(e) = sess.admit(row) {
+                free_rows.push(row);
+                let _ = job.events.send(GenEvent::Error(format!("admission failed: {e:#}")));
+                continue;
+            }
+            let sampler = TokenSampler::new(&DecodeRequest {
+                prompt: String::new(),
+                max_new: job.params.max_new,
+                temperature: job.params.temperature,
+                top_k: job.params.top_k,
+                stop: job.params.stop,
+                seed: job.params.seed,
+            });
+            streams.push(Stream {
+                job,
+                adapter: item.adapter,
+                row,
+                toks,
+                plen,
+                fed: 0,
+                generated: Vec::new(),
+                sampler,
+                pending_tok: None,
+                seq: next_seq,
+            });
+            next_seq += 1;
+            processed_any = true;
+        }
+        if processed_any {
+            // one admission wave = one batch for the metrics
+            shared.metrics.lock().unwrap().batches += 1;
+        }
+
+        // --- refill / exit when idle ---------------------------------
+        if streams.is_empty() {
+            if !pending.is_empty() {
+                // admission is blocked with no live streams to free
+                // resources — can't make progress (defensive; admission
+                // can only block on rows/blocks held by live streams)
+                fail_all(pending.into(), "admission stalled with no live streams");
+                break;
+            }
+            let more = take_from_queue(shared, adapter, rows_cap);
+            if more.is_empty() {
+                break;
+            }
+            pending.extend(more);
+            continue;
+        }
+
+        // --- top up free rows from the queue without waiting ---------
+        if !free_rows.is_empty() && pending.is_empty() {
+            let more = take_from_queue(shared, adapter, free_rows.len());
+            if !more.is_empty() {
+                pending.extend(more);
+                continue; // admit before stepping
+            }
+        }
+
+        // --- reserve KV blocks, evicting the youngest under pressure -
+        loop {
+            let live_rows: Vec<usize> = streams.iter().map(|s| s.row).collect();
+            match sess.reserve(&live_rows) {
+                Ok(()) => break,
+                Err(e) => {
+                    let (yi, _) = streams
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, s)| s.seq)
+                        .expect("reserve failed with no live streams");
+                    let s = streams.swap_remove(yi);
+                    sess.retire(s.row);
+                    free_rows.push(s.row);
+                    {
+                        let mut m = shared.metrics.lock().unwrap();
+                        m.evictions += 1;
+                        m.record_kv(id, kv_gauge(&sess.pool_usage()));
+                    }
+                    let _ = s.job.events.send(GenEvent::Error(format!(
+                        "evicted under kv-pool backpressure: {e}"
+                    )));
+                    if streams.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        if streams.is_empty() {
+            continue;
+        }
+
+        // --- one batched decode step over every live stream ----------
+        let live = streams.len();
+        let mut feed: Vec<Option<i32>> = vec![None; rows_cap];
+        for s in &mut streams {
+            let tok = if s.fed < s.plen {
+                s.toks[s.fed]
+            } else {
+                s.pending_tok.take().expect("stream fed past prompt without a pending token")
+            };
+            feed[s.row] = Some(tok);
+        }
+        let lg = match sess.step(&feed) {
+            Ok(lg) => lg,
+            Err(e) => {
+                let msg = format!("generation failed: {e:#}");
+                for s in &streams {
+                    sess.retire(s.row);
+                }
+                for s in streams {
+                    let _ = s.job.events.send(GenEvent::Error(msg.clone()));
+                }
+                fail_all(pending.into(), &msg);
+                return;
+            }
+        };
+
+        // --- readout: same per-row rules as the wave driver ----------
+        let mut finished: Vec<usize> = Vec::new();
+        for (si, s) in streams.iter_mut().enumerate() {
+            s.fed += 1;
+            if s.fed < s.plen {
+                continue; // still prefilling
+            }
+            if s.generated.len() >= s.job.params.max_new || s.fed >= t_max {
+                finished.push(si);
+                continue;
+            }
+            let tok = s.sampler.sample(&lg[s.row * vocab..(s.row + 1) * vocab]);
+            if tok == EOS || tok == PAD || s.job.params.stop == Some(tok) {
+                finished.push(si);
+                continue;
+            }
+            s.generated.push(tok);
+            let _ = s
+                .job
+                .events
+                .send(GenEvent::Token { token: tok, text: tk.decode(&[tok]) });
+            s.pending_tok = Some(tok);
+        }
+        // highest index first keeps the remaining indices valid
+        for &si in finished.iter().rev() {
+            let s = streams.swap_remove(si);
+            sess.retire(s.row);
+            free_rows.push(s.row);
+            let latency = s.job.t0.elapsed();
+            let text = tk.decode_until_eos(&s.generated);
+            {
+                // metrics are updated before Done is delivered, so a
+                // caller that observed Done always sees itself counted
+                let mut m = shared.metrics.lock().unwrap();
+                m.requests += 1;
+                m.tokens += s.generated.len();
+                m.record_latency_ms(latency.as_secs_f64() * 1e3);
+                m.record_kv(id, kv_gauge(&sess.pool_usage()));
+            }
+            let _ = s.job.events.send(GenEvent::Done(GenReply {
+                text,
+                tokens: s.generated.len(),
+                latency,
+                batch_size: live,
+                worker: id,
+                adapter: s.adapter,
+            }));
+        }
+    }
+    // final gauge: all streams retired, the pool reads fully free
+    shared.metrics.lock().unwrap().record_kv(id, kv_gauge(&sess.pool_usage()));
+}
+
+/// Pull more same-adapter work for a running continuous batch. Empty
+/// when the batcher's starvation guard says to yield (see
+/// [`AdapterBatcher::take_matching`]).
+fn take_from_queue(shared: &Shared, adapter: &str, max: usize) -> Vec<Queued<Job>> {
+    let mut q = shared.queue.lock().unwrap();
+    q.batcher.take_matching(adapter, max)
 }

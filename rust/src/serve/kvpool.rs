@@ -1,0 +1,279 @@
+//! Fixed-size-block paged KV-cache pool for continuous batching.
+//!
+//! Instead of every decode session owning private `(rows, t_max, d)`
+//! K/V buffers — sized for the worst case whether or not a stream ever
+//! reaches `t_max` — the engine's paged decode path draws cache space
+//! from one shared [`KvPool`] per worker. The pool is a flat arena of
+//! fixed-size **blocks** ([`KvPoolConfig::block_tokens`] token slots
+//! each, covering K *and* V across every layer), handed out through a
+//! free list. Each live stream holds a *block table*: the ordered list
+//! of physical block ids backing its logical token positions, so
+//! logical position `t` lives in block `table[t / block_tokens]` at
+//! slot `t % block_tokens`.
+//!
+//! What that buys the engine:
+//!
+//! * **admit/retire mid-flight** — a stream's cache is allocated lazily
+//!   block-by-block as it decodes and returned to the free list the
+//!   moment it finishes, so short streams never pay for `t_max`;
+//! * **backpressure** — [`KvPool::alloc`] fails with a typed
+//!   [`PoolExhausted`] when the free list is empty, which the engine
+//!   turns into deferred admission or eviction of the youngest stream;
+//! * **accounting** — [`KvPool::usage`] reports exact capacity / used /
+//!   peak bytes, surfaced through `ServeMetrics` the same way
+//!   `ActivationMeter` reports training cache bytes.
+//!
+//! The pool stores *rotated* keys (RoPE applied at append time, same as
+//! the contiguous session), so attention over a block table is pure
+//! address translation — `kernels::attn_decode_paged` reproduces the
+//! contiguous `attn_decode` bit-for-bit.
+
+use std::fmt;
+
+/// Sizing knobs for one worker's [`KvPool`] (see `EngineConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Token positions per block. Small blocks waste less tail space per
+    /// stream but make longer block tables; 16 is a good default for the
+    /// builtin models (`t_max` 32–128).
+    pub block_tokens: usize,
+    /// Total blocks in the pool. `0` = auto-size so that `max_batch`
+    /// streams can all reach `t_max` (no eviction possible).
+    pub blocks: usize,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        Self { block_tokens: 16, blocks: 0 }
+    }
+}
+
+/// Typed allocation failure: the free list is empty.
+///
+/// Carries the pool shape so callers can distinguish *temporary*
+/// exhaustion (other streams hold the blocks — defer or evict) from a
+/// request that can *never* fit (`requested_blocks > capacity_blocks`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Blocks the failed reservation still needed.
+    pub requested_blocks: usize,
+    /// Blocks free at the time of the failure (always 0 for `alloc`).
+    pub free_blocks: usize,
+    /// Total blocks the pool was built with.
+    pub capacity_blocks: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kv pool exhausted: {} block(s) requested, {} free of {}",
+            self.requested_blocks, self.free_blocks, self.capacity_blocks
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Point-in-time pool accounting (all byte figures are exact).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolUsage {
+    /// Total blocks the pool owns.
+    pub capacity_blocks: usize,
+    /// Blocks currently on the free list.
+    pub free_blocks: usize,
+    /// Token slots per block.
+    pub block_tokens: usize,
+    /// Bytes one block pins across K+V and every layer.
+    pub block_bytes: usize,
+    /// `capacity_blocks * block_bytes`.
+    pub capacity_bytes: usize,
+    /// Bytes held by allocated blocks right now.
+    pub used_bytes: usize,
+    /// High-water mark of `used_bytes` over the pool's lifetime.
+    pub peak_bytes: usize,
+}
+
+/// The shared block arena: per-layer K and V slabs plus a LIFO free
+/// list of block ids.
+///
+/// One block id spans *all* layers — block `b` owns slab
+/// `[b·block_tokens·d, (b+1)·block_tokens·d)` in every layer's K and V
+/// buffer — so a stream's block table is layer-independent and a block
+/// costs `2 · n_layers · block_tokens · d · 4` bytes.
+pub struct KvPool {
+    n_layers: usize,
+    d: usize,
+    block_tokens: usize,
+    capacity_blocks: usize,
+    /// per layer: `(capacity_blocks · block_tokens, d)` rotated keys
+    k: Vec<Vec<f32>>,
+    /// per layer: `(capacity_blocks · block_tokens, d)` values
+    v: Vec<Vec<f32>>,
+    free: Vec<u32>,
+    peak_used_blocks: usize,
+}
+
+impl KvPool {
+    /// Build a pool of `blocks` blocks of `block_tokens` positions for a
+    /// model with `n_layers` layers of width `d` (= heads · head_dim).
+    pub fn new(n_layers: usize, d: usize, block_tokens: usize, blocks: usize) -> Self {
+        assert!(block_tokens > 0, "kv pool: block_tokens must be > 0");
+        assert!(blocks > 0, "kv pool: blocks must be > 0");
+        assert!(blocks <= u32::MAX as usize, "kv pool: block count overflows id space");
+        let slab = blocks * block_tokens * d;
+        Self {
+            n_layers,
+            d,
+            block_tokens,
+            capacity_blocks: blocks,
+            k: (0..n_layers).map(|_| vec![0.0; slab]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; slab]).collect(),
+            // LIFO: pop from the end; ids handed out low-first initially
+            free: (0..blocks as u32).rev().collect(),
+            peak_used_blocks: 0,
+        }
+    }
+
+    /// Token positions per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total token positions the pool can back (`blocks · block_tokens`).
+    pub fn capacity_tokens(&self) -> usize {
+        self.capacity_blocks * self.block_tokens
+    }
+
+    /// Bytes one block pins (K+V, all layers, f32).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.n_layers * self.block_tokens * self.d * 4
+    }
+
+    /// Take one block off the free list.
+    pub fn alloc(&mut self) -> Result<u32, PoolExhausted> {
+        let Some(id) = self.free.pop() else {
+            return Err(PoolExhausted {
+                requested_blocks: 1,
+                free_blocks: 0,
+                capacity_blocks: self.capacity_blocks,
+            });
+        };
+        let used = self.capacity_blocks - self.free.len();
+        self.peak_used_blocks = self.peak_used_blocks.max(used);
+        Ok(id)
+    }
+
+    /// Return a stream's blocks to the free list (stream retirement).
+    pub fn release(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            debug_assert!((b as usize) < self.capacity_blocks, "release of foreign block {b}");
+            self.free.push(b);
+        }
+    }
+
+    /// Write one rotated-K / V row (`d` floats each) into `block` at
+    /// token `slot` of `layer`.
+    pub fn write(&mut self, layer: usize, block: u32, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.block_tokens);
+        let off = (block as usize * self.block_tokens + slot) * self.d;
+        self.k[layer][off..off + self.d].copy_from_slice(k_row);
+        self.v[layer][off..off + self.d].copy_from_slice(v_row);
+    }
+
+    /// One layer's full K and V slabs, for `kernels::attn_decode_paged`.
+    pub fn layer_kv(&self, layer: usize) -> (&[f32], &[f32]) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// Exact accounting snapshot.
+    pub fn usage(&self) -> PoolUsage {
+        let bb = self.block_bytes();
+        let used = self.capacity_blocks - self.free.len();
+        PoolUsage {
+            capacity_blocks: self.capacity_blocks,
+            free_blocks: self.free.len(),
+            block_tokens: self.block_tokens,
+            block_bytes: bb,
+            capacity_bytes: self.capacity_blocks * bb,
+            used_bytes: used * bb,
+            peak_bytes: self.peak_used_blocks * bb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip_and_accounting() {
+        let mut p = KvPool::new(2, 8, 4, 3);
+        let bb = 2 * 2 * 4 * 8 * 4;
+        assert_eq!(p.block_bytes(), bb);
+        assert_eq!(p.capacity_tokens(), 12);
+        let u0 = p.usage();
+        assert_eq!(u0.used_bytes, 0);
+        assert_eq!(u0.capacity_bytes, 3 * bb);
+        assert_eq!(u0.free_blocks, 3);
+
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.usage().used_bytes, 2 * bb);
+        assert_eq!(p.usage().peak_bytes, 2 * bb);
+
+        p.release(&[a]);
+        assert_eq!(p.usage().used_bytes, bb);
+        // peak is a high-water mark: it does not fall with releases
+        assert_eq!(p.usage().peak_bytes, 2 * bb);
+
+        let c = p.alloc().unwrap();
+        let d = p.alloc().unwrap();
+        assert_eq!(p.usage().free_blocks, 0);
+        assert_eq!(p.usage().used_bytes, 3 * bb);
+        p.release(&[b, c, d]);
+        assert_eq!(p.usage().used_bytes, 0);
+        assert_eq!(p.usage().free_blocks, 3);
+    }
+
+    #[test]
+    fn exhaustion_is_a_typed_error() {
+        let mut p = KvPool::new(1, 4, 2, 2);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        let err = p.alloc().unwrap_err();
+        assert_eq!(
+            err,
+            PoolExhausted { requested_blocks: 1, free_blocks: 0, capacity_blocks: 2 }
+        );
+        assert!(err.to_string().contains("kv pool exhausted"));
+        // reclamation makes the same pool allocatable again
+        p.release(&[a]);
+        assert!(p.alloc().is_ok());
+    }
+
+    #[test]
+    fn writes_land_in_the_addressed_slot_only() {
+        let mut p = KvPool::new(2, 3, 2, 2);
+        let b0 = p.alloc().unwrap();
+        let b1 = p.alloc().unwrap();
+        p.write(1, b1, 1, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        let (k, v) = p.layer_kv(1);
+        let off = (b1 as usize * 2 + 1) * 3;
+        assert_eq!(&k[off..off + 3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&v[off..off + 3], &[4.0, 5.0, 6.0]);
+        // everything else (other slot, other block, other layer) untouched
+        assert!(k.iter().take(off).all(|&x| x == 0.0));
+        let (k0, v0) = p.layer_kv(0);
+        assert!(k0.iter().chain(v0).all(|&x| x == 0.0));
+        let _ = b0;
+    }
+
+    #[test]
+    fn default_config_is_auto_sized() {
+        let c = KvPoolConfig::default();
+        assert_eq!(c.blocks, 0, "0 means auto-size from max_batch × t_max");
+        assert!(c.block_tokens > 0);
+    }
+}

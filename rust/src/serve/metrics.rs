@@ -1,5 +1,22 @@
 //! Engine-wide serving metrics.
 
+/// Point-in-time KV-pool gauge for one worker, mirrored from
+/// [`crate::serve::kvpool::PoolUsage`] whenever that worker finishes a
+/// request or drains its running batch.
+///
+/// `used_bytes` is a gauge (last reported value), `peak_bytes` a
+/// high-water mark merged across reports; both are exact byte figures,
+/// the serving counterpart of training's `ActivationMeter`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvPoolGauge {
+    /// Total bytes the worker's pool owns.
+    pub capacity_bytes: usize,
+    /// Bytes pinned by live streams at the last report.
+    pub used_bytes: usize,
+    /// High-water mark of `used_bytes` over the worker's lifetime.
+    pub peak_bytes: usize,
+}
+
 /// Counters + latency distribution for one [`super::Engine`].
 ///
 /// Latencies are kept **sorted on insert** ([`ServeMetrics::record_latency_ms`]
@@ -7,12 +24,22 @@
 /// instead of the former clone-and-sort per call.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
+    /// Requests fully served (counted when the terminal reply is built,
+    /// *before* its `Done` event is delivered).
     pub requests: usize,
+    /// Admission waves: one per continuous-batching admission of ≥1
+    /// stream, or one per wave on the legacy full-recompute path.
     pub batches: usize,
+    /// Adapter activations/deactivations performed by workers.
     pub switches: usize,
     /// Total tokens generated (streamed) across all requests.
     pub tokens: usize,
+    /// Streams terminated early to reclaim KV-pool blocks under
+    /// backpressure (each also delivered exactly one `Error` event).
+    pub evictions: usize,
     latencies_ms: Vec<f64>,
+    /// Per-worker KV-pool gauges, indexed by worker id.
+    kv: Vec<KvPoolGauge>,
 }
 
 impl ServeMetrics {
@@ -38,12 +65,43 @@ impl ServeMetrics {
         self.latencies_ms[rank.clamp(1, n) - 1]
     }
 
+    /// Mean requests per batch (`requests / batches`), 0 when nothing
+    /// has been served.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
             self.requests as f64 / self.batches as f64
         }
+    }
+
+    /// Merge a fresh pool gauge from `worker`: capacity and `used_bytes`
+    /// overwrite (gauges), `peak_bytes` keeps the maximum ever reported.
+    pub fn record_kv(&mut self, worker: usize, g: KvPoolGauge) {
+        if self.kv.len() <= worker {
+            self.kv.resize(worker + 1, KvPoolGauge::default());
+        }
+        let slot = &mut self.kv[worker];
+        slot.capacity_bytes = g.capacity_bytes;
+        slot.used_bytes = g.used_bytes;
+        slot.peak_bytes = slot.peak_bytes.max(g.peak_bytes);
+    }
+
+    /// Total KV-pool capacity across workers (0 on the legacy path).
+    pub fn kv_capacity_bytes(&self) -> usize {
+        self.kv.iter().map(|g| g.capacity_bytes).sum()
+    }
+
+    /// KV bytes pinned by live streams at the last report, summed across
+    /// workers.
+    pub fn kv_used_bytes(&self) -> usize {
+        self.kv.iter().map(|g| g.used_bytes).sum()
+    }
+
+    /// Sum of each worker's KV high-water mark (an upper bound on any
+    /// instantaneous total, exact per worker).
+    pub fn kv_peak_bytes(&self) -> usize {
+        self.kv.iter().map(|g| g.peak_bytes).sum()
     }
 }
 
@@ -87,5 +145,20 @@ mod tests {
         assert_eq!(m.percentile_ms(0.5), 5.0);
         assert_eq!(m.percentile_ms(0.11), 1.0);
         assert_eq!(m.percentile_ms(0.12), 2.0);
+    }
+
+    /// Gauges overwrite, peaks merge, and the summed accessors add
+    /// across workers (sparse worker ids included).
+    #[test]
+    fn kv_gauges_merge_per_worker() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.kv_capacity_bytes(), 0);
+        m.record_kv(2, KvPoolGauge { capacity_bytes: 100, used_bytes: 60, peak_bytes: 60 });
+        m.record_kv(0, KvPoolGauge { capacity_bytes: 100, used_bytes: 10, peak_bytes: 10 });
+        // worker 2 drains: used falls, peak must not
+        m.record_kv(2, KvPoolGauge { capacity_bytes: 100, used_bytes: 0, peak_bytes: 40 });
+        assert_eq!(m.kv_capacity_bytes(), 200);
+        assert_eq!(m.kv_used_bytes(), 10);
+        assert_eq!(m.kv_peak_bytes(), 70);
     }
 }

@@ -6,12 +6,21 @@
 //! [`GenEvent`]s over a [`ReplyStream`]; the batcher groups requests by
 //! adapter id (adapter-affinity) so each worker iteration pays at most
 //! one adapter switch — the scatter_add fast path S²FT makes cheap.
-//! Generation runs the KV-cached incremental decode path when the
-//! backend provides one (native), O(t) per token. Python never appears
-//! anywhere on this path.
+//!
+//! When the backend provides a paged decode session (native), workers
+//! run **continuous batching**: requests join and leave the running
+//! batch between individual decode steps, with K/V cache space drawn
+//! from a shared block-paged pool ([`kvpool`]) instead of private
+//! per-request buffers. Backends without one (PJRT artifact replay)
+//! fall back to wave scheduling over full-sequence recompute. Either
+//! way, generation is O(t) per token on the native path and Python
+//! never appears anywhere. See `docs/serving.md` for the architecture
+//! walk-through.
 
 mod batcher;
 mod engine;
+/// Fixed-size-block paged KV-cache pool backing continuous batching.
+pub mod kvpool;
 mod metrics;
 
 pub use batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
@@ -19,7 +28,8 @@ pub use engine::{
     Engine, EngineConfig, GenEvent, GenReply, GenRequest, ReplyStream, SamplingParams,
     BASE_ADAPTER,
 };
-pub use metrics::ServeMetrics;
+pub use kvpool::{KvPool, KvPoolConfig, PoolExhausted, PoolUsage};
+pub use metrics::{KvPoolGauge, ServeMetrics};
 
 use anyhow::Result;
 
@@ -189,5 +199,13 @@ pub fn demo(opts: DemoOpts) -> Result<()> {
         m.percentile_ms(0.5),
         m.percentile_ms(0.99)
     );
+    if m.kv_capacity_bytes() > 0 {
+        println!(
+            "kv pool: {:.1} KB peak of {:.1} KB capacity across workers, {} eviction(s)",
+            m.kv_peak_bytes() as f64 / 1e3,
+            m.kv_capacity_bytes() as f64 / 1e3,
+            m.evictions
+        );
+    }
     engine.shutdown()
 }

@@ -24,7 +24,10 @@ use anyhow::{Context, Result};
 use crate::data::batch::{encode_prompt, supervised_batch};
 use crate::data::tokenizer::{Tokenizer, EOS, PAD};
 use crate::data::{Batch, Example};
-use crate::runtime::{DecodeSession, DecoderProvider, Executable, Executor, Tensor};
+use crate::runtime::{
+    DecodeSession, DecoderProvider, Executable, Executor, PagedDecodeSession, Tensor,
+};
+use crate::serve::kvpool::KvPoolConfig;
 use crate::util::rng::Rng;
 
 /// One generation request: prompt + sampling parameters.
@@ -58,14 +61,23 @@ impl DecodeRequest {
 }
 
 /// Deterministic per-request token sampler.
-struct Sampler {
+///
+/// One sampler is created per request from its [`DecodeRequest`]
+/// parameters and consumed one [`TokenSampler::sample`] call per decode
+/// step, so the token sequence is a pure function of the request
+/// (seeded RNG) and the logits sequence — identical whether the logits
+/// came from full recompute, a contiguous KV session or the paged
+/// continuous-batching path. Public so the serving engine's per-token
+/// scheduler draws from exactly the same stream as the batch driver.
+pub struct TokenSampler {
     temperature: f32,
     top_k: usize,
     rng: Rng,
 }
 
-impl Sampler {
-    fn new(req: &DecodeRequest) -> Self {
+impl TokenSampler {
+    /// Build the sampler for one request (seeds the per-request RNG).
+    pub fn new(req: &DecodeRequest) -> Self {
         Self {
             temperature: req.temperature,
             top_k: req.top_k,
@@ -73,7 +85,10 @@ impl Sampler {
         }
     }
 
-    fn sample(&mut self, logits: &[f32]) -> i32 {
+    /// Draw the next token id from one row of next-token logits:
+    /// greedy argmax when temperature ≤ 0, otherwise a top-k-filtered
+    /// softmax draw at the configured temperature.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
         if self.temperature <= 0.0 {
             return argmax(logits) as i32;
         }
@@ -135,6 +150,26 @@ impl GenModel {
     /// Whether generation runs the KV-cached incremental path.
     pub fn has_decoder(&self) -> bool {
         self.decoder.is_some()
+    }
+
+    /// Vocabulary size of the underlying model (logits row width).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Open a continuous-batching decode session with `rows` slots over
+    /// a paged KV pool sized by `cfg`, if the backend supports one.
+    /// `Ok(None)` means "no paged path here" — callers fall back to the
+    /// wave-scheduled [`GenModel::generate_stream`] driver.
+    pub fn open_paged_session(
+        &self,
+        rows: usize,
+        cfg: KvPoolConfig,
+    ) -> Result<Option<Box<dyn PagedDecodeSession + '_>>> {
+        match &self.decoder {
+            Some(p) => p.open_paged(&self.model, &self.params, rows, self.t, cfg),
+            None => Ok(None),
+        }
     }
 
     /// Masked LM loss + token accuracy on one batch.
@@ -202,14 +237,14 @@ impl GenModel {
             let mut rows: Vec<Vec<i32>> = Vec::with_capacity(self.b);
             let mut pos: Vec<usize> = Vec::with_capacity(self.b);
             let mut done: Vec<bool> = Vec::with_capacity(self.b);
-            let mut samplers: Vec<Sampler> = Vec::with_capacity(self.b);
+            let mut samplers: Vec<TokenSampler> = Vec::with_capacity(self.b);
             for i in 0..self.b {
                 let req = chunk.get(i);
                 let (toks, gp) = encode_prompt(&tk, req.map_or("", |r| r.prompt.as_str()), self.t);
                 rows.push(toks);
                 pos.push(gp.min(self.t - 1));
                 done.push(req.is_none());
-                samplers.push(Sampler::new(req.unwrap_or(&pad_req)));
+                samplers.push(TokenSampler::new(req.unwrap_or(&pad_req)));
             }
             let mut generated: Vec<Vec<i32>> = vec![Vec::new(); self.b];
             let max_new_cap = chunk.iter().map(|r| r.max_new).max().unwrap_or(0);

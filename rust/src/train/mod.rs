@@ -8,6 +8,6 @@ mod metrics;
 mod trainer;
 
 pub use checkpoint::{load_params, save_params};
-pub use eval::{eval_loss, task_accuracy, DecodeRequest, GenModel};
+pub use eval::{eval_loss, task_accuracy, DecodeRequest, GenModel, TokenSampler};
 pub use metrics::TrainMetrics;
 pub use trainer::Trainer;

@@ -14,7 +14,7 @@ use repro::data::{Example, Split, World, ARITHMETIC, COMMONSENSE, INSTRUCT};
 use repro::kernels;
 use repro::linalg::Mat;
 use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
-use repro::serve::AdapterBatcher;
+use repro::serve::{AdapterBatcher, KvPoolConfig};
 use repro::sparsity;
 use repro::train::{DecodeRequest, GenModel};
 use repro::util::rng::Rng;
@@ -993,5 +993,88 @@ fn prop_truncated_backward_bit_identical_to_full_walk() {
             av.iter().zip(bv).all(|(x, y)| x.to_bits() == y.to_bits()),
             "fullft {name} changed under the reference-walk switch"
         );
+    }
+}
+
+/// Paged-KV bit-identity under random continuous-batching schedules:
+/// streams admit into random rows, feed interleaved (some rows idle per
+/// step via `None`), retire early and hand their rows to fresh streams —
+/// across block sizes that tile the sequence evenly and unevenly. Every
+/// stepped row's logits must equal a solo contiguous [`repro::runtime::
+/// DecodeSession`] fed the same token sequence, bit for bit: the block
+/// table is address translation, never arithmetic.
+#[test]
+fn prop_paged_decode_bit_identical_to_contiguous() {
+    let rt = NativeBackend::builtin();
+    let init = rt.load("init_tiny").unwrap();
+    let outs = init.run(&[Tensor::scalar_i32(11)]).unwrap();
+    let params: HashMap<String, Tensor> =
+        init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+    let provider = rt.decoder().expect("native backend has a decoder");
+    let t_max = 32usize;
+
+    for case in 0..12usize {
+        let mut rng = Rng::seed(9000 + case as u64);
+        let bt = [1usize, 2, 3, 8][case % 4];
+        let rows = 2 + case % 2;
+        let cfg = KvPoolConfig { block_tokens: bt, blocks: 0 };
+        let mut paged = provider
+            .open_paged("tiny", &params, rows, t_max, cfg)
+            .expect("open_paged")
+            .expect("native supports paged sessions");
+        // per row: the solo contiguous reference session of the stream
+        // currently occupying it (admitted lazily, replaced on reuse)
+        let mut refs: Vec<Option<Box<dyn repro::runtime::DecodeSession + '_>>> =
+            (0..rows).map(|_| None).collect();
+
+        for step in 0..60usize {
+            // random lifecycle event ~every 4th step
+            match rng.below(4) {
+                0 => {
+                    if let Some(row) = (0..rows).find(|&r| !paged.is_active(r)) {
+                        paged.admit(row).unwrap();
+                        refs[row] = Some(provider.open_session("tiny", &params, 1, t_max).unwrap());
+                    }
+                }
+                1 if step > 6 => {
+                    let row = rng.below(rows);
+                    if paged.is_active(row) {
+                        paged.retire(row);
+                        refs[row] = None;
+                    }
+                }
+                _ => {}
+            }
+            // feed a random subset of active, non-full rows
+            let mut feed: Vec<Option<i32>> = vec![None; rows];
+            let mut fed_rows = Vec::new();
+            for r in 0..rows {
+                if paged.is_active(r) && paged.pos(r) < t_max && rng.below(10) < 8 {
+                    feed[r] = Some(rng.below(256) as i32);
+                    fed_rows.push(r);
+                }
+            }
+            if fed_rows.is_empty() {
+                continue;
+            }
+            paged.reserve(&fed_rows).expect("auto-sized pool cannot exhaust");
+            let got = paged.step(&feed).unwrap();
+            let vocab = got.len() / rows;
+            for &r in &fed_rows {
+                let solo = refs[r].as_mut().expect("active row has a reference");
+                let want = solo.step(&[feed[r]]).unwrap();
+                assert_eq!(want.len(), vocab, "case {case} step {step}: vocab width");
+                let g = &got[r * vocab..(r + 1) * vocab];
+                assert!(
+                    g.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "case {case} step {step} row {r} (bt={bt}): paged logits drifted"
+                );
+            }
+        }
+        // retiring everything must return the pool to empty
+        for r in 0..rows {
+            paged.retire(r);
+        }
+        assert_eq!(paged.pool_usage().used_bytes, 0, "case {case}: blocks leaked");
     }
 }

@@ -13,7 +13,7 @@ use std::time::Duration;
 use repro::adapter::{AnyAdapter, S2ftAdapter, S2ftLayerDelta};
 use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
 use repro::serve::{Engine, EngineConfig, GenEvent, GenRequest, BASE_ADAPTER};
-use repro::train::GenModel;
+use repro::train::{DecodeRequest, GenModel};
 use repro::util::rng::Rng;
 
 /// Synthetic tiny-model S²FT adapter deltas, deterministic per rng state.
@@ -300,6 +300,115 @@ mod native {
             assert_eq!(r.batch_size, 1);
         }
         assert_eq!(engine.metrics().requests, 4);
+        engine.shutdown().unwrap();
+    }
+
+    fn builtin_gm(seed: i32) -> GenModel {
+        let rt = NativeBackend::builtin();
+        let init = rt.load("init_tiny").unwrap();
+        let outs = init.run(&[Tensor::scalar_i32(seed)]).unwrap();
+        let params: HashMap<String, Tensor> =
+            init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+        GenModel::new(&rt, "tiny", params).unwrap()
+    }
+
+    /// Continuous batching must reproduce the reference full-recompute
+    /// decode text-for-text: co-scheduled streams share a paged KV pool
+    /// but each row's logits (and therefore its greedy tokens) are
+    /// bit-identical to a solo contiguous decode.
+    #[test]
+    fn continuous_batching_matches_full_recompute_text() {
+        let gm = builtin_gm(3);
+        let prompts = ["q: is item 0 blue?", "q: sum 2 3?", "q: tiny?"];
+        let reqs: Vec<DecodeRequest> =
+            prompts.iter().map(|p| DecodeRequest::greedy(p.to_string(), 6)).collect();
+        let want = gm.generate_full_recompute(&reqs, |_, _| {}).unwrap();
+
+        // submit all three at once so they co-decode in one batch
+        let engine = native_engine(1, 1, 4);
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| engine.submit(GenRequest::new(BASE_ADAPTER, *p).max_new(6)))
+            .collect();
+        for ((s, want), p) in streams.into_iter().zip(&want).zip(&prompts) {
+            let r = s.wait().expect("reply");
+            assert_eq!(&r.text, want, "continuous batching diverged for {p:?}");
+        }
+        engine.shutdown().unwrap();
+    }
+
+    /// KV-pool backpressure: with a pool too small for two long streams,
+    /// the youngest is evicted with **exactly one** terminal event, the
+    /// oldest finishes normally, and the reclaimed blocks keep the
+    /// engine serving. The prompts are long enough that the block demand
+    /// crosses capacity during prefill, where no EOS can cut decoding
+    /// short, so eviction is deterministic.
+    #[test]
+    fn eviction_delivers_one_terminal_event_and_engine_recovers() {
+        let cfg = EngineConfig::new()
+            .workers(1)
+            .max_batch(2)
+            .window(Duration::from_millis(100))
+            .kv_block_tokens(4)
+            .kv_blocks(9);
+        let engine = Engine::spawn(cfg, |_| {
+            let rt = NativeBackend::builtin();
+            let init = rt.load("init_tiny")?;
+            let outs = init.run(&[Tensor::scalar_i32(3)])?;
+            let params: HashMap<String, Tensor> =
+                init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+            let snapshot = params.clone();
+            let gm = GenModel::new(&rt, "tiny", params)?;
+            Ok((gm, snapshot))
+        });
+        // each stream needs ceil(32/4) = 8 blocks worst-case (fits the
+        // 9-block pool alone); two in lockstep exceed 9 at position 16,
+        // still inside the ~28-token prompts
+        let long_a = "q: aaaaaaaaaaaaaaaaaaaaaaaaa?";
+        let long_b = "q: bbbbbbbbbbbbbbbbbbbbbbbbb?";
+        let a = engine.submit(GenRequest::new(BASE_ADAPTER, long_a).max_new(4));
+        let b = engine.submit(GenRequest::new(BASE_ADAPTER, long_b).max_new(4));
+        let ra = a.wait();
+        assert!(ra.is_ok(), "oldest stream must survive eviction: {ra:?}");
+        let mut terminals = 0usize;
+        let mut err_text = String::new();
+        for ev in b {
+            match ev {
+                GenEvent::Token { .. } => {}
+                GenEvent::Done(_) => terminals += 1,
+                GenEvent::Error(e) => {
+                    terminals += 1;
+                    err_text = e;
+                }
+            }
+        }
+        assert_eq!(terminals, 1, "evicted stream must see exactly one terminal event");
+        assert!(err_text.contains("evicted"), "error must name the eviction: {err_text}");
+        let m = engine.metrics();
+        assert!(m.evictions >= 1, "eviction counter must move");
+        // blocks were reclaimed: the pool serves fresh requests
+        let r = engine
+            .call(GenRequest::new(BASE_ADAPTER, "q: after?").max_new(2))
+            .unwrap();
+        assert!(r.tokens <= 2);
+        engine.shutdown().unwrap();
+    }
+
+    /// The documented `ReplyStream::recv` contract: exactly one terminal
+    /// event, then `None` forever.
+    #[test]
+    fn recv_returns_none_after_terminal() {
+        let engine = native_engine(1, 1, 2);
+        let s = engine.submit(GenRequest::new("a0", "q: done?").max_new(2));
+        let mut terminals = 0usize;
+        while let Some(ev) = s.recv() {
+            if matches!(ev, GenEvent::Done(_) | GenEvent::Error(_)) {
+                terminals += 1;
+            }
+        }
+        assert_eq!(terminals, 1, "exactly one terminal event per stream");
+        assert!(s.recv().is_none(), "recv after the terminal event must stay None");
+        assert!(s.recv().is_none());
         engine.shutdown().unwrap();
     }
 

@@ -11,7 +11,9 @@
 //!   metrics consistent with what was served) and adapter
 //!   register/fuse/unregister churn under concurrent submits;
 //! * the shared `AdapterStore`: concurrent per-worker switch/deactivate
-//!   churn that must restore base weights bitwise.
+//!   churn that must restore base weights bitwise;
+//! * the paged KV pool: typed exhaustion errors, block reclamation and
+//!   exact byte accounting while the continuous-batching engine churns.
 //!
 //! `S2FT_STRESS_ITERS` scales the iteration counts down for the TSan
 //! lane (shadow-memory slowdown is roughly an order of magnitude).
@@ -25,7 +27,7 @@ use std::time::Duration;
 use repro::adapter::{AdapterSlot, AdapterStore, AnyAdapter, S2ftAdapter, S2ftLayerDelta};
 use repro::kernels::{self, reference};
 use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
-use repro::serve::{Engine, EngineConfig, GenEvent, GenRequest};
+use repro::serve::{Engine, EngineConfig, GenEvent, GenRequest, KvPool, PoolExhausted};
 use repro::train::GenModel;
 use repro::util::rng::Rng;
 
@@ -263,6 +265,69 @@ fn adapter_lifecycle_churn_under_concurrent_submits() {
             .expect("sole owner")
             .shutdown()
             .unwrap();
+    });
+}
+
+/// An empty freelist is a *typed* error carrying the exact shortfall —
+/// never a panic — and released blocks are immediately allocatable
+/// again (LIFO reclamation), with byte accounting restored to zero.
+#[test]
+fn kv_pool_exhaustion_is_typed_and_blocks_reclaim() {
+    let mut pool = KvPool::new(2, 8, 4, 3);
+    let b0 = pool.alloc().unwrap();
+    let b1 = pool.alloc().unwrap();
+    let b2 = pool.alloc().unwrap();
+    let err = pool.alloc().unwrap_err();
+    assert_eq!(
+        err,
+        PoolExhausted { requested_blocks: 1, free_blocks: 0, capacity_blocks: 3 }
+    );
+    assert!(err.to_string().contains("kv pool exhausted"), "{err}");
+    let u = pool.usage();
+    assert_eq!(u.used_bytes, 3 * u.block_bytes, "all capacity pinned at exhaustion");
+    pool.release(&[b1]);
+    let again = pool.alloc().expect("released block must be allocatable");
+    assert_eq!(again, b1, "LIFO freelist reuses the reclaimed block first");
+    pool.release(&[b0, b2, again]);
+    let u = pool.usage();
+    assert_eq!(u.free_blocks, 3);
+    assert_eq!(u.used_bytes, 0, "full release must zero the byte gauge");
+    assert_eq!(u.peak_bytes, u.capacity_bytes, "peak saw the full pool");
+}
+
+/// Engine-level KV accounting under churn: after a drained run the
+/// pool gauges must read exactly zero used bytes, a peak that is a
+/// whole number of blocks, and a capacity that is a whole number of
+/// per-worker pools — no leaked blocks, no phantom bytes.
+#[test]
+fn kv_pool_accounting_is_exact_under_engine_churn() {
+    let iters = stress_iters(24);
+    with_deadline(180, "kv pool accounting churn", move || {
+        let engine = native_engine(2, 2, 4);
+        let mut streams = Vec::new();
+        for i in 0..iters {
+            let id = format!("a{}", i % 2);
+            streams.push(engine.submit(GenRequest::new(id, format!("q: churn {i}?")).max_new(3)));
+        }
+        for s in streams {
+            s.wait().expect("reply");
+        }
+        let m = engine.metrics();
+        // reconstruct the exact per-worker pool geometry: default
+        // 16-token blocks, max_batch=4 row slots, t_max from the model
+        let rt = NativeBackend::builtin();
+        let mm = rt.artifacts().model("tiny").unwrap();
+        let (_, t_max) = mm.default_batch();
+        let bt = 16usize; // EngineConfig::default().kv_block_tokens
+        let block_bytes = 2 * mm.dims.n_layers * bt * mm.dims.d_model * 4;
+        let per_worker = 4 * t_max.div_ceil(bt) * block_bytes;
+        assert_eq!(m.kv_used_bytes(), 0, "drained engine must hold zero KV bytes");
+        assert!(m.kv_peak_bytes() > 0, "serving must have pinned at least one block");
+        assert_eq!(m.kv_peak_bytes() % block_bytes, 0, "peak must be whole blocks");
+        assert!(m.kv_capacity_bytes() > 0 && m.kv_capacity_bytes() % per_worker == 0);
+        assert!(m.kv_peak_bytes() <= m.kv_capacity_bytes());
+        assert_eq!(m.evictions, 0, "the auto-sized pool never evicts");
+        engine.shutdown().unwrap();
     });
 }
 
