@@ -12,18 +12,30 @@
 //! * `load/tiny/churn/streams=64/kv_blocks=6` — a deliberately tiny
 //!   6-block pool on one worker, so admission, reservation and eviction
 //!   backpressure all cycle continuously.
+//! * `load/tiny/zipf/adapters=1000/resident=32/affinity` — the
+//!   thousand-adapter multi-tenant lane: 1000 adapters persisted on
+//!   disk, a 32-adapter resident budget, and Zipf(s=1.1)-popular
+//!   request traffic batched with adapter affinity (the registry's LRU
+//!   spill, lazy load and resident-preferring scheduling all cycle).
+//! * `load/tiny/zipf/adapters=1000/resident=32/switch_per_request` —
+//!   the same registered set and traffic served with `max_batch = 1`
+//!   FIFO scheduling, paying one adapter acquire+switch per request:
+//!   the baseline the affinity lane must beat on throughput.
 //!
 //! Each lane prints p50/p99 request latency, aggregate tok/s and the
-//! eviction/KV-peak counters after its timed runs. Knobs:
+//! eviction/KV-peak counters after its timed runs; the Zipf lanes add
+//! residency hit rate, load/spill counts and mean switch cost. Knobs:
 //! `S2FT_BENCH_BUDGET_MS` shortens the wall budget (CI smoke);
 //! `make bench-baseline` regenerates the committed regression baseline
 //! from this target's JSON (see README "Benchmarks & baselines").
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use repro::adapter::{save_adapter, AnyAdapter};
 use repro::runtime::{Executable, Executor, NativeBackend, Tensor};
-use repro::serve::{synthetic_adapter, Engine, EngineConfig, GenRequest};
+use repro::serve::{synthetic_adapter, Engine, EngineConfig, GenRequest, SchedPolicy};
 use repro::train::GenModel;
 use repro::util::bench::BenchSuite;
 use repro::util::rng::Rng;
@@ -83,6 +95,72 @@ fn report(engine: &Engine, wall: Duration) {
     );
 }
 
+fn report_residency(engine: &Engine, wall: Duration) {
+    report(engine, wall);
+    let m = engine.metrics();
+    let r = &m.residency;
+    println!(
+        "  residency: {} registered / {} resident, hit rate {:.3} ({} load(s), {} spill(s)); \
+         {} switch(es) mean {:.1} us; {} fused / {} unfused batches",
+        r.registered,
+        r.resident,
+        r.hit_rate(),
+        r.loads,
+        r.spills,
+        m.switches,
+        m.mean_switch_us(),
+        r.fused_batches,
+        r.unfused_batches
+    );
+}
+
+/// Persist `n` synthetic tiny-model adapters (`a0000.s2ft` …) into `dir`
+/// so the engines can register the full set lazily via `adapter_dir`.
+fn write_adapter_dir(dir: &Path, n: usize) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    let rt = NativeBackend::builtin();
+    let mm = rt.artifacts().model("tiny").unwrap().clone();
+    let mut rng = Rng::seed(0x21FF);
+    for a in 0..n {
+        let AnyAdapter::S2ft(ad) = synthetic_adapter(&mm, &mut rng) else { unreachable!() };
+        save_adapter(dir.join(format!("a{a:04}.s2ft")), &ad).unwrap();
+    }
+}
+
+/// Normalized Zipf(s) CDF over ranks `1..=n` (rank 0 is the hottest).
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for r in 1..=n {
+        acc += 1.0 / (r as f64).powf(s);
+        cdf.push(acc);
+    }
+    for x in &mut cdf {
+        *x /= acc;
+    }
+    cdf
+}
+
+/// Zipf-popular open loop: adapter ranks drawn from `cdf`, Poisson
+/// inter-arrival gaps of mean `mean_gap_us`.
+fn zipf_loop(engine: &Engine, rng: &mut Rng, cdf: &[f64], n: usize, mean_gap_us: f64) {
+    let streams: Vec<_> = (0..n)
+        .map(|i| {
+            let gap_us = -(1.0 - rng.f64()).ln() * mean_gap_us;
+            std::thread::sleep(Duration::from_nanos((gap_us * 1e3) as u64));
+            let u = rng.f64();
+            let a = cdf.partition_point(|&x| x < u).min(cdf.len() - 1);
+            let max_new = [2usize, 4, 8][i % 3];
+            engine
+                .submit(GenRequest::new(format!("a{a:04}"), format!("q: item {i}?")).max_new(max_new))
+        })
+        .collect();
+    for s in streams {
+        let _ = s.wait();
+    }
+}
+
 fn main() {
     let mut suite = BenchSuite::new("serve_load").slow();
     println!(
@@ -122,6 +200,49 @@ fn main() {
         report(&engine, t0.elapsed());
         engine.shutdown().unwrap();
     }
+
+    // --- thousand-adapter multi-tenancy: Zipf traffic, bounded residency -
+    let dir = std::env::temp_dir().join(format!("s2ft-bench-adapters-{}", std::process::id()));
+    write_adapter_dir(&dir, 1000);
+    let cdf = zipf_cdf(1000, 1.1);
+
+    // affinity-grouped: one fused batch per adapter group, workers prefer
+    // resident adapters, cold tail spills and lazily reloads
+    {
+        let cfg = EngineConfig::new()
+            .workers(2)
+            .max_batch(8)
+            .window(Duration::from_millis(1))
+            .max_resident(32)
+            .adapter_dir(&dir);
+        let engine = spawn_engine(cfg, 0);
+        let t0 = Instant::now();
+        suite.bench("load/tiny/zipf/adapters=1000/resident=32/affinity", || {
+            zipf_loop(&engine, &mut rng, &cdf, 96, 120.0);
+        });
+        report_residency(&engine, t0.elapsed());
+        engine.shutdown().unwrap();
+    }
+
+    // switch-per-request baseline: same registered set and traffic, but
+    // max_batch=1 FIFO forfeits grouping — one acquire+switch per request
+    {
+        let cfg = EngineConfig::new()
+            .workers(2)
+            .max_batch(1)
+            .window(Duration::ZERO)
+            .policy(SchedPolicy::Fifo)
+            .max_resident(32)
+            .adapter_dir(&dir);
+        let engine = spawn_engine(cfg, 0);
+        let t0 = Instant::now();
+        suite.bench("load/tiny/zipf/adapters=1000/resident=32/switch_per_request", || {
+            zipf_loop(&engine, &mut rng, &cdf, 96, 120.0);
+        });
+        report_residency(&engine, t0.elapsed());
+        engine.shutdown().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 
     suite.save();
 }

@@ -8,11 +8,12 @@
 //! * **parallelism** — batched multi-adapter serving on a single layer
 //!   (Fig 6c), implemented in [`parallel`].
 
+/// Batched multi-adapter serving on one shared layer (paper Fig 6c).
 pub mod parallel;
 mod persist;
 mod store;
 
-pub use persist::{load_adapter, save_adapter};
+pub use persist::{load_adapter, save_adapter, PersistError};
 pub use store::{AdapterSlot, AdapterStore, AnyAdapter};
 
 use std::collections::HashMap;
@@ -36,9 +37,13 @@ pub struct S2ftLayerDelta {
     pub wd_delta: Vec<f32>,
 }
 
+/// A complete S²FT adapter: one [`S2ftLayerDelta`] per transformer layer
+/// plus the model width the deltas were extracted against.
 #[derive(Debug, Clone)]
 pub struct S2ftAdapter {
+    /// Per-layer deltas, index = layer number.
     pub layers: Vec<S2ftLayerDelta>,
+    /// Model width `d` every delta row spans.
     pub d_model: usize,
 }
 
@@ -163,6 +168,7 @@ impl S2ftAdapter {
         shared as f64 / total.max(1) as f64
     }
 
+    /// In-memory size: 4 bytes per delta f32 + 8 per row index.
     pub fn bytes(&self) -> usize {
         self.layers
             .iter()
@@ -226,15 +232,22 @@ pub fn s2ft_counts(mm: &ModelMeta, method: &MethodMeta) -> HashMap<String, usize
 /// Per-layer LoRA factors for one target projection set (wo + wd).
 #[derive(Debug, Clone)]
 pub struct LoraLayerDelta {
+    /// A factor of the wo projection's low-rank delta.
     pub wo_a: Mat,
+    /// B factor of the wo projection's low-rank delta.
     pub wo_b: Mat,
+    /// A factor of the wd projection's low-rank delta.
     pub wd_a: Mat,
+    /// B factor of the wd projection's low-rank delta.
     pub wd_b: Mat,
 }
 
+/// A complete LoRA adapter (the Fig 6 / Table 5 baseline family).
 #[derive(Debug, Clone)]
 pub struct LoraAdapter {
+    /// Per-layer A/B factors, index = layer number.
     pub layers: Vec<LoraLayerDelta>,
+    /// `alpha / rank` multiplier applied to every ΔW = A·B.
     pub scale: f32,
 }
 
@@ -282,6 +295,7 @@ impl LoraAdapter {
         Ok(())
     }
 
+    /// In-memory size of the A/B factors (4 bytes per f32).
     pub fn bytes(&self) -> usize {
         self.layers
             .iter()

@@ -107,12 +107,14 @@ pub fn dense_reference(x: &Mat, w: &Mat, deltas: &[Mat]) -> Mat {
 }
 
 impl LoraReqAdapter {
+    /// Materialize the dense ΔW = scale·A·B (test/reference use only).
     pub fn dense_delta(&self, _k: usize) -> Mat {
         self.a.matmul(&self.b).scale(self.scale)
     }
 }
 
 impl S2ftReqAdapter {
+    /// Scatter the delta rows into a dense (k, d) ΔW (test/reference use).
     pub fn dense_delta(&self, k: usize) -> Mat {
         let d = self.delta.cols;
         let mut out = Mat::zeros(k, d);

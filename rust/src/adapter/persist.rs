@@ -2,28 +2,140 @@
 //!
 //! An S²FT adapter is tiny (s·d floats + row ids per layer), so thousands
 //! can live on disk next to one base checkpoint — the storage story of
-//! paper §6.2. Format: little-endian binary with a JSON header.
+//! paper §6.2 and the backing store of the serve residency manager
+//! ([`crate::serve::AdapterRegistry`]).
 //!
-//! layout: "S2FT" magic | u32 header_len | header json | per-layer blobs
-//! (wo_rows u32s, wo_delta f32s, wd_rows u32s, wd_delta f32s).
+//! Format (little-endian binary with a JSON header):
+//!
+//! ```text
+//! "S2FT" magic | u32 header_len | header json | payload
+//! payload = per-layer blobs: wo_rows u32s, wo_delta f32s,
+//!                            wd_rows u32s, wd_delta f32s
+//! ```
+//!
+//! Version 2 (written by [`save_adapter`]) adds `payload_len` (exact
+//! byte count after the header) and `checksum` (FNV-1a 64 over the
+//! payload, hex string) to the header, so truncation and corruption are
+//! detected *before* any weights are decoded. Version 1 files (no
+//! length/checksum) remain readable; their per-field bounds checks are
+//! the only integrity net. Every failure mode maps to a typed
+//! [`PersistError`] (reachable through `anyhow`'s `downcast_ref`), so
+//! callers like the residency manager can distinguish "not an adapter
+//! file" from "bitrot" instead of receiving garbage weights.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
 use super::{S2ftAdapter, S2ftLayerDelta};
 
 const MAGIC: &[u8; 4] = b"S2FT";
+/// Format version written by [`save_adapter`].
+const WRITE_VERSION: u32 = 2;
 
+/// Typed failure modes of [`load_adapter`], reachable through
+/// `anyhow::Error::downcast_ref::<PersistError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PersistError {
+    /// Missing magic or too short to hold one — not our format at all.
+    NotAdapterFile,
+    /// Magic matched but the header declares a version this build
+    /// cannot read.
+    UnsupportedVersion(u32),
+    /// The JSON header is unreadable or missing required fields.
+    MalformedHeader(String),
+    /// The file ends before the declared payload does.
+    Truncated {
+        /// Bytes the header (v2) or blob layout (v1) requires.
+        needed: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// Extra bytes after the declared payload (v1: after the last blob).
+    TrailingBytes(usize),
+    /// The payload hash does not match the header's checksum (v2 only).
+    ChecksumMismatch {
+        /// Checksum recorded in the header.
+        expected: u64,
+        /// Checksum of the bytes actually on disk.
+        computed: u64,
+    },
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::NotAdapterFile => write!(f, "not an S2FT adapter file"),
+            PersistError::UnsupportedVersion(v) => {
+                write!(f, "unsupported adapter format version {v}")
+            }
+            PersistError::MalformedHeader(why) => write!(f, "malformed adapter header: {why}"),
+            PersistError::Truncated { needed, have } => {
+                write!(f, "truncated adapter file: need {needed} byte(s), have {have}")
+            }
+            PersistError::TrailingBytes(n) => {
+                write!(f, "{n} trailing byte(s) after adapter payload")
+            }
+            PersistError::ChecksumMismatch { expected, computed } => write!(
+                f,
+                "adapter payload checksum mismatch: header {expected:#018x}, file {computed:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+/// FNV-1a 64-bit over `bytes` — dependency-free, deterministic, fast
+/// enough for kilobyte-scale adapter payloads.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize the per-layer blobs (rows as u32, deltas as f32, both
+/// little-endian) — the byte stream both format versions share.
+fn encode_payload(adapter: &S2ftAdapter) -> Vec<u8> {
+    let bytes: usize = adapter
+        .layers
+        .iter()
+        .map(|l| 4 * (l.wo_rows.len() + l.wo_delta.len() + l.wd_rows.len() + l.wd_delta.len()))
+        .sum();
+    let mut out = Vec::with_capacity(bytes);
+    for l in &adapter.layers {
+        for &r in &l.wo_rows {
+            out.extend_from_slice(&(r as u32).to_le_bytes());
+        }
+        for &v in &l.wo_delta {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &r in &l.wd_rows {
+            out.extend_from_slice(&(r as u32).to_le_bytes());
+        }
+        for &v in &l.wd_delta {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Write `adapter` to `path` in the current (v2) format: versioned
+/// header with payload length + FNV-1a checksum, then the raw blobs.
+/// Parent directories are created as needed.
 pub fn save_adapter(path: impl AsRef<Path>, adapter: &S2ftAdapter) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
     }
+    let payload = encode_payload(adapter);
     let header = Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(WRITE_VERSION as f64)),
         ("d_model", Json::num(adapter.d_model as f64)),
         ("n_layers", Json::num(adapter.layers.len() as f64)),
         (
@@ -41,6 +153,9 @@ pub fn save_adapter(path: impl AsRef<Path>, adapter: &S2ftAdapter) -> Result<()>
                     .collect(),
             ),
         ),
+        ("payload_len", Json::num(payload.len() as f64)),
+        // hex string: a u64 cannot round-trip exactly through JSON's f64
+        ("checksum", Json::str(format!("{:016x}", fnv1a64(&payload)))),
     ])
     .to_string();
     let mut f = std::fs::File::create(path.as_ref())
@@ -48,73 +163,133 @@ pub fn save_adapter(path: impl AsRef<Path>, adapter: &S2ftAdapter) -> Result<()>
     f.write_all(MAGIC)?;
     f.write_all(&(header.len() as u32).to_le_bytes())?;
     f.write_all(header.as_bytes())?;
-    for l in &adapter.layers {
-        for &r in &l.wo_rows {
-            f.write_all(&(r as u32).to_le_bytes())?;
-        }
-        for &v in &l.wo_delta {
-            f.write_all(&v.to_le_bytes())?;
-        }
-        for &r in &l.wd_rows {
-            f.write_all(&(r as u32).to_le_bytes())?;
-        }
-        for &v in &l.wd_delta {
-            f.write_all(&v.to_le_bytes())?;
-        }
-    }
+    f.write_all(&payload)?;
     Ok(())
 }
 
+/// Read an adapter written by [`save_adapter`] (v2, length + checksum
+/// validated before decoding) or by the pre-checksum v1 writer
+/// (bounds-checked per field). Corrupt, truncated or foreign files
+/// return a typed [`PersistError`] instead of garbage weights.
 pub fn load_adapter(path: impl AsRef<Path>) -> Result<S2ftAdapter> {
     let mut bytes = Vec::new();
     std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening {:?}", path.as_ref()))?
         .read_to_end(&mut bytes)?;
+    decode_adapter(&bytes).with_context(|| format!("loading {:?}", path.as_ref()))
+}
+
+fn decode_adapter(bytes: &[u8]) -> Result<S2ftAdapter> {
     if bytes.len() < 8 || &bytes[..4] != MAGIC {
-        bail!("not an S2FT adapter file");
+        return Err(PersistError::NotAdapterFile.into());
     }
     let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
-    let header = Json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)?;
-    if header.num_or("version", 0.0) as u32 != 1 {
-        bail!("unsupported adapter version");
+    if bytes.len() < 8 + hlen {
+        return Err(PersistError::Truncated { needed: 8 + hlen, have: bytes.len() }.into());
     }
-    let d = header.get("d_model")?.as_usize()?;
-    let shapes = header.get("layer_shapes")?.as_arr()?;
-    let mut off = 8 + hlen;
+    let htext = std::str::from_utf8(&bytes[8..8 + hlen])
+        .map_err(|e| PersistError::MalformedHeader(e.to_string()))?;
+    let header =
+        Json::parse(htext).map_err(|e| PersistError::MalformedHeader(format!("{e:#}")))?;
+    let version = header.num_or("version", 0.0) as u32;
+    if version == 0 || version > WRITE_VERSION {
+        return Err(PersistError::UnsupportedVersion(version).into());
+    }
+    let payload = &bytes[8 + hlen..];
+    if version >= 2 {
+        // integrity first: length, then checksum, before any decoding
+        let declared = header
+            .get("payload_len")
+            .and_then(|j| j.as_usize())
+            .map_err(|_| PersistError::MalformedHeader("missing payload_len".into()))?;
+        match payload.len() {
+            have if have < declared => {
+                return Err(
+                    PersistError::Truncated { needed: 8 + hlen + declared, have: bytes.len() }
+                        .into(),
+                );
+            }
+            have if have > declared => {
+                return Err(PersistError::TrailingBytes(payload.len() - declared).into());
+            }
+            _ => {}
+        }
+        let expected = header
+            .get("checksum")
+            .ok()
+            .and_then(|j| j.as_str().ok())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| PersistError::MalformedHeader("missing checksum".into()))?;
+        let computed = fnv1a64(payload);
+        if computed != expected {
+            return Err(PersistError::ChecksumMismatch { expected, computed }.into());
+        }
+    }
+    let d = header
+        .get("d_model")
+        .and_then(|j| j.as_usize())
+        .map_err(|_| PersistError::MalformedHeader("missing d_model".into()))?;
+    let shapes = header
+        .get("layer_shapes")
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .map_err(|_| PersistError::MalformedHeader("missing layer_shapes".into()))?;
+    let mut off = 0usize;
     let mut layers = Vec::with_capacity(shapes.len());
-    let mut take_u32s = |bytes: &[u8], off: &mut usize, n: usize| -> Result<Vec<usize>> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            if *off + 4 > bytes.len() {
-                bail!("truncated adapter file");
+    let take_u32s = |off: &mut usize, n: usize| -> Result<Vec<usize>> {
+        if *off + 4 * n > payload.len() {
+            return Err(PersistError::Truncated {
+                needed: 8 + hlen + *off + 4 * n,
+                have: bytes.len(),
             }
-            out.push(u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()) as usize);
-            *off += 4;
+            .into());
         }
+        let out = (0..n)
+            .map(|k| {
+                let at = *off + 4 * k;
+                u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()) as usize
+            })
+            .collect();
+        *off += 4 * n;
         Ok(out)
     };
-    let take_f32s = |bytes: &[u8], off: &mut usize, n: usize| -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            if *off + 4 > bytes.len() {
-                bail!("truncated adapter file");
+    let take_f32s = |off: &mut usize, n: usize| -> Result<Vec<f32>> {
+        if *off + 4 * n > payload.len() {
+            return Err(PersistError::Truncated {
+                needed: 8 + hlen + *off + 4 * n,
+                have: bytes.len(),
             }
-            out.push(f32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap()));
-            *off += 4;
+            .into());
         }
+        let out = (0..n)
+            .map(|k| {
+                let at = *off + 4 * k;
+                f32::from_le_bytes(payload[at..at + 4].try_into().unwrap())
+            })
+            .collect();
+        *off += 4 * n;
         Ok(out)
     };
-    for s in shapes {
-        let a = s.as_arr()?;
-        let (n_wo, n_wd) = (a[0].as_usize()?, a[1].as_usize()?);
-        let wo_rows = take_u32s(&bytes, &mut off, n_wo)?;
-        let wo_delta = take_f32s(&bytes, &mut off, n_wo * d)?;
-        let wd_rows = take_u32s(&bytes, &mut off, n_wd)?;
-        let wd_delta = take_f32s(&bytes, &mut off, n_wd * d)?;
+    for s in &shapes {
+        let a = s
+            .as_arr()
+            .map_err(|_| PersistError::MalformedHeader("bad layer_shapes entry".into()))?;
+        if a.len() != 2 {
+            return Err(PersistError::MalformedHeader("bad layer_shapes entry".into()).into());
+        }
+        let (n_wo, n_wd) = (
+            a[0].as_usize()
+                .map_err(|_| PersistError::MalformedHeader("bad layer_shapes entry".into()))?,
+            a[1].as_usize()
+                .map_err(|_| PersistError::MalformedHeader("bad layer_shapes entry".into()))?,
+        );
+        let wo_rows = take_u32s(&mut off, n_wo)?;
+        let wo_delta = take_f32s(&mut off, n_wo * d)?;
+        let wd_rows = take_u32s(&mut off, n_wd)?;
+        let wd_delta = take_f32s(&mut off, n_wd * d)?;
         layers.push(S2ftLayerDelta { wo_rows, wo_delta, wd_rows, wd_delta });
     }
-    if off != bytes.len() {
-        bail!("trailing bytes in adapter file");
+    if off != payload.len() {
+        return Err(PersistError::TrailingBytes(payload.len() - off).into());
     }
     Ok(S2ftAdapter { layers, d_model: d })
 }
@@ -142,13 +317,7 @@ mod tests {
         S2ftAdapter { layers, d_model: d }
     }
 
-    #[test]
-    fn roundtrip_exact() {
-        let dir = std::env::temp_dir().join(format!("adapter_{}", std::process::id()));
-        let path = dir.join("a.s2ft");
-        let a = sample(1);
-        save_adapter(&path, &a).unwrap();
-        let b = load_adapter(&path).unwrap();
+    fn assert_same(a: &S2ftAdapter, b: &S2ftAdapter) {
         assert_eq!(a.d_model, b.d_model);
         assert_eq!(a.layers.len(), b.layers.len());
         for (x, y) in a.layers.iter().zip(&b.layers) {
@@ -157,22 +326,156 @@ mod tests {
             assert_eq!(x.wd_rows, y.wd_rows);
             assert_eq!(x.wd_delta, y.wd_delta);
         }
+    }
+
+    /// Replicate the pre-checksum v1 writer byte-for-byte, so the
+    /// backward-compat path is pinned against real old files.
+    fn save_v1(path: &std::path::Path, adapter: &S2ftAdapter) {
+        let header = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("d_model", Json::num(adapter.d_model as f64)),
+            ("n_layers", Json::num(adapter.layers.len() as f64)),
+            (
+                "layer_shapes",
+                Json::Arr(
+                    adapter
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            Json::Arr(vec![
+                                Json::num(l.wo_rows.len() as f64),
+                                Json::num(l.wd_rows.len() as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&encode_payload(adapter));
+        std::fs::write(path, out).unwrap();
+    }
+
+    fn kind(err: &anyhow::Error) -> PersistError {
+        err.downcast_ref::<PersistError>()
+            .unwrap_or_else(|| panic!("untyped persist error: {err:#}"))
+            .clone()
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = std::env::temp_dir().join(format!("adapter_{}", std::process::id()));
+        let path = dir.join("a.s2ft");
+        let a = sample(1);
+        save_adapter(&path, &a).unwrap();
+        let b = load_adapter(&path).unwrap();
+        assert_same(&a, &b);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
-    fn rejects_garbage() {
+    fn reads_legacy_v1_files() {
+        let dir = std::env::temp_dir().join(format!("adapter_v1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.s2ft");
+        let a = sample(7);
+        save_v1(&path, &a);
+        let b = load_adapter(&path).unwrap();
+        assert_same(&a, &b);
+        // v1 truncation is still caught by the per-field bounds checks
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert!(matches!(kind(&err), PersistError::Truncated { .. }), "{err:#}");
+        // v1 trailing garbage is rejected too
+        let mut grown = bytes.clone();
+        grown.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&path, &grown).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert_eq!(kind(&err), PersistError::TrailingBytes(3));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn typed_errors_for_corruption() {
         let dir = std::env::temp_dir().join(format!("adapter_bad_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.s2ft");
+
+        // wrong magic
         std::fs::write(&path, b"NOPE1234").unwrap();
-        assert!(load_adapter(&path).is_err());
-        // truncated real file
+        let err = load_adapter(&path).unwrap_err();
+        assert_eq!(kind(&err), PersistError::NotAdapterFile);
+
+        // truncated payload: the v2 length check fires before decoding
         let a = sample(2);
         save_adapter(&path, &a).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
-        assert!(load_adapter(&path).is_err());
+        let err = load_adapter(&path).unwrap_err();
+        assert!(matches!(kind(&err), PersistError::Truncated { .. }), "{err:#}");
+
+        // single flipped payload byte: checksum mismatch
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert!(matches!(kind(&err), PersistError::ChecksumMismatch { .. }), "{err:#}");
+
+        // trailing bytes beyond the declared payload
+        let mut grown = bytes.clone();
+        grown.push(0xAB);
+        std::fs::write(&path, &grown).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert_eq!(kind(&err), PersistError::TrailingBytes(1));
+
+        // future version
+        let mut future = bytes.clone();
+        // patch the header text in place: "version":2 -> "version":9
+        let htext = String::from_utf8(bytes[8..].to_vec()).unwrap();
+        let vpos = 8 + htext.find("\"version\":2").unwrap() + "\"version\":".len();
+        future[vpos] = b'9';
+        std::fs::write(&path, &future).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert_eq!(kind(&err), PersistError::UnsupportedVersion(9));
+
+        // header declares itself longer than the file
+        std::fs::write(&path, [MAGIC.as_slice(), 500u32.to_le_bytes().as_slice()].concat())
+            .unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert!(matches!(kind(&err), PersistError::Truncated { .. }), "{err:#}");
+
+        // unparseable header json
+        let mut badhdr = Vec::new();
+        badhdr.extend_from_slice(MAGIC);
+        badhdr.extend_from_slice(&3u32.to_le_bytes());
+        badhdr.extend_from_slice(b"{{{");
+        std::fs::write(&path, &badhdr).unwrap();
+        let err = load_adapter(&path).unwrap_err();
+        assert!(matches!(kind(&err), PersistError::MalformedHeader(_)), "{err:#}");
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The checksum is over the payload, so editing header whitespace or
+    /// key order must not fail the integrity check (only payload bitrot
+    /// does).
+    #[test]
+    fn checksum_covers_payload_only() {
+        let dir = std::env::temp_dir().join(format!("adapter_hdr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("h.s2ft");
+        let a = sample(3);
+        save_adapter(&path, &a).unwrap();
+        let b = load_adapter(&path).unwrap();
+        assert_same(&a, &b);
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325, "FNV offset basis");
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c, "FNV-1a reference vector");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -23,12 +23,17 @@ use crate::runtime::Tensor;
 
 use super::{LoraAdapter, S2ftAdapter};
 
+/// An adapter of either supported family, as stored in an
+/// [`AdapterStore`] or [`crate::serve::AdapterRegistry`].
 pub enum AnyAdapter {
+    /// S²FT structured-sparse delta: exact fuse/unfuse via scatter-add.
     S2ft(S2ftAdapter),
+    /// Low-rank delta: fused via a ΔW GEMM, unfused by snapshot restore.
     Lora(LoraAdapter),
 }
 
 impl AnyAdapter {
+    /// Parameter memory of this adapter in bytes (f32 deltas + row ids).
     pub fn bytes(&self) -> usize {
         match self {
             AnyAdapter::S2ft(a) => a.bytes(),
@@ -153,13 +158,21 @@ pub struct AdapterStore {
 }
 
 impl AdapterStore {
+    /// Empty store; equivalent to `AdapterStore::default()`.
     pub fn new() -> Self {
         Self::default()
     }
 
     /// Register (or replace) an adapter. `&self`: safe while serving.
     pub fn insert(&self, id: impl Into<String>, adapter: AnyAdapter) {
-        self.adapters.write().unwrap().insert(id.into(), Arc::new(adapter));
+        self.insert_arc(id, Arc::new(adapter));
+    }
+
+    /// [`insert`](Self::insert) behind an existing shared handle, so a
+    /// caller (e.g. [`crate::serve::AdapterRegistry`]) can keep `Arc`
+    /// identity between its own tracking and the store.
+    pub fn insert_arc(&self, id: impl Into<String>, adapter: Arc<AnyAdapter>) {
+        self.adapters.write().unwrap().insert(id.into(), adapter);
     }
 
     /// Unregister an adapter. Workers that still have it fused keep their
@@ -173,6 +186,7 @@ impl AdapterStore {
             .ok_or_else(|| anyhow!("adapter {id:?} not in store"))
     }
 
+    /// Shared handle to the adapter registered under `id`, if any.
     pub fn get(&self, id: &str) -> Option<Arc<AnyAdapter>> {
         self.adapters.read().unwrap().get(id).cloned()
     }
@@ -184,14 +198,17 @@ impl AdapterStore {
         v
     }
 
+    /// Number of registered adapters.
     pub fn len(&self) -> usize {
         self.adapters.read().unwrap().len()
     }
 
+    /// True when no adapter is registered.
     pub fn is_empty(&self) -> bool {
         self.adapters.read().unwrap().is_empty()
     }
 
+    /// Sum of [`AnyAdapter::bytes`] over every registered adapter.
     pub fn total_bytes(&self) -> usize {
         self.adapters.read().unwrap().values().map(|a| a.bytes()).sum()
     }
@@ -216,6 +233,7 @@ pub struct AdapterSlot {
 }
 
 impl AdapterSlot {
+    /// Empty slot (no adapter fused).
     pub fn new() -> Self {
         Self::default()
     }
@@ -244,9 +262,29 @@ impl AdapterSlot {
         let next = store
             .get(id)
             .ok_or_else(|| anyhow!("adapter {id:?} not in store"))?;
+        if self.switch_to_handle(id, next, params, base_snapshot)? {
+            store.note_switch();
+        }
+        Ok(())
+    }
+
+    /// [`switch_to`](Self::switch_to) with a pre-resolved adapter handle
+    /// instead of a store lookup — the entry point used by the serve
+    /// residency layer, where the adapter comes from a pinned
+    /// [`crate::serve::AdapterLease`] rather than an [`AdapterStore`].
+    /// Same transactional contract; returns `true` when weights actually
+    /// changed (`false` for the Arc-identity no-op), so the caller owns
+    /// switch accounting.
+    pub fn switch_to_handle(
+        &mut self,
+        id: &str,
+        next: Arc<AnyAdapter>,
+        params: &mut HashMap<String, Tensor>,
+        base_snapshot: &HashMap<String, Tensor>,
+    ) -> Result<bool> {
         if let Some((aid, cur)) = &self.active {
             if aid == id && Arc::ptr_eq(cur, &next) {
-                return Ok(());
+                return Ok(false);
             }
         }
         next.validate(params)?;
@@ -257,8 +295,7 @@ impl AdapterSlot {
         match next.fuse(params) {
             Ok(()) => {
                 self.active = Some((id.to_string(), next));
-                store.note_switch();
-                Ok(())
+                Ok(true)
             }
             Err(e) => {
                 if let Some((pid, a)) = prev {

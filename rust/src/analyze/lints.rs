@@ -21,11 +21,12 @@
 //!   `benches/*.rs` must match an entry in the committed
 //!   `benches/baseline/<target>.json` and vice versa, so no perf lane
 //!   silently escapes the CI regression gate.
-//! * [`PUB_DOC`] — non-test code in `src/serve/`: every `pub` item
-//!   (fn, struct, enum, trait, const, …) must carry a rustdoc comment,
-//!   so the serving API documented in `docs/serving.md` cannot grow
-//!   undocumented surface. `pub use` re-exports, `pub(crate)`-style
-//!   restricted visibility and struct fields are exempt.
+//! * [`PUB_DOC`] — non-test code in `src/serve/` and `src/adapter/`:
+//!   every `pub` item (fn, struct, enum, trait, const, …) must carry a
+//!   rustdoc comment, so the serving and adapter APIs documented in
+//!   `docs/serving.md` cannot grow undocumented surface. `pub use`
+//!   re-exports, `pub(crate)`-style restricted visibility and struct
+//!   fields are exempt.
 
 use super::lexer::{Comment, Lexed, Tok, TokKind};
 use super::report::Finding;
@@ -41,7 +42,7 @@ pub const SAFETY: &str = "safety-comment";
 pub const NONDET: &str = "nondet";
 /// Bench lane without a committed baseline entry (or vice versa).
 pub const BENCH_BASELINE: &str = "bench-baseline";
-/// Undocumented `pub` item in the serving API.
+/// Undocumented `pub` item in the serving or adapter API.
 pub const PUB_DOC: &str = "pub-doc";
 
 /// Every suppressible lint, for allow-annotation validation.
@@ -59,7 +60,7 @@ fn float_scope(rel: &str) -> bool {
 }
 
 fn pub_doc_scope(rel: &str) -> bool {
-    rel.starts_with("src/serve/")
+    rel.starts_with("src/serve/") || rel.starts_with("src/adapter/")
 }
 
 fn nondet_scope(rel: &str) -> bool {
@@ -238,8 +239,8 @@ fn pub_doc_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<F
             .any(|cm| cm.doc && cm.end_line <= anchor && anchor - cm.end_line <= 1);
         if !covered {
             let msg = format!(
-                "`pub {kind}` without a rustdoc comment — the serving API \
-                 (src/serve/) is documented surface; see docs/serving.md"
+                "`pub {kind}` without a rustdoc comment — the serving/adapter API \
+                 (src/serve/, src/adapter/) is documented surface; see docs/serving.md"
             );
             out.push(Finding::new(PUB_DOC, rel, t.line, msg));
         }
@@ -635,7 +636,9 @@ mod tests {
     fn pub_doc_requires_rustdoc_in_serve() {
         let bad = "pub fn serve() {}\n";
         assert_eq!(lints("src/serve/engine.rs", bad), vec![PUB_DOC]);
-        // the same source is fine outside src/serve/
+        // the adapter API is documented surface too
+        assert_eq!(lints("src/adapter/store.rs", bad), vec![PUB_DOC]);
+        // the same source is fine outside src/serve/ and src/adapter/
         assert!(lints("src/train/eval.rs", bad).is_empty());
         let good = "/// Serves forever.\npub fn serve() {}\n";
         assert!(findings("src/serve/engine.rs", good).is_empty());

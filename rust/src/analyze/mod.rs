@@ -8,7 +8,8 @@
 //! `// SAFETY:` comment on every `unsafe`, no nondeterminism sources in
 //! the deterministic modules, a bench lane ↔ committed baseline
 //! bijection so no perf lane escapes the CI regression gate, and
-//! rustdoc on every `pub` item of the serving API (`src/serve/`).
+//! rustdoc on every `pub` item of the serving and adapter APIs
+//! (`src/serve/`, `src/adapter/`).
 //!
 //! Escape hatch: one plain line comment per file per lint, of the form
 //! documented on [`Allow`], suppresses that lint for the file and is

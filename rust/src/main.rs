@@ -7,7 +7,8 @@
 //!               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
 //!   repro eval  --model M --weights DIR [--suite SUITE]
 //!   repro serve --model M [--weights DIR] [--requests N] [--adapters K]
-//!               [--workers W] [--max-batch B] [--stream]
+//!               [--workers W] [--max-batch B] [--max-resident R]
+//!               [--adapter-dir DIR] [--stream]
 //!   repro experiment <id> [--quick]
 //!   repro analyze [--root DIR]
 
@@ -127,7 +128,8 @@ USAGE:
               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
   repro eval  --model M --weights DIR [--suite commonsense|arithmetic|instruct]
   repro serve --model M [--weights DIR] [--adapters K] [--requests N]
-              [--workers W] [--max-batch B] [--stream]
+              [--workers W] [--max-batch B] [--max-resident R]
+              [--adapter-dir DIR] [--stream]
   repro adapter extract|apply|info [--model M --method T --base DIR --ft DIR
               --adapter FILE --out PATH]
   repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
@@ -136,6 +138,12 @@ USAGE:
 
 Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
 variants, see `repro info`). Artifacts default to ./artifacts.
+
+serve scales to many more adapters than fit in memory: --max-resident R
+caps the decoded resident set (default 0 = unbounded, LRU spill past R)
+and --adapter-dir DIR preloads every *.s2ft file in DIR (lazy) and
+receives spilled adapters; the registry report prints hit rate, loads,
+spills and fused/unfused batch counts.
 
 Every command accepts --threads N to size the shared GEMM kernel worker
 pool (default: S2FT_THREADS env, else all cores; 0 resets to that
@@ -383,6 +391,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", 32),
         max_batch: args.usize_or("max-batch", 8),
         workers: args.usize_or("workers", 2),
+        max_resident: args.usize_or("max-resident", 0),
+        adapter_dir: args.get("adapter-dir").map(String::from),
         stream: args.has("stream"),
     })
 }

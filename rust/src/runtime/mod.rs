@@ -248,6 +248,24 @@ pub trait PagedDecodeSession {
     /// reserved.
     fn step(&mut self, tokens: &[Option<i32>]) -> Result<Vec<f32>>;
 
+    /// Attach (or clear with `None`) an adapter applied **unfused** at
+    /// decode time: every subsequent [`PagedDecodeSession::step`] adds
+    /// the adapter's per-row delta contribution on top of the *base*
+    /// weights (gather selected activations, `gemv_acc` the dense delta
+    /// rows) instead of requiring the weights to be mutated up front.
+    /// This is the serve residency manager's cold-adapter path — the
+    /// worker's fused weights stay pristine, so no unfuse is owed when
+    /// the batch ends.
+    ///
+    /// Default implementation: clearing (`None`) succeeds, attaching
+    /// fails — backends without the hook serve every adapter fused.
+    fn set_unfused_adapter(&mut self, adapter: Option<Arc<crate::adapter::AnyAdapter>>) -> Result<()> {
+        match adapter {
+            None => Ok(()),
+            Some(_) => bail!("this decode session cannot apply adapters unfused"),
+        }
+    }
+
     /// Exact pool accounting (capacity / used / peak bytes).
     fn pool_usage(&self) -> PoolUsage;
 }

@@ -30,6 +30,16 @@
 //! the serve proptests). Only causal attention mixes positions, and it
 //! only looks backward — a prefix's activations never depend on what
 //! comes after it.
+//!
+//! The paged session can additionally carry an *unfused* S²FT adapter
+//! ([`PagedDecodeSession::set_unfused_adapter`]): the per-layer delta
+//! rows are applied at decode time as a gather + dense GEMV on top of
+//! the base `wo` / `wd` projections — the same arithmetic as
+//! [`crate::adapter::parallel::s2ft_parallel`] — instead of being
+//! scatter-added into the weights. Fused and unfused application of the
+//! same adapter agree numerically but not bit-for-bit (the delta
+//! contribution is reduced separately rather than inside the base GEMM),
+//! so the bit-identity contract above is stated per application path.
 
 // s2ft-analyze: allow(nondet) reason="weight maps are keyed lookup only — never iterated — so HashMap order cannot reach the decoded tokens"
 use std::collections::HashMap;
@@ -37,7 +47,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::kernels::{attn_decode, attn_decode_paged, gemm, gemm_nt};
+use crate::adapter::{AnyAdapter, S2ftLayerDelta};
+use crate::kernels::{attn_decode, attn_decode_paged, gemm, gemm_nt, gemv_acc};
 use crate::runtime::meta::{Meta, ModelMeta};
 use crate::runtime::{DecodeSession, DecoderProvider, PagedDecodeSession, Tensor};
 use crate::serve::kvpool::{KvPool, KvPoolConfig, PoolExhausted, PoolUsage};
@@ -299,6 +310,9 @@ pub struct NativePagedDecodeSession<'p> {
     pool: KvPool,
     cos: Vec<f32>,
     sin: Vec<f32>,
+    /// S²FT adapter applied per step as gather + GEMV instead of being
+    /// fused into `w` (validated by `set_unfused_adapter`).
+    unfused: Option<Arc<AnyAdapter>>,
 }
 
 impl<'p> NativePagedDecodeSession<'p> {
@@ -334,12 +348,48 @@ impl<'p> NativePagedDecodeSession<'p> {
             pool,
             cos,
             sin,
+            unfused: None,
             mm,
         })
     }
 
     fn weight(&self, name: &str) -> &'p [f32] {
         self.w[name]
+    }
+
+    /// Layer `i` of the unfused adapter, if one is set.
+    fn unfused_layer(&self, i: usize) -> Option<&S2ftLayerDelta> {
+        match self.unfused.as_deref() {
+            Some(AnyAdapter::S2ft(a)) => a.layers.get(i),
+            _ => None,
+        }
+    }
+}
+
+/// Unfused S²FT delta on one projection: for every batch row `j`,
+/// gather the selected input activations of `x` and accumulate the
+/// dense delta-rows product into that row of `y` — the decode-time
+/// twin of [`crate::adapter::parallel::s2ft_parallel`], with one
+/// adapter shared by every row of the batch.
+fn apply_unfused_rows(
+    x: &[f32],
+    rows_idx: &[usize],
+    delta: &[f32],
+    m: usize,
+    k: usize,
+    d: usize,
+    y: &mut [f32],
+) {
+    if rows_idx.is_empty() {
+        return;
+    }
+    let mut xs = vec![0.0f32; rows_idx.len()];
+    for j in 0..m {
+        let xj = &x[j * k..(j + 1) * k];
+        for (dst, &r) in xs.iter_mut().zip(rows_idx) {
+            *dst = xj[r];
+        }
+        gemv_acc(&xs, delta, d, 1.0, &mut y[j * d..(j + 1) * d]);
     }
 }
 
@@ -459,8 +509,12 @@ impl PagedDecodeSession for NativePagedDecodeSession<'_> {
                 .collect();
             let (kp, vp) = self.pool.layer_kv(i);
             let attn = attn_decode_paged(&q, kp, vp, &tables, &qpos, heads, hd, bt, scale);
-            // h_mid = h + attn @ wo (residual add, same order as forward)
-            let wo_out = gemm(&attn, self.weight(&format!("L{i}.wo")), m, d, d);
+            // h_mid = h + attn @ (wo + ΔWo) (residual add, same order as
+            // forward; ΔWo only when an unfused adapter is set)
+            let mut wo_out = gemm(&attn, self.weight(&format!("L{i}.wo")), m, d, d);
+            if let Some(l) = self.unfused_layer(i) {
+                apply_unfused_rows(&attn, &l.wo_rows, &l.wo_delta, m, d, d, &mut wo_out);
+            }
             for (hv, ov) in h.iter_mut().zip(&wo_out) {
                 *hv += ov;
             }
@@ -471,7 +525,10 @@ impl PagedDecodeSession for NativePagedDecodeSession<'_> {
             for j in 0..m * ff {
                 act[j] = u[j] * g[j] * sigmoid(g[j]);
             }
-            let wd_out = gemm(&act, self.weight(&format!("L{i}.wd")), m, ff, d);
+            let mut wd_out = gemm(&act, self.weight(&format!("L{i}.wd")), m, ff, d);
+            if let Some(l) = self.unfused_layer(i) {
+                apply_unfused_rows(&act, &l.wd_rows, &l.wd_delta, m, ff, d, &mut wd_out);
+            }
             for (hv, ov) in h.iter_mut().zip(&wd_out) {
                 *hv += ov;
             }
@@ -489,11 +546,55 @@ impl PagedDecodeSession for NativePagedDecodeSession<'_> {
     fn pool_usage(&self) -> PoolUsage {
         self.pool.usage()
     }
+
+    fn set_unfused_adapter(&mut self, adapter: Option<Arc<AnyAdapter>>) -> Result<()> {
+        let Some(ad) = adapter else {
+            self.unfused = None;
+            return Ok(());
+        };
+        let AnyAdapter::S2ft(a) = ad.as_ref() else {
+            bail!("unfused decode supports S²FT adapters only (LoRA must be fused)");
+        };
+        let d = self.mm.dims.d_model;
+        let ff = self.mm.dims.d_ff;
+        if a.layers.len() != self.mm.dims.n_layers {
+            bail!(
+                "unfused adapter has {} layers, model has {}",
+                a.layers.len(),
+                self.mm.dims.n_layers
+            );
+        }
+        if a.d_model != d {
+            bail!("unfused adapter d_model {} != model d_model {d}", a.d_model);
+        }
+        for (i, l) in a.layers.iter().enumerate() {
+            for (proj, rows, delta, k) in [
+                ("wo", &l.wo_rows, &l.wo_delta, d),
+                ("wd", &l.wd_rows, &l.wd_delta, ff),
+            ] {
+                if let Some(&r) = rows.iter().max() {
+                    if r >= k {
+                        bail!("unfused adapter L{i}.{proj} row {r} out of bounds ({k} rows)");
+                    }
+                }
+                if delta.len() != rows.len() * d {
+                    bail!(
+                        "unfused adapter L{i}.{proj} delta length {} != {} rows x d_model {d}",
+                        delta.len(),
+                        rows.len()
+                    );
+                }
+            }
+        }
+        self.unfused = Some(ad);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapter::{LoraAdapter, S2ftAdapter};
     use crate::runtime::{Executable, Executor, NativeBackend};
 
     fn tiny_params() -> (NativeBackend, HashMap<String, Tensor>) {
@@ -503,6 +604,33 @@ mod tests {
         let params: HashMap<String, Tensor> =
             init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
         (rt, params)
+    }
+
+    /// Model dims probed from the weight pool: (d_model, d_ff, n_layers).
+    fn probe_dims(params: &HashMap<String, Tensor>) -> (usize, usize, usize) {
+        let d = params["L0.wo"].shape[1];
+        let ff = params["L0.wd"].shape[0];
+        let n_layers =
+            (0..).take_while(|i| params.contains_key(&format!("L{i}.wo"))).count();
+        (d, ff, n_layers)
+    }
+
+    /// Small deterministic S²FT adapter touching two wo rows and two wd
+    /// channels per layer.
+    fn test_s2ft_adapter(params: &HashMap<String, Tensor>) -> S2ftAdapter {
+        let (d, ff, n_layers) = probe_dims(params);
+        let delta = |n: usize| -> Vec<f32> {
+            (0..n).map(|j| ((j % 7) as f32 - 3.0) * 1e-3).collect()
+        };
+        let layers = (0..n_layers)
+            .map(|_| S2ftLayerDelta {
+                wo_rows: vec![0, d / 2],
+                wo_delta: delta(2 * d),
+                wd_rows: vec![1, ff / 2],
+                wd_delta: delta(2 * d),
+            })
+            .collect();
+        S2ftAdapter { layers, d_model: d }
     }
 
     /// The paged session must reproduce the contiguous session
@@ -603,5 +731,93 @@ mod tests {
         sess.reserve(&[0]).unwrap();
         sess.step(&[Some(3), None]).unwrap();
         assert_eq!(sess.pos(0), 3);
+    }
+
+    /// Unfused application must agree numerically with fusing the same
+    /// adapter into the weights (same math, different reduction grouping)
+    /// and must be deterministic run-to-run. It must also actually change
+    /// the logits relative to the base model.
+    #[test]
+    fn unfused_adapter_matches_fused_numerically() {
+        let (rt, params) = tiny_params();
+        let provider = rt.decoder().unwrap();
+        let a = test_s2ft_adapter(&params);
+        let mut fused_params = params.clone();
+        a.apply(&mut fused_params).unwrap();
+
+        let cfg = || KvPoolConfig { block_tokens: 4, blocks: 0 };
+        let mut fused = provider.open_paged("tiny", &fused_params, 2, 8, cfg()).unwrap().unwrap();
+        let mut base = provider.open_paged("tiny", &params, 2, 8, cfg()).unwrap().unwrap();
+        let mut unfused = provider.open_paged("tiny", &params, 2, 8, cfg()).unwrap().unwrap();
+        let mut unfused2 = provider.open_paged("tiny", &params, 2, 8, cfg()).unwrap().unwrap();
+        let handle = Arc::new(AnyAdapter::S2ft(a));
+        unfused.set_unfused_adapter(Some(handle.clone())).unwrap();
+        unfused2.set_unfused_adapter(Some(handle)).unwrap();
+
+        for s in [&mut fused, &mut base, &mut unfused, &mut unfused2] {
+            s.admit(0).unwrap();
+            s.admit(1).unwrap();
+        }
+        let toks = |i: usize, r: usize| ((i * 13 + r * 7 + 5) % 256) as i32;
+        let mut adapter_moved_logits = false;
+        for i in 0..6 {
+            let feed = [Some(toks(i, 0)), Some(toks(i, 1))];
+            let mut out = Vec::new();
+            for s in [&mut fused, &mut base, &mut unfused, &mut unfused2] {
+                s.reserve(&[0, 1]).unwrap();
+                out.push(s.step(&feed).unwrap());
+            }
+            for (x, y) in out[0].iter().zip(&out[2]) {
+                assert!(
+                    (x - y).abs() <= 1e-3 + 1e-3 * x.abs(),
+                    "fused {x} vs unfused {y} diverged at step {i}"
+                );
+            }
+            adapter_moved_logits |=
+                out[1].iter().zip(&out[2]).any(|(b, u)| b.to_bits() != u.to_bits());
+            assert!(
+                out[2].iter().zip(&out[3]).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "unfused application must be deterministic (step {i})"
+            );
+        }
+        assert!(adapter_moved_logits, "unfused adapter had no effect on logits");
+    }
+
+    /// `set_unfused_adapter` validates against the model before
+    /// accepting: LoRA, layer-count / d_model mismatches, out-of-bounds
+    /// rows and short delta buffers are all rejected; `None` clears.
+    #[test]
+    fn set_unfused_adapter_validates() {
+        let (rt, params) = tiny_params();
+        let provider = rt.decoder().unwrap();
+        let (d, ff, n_layers) = probe_dims(&params);
+        let cfg = KvPoolConfig { block_tokens: 4, blocks: 0 };
+        let mut sess = provider.open_paged("tiny", &params, 1, 8, cfg).unwrap().unwrap();
+
+        let mk = |a: S2ftAdapter| Some(Arc::new(AnyAdapter::S2ft(a)));
+        let lora = AnyAdapter::Lora(LoraAdapter { layers: vec![], scale: 1.0 });
+        assert!(sess.set_unfused_adapter(Some(Arc::new(lora))).is_err(), "LoRA rejected");
+        assert!(
+            sess.set_unfused_adapter(mk(S2ftAdapter { layers: vec![], d_model: d })).is_err(),
+            "layer-count mismatch rejected"
+        );
+        let good = test_s2ft_adapter(&params);
+        let mut wrong_d = good.clone();
+        wrong_d.d_model = d + 1;
+        assert!(sess.set_unfused_adapter(mk(wrong_d)).is_err(), "d_model mismatch rejected");
+        let mut oob = good.clone();
+        oob.layers[0].wo_rows = vec![d];
+        oob.layers[0].wo_delta = vec![0.0; d];
+        assert!(sess.set_unfused_adapter(mk(oob)).is_err(), "wo row out of bounds rejected");
+        let mut oob_wd = good.clone();
+        oob_wd.layers[0].wd_rows = vec![ff];
+        oob_wd.layers[0].wd_delta = vec![0.0; d];
+        assert!(sess.set_unfused_adapter(mk(oob_wd)).is_err(), "wd row out of bounds rejected");
+        let mut short = good.clone();
+        short.layers[n_layers - 1].wd_delta.pop();
+        assert!(sess.set_unfused_adapter(mk(short)).is_err(), "short delta rejected");
+
+        sess.set_unfused_adapter(mk(good)).unwrap();
+        sess.set_unfused_adapter(None).unwrap();
     }
 }

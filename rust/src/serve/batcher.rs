@@ -145,6 +145,21 @@ impl<T> AdapterBatcher<T> {
     /// `prefer` (the caller's currently-fused adapter) when it has queued
     /// requests — the switch-free fast path for engine-pool workers.
     pub fn next_batch_preferring(&mut self, prefer: Option<&str>) -> Option<BatchPlan<T>> {
+        self.next_batch_preferring_where(prefer, |_| true)
+    }
+
+    /// [`Self::next_batch_preferring`] with a residency hint: while
+    /// nothing is overdue, groups for which `resident` answers `true`
+    /// (their adapter weights are already in memory) are picked before
+    /// non-resident ones, largest-first within each class — so a worker
+    /// only pays a lazy adapter load when no resident work is queued.
+    /// The starvation guard and [`SchedPolicy::Fifo`] ignore the hint
+    /// entirely: age still beats residency.
+    pub fn next_batch_preferring_where(
+        &mut self,
+        prefer: Option<&str>,
+        resident: impl Fn(&str) -> bool,
+    ) -> Option<BatchPlan<T>> {
         if let Some(p) = prefer {
             let preferable = self.policy == SchedPolicy::AdapterAffinity
                 && !self.any_overdue()
@@ -152,6 +167,19 @@ impl<T> AdapterBatcher<T> {
             if preferable {
                 return Some(self.take_group(p.to_string()));
             }
+        }
+        if self.policy == SchedPolicy::AdapterAffinity && !self.any_overdue() {
+            let mut counts: std::collections::HashMap<&str, usize> = Default::default();
+            for q in &self.queue {
+                *counts.entry(q.adapter.as_str()).or_default() += 1;
+            }
+            // ties (same residency, same size) break on adapter id, so
+            // the choice never depends on hash-map iteration order
+            let pick = counts
+                .into_iter()
+                .max_by_key(|(a, c)| (resident(a), *c, std::cmp::Reverse(*a)))
+                .map(|(a, _)| a.to_string());
+            return pick.map(|a| self.take_group(a));
         }
         self.next_batch()
     }
@@ -306,6 +334,42 @@ mod tests {
         b.push("mine", 2);
         let p = b.next_batch_preferring(Some("mine")).unwrap();
         assert_eq!(p.adapter, "old");
+    }
+
+    /// Residency hint: resident groups are served before non-resident
+    /// ones while fresh; preference, age and Fifo all override it.
+    #[test]
+    fn preferring_where_picks_resident_groups_first() {
+        let mut b = AdapterBatcher::new(8, Duration::from_secs(60));
+        b.push("big", 1);
+        b.push("big", 2);
+        b.push("big", 3);
+        b.push("res", 4);
+        let p = b.next_batch_preferring_where(None, |id| id == "res").unwrap();
+        assert_eq!(p.adapter, "res", "resident beats the larger non-resident group");
+        let p2 = b.next_batch_preferring_where(None, |id| id == "res").unwrap();
+        assert_eq!(p2.adapter, "big", "without resident work, size wins as before");
+        // the worker's fused adapter still wins over residency
+        b.push("big", 5);
+        b.push("res", 6);
+        let p3 = b.next_batch_preferring_where(Some("big"), |id| id == "res").unwrap();
+        assert_eq!(p3.adapter, "big");
+
+        // overdue requests beat residency
+        let mut o = AdapterBatcher::new(8, Duration::from_millis(1));
+        o.push("old", 1);
+        std::thread::sleep(Duration::from_millis(3));
+        o.push("res", 2);
+        let po = o.next_batch_preferring_where(None, |id| id == "res").unwrap();
+        assert_eq!(po.adapter, "old");
+
+        // Fifo ignores the hint
+        let mut f =
+            AdapterBatcher::new(8, Duration::from_secs(60)).with_policy(SchedPolicy::Fifo);
+        f.push("a", 1);
+        f.push("b", 2);
+        let pf = f.next_batch_preferring_where(None, |id| id == "b").unwrap();
+        assert_eq!(pf.adapter, "a");
     }
 
     /// Fifo policy: strictly oldest request's group first, group size is

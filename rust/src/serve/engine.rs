@@ -15,20 +15,38 @@
 //!        │  │  readout ▸ retire  │ │             KvPool; streams join/leave
 //!        │  └─────────┬──────────┘ │             between decode steps
 //!        └────────────┴────────────┘
-//!              Arc<AdapterStore>                 (thread-safe registry:
-//!                                                 register/unregister/fuse
-//!                                                 while serving)
+//!               AdapterRegistry                  (bounded resident set,
+//!            (wraps AdapterStore)                 LRU spill + lazy load,
+//!                                                 traffic-driven fuse policy)
 //! ```
 //!
 //! Each worker owns a full copy of the (merged, base-layout) weights and
-//! an [`AdapterSlot`]; the [`AdapterStore`] is shared. A worker asks the
-//! batcher for work *preferring its currently-fused adapter*, so under
-//! steady multi-adapter load the pool converges to one adapter per worker
-//! and switches only when the mix shifts — the paper §6.2 decoupling in
+//! an [`AdapterSlot`]; the [`AdapterRegistry`] is shared and mirrors its
+//! resident adapters into an [`AdapterStore`]. A worker asks the batcher
+//! for work *preferring its currently-fused adapter* (and otherwise
+//! favouring groups whose adapter is already resident), so under steady
+//! multi-adapter load the pool converges to one adapter per worker and
+//! switches only when the mix shifts — the paper §6.2 decoupling in
 //! all three modes at once: **fuse** ([`Engine::fuse`] merges adapters
 //! into a new servable one), **fast switch** (scatter_add per run via
 //! the slot) and **parallel serve** (different adapters live on different
 //! workers concurrently).
+//!
+//! # Adapter residency & fuse policy
+//!
+//! The registry scales the lifecycle to thousands of registered
+//! adapters: at most `max_resident` stay decoded in memory, the rest
+//! live on disk under `adapter_dir` (pre-registered lazily at spawn,
+//! and the spill target for evicted residents). Before serving a plan
+//! the worker *acquires* a pinned lease on the plan's adapter — lazily
+//! loading it on a residency miss — and asks the registry's traffic
+//! policy how to apply it: hot adapters (EWMA requests/sec ≥ `hot_rps`)
+//! are fused into the worker weights via the slot, cold ones are
+//! applied unfused at decode time
+//! ([`PagedDecodeSession::set_unfused_adapter`]), skipping the
+//! fuse/unfuse round trip. The two paths agree numerically (not
+//! bitwise) and each is individually deterministic; `hot_rps = 0` (the
+//! default) always fuses, preserving the bit-tested fused path.
 //!
 //! # Continuous batching
 //!
@@ -49,6 +67,7 @@
 //! change any stream's tokens — asserted bitwise by the serve tests.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -67,6 +86,7 @@ use crate::train::{DecodeRequest, GenModel, TokenSampler};
 use super::batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
 use super::kvpool::{KvPoolConfig, PoolUsage};
 use super::metrics::{KvPoolGauge, ServeMetrics};
+use super::residency::{AdapterLease, AdapterRegistry, FusePolicy, ResidencyConfig};
 
 /// Reserved adapter id meaning "pristine base weights, nothing fused".
 pub const BASE_ADAPTER: &str = "base";
@@ -83,9 +103,13 @@ pub const BASE_ADAPTER: &str = "base";
 ///     .window(Duration::from_millis(2))
 ///     .policy(SchedPolicy::AdapterAffinity)
 ///     .kv_block_tokens(16)        // paged-KV block granularity
-///     .kv_blocks(0);              // 0 = auto-size (eviction-free)
+///     .kv_blocks(0)               // 0 = auto-size (eviction-free)
+///     .max_resident(64)           // resident-adapter budget (0 = unbounded)
+///     .adapter_dir("/tmp/adapters")
+///     .hot_rps(4.0);              // fuse adapters hotter than 4 req/s
 /// assert_eq!(cfg.workers, 2);
 /// assert_eq!(cfg.kv_block_tokens, 16);
+/// assert_eq!(cfg.max_resident, 64);
 /// ```
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -103,6 +127,18 @@ pub struct EngineConfig {
     /// streams can all reach the model context length (no eviction).
     /// Smaller values cap cache memory and enable backpressure.
     pub kv_blocks: usize,
+    /// Resident-adapter budget for the shared registry; `0` keeps every
+    /// registered adapter in memory. Over budget, the least-recently-used
+    /// unpinned adapter is spilled to `adapter_dir` (or simply dropped
+    /// when a clean on-disk copy already exists).
+    pub max_resident: usize,
+    /// Directory of persisted adapters: every `*.s2ft` file in it is
+    /// registered (lazily) at spawn, and evicted residents spill there.
+    pub adapter_dir: Option<PathBuf>,
+    /// EWMA requests/sec at or above which an adapter is fused into the
+    /// worker weights; colder adapters are applied unfused at decode
+    /// time. `0` (default) always fuses, `f64::INFINITY` never does.
+    pub hot_rps: f64,
 }
 
 impl Default for EngineConfig {
@@ -114,6 +150,9 @@ impl Default for EngineConfig {
             policy: SchedPolicy::AdapterAffinity,
             kv_block_tokens: KvPoolConfig::default().block_tokens,
             kv_blocks: 0,
+            max_resident: 0,
+            adapter_dir: None,
+            hot_rps: 0.0,
         }
     }
 }
@@ -158,6 +197,24 @@ impl EngineConfig {
     /// Set the per-worker KV-pool block count (`0` = auto-size).
     pub fn kv_blocks(mut self, n: usize) -> Self {
         self.kv_blocks = n;
+        self
+    }
+
+    /// Cap the registry's resident adapters (`0` = unbounded).
+    pub fn max_resident(mut self, n: usize) -> Self {
+        self.max_resident = n;
+        self
+    }
+
+    /// Set the adapter preload/spill directory.
+    pub fn adapter_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.adapter_dir = Some(dir.into());
+        self
+    }
+
+    /// Set the fused-application traffic threshold in requests/sec.
+    pub fn hot_rps(mut self, rps: f64) -> Self {
+        self.hot_rps = rps;
         self
     }
 }
@@ -374,7 +431,7 @@ struct Shared {
     cfg: EngineConfig,
     queue: Mutex<QueueState>,
     cv: Condvar,
-    store: AdapterStore,
+    registry: AdapterRegistry,
     metrics: Mutex<ServeMetrics>,
     live: AtomicUsize,
 }
@@ -398,10 +455,21 @@ impl Engine {
         let workers = cfg.workers;
         let max_wait = cfg.window.max(Duration::from_millis(1)) * 4;
         let batcher = AdapterBatcher::new(cfg.max_batch, max_wait).with_policy(cfg.policy);
+        let registry = AdapterRegistry::new(ResidencyConfig {
+            max_resident: cfg.max_resident,
+            spill_dir: cfg.adapter_dir.clone(),
+            hot_rps: cfg.hot_rps,
+            ..ResidencyConfig::default()
+        });
+        if let Some(dir) = &cfg.adapter_dir {
+            // best-effort preload: a fresh spill dir simply starts empty
+            let _ = std::fs::create_dir_all(dir);
+            let _ = registry.register_dir(dir);
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { batcher, open: true }),
             cv: Condvar::new(),
-            store: AdapterStore::new(),
+            registry,
             metrics: Mutex::new(ServeMetrics::default()),
             live: AtomicUsize::new(workers),
             cfg,
@@ -469,30 +537,31 @@ impl Engine {
 
     // --- runtime adapter lifecycle (paper §6.2) -------------------------
 
-    /// Register (or replace) an adapter while serving.
+    /// Register (or replace) an adapter while serving. It enters the
+    /// registry resident (and may spill a colder adapter past the
+    /// residency budget).
     pub fn register(&self, id: impl Into<String>, adapter: AnyAdapter) {
-        self.shared.store.insert(id, adapter);
+        self.shared.registry.insert_resident(id, adapter);
     }
 
-    /// Unregister an adapter. In-flight batches already fused on it
-    /// finish normally (workers hold their own handle).
+    /// Unregister an adapter (resident or spilled). In-flight batches
+    /// already serving it finish normally (workers hold their own
+    /// handle); any on-disk spill file is left alone.
     pub fn unregister(&self, id: &str) -> Result<()> {
-        self.shared.store.remove(id)
+        self.shared.registry.remove(id)
     }
 
     /// Fuse-mode: weighted-combine registered S²FT adapters into a new
-    /// adapter registered as `new_id`, servable immediately.
+    /// adapter registered as `new_id`, servable immediately. Sources are
+    /// acquired through the registry, so spilled parts are lazily
+    /// reloaded (and pinned) for the combination.
     pub fn fuse(&self, new_id: impl Into<String>, parts: &[(&str, f32)]) -> Result<()> {
-        let handles: Vec<(Arc<AnyAdapter>, f32)> = parts
+        let leases: Vec<(AdapterLease<'_>, f32)> = parts
             .iter()
-            .map(|(id, w)| {
-                self.shared
-                    .store
-                    .get(id)
-                    .map(|a| (a, *w))
-                    .ok_or_else(|| anyhow!("adapter {id:?} not in store"))
-            })
+            .map(|(id, w)| self.shared.registry.acquire(id).map(|l| (l, *w)))
             .collect::<Result<_>>()?;
+        let handles: Vec<(Arc<AnyAdapter>, f32)> =
+            leases.iter().map(|(l, w)| (l.handle(), *w)).collect();
         let refs: Vec<(&S2ftAdapter, f32)> = handles
             .iter()
             .map(|(a, w)| match a.as_ref() {
@@ -501,18 +570,25 @@ impl Engine {
             })
             .collect::<Result<_>>()?;
         let fused = S2ftAdapter::fuse(&refs)?;
-        self.shared.store.insert(new_id, AnyAdapter::S2ft(fused));
+        self.shared.registry.insert_resident(new_id, AnyAdapter::S2ft(fused));
         Ok(())
     }
 
-    /// The shared adapter registry.
+    /// The shared adapter store — the registry's resident mirror, kept
+    /// for in-memory introspection (`len()`, `total_bytes()`, ...).
     pub fn store(&self) -> &AdapterStore {
-        &self.shared.store
+        self.shared.registry.store()
     }
 
-    /// Registered adapter ids, sorted.
+    /// The shared adapter residency registry (see
+    /// [`crate::serve::AdapterRegistry`]).
+    pub fn registry(&self) -> &AdapterRegistry {
+        &self.shared.registry
+    }
+
+    /// Registered adapter ids (resident or spilled), sorted.
     pub fn adapters(&self) -> Vec<String> {
-        self.shared.store.ids()
+        self.shared.registry.ids()
     }
 
     /// Number of worker threads in the pool.
@@ -521,10 +597,10 @@ impl Engine {
     }
 
     /// Snapshot of the engine-wide serving metrics (counters, latency
-    /// percentiles, KV-pool gauges).
+    /// percentiles, KV-pool gauges, adapter-residency counters).
     pub fn metrics(&self) -> ServeMetrics {
         let mut m = self.shared.metrics.lock().unwrap().clone();
-        m.switches = self.shared.store.switches();
+        m.residency = self.shared.registry.stats();
         m
     }
 
@@ -624,7 +700,11 @@ fn next_plan(shared: &Shared, prefer: Option<&str>) -> Option<BatchPlan<Job>> {
         let (qq, _) = shared.cv.wait_timeout(q, shared.cfg.window - age).unwrap();
         q = qq;
     }
-    q.batcher.next_batch_preferring(prefer)
+    // among equally-eligible groups, favour adapters that are already
+    // resident: serving them costs no lazy load (and likely no spill)
+    q.batcher.next_batch_preferring_where(prefer, |a| {
+        a == BASE_ADAPTER || shared.registry.is_resident(a)
+    })
 }
 
 fn fail_all(items: Vec<Queued<Job>>, msg: &str) {
@@ -633,7 +713,9 @@ fn fail_all(items: Vec<Queued<Job>>, msg: &str) {
     }
 }
 
-/// Serve one scheduled plan: fuse the adapter, then run either the
+/// Serve one scheduled plan: acquire a pinned lease on the adapter
+/// (lazily loading it from disk on a residency miss), apply it fused or
+/// unfused per the registry's traffic policy, then run either the
 /// continuous paged path (native) or the legacy wave path (no paged
 /// session available).
 fn serve_plan(
@@ -644,11 +726,30 @@ fn serve_plan(
     snapshot: &HashMap<String, Tensor>,
     plan: BatchPlan<Job>,
 ) {
-    // adapter-affinity switch (at most one per run; scatter_add for S²FT)
-    let switched = if plan.adapter == BASE_ADAPTER {
-        slot.deactivate(&mut gm.params, snapshot)
+    let lease = if plan.adapter == BASE_ADAPTER {
+        None
     } else {
-        slot.switch_to(&shared.store, &plan.adapter, &mut gm.params, snapshot)
+        match shared.registry.acquire(&plan.adapter) {
+            Ok(l) => Some(l),
+            // the registry is unchanged and the engine keeps serving —
+            // only this batch fails
+            Err(e) => return fail_all(plan.items, &format!("adapter switch failed: {e:#}")),
+        }
+    };
+    // cold adapters skip the fuse/unfuse round trip and are applied at
+    // decode time instead (continuous path only — the wave fallback
+    // below late-fuses when no paged session materialises)
+    let unfused = lease.as_ref().is_some_and(|l| {
+        gm.has_decoder()
+            && matches!(l.handle().as_ref(), AnyAdapter::S2ft(_))
+            && shared.registry.fuse_policy(l.id()) == FusePolicy::Unfused
+    });
+
+    // adapter-affinity switch (at most one per run; scatter_add for S²FT)
+    let switched = match &lease {
+        Some(l) if !unfused => timed_switch(shared, slot, &plan.adapter, l, gm, snapshot),
+        // base plans and unfused plans both serve from pristine weights
+        _ => slot.deactivate(&mut gm.params, snapshot),
     };
     if let Err(e) = switched {
         // transactional switch: previous adapter still fused, the engine
@@ -663,20 +764,65 @@ fn serve_plan(
         };
         match gm.open_paged_session(shared.cfg.max_batch, kvcfg) {
             Ok(Some(mut sess)) => {
-                return continuous_run(id, shared, gm, sess.as_mut(), &plan.adapter, plan.items);
+                if unfused {
+                    let handle = lease.as_ref().expect("unfused implies a lease").handle();
+                    if let Err(e) = sess.set_unfused_adapter(Some(handle)) {
+                        return fail_all(plan.items, &format!("adapter switch failed: {e:#}"));
+                    }
+                }
+                let (reqs, toks) =
+                    continuous_run(id, shared, gm, sess.as_mut(), &plan.adapter, plan.items);
+                if let Some(l) = &lease {
+                    shared.registry.note_batch(l.id(), reqs, toks, unfused);
+                }
+                return;
             }
-            Ok(None) => {} // decoder without a paged path: wave fallback
+            Ok(None) => {
+                // decoder without a paged path: the wave fallback serves
+                // from the worker weights, so a policy-unfused adapter
+                // must be fused after all
+                if unfused {
+                    let l = lease.as_ref().expect("unfused implies a lease");
+                    if let Err(e) = timed_switch(shared, slot, &plan.adapter, l, gm, snapshot) {
+                        return fail_all(plan.items, &format!("adapter switch failed: {e:#}"));
+                    }
+                }
+            }
             Err(e) => {
                 return fail_all(plan.items, &format!("paged decode unavailable: {e:#}"));
             }
         }
     }
-    serve_wave(id, shared, gm, plan);
+    let (reqs, toks) = serve_wave(id, shared, gm, plan);
+    if let Some(l) = &lease {
+        shared.registry.note_batch(l.id(), reqs, toks, false);
+    }
+}
+
+/// Fuse `lease`'s adapter into the worker weights through `slot`,
+/// recording switch count and wall time in the metrics when the weights
+/// actually changed (repeat activations are free and uncounted).
+fn timed_switch(
+    shared: &Shared,
+    slot: &mut AdapterSlot,
+    adapter: &str,
+    lease: &AdapterLease<'_>,
+    gm: &mut GenModel,
+    snapshot: &HashMap<String, Tensor>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    if slot.switch_to_handle(adapter, lease.handle(), &mut gm.params, snapshot)? {
+        let mut m = shared.metrics.lock().unwrap();
+        m.switches += 1;
+        m.switch_ns += t0.elapsed().as_nanos() as u64;
+    }
+    Ok(())
 }
 
 /// Legacy wave path: one `generate_stream` call over the whole batch
-/// (the only path AOT/PJRT artifact backends can serve).
-fn serve_wave(id: usize, shared: &Shared, gm: &GenModel, plan: BatchPlan<Job>) {
+/// (the only path AOT/PJRT artifact backends can serve). Returns
+/// `(requests served, tokens generated)` for traffic accounting.
+fn serve_wave(id: usize, shared: &Shared, gm: &GenModel, plan: BatchPlan<Job>) -> (usize, usize) {
     let items = plan.items;
     let bs = items.len();
     let reqs: Vec<DecodeRequest> = items
@@ -701,13 +847,17 @@ fn serve_wave(id: usize, shared: &Shared, gm: &GenModel, plan: BatchPlan<Job>) {
     });
     let texts = match texts {
         Ok(t) => t,
-        Err(e) => return fail_all(items, &format!("generation failed: {e:#}")),
+        Err(e) => {
+            fail_all(items, &format!("generation failed: {e:#}"));
+            return (0, 0);
+        }
     };
+    let total_tokens: usize = counts.iter().sum();
     {
         let mut m = shared.metrics.lock().unwrap();
         m.requests += bs;
         m.batches += 1;
-        m.tokens += counts.iter().sum::<usize>();
+        m.tokens += total_tokens;
         for item in &items {
             m.record_latency_ms(item.payload.t0.elapsed().as_secs_f64() * 1e3);
         }
@@ -723,6 +873,7 @@ fn serve_wave(id: usize, shared: &Shared, gm: &GenModel, plan: BatchPlan<Job>) {
             adapter: item.adapter,
         }));
     }
+    (bs, total_tokens)
 }
 
 /// One live stream inside a continuous run.
@@ -763,6 +914,9 @@ fn kv_gauge(u: &PoolUsage) -> KvPoolGauge {
 /// — so for the same request the continuous path produces the same
 /// tokens as `generate_stream`/`generate_full_recompute` (asserted by
 /// the serve integration tests).
+///
+/// Returns `(requests served, tokens generated)` for traffic accounting
+/// (evicted or failed streams are not counted as served).
 fn continuous_run(
     id: usize,
     shared: &Shared,
@@ -770,7 +924,7 @@ fn continuous_run(
     sess: &mut dyn PagedDecodeSession,
     adapter: &str,
     items: Vec<Queued<Job>>,
-) {
+) -> (usize, usize) {
     let tk = Tokenizer;
     let vocab = gm.vocab();
     let t_max = sess.max_seq();
@@ -783,6 +937,7 @@ fn continuous_run(
     // LIFO free list so row reuse is deterministic
     let mut free_rows: Vec<usize> = (0..rows_cap).rev().collect();
     let mut next_seq: u64 = 0;
+    let (mut done_requests, mut done_tokens) = (0usize, 0usize);
 
     // exactly-one-terminal-event guarantee: every exit from this loop
     // either finishes, evicts or fails each stream it ever admitted
@@ -813,6 +968,7 @@ fn continuous_run(
                     worker: id,
                     adapter: adapter.to_string(),
                 }));
+                done_requests += 1;
                 processed_any = true;
                 continue;
             }
@@ -941,7 +1097,7 @@ fn continuous_run(
                     let _ = s.job.events.send(GenEvent::Error(msg.clone()));
                 }
                 fail_all(pending.into(), &msg);
-                return;
+                return (done_requests, done_tokens);
             }
         };
 
@@ -984,6 +1140,8 @@ fn continuous_run(
                 m.record_latency_ms(latency.as_secs_f64() * 1e3);
                 m.record_kv(id, kv_gauge(&sess.pool_usage()));
             }
+            done_requests += 1;
+            done_tokens += s.generated.len();
             let _ = s.job.events.send(GenEvent::Done(GenReply {
                 text,
                 tokens: s.generated.len(),
@@ -996,6 +1154,7 @@ fn continuous_run(
     }
     // final gauge: all streams retired, the pool reads fully free
     shared.metrics.lock().unwrap().record_kv(id, kv_gauge(&sess.pool_usage()));
+    (done_requests, done_tokens)
 }
 
 /// Pull more same-adapter work for a running continuous batch. Empty

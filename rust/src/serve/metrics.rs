@@ -1,5 +1,7 @@
 //! Engine-wide serving metrics.
 
+use super::residency::ResidencyStats;
+
 /// Point-in-time KV-pool gauge for one worker, mirrored from
 /// [`crate::serve::kvpool::PoolUsage`] whenever that worker finishes a
 /// request or drains its running batch.
@@ -30,13 +32,21 @@ pub struct ServeMetrics {
     /// Admission waves: one per continuous-batching admission of ≥1
     /// stream, or one per wave on the legacy full-recompute path.
     pub batches: usize,
-    /// Adapter activations/deactivations performed by workers.
+    /// Adapter switches that actually changed a worker's weights
+    /// (re-activating the already-fused adapter is free and uncounted).
     pub switches: usize,
+    /// Wall-clock nanoseconds spent inside adapter switches (fuse +
+    /// unfuse), summed across workers; `switch_ns / switches` is the
+    /// mean switch cost ([`ServeMetrics::mean_switch_us`]).
+    pub switch_ns: u64,
     /// Total tokens generated (streamed) across all requests.
     pub tokens: usize,
     /// Streams terminated early to reclaim KV-pool blocks under
     /// backpressure (each also delivered exactly one `Error` event).
     pub evictions: usize,
+    /// Adapter-residency counters mirrored from the engine's
+    /// [`crate::serve::AdapterRegistry`] when the snapshot is taken.
+    pub residency: ResidencyStats,
     latencies_ms: Vec<f64>,
     /// Per-worker KV-pool gauges, indexed by worker id.
     kv: Vec<KvPoolGauge>,
@@ -63,6 +73,15 @@ impl ServeMetrics {
         }
         let rank = (p * n as f64).ceil() as usize;
         self.latencies_ms[rank.clamp(1, n) - 1]
+    }
+
+    /// Mean adapter-switch cost in microseconds (0 before any switch).
+    pub fn mean_switch_us(&self) -> f64 {
+        if self.switches == 0 {
+            0.0
+        } else {
+            self.switch_ns as f64 / self.switches as f64 / 1e3
+        }
     }
 
     /// Mean requests per batch (`requests / batches`), 0 when nothing
@@ -130,6 +149,15 @@ mod tests {
         assert_eq!(m.percentile_ms(1.0), 40.0);
         assert_eq!(m.percentile_ms(0.5), 20.0);
         assert_eq!(m.mean_batch_size(), 2.0);
+    }
+
+    #[test]
+    fn mean_switch_cost_is_ns_over_switches() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.mean_switch_us(), 0.0);
+        m.switches = 4;
+        m.switch_ns = 8_000;
+        assert_eq!(m.mean_switch_us(), 2.0);
     }
 
     /// Nearest-rank must not truncate toward low ranks: p99 of 9 samples

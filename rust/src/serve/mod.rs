@@ -1,11 +1,18 @@
 //! Multi-adapter serving (paper §6.2, S-LoRA-style scenario).
 //!
 //! Public API: [`Engine`] — an N-worker pool over one shared
-//! [`crate::adapter::AdapterStore`]. Requests ([`GenRequest`]) carry
-//! per-request sampling parameters and stream their tokens back as
-//! [`GenEvent`]s over a [`ReplyStream`]; the batcher groups requests by
-//! adapter id (adapter-affinity) so each worker iteration pays at most
-//! one adapter switch — the scatter_add fast path S²FT makes cheap.
+//! [`AdapterRegistry`]. Requests ([`GenRequest`]) carry per-request
+//! sampling parameters and stream their tokens back as [`GenEvent`]s
+//! over a [`ReplyStream`]; the batcher groups requests by adapter id
+//! (adapter-affinity) so each worker iteration pays at most one adapter
+//! switch — the scatter_add fast path S²FT makes cheap.
+//!
+//! The registry scales that lifecycle to thousands of registered
+//! adapters: a bounded resident set with LRU spill to disk, lazy reload
+//! on demand, and a per-adapter traffic EWMA that decides whether a
+//! batch fuses its adapter into the worker weights (hot) or applies it
+//! unfused at decode time (cold). See [`residency`]'s docs for the full
+//! model.
 //!
 //! When the backend provides a paged decode session (native), workers
 //! run **continuous batching**: requests join and leave the running
@@ -22,6 +29,9 @@ mod engine;
 /// Fixed-size-block paged KV-cache pool backing continuous batching.
 pub mod kvpool;
 mod metrics;
+/// Bounded adapter residency: LRU spill, lazy load, traffic-driven
+/// fuse policy.
+pub mod residency;
 
 pub use batcher::{AdapterBatcher, BatchPlan, Queued, SchedPolicy};
 pub use engine::{
@@ -30,6 +40,10 @@ pub use engine::{
 };
 pub use kvpool::{KvPool, KvPoolConfig, PoolExhausted, PoolUsage};
 pub use metrics::{KvPoolGauge, ServeMetrics};
+pub use residency::{
+    AdapterLease, AdapterRegistry, AdapterTraffic, FusePolicy, ResidencyConfig, ResidencyStats,
+    ADAPTER_EXT,
+};
 
 use anyhow::Result;
 
@@ -50,6 +64,11 @@ pub struct DemoOpts {
     pub requests: usize,
     pub max_batch: usize,
     pub workers: usize,
+    /// Resident-adapter budget (`0` = keep everything in memory); see
+    /// `EngineConfig::max_resident`.
+    pub max_resident: usize,
+    /// Adapter preload/spill directory; see `EngineConfig::adapter_dir`.
+    pub adapter_dir: Option<String>,
     /// Print the first request's tokens as they stream in.
     pub stream: bool,
 }
@@ -79,13 +98,17 @@ pub fn synthetic_adapter(mm: &ModelMeta, rng: &mut Rng) -> AnyAdapter {
 /// Spins an [`Engine`] pool, registers `adapters` synthetic S²FT
 /// adapters at runtime, demonstrates fuse-mode by combining the first
 /// two, and fires `requests` prompts round-robin across the adapters.
-/// Reports throughput, latency percentiles, switch count, tokens
-/// streamed and adapter memory.
+/// Reports throughput, latency percentiles, switch count and cost,
+/// tokens streamed, adapter memory and registry residency counters.
 pub fn demo(opts: DemoOpts) -> Result<()> {
-    let cfg = EngineConfig::new()
+    let mut cfg = EngineConfig::new()
         .workers(opts.workers)
         .max_batch(opts.max_batch)
-        .window(std::time::Duration::from_millis(3));
+        .window(std::time::Duration::from_millis(3))
+        .max_resident(opts.max_resident);
+    if let Some(dir) = &opts.adapter_dir {
+        cfg = cfg.adapter_dir(dir);
+    }
     let artifacts = opts.artifacts.clone();
     let backend = opts.backend.clone();
     let model_name = opts.model.clone();
@@ -129,8 +152,10 @@ pub fn demo(opts: DemoOpts) -> Result<()> {
     }
     let base_bytes: usize = 4 * mm.param_count;
     println!(
-        "engine up: {} workers, {} adapters ({:.1} KB total, vs {:.1} MB base weights/worker)",
+        "engine up: {} workers, {} adapters registered / {} resident ({:.1} KB resident, vs \
+         {:.1} MB base weights/worker)",
         engine.workers(),
+        engine.registry().len(),
         engine.store().len(),
         engine.store().total_bytes() as f64 / 1e3,
         base_bytes as f64 / 1e6
@@ -192,12 +217,26 @@ pub fn demo(opts: DemoOpts) -> Result<()> {
         m.tokens as f64 / wall.as_secs_f64()
     );
     println!(
-        "batches {} (mean size {:.1}), adapter switches {}, latency p50 {:.0} ms / p99 {:.0} ms",
+        "batches {} (mean size {:.1}), adapter switches {} (mean {:.1} us), latency p50 \
+         {:.0} ms / p99 {:.0} ms",
         m.batches,
         m.mean_batch_size(),
         m.switches,
+        m.mean_switch_us(),
         m.percentile_ms(0.5),
         m.percentile_ms(0.99)
+    );
+    let r = &m.residency;
+    println!(
+        "residency: {} registered / {} resident, hit rate {:.2} ({} load(s), {} spill(s)), \
+         batches {} fused / {} unfused",
+        r.registered,
+        r.resident,
+        r.hit_rate(),
+        r.loads,
+        r.spills,
+        r.fused_batches,
+        r.unfused_batches
     );
     if m.kv_capacity_bytes() > 0 {
         println!(

@@ -1,0 +1,696 @@
+//! Adapter residency for thousand-adapter multi-tenant serving.
+//!
+//! An [`AdapterRegistry`] tracks every adapter a deployment knows about
+//! — far more than fit in memory at once — and keeps only a bounded
+//! *resident set* of decoded weights, the S-LoRA-style scenario of
+//! paper §6.2 scaled out: S²FT deltas are small (s·d floats per layer),
+//! so a thousand registered adapters are cheap on disk and a few dozen
+//! resident ones serve the working set.
+//!
+//! Three cooperating mechanisms:
+//!
+//! * **Residency (LRU + pinning).** Every acquire stamps the entry with
+//!   a monotone tick. When the resident set exceeds
+//!   [`ResidencyConfig::max_resident`], the coldest unpinned entry is
+//!   spilled: written to [`ResidencyConfig::spill_dir`] in the
+//!   [`crate::adapter::save_adapter`] format if its weights are not
+//!   already on disk (`dirty`), then dropped from memory. In-flight
+//!   work pins entries via [`AdapterLease`] (RAII — dropping the lease
+//!   unpins), so a batch can never have its weights spilled from under
+//!   it. LoRA adapters have no persist format and are never spilled;
+//!   they can push the resident set over budget, which is tolerated
+//!   rather than violating correctness.
+//! * **Lazy load.** Acquiring a non-resident adapter decodes it from
+//!   its on-disk copy under the registry lock (loads serialize; S²FT
+//!   payloads are kilobytes, so a load costs about as much as a fuse).
+//! * **Traffic-driven fuse policy.** [`AdapterRegistry::note_batch`]
+//!   feeds per-adapter EWMA requests/sec; [`AdapterRegistry::fuse_policy`]
+//!   answers [`FusePolicy::Fused`] for hot adapters (scatter-add the
+//!   delta into the worker's weights — cheapest when many consecutive
+//!   batches reuse it) and [`FusePolicy::Unfused`] for cold ones (apply
+//!   the delta at decode time via gather + GEMV,
+//!   [`crate::runtime::PagedDecodeSession::set_unfused_adapter`], so a
+//!   one-off request pays no fuse/unfuse round trip). With the default
+//!   `hot_rps = 0` every adapter is considered hot, preserving the
+//!   bit-tested fused path.
+//!
+//! The registry wraps the engine's [`AdapterStore`] and mirrors the
+//! resident set into it, so existing store-based introspection
+//! (`len()`, `total_bytes()`) keeps reporting the in-memory state.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::adapter::{load_adapter, save_adapter, AdapterStore, AnyAdapter};
+
+/// File extension for persisted adapters; [`AdapterRegistry::register_dir`]
+/// scans for `*.s2ft` and uses the file stem as the adapter id.
+pub const ADAPTER_EXT: &str = "s2ft";
+
+/// Residency and fuse-policy knobs for an [`AdapterRegistry`].
+#[derive(Debug, Clone)]
+pub struct ResidencyConfig {
+    /// Resident-set budget; `0` means unbounded (nothing ever spills).
+    pub max_resident: usize,
+    /// Where dirty adapters are written when spilled. `None` makes
+    /// never-persisted adapters unspillable (they stay resident).
+    pub spill_dir: Option<PathBuf>,
+    /// EWMA requests/sec at or above which an adapter is fused.
+    /// `0` (default) fuses unconditionally; `f64::INFINITY` forces the
+    /// unfused path for every adapter.
+    pub hot_rps: f64,
+    /// Smoothing factor for the per-adapter rate EWMA in `(0, 1]`;
+    /// higher reacts faster to traffic shifts.
+    pub ewma_alpha: f64,
+}
+
+impl Default for ResidencyConfig {
+    fn default() -> Self {
+        Self { max_resident: 0, spill_dir: None, hot_rps: 0.0, ewma_alpha: 0.3 }
+    }
+}
+
+/// How a worker should apply an adapter to serve a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusePolicy {
+    /// Scatter-add the delta into the live weights (hot path).
+    Fused,
+    /// Leave base weights untouched; apply the delta per decode step
+    /// (cold path — no fuse/unfuse round trip).
+    Unfused,
+}
+
+/// Residency counters, exposed through
+/// [`crate::serve::ServeMetrics::residency`] and the `repro serve`
+/// report. Counter fields are cumulative; `registered` / `resident` are
+/// point-in-time gauges filled by [`AdapterRegistry::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Adapters the registry knows about (resident or on disk).
+    pub registered: usize,
+    /// Adapters currently decoded in memory.
+    pub resident: usize,
+    /// Acquires served from the resident set.
+    pub hits: usize,
+    /// Acquires that found the adapter non-resident.
+    pub misses: usize,
+    /// Successful lazy loads from disk (one per miss that recovered).
+    pub loads: usize,
+    /// Adapters evicted from the resident set (written to disk first
+    /// when dirty).
+    pub spills: usize,
+    /// Batches served with the adapter fused into worker weights.
+    pub fused_batches: usize,
+    /// Batches served with the adapter applied unfused at decode time.
+    pub unfused_batches: usize,
+}
+
+impl ResidencyStats {
+    /// Fraction of acquires served without touching disk (1.0 when no
+    /// acquire has happened yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Cumulative request/token counters and the traffic EWMA for one
+/// registered adapter ([`AdapterRegistry::traffic`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdapterTraffic {
+    /// Requests served under this adapter.
+    pub requests: u64,
+    /// Tokens generated under this adapter.
+    pub tokens: u64,
+    /// Smoothed requests/sec (see [`ResidencyConfig::ewma_alpha`]);
+    /// 0 until a second batch establishes an interval.
+    pub ewma_rps: f64,
+}
+
+/// Per-adapter registry entry: at most one of memory/disk may be
+/// missing, never both.
+struct Entry {
+    resident: Option<Arc<AnyAdapter>>,
+    disk: Option<PathBuf>,
+    /// Resident weights differ from (or lack) an on-disk copy, so a
+    /// spill must write before dropping.
+    dirty: bool,
+    pins: usize,
+    last_used: u64,
+    traffic: AdapterTraffic,
+    last_batch: Option<Instant>,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<String, Entry>,
+    /// Monotone LRU clock, bumped per acquire/insert.
+    tick: u64,
+    stats: ResidencyStats,
+}
+
+/// Bounded-residency adapter registry: the serving tier's source of
+/// truth for which adapters exist, which are in memory, and how hot
+/// each one is. See the module docs for the full model.
+pub struct AdapterRegistry {
+    store: AdapterStore,
+    cfg: ResidencyConfig,
+    inner: Mutex<Inner>,
+}
+
+impl AdapterRegistry {
+    /// Empty registry with the given residency policy.
+    pub fn new(cfg: ResidencyConfig) -> Self {
+        Self { store: AdapterStore::new(), cfg, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// The backing [`AdapterStore`] mirroring the resident set (shared
+    /// introspection surface: `len()`, `total_bytes()`, ...).
+    pub fn store(&self) -> &AdapterStore {
+        &self.store
+    }
+
+    /// The policy this registry was built with.
+    pub fn config(&self) -> &ResidencyConfig {
+        &self.cfg
+    }
+
+    /// Register `adapter` with its weights resident (the classic
+    /// runtime-registration path). The entry starts dirty: it has no
+    /// on-disk copy until a spill writes one. Replaces any previous
+    /// entry under `id` and may spill a colder adapter to stay within
+    /// budget.
+    pub fn insert_resident(&self, id: impl Into<String>, adapter: AnyAdapter) {
+        let id = id.into();
+        let handle = Arc::new(adapter);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.insert(
+            id.clone(),
+            Entry {
+                resident: Some(handle.clone()),
+                disk: None,
+                dirty: true,
+                pins: 0,
+                last_used: tick,
+                traffic: AdapterTraffic::default(),
+                last_batch: None,
+            },
+        );
+        self.store.insert_arc(id, handle);
+        self.evict_to_budget(&mut inner);
+    }
+
+    /// Register an adapter by its on-disk file without decoding it; the
+    /// weights load lazily on first [`acquire`](Self::acquire).
+    /// Replaces any previous entry under `id`.
+    pub fn register_on_disk(&self, id: impl Into<String>, path: impl Into<PathBuf>) {
+        let id = id.into();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let prev = inner.entries.insert(
+            id.clone(),
+            Entry {
+                resident: None,
+                disk: Some(path.into()),
+                dirty: false,
+                pins: 0,
+                last_used: tick,
+                traffic: AdapterTraffic::default(),
+                last_batch: None,
+            },
+        );
+        if prev.and_then(|e| e.resident).is_some() {
+            let _ = self.store.remove(&id);
+        }
+    }
+
+    /// Register every `*.s2ft` file under `dir` (id = file stem, lazy
+    /// load), in sorted order. Returns how many were registered.
+    pub fn register_dir(&self, dir: impl AsRef<Path>) -> Result<usize> {
+        let dir = dir.as_ref();
+        let mut paths = Vec::new();
+        for e in
+            std::fs::read_dir(dir).with_context(|| format!("read adapter dir {}", dir.display()))?
+        {
+            let p = e?.path();
+            if p.extension().and_then(|s| s.to_str()) == Some(ADAPTER_EXT) {
+                paths.push(p);
+            }
+        }
+        paths.sort();
+        let mut n = 0;
+        for p in paths {
+            let Some(stem) = p.file_stem().and_then(|s| s.to_str()) else { continue };
+            self.register_on_disk(stem.to_string(), p.clone());
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Forget `id` entirely (memory and registry; any on-disk file is
+    /// left alone). In-flight leases keep their `Arc` and stay valid.
+    pub fn remove(&self, id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner
+            .entries
+            .remove(id)
+            .ok_or_else(|| anyhow!("adapter {id:?} not registered"))?;
+        if e.resident.is_some() {
+            let _ = self.store.remove(id);
+        }
+        Ok(())
+    }
+
+    /// Pin `id`'s weights in memory and return a lease on them, lazily
+    /// loading from disk on a residency miss. The entry cannot be
+    /// spilled while the lease lives; drop it when the batch is done.
+    pub fn acquire(&self, id: &str) -> Result<AdapterLease<'_>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner
+            .entries
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("adapter {id:?} not registered"))?;
+        if let Some(a) = entry.resident.clone() {
+            entry.pins += 1;
+            entry.last_used = tick;
+            inner.stats.hits += 1;
+            return Ok(AdapterLease { registry: self, id: id.to_string(), adapter: a });
+        }
+        let path = entry
+            .disk
+            .clone()
+            .ok_or_else(|| anyhow!("adapter {id:?} has neither resident weights nor a disk copy"))?;
+        inner.stats.misses += 1;
+        let loaded = Arc::new(AnyAdapter::S2ft(
+            load_adapter(&path)
+                .with_context(|| format!("lazy-load adapter {id:?} from {}", path.display()))?,
+        ));
+        inner.stats.loads += 1;
+        let entry = inner.entries.get_mut(id).unwrap();
+        entry.resident = Some(loaded.clone());
+        entry.dirty = false;
+        entry.pins += 1;
+        entry.last_used = tick;
+        self.store.insert_arc(id, loaded.clone());
+        self.evict_to_budget(&mut inner);
+        Ok(AdapterLease { registry: self, id: id.to_string(), adapter: loaded })
+    }
+
+    /// Record a served batch for `id`: bumps the cumulative counters,
+    /// updates the rate EWMA from the inter-batch interval, and tallies
+    /// which application path (`unfused`) the batch used.
+    pub fn note_batch(&self, id: &str, requests: usize, tokens: usize, unfused: bool) {
+        self.note_batch_at(id, requests, tokens, unfused, Instant::now());
+    }
+
+    pub(crate) fn note_batch_at(
+        &self,
+        id: &str,
+        requests: usize,
+        tokens: usize,
+        unfused: bool,
+        now: Instant,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        if unfused {
+            inner.stats.unfused_batches += 1;
+        } else {
+            inner.stats.fused_batches += 1;
+        }
+        let Some(e) = inner.entries.get_mut(id) else { return };
+        e.traffic.requests += requests as u64;
+        e.traffic.tokens += tokens as u64;
+        if let Some(last) = e.last_batch {
+            let dt = now.duration_since(last).as_secs_f64().max(1e-6);
+            let inst = requests as f64 / dt;
+            let a = self.cfg.ewma_alpha.clamp(0.0, 1.0);
+            e.traffic.ewma_rps = a * inst + (1.0 - a) * e.traffic.ewma_rps;
+        }
+        e.last_batch = Some(now);
+    }
+
+    /// Decide how a worker should apply `id` for the next batch. Hot
+    /// (effective rate ≥ [`ResidencyConfig::hot_rps`]) → fuse; cold →
+    /// apply unfused. The effective rate is the EWMA capped by
+    /// `1 / seconds-since-last-batch`, so an adapter that stops getting
+    /// traffic cools down even though its EWMA is stale.
+    pub fn fuse_policy(&self, id: &str) -> FusePolicy {
+        self.fuse_policy_at(id, Instant::now())
+    }
+
+    pub(crate) fn fuse_policy_at(&self, id: &str, now: Instant) -> FusePolicy {
+        if self.cfg.hot_rps <= 0.0 {
+            return FusePolicy::Fused;
+        }
+        let inner = self.inner.lock().unwrap();
+        let Some(e) = inner.entries.get(id) else { return FusePolicy::Unfused };
+        let Some(last) = e.last_batch else { return FusePolicy::Unfused };
+        let dt = now.duration_since(last).as_secs_f64().max(1e-6);
+        let effective = e.traffic.ewma_rps.min(1.0 / dt);
+        if effective >= self.cfg.hot_rps {
+            FusePolicy::Fused
+        } else {
+            FusePolicy::Unfused
+        }
+    }
+
+    /// Traffic counters for `id`, if registered.
+    pub fn traffic(&self, id: &str) -> Option<AdapterTraffic> {
+        self.inner.lock().unwrap().entries.get(id).map(|e| e.traffic)
+    }
+
+    /// Whether `id`'s weights are currently decoded in memory.
+    pub fn is_resident(&self, id: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(id)
+            .is_some_and(|e| e.resident.is_some())
+    }
+
+    /// Every registered adapter id (resident or not), sorted.
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.lock().unwrap().entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Number of registered adapters (resident or not).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().entries.is_empty()
+    }
+
+    /// Point-in-time snapshot of the counters plus the current
+    /// registered/resident gauges.
+    pub fn stats(&self) -> ResidencyStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = inner.stats;
+        s.registered = inner.entries.len();
+        s.resident = inner.entries.values().filter(|e| e.resident.is_some()).count();
+        s
+    }
+
+    /// Can this entry leave the resident set right now? Clean entries
+    /// need an on-disk copy to fall back to; dirty ones need a spill
+    /// dir to write to and must be S²FT (LoRA has no persist format).
+    fn spillable(&self, e: &Entry) -> bool {
+        if e.dirty {
+            matches!(e.resident.as_deref(), Some(AnyAdapter::S2ft(_)))
+                && self.cfg.spill_dir.is_some()
+        } else {
+            e.disk.is_some()
+        }
+    }
+
+    /// Spill coldest unpinned spillable entries until the resident set
+    /// fits the budget. When nothing qualifies (everything pinned or
+    /// unspillable) the set is left over budget — correctness beats the
+    /// cap. Spill write failures likewise stop eviction for this round.
+    fn evict_to_budget(&self, inner: &mut Inner) {
+        let cap = self.cfg.max_resident;
+        if cap == 0 {
+            return;
+        }
+        loop {
+            let resident = inner.entries.values().filter(|e| e.resident.is_some()).count();
+            if resident <= cap {
+                return;
+            }
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.resident.is_some() && e.pins == 0 && self.spillable(e))
+                .min_by_key(|(id, e)| (e.last_used, id.to_string()))
+                .map(|(id, _)| id.clone());
+            let Some(id) = victim else { return };
+            if self.spill_locked(inner, &id).is_err() {
+                return;
+            }
+        }
+    }
+
+    /// Drop `id`'s resident weights, writing them to the spill dir
+    /// first when no on-disk copy exists yet.
+    fn spill_locked(&self, inner: &mut Inner, id: &str) -> Result<()> {
+        let e = inner.entries.get_mut(id).ok_or_else(|| anyhow!("adapter {id:?} vanished"))?;
+        let Some(a) = e.resident.clone() else { return Ok(()) };
+        if e.dirty {
+            let dir = self
+                .cfg
+                .spill_dir
+                .as_ref()
+                .ok_or_else(|| anyhow!("no spill dir configured"))?;
+            let AnyAdapter::S2ft(s) = a.as_ref() else {
+                bail!("LoRA adapters cannot be spilled");
+            };
+            let path = dir.join(format!("{id}.{ADAPTER_EXT}"));
+            save_adapter(&path, s).with_context(|| format!("spill adapter {id:?}"))?;
+            e.disk = Some(path);
+            e.dirty = false;
+        }
+        e.resident = None;
+        let _ = self.store.remove(id);
+        inner.stats.spills += 1;
+        Ok(())
+    }
+}
+
+/// RAII pin on one resident adapter: holds the shared weight handle and
+/// keeps the entry unspillable until dropped.
+pub struct AdapterLease<'r> {
+    registry: &'r AdapterRegistry,
+    id: String,
+    adapter: Arc<AnyAdapter>,
+}
+
+impl AdapterLease<'_> {
+    /// The leased adapter's id.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Shared handle to the leased weights (valid past the lease — the
+    /// `Arc` keeps them alive — but no longer pinned once it drops).
+    pub fn handle(&self) -> Arc<AnyAdapter> {
+        self.adapter.clone()
+    }
+}
+
+impl Drop for AdapterLease<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.registry.inner.lock().unwrap();
+        if let Some(e) = inner.entries.get_mut(&self.id) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::{LoraAdapter, S2ftAdapter, S2ftLayerDelta};
+    use std::time::Duration;
+
+    fn s2ft(seed: u32, d: usize) -> AnyAdapter {
+        AnyAdapter::S2ft(S2ftAdapter {
+            layers: vec![S2ftLayerDelta {
+                wo_rows: vec![0, 2],
+                wo_delta: (0..2 * d).map(|j| (seed * 1000 + j as u32) as f32 * 1e-3).collect(),
+                wd_rows: vec![1],
+                wd_delta: (0..d).map(|j| (seed * 7 + j as u32) as f32 * 1e-2).collect(),
+            }],
+            d_model: d,
+        })
+    }
+
+    fn same_weights(a: &AnyAdapter, b: &AnyAdapter) -> bool {
+        let (AnyAdapter::S2ft(a), AnyAdapter::S2ft(b)) = (a, b) else {
+            return false;
+        };
+        a.d_model == b.d_model
+            && a.layers.len() == b.layers.len()
+            && a.layers.iter().zip(&b.layers).all(|(x, y)| {
+                x.wo_rows == y.wo_rows
+                    && x.wd_rows == y.wd_rows
+                    && x.wo_delta.iter().zip(&y.wo_delta).all(|(p, q)| p.to_bits() == q.to_bits())
+                    && x.wd_delta.iter().zip(&y.wd_delta).all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("s2ft-residency-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lru_spill_and_lazy_reload_are_lossless() {
+        let dir = temp_dir("lru");
+        let reg = AdapterRegistry::new(ResidencyConfig {
+            max_resident: 2,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        let original = s2ft(1, 8);
+        let keep = match &original {
+            AnyAdapter::S2ft(a) => a.clone(),
+            _ => unreachable!(),
+        };
+        reg.insert_resident("a", original);
+        reg.insert_resident("b", s2ft(2, 8));
+        reg.insert_resident("c", s2ft(3, 8));
+        // cap 2: "a" (coldest) spilled to disk, still registered
+        assert!(!reg.is_resident("a"));
+        assert!(reg.is_resident("b") && reg.is_resident("c"));
+        assert_eq!(reg.ids(), vec!["a", "b", "c"]);
+        assert_eq!(reg.store().len(), 2, "store mirrors the resident set");
+        let s = reg.stats();
+        assert_eq!((s.registered, s.resident, s.spills), (3, 2, 1));
+
+        // lazy reload on acquire: bitwise-identical weights, "b" (now
+        // coldest) spilled to make room
+        let lease = reg.acquire("a").unwrap();
+        assert!(same_weights(&lease.handle(), &AnyAdapter::S2ft(keep)));
+        assert!(!reg.is_resident("b"));
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.loads, s.spills), (0, 1, 1, 2));
+        drop(lease);
+
+        // resident acquire is a hit and touches no disk state
+        let _l2 = reg.acquire("a").unwrap();
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.loads), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinned_entries_never_spill() {
+        let dir = temp_dir("pin");
+        let reg = AdapterRegistry::new(ResidencyConfig {
+            max_resident: 1,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        reg.insert_resident("a", s2ft(1, 4));
+        let lease = reg.acquire("a").unwrap();
+        // "a" is pinned and colder, so the budget falls on "b"
+        reg.insert_resident("b", s2ft(2, 4));
+        assert!(reg.is_resident("a"), "pinned entry must stay resident");
+        assert!(!reg.is_resident("b"));
+        drop(lease);
+        // unpinned now: acquiring "b" reloads it and spills "a"
+        let _b = reg.acquire("b").unwrap();
+        assert!(!reg.is_resident("a"));
+        assert!(reg.is_resident("b"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unspillable_adapters_tolerate_over_budget() {
+        let dir = temp_dir("lora");
+        let reg = AdapterRegistry::new(ResidencyConfig {
+            max_resident: 1,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        reg.insert_resident("lora", AnyAdapter::Lora(LoraAdapter { layers: vec![], scale: 1.0 }));
+        reg.insert_resident("s", s2ft(1, 4));
+        // the S²FT adapter is the only spill candidate
+        assert!(reg.is_resident("lora"));
+        assert!(!reg.is_resident("s"));
+        // with nothing spillable left, the set stays over budget
+        let pin = reg.acquire("s").unwrap();
+        assert!(reg.is_resident("lora") && reg.is_resident("s"));
+        assert_eq!(reg.stats().resident, 2);
+        drop(pin);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ewma_traffic_drives_fuse_policy() {
+        let reg = AdapterRegistry::new(ResidencyConfig {
+            hot_rps: 2.0,
+            ewma_alpha: 1.0,
+            ..Default::default()
+        });
+        reg.insert_resident("a", s2ft(1, 4));
+        let t0 = Instant::now();
+        // unknown interval yet -> cold
+        reg.note_batch_at("a", 4, 16, false, t0);
+        assert_eq!(reg.fuse_policy_at("a", t0 + Duration::from_millis(1)), FusePolicy::Unfused);
+        // 4 requests in 100 ms = 40 rps -> hot
+        reg.note_batch_at("a", 4, 16, false, t0 + Duration::from_millis(100));
+        assert_eq!(
+            reg.fuse_policy_at("a", t0 + Duration::from_millis(200)),
+            FusePolicy::Fused
+        );
+        // stale EWMA is capped by 1/dt: ten idle seconds cool it down
+        assert_eq!(
+            reg.fuse_policy_at("a", t0 + Duration::from_secs(10)),
+            FusePolicy::Unfused
+        );
+        let t = reg.traffic("a").unwrap();
+        assert_eq!((t.requests, t.tokens), (8, 32));
+        assert!((t.ewma_rps - 40.0).abs() < 1e-6);
+
+        // hot_rps = 0 disables the policy entirely (always fused)
+        let always = AdapterRegistry::new(ResidencyConfig::default());
+        assert_eq!(always.fuse_policy_at("anything", t0), FusePolicy::Fused);
+        // fused/unfused batch tallies land in the stats
+        reg.note_batch_at("a", 1, 2, true, t0 + Duration::from_millis(300));
+        let s = reg.stats();
+        assert_eq!((s.fused_batches, s.unfused_batches), (2, 1));
+    }
+
+    #[test]
+    fn register_dir_scans_and_lazily_loads() {
+        let dir = temp_dir("scan");
+        let AnyAdapter::S2ft(a1) = s2ft(1, 8) else { unreachable!() };
+        let AnyAdapter::S2ft(a2) = s2ft(2, 8) else { unreachable!() };
+        save_adapter(dir.join("alpha.s2ft"), &a1).unwrap();
+        save_adapter(dir.join("beta.s2ft"), &a2).unwrap();
+        std::fs::write(dir.join("notes.txt"), "not an adapter").unwrap();
+
+        let reg = AdapterRegistry::new(ResidencyConfig::default());
+        assert_eq!(reg.register_dir(&dir).unwrap(), 2);
+        assert_eq!(reg.ids(), vec!["alpha", "beta"]);
+        assert!(!reg.is_resident("alpha"), "registration must not decode");
+        let lease = reg.acquire("alpha").unwrap();
+        assert!(same_weights(&lease.handle(), &AnyAdapter::S2ft(a1)));
+        assert_eq!(reg.stats().loads, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn acquire_and_remove_error_paths() {
+        let reg = AdapterRegistry::new(ResidencyConfig::default());
+        assert!(reg.acquire("ghost").is_err());
+        assert!(reg.remove("ghost").is_err());
+        reg.register_on_disk("broken", "/nonexistent/path.s2ft");
+        assert!(reg.acquire("broken").is_err(), "load failure surfaces to the caller");
+        assert!(!reg.is_resident("broken"), "failed load leaves the entry non-resident");
+        reg.remove("broken").unwrap();
+        assert!(reg.is_empty());
+    }
+}

@@ -55,6 +55,80 @@ fn prop_batcher_conserves_requests() {
     }
 }
 
+/// Residency round-trip invariant: for random adapter geometries and
+/// weights (including negative zeros and denormal-scale values), an
+/// adapter pushed out of the resident set by LRU pressure and lazily
+/// reloaded on acquire is bitwise-identical to the one registered —
+/// spill→save→load must not perturb a single mantissa bit.
+#[test]
+fn prop_registry_spill_reload_bitwise_identical() {
+    use repro::adapter::AnyAdapter;
+    use repro::serve::{AdapterRegistry, ResidencyConfig};
+
+    let dir = std::env::temp_dir()
+        .join(format!("s2ft-prop-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for case in 0..16 {
+        let mut rng = Rng::seed(0x5B11 + case as u64);
+        let d = 2 + rng.below(14);
+        let n_layers = 1 + rng.below(3);
+        let mk = |rng: &mut Rng| {
+            let layers = (0..n_layers)
+                .map(|_| {
+                    let (ko, kd) = (1 + rng.below(d), 1 + rng.below(4));
+                    let wo_rows = rng.choose(d, ko);
+                    let wd_rows = rng.choose(4 * d, kd);
+                    S2ftLayerDelta {
+                        wo_delta: (0..wo_rows.len() * d)
+                            .map(|_| rng.normal_f32() * 1e-20)
+                            .collect(),
+                        wo_rows,
+                        wd_delta: (0..wd_rows.len() * d).map(|_| -rng.normal_f32()).collect(),
+                        wd_rows,
+                    }
+                })
+                .collect();
+            S2ftAdapter { layers, d_model: d }
+        };
+        let originals: Vec<S2ftAdapter> = (0..3).map(|_| mk(&mut rng)).collect();
+
+        let reg = AdapterRegistry::new(ResidencyConfig {
+            max_resident: 1,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        for (i, a) in originals.iter().enumerate() {
+            reg.insert_resident(format!("c{case}-a{i}"), AnyAdapter::S2ft(a.clone()));
+        }
+        // registering 3 under budget 1 spilled the two coldest; acquiring
+        // in random order churns every one of them through disk
+        for _ in 0..6 {
+            let i = rng.below(3);
+            let lease = reg.acquire(&format!("c{case}-a{i}")).unwrap();
+            let handle = lease.handle();
+            let AnyAdapter::S2ft(got) = handle.as_ref() else {
+                panic!("case {case}: adapter changed kind");
+            };
+            let want = &originals[i];
+            assert_eq!(got.d_model, want.d_model, "case {case} adapter {i}");
+            assert_eq!(got.layers.len(), want.layers.len(), "case {case} adapter {i}");
+            for (lg, lw) in got.layers.iter().zip(&want.layers) {
+                assert_eq!(lg.wo_rows, lw.wo_rows, "case {case} adapter {i}");
+                assert_eq!(lg.wd_rows, lw.wd_rows, "case {case} adapter {i}");
+                assert!(
+                    bits_eq(&lg.wo_delta, &lw.wo_delta) && bits_eq(&lg.wd_delta, &lw.wd_delta),
+                    "case {case} adapter {i}: reloaded delta bits diverged"
+                );
+            }
+        }
+        let s = reg.stats();
+        assert!(s.spills >= 2 && s.loads >= 1, "case {case}: no churn happened: {s:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Permutation invariants: trainable-first + inverse compose to identity.
 #[test]
 fn prop_permutation_roundtrip() {

@@ -394,6 +394,70 @@ mod native {
         engine.shutdown().unwrap();
     }
 
+    /// Residency: an adapter that was spilled to disk and lazily
+    /// reloaded must serve byte-identical text to an engine that never
+    /// spilled it — exercised on the fused path (`hot_rps = 0`) and on
+    /// the policy-unfused decode path (`hot_rps = ∞`). Each path is
+    /// individually deterministic, so the texts must match exactly.
+    #[test]
+    fn spilled_and_reloaded_adapter_serves_identical_text() {
+        let spawn = |cfg: EngineConfig| {
+            let engine = Engine::spawn(cfg.workers(1).max_batch(2), |_| {
+                let rt = NativeBackend::builtin();
+                let init = rt.load("init_tiny")?;
+                let outs = init.run(&[Tensor::scalar_i32(3)])?;
+                let params: HashMap<String, Tensor> =
+                    init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+                let snapshot = params.clone();
+                Ok((GenModel::new(&rt, "tiny", params)?, snapshot))
+            });
+            let mut rng = Rng::seed(77);
+            for a in 0..3 {
+                engine.register(format!("a{a}"), tiny_adapter(&mut rng));
+            }
+            engine
+        };
+        // a0 -> a1 -> a0 -> a2 -> a0: with max_resident = 1 every change
+        // spills the previous adapter and reloads the next from disk
+        let serve = |engine: &Engine| -> Vec<String> {
+            ["a0", "a1", "a0", "a2", "a0"]
+                .iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    engine
+                        .call(GenRequest::new(*a, format!("q: item {i}?")).max_new(4))
+                        .unwrap()
+                        .text
+                })
+                .collect()
+        };
+        for (tag, hot_rps) in [("fused", 0.0), ("unfused", f64::INFINITY)] {
+            let dir = std::env::temp_dir()
+                .join(format!("s2ft-serve-spill-{tag}-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+
+            let reference = spawn(EngineConfig::new().hot_rps(hot_rps));
+            let want = serve(&reference);
+            reference.shutdown().unwrap();
+
+            let churn =
+                spawn(EngineConfig::new().hot_rps(hot_rps).max_resident(1).adapter_dir(&dir));
+            let got = serve(&churn);
+            let r = churn.metrics().residency;
+            assert!(r.spills >= 2, "{tag}: spill path not exercised: {r:?}");
+            assert!(r.loads >= 2, "{tag}: reload path not exercised: {r:?}");
+            assert!(r.registered == 3 && r.resident <= 2, "{tag}: budget ignored: {r:?}");
+            if hot_rps == 0.0 {
+                assert!(r.fused_batches >= 1 && r.unfused_batches == 0, "{tag}: {r:?}");
+            } else {
+                assert!(r.unfused_batches >= 1 && r.fused_batches == 0, "{tag}: {r:?}");
+            }
+            churn.shutdown().unwrap();
+            assert_eq!(got, want, "{tag}: spilled+reloaded adapter text diverged");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
     /// The documented `ReplyStream::recv` contract: exactly one terminal
     /// event, then `None` forever.
     #[test]
