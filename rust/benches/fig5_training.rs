@@ -25,6 +25,7 @@ use repro::data::{lm_batch, pretrain_corpus, Tokenizer};
 use repro::runtime::native::builtin;
 use repro::runtime::native::set_full_backward_override;
 use repro::runtime::{open_backend, Executable, Executor, NativeBackend, Tensor};
+use repro::sparsity::strategy::for_name;
 use repro::train::Trainer;
 use repro::util::bench::BenchSuite;
 use repro::util::rng::Rng;
@@ -105,6 +106,29 @@ fn main() {
             set_full_backward_override(Some(false));
         }
         rt.evict(&format!("train_{model}_{method}_{b}x{t}"));
+    }
+
+    // Replan overhead: a static strategy forced to re-commit the identical
+    // selection every step, so each iteration pays the full
+    // merge→rebuild→remap→reload cycle on top of one optimizer step. The
+    // recommit is a bitwise identity (proptest-enforced); the delta over
+    // `train_step/s2ft` is the cost of dynamic re-selection itself.
+    if let Some(meth) = mm.methods.get("s2ft").filter(|_| rt.platform() == "native") {
+        let strat = for_name("static", &meth.selection, meth.select_small).expect("static strategy");
+        let mut trainer =
+            Trainer::with_strategy(rt.as_ref(), model, "s2ft", &base, 3, strat, 1, b, t)
+                .expect("strategy trainer");
+        let mut rng = Rng::seed(5);
+        let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+        trainer.train_step(&batch).expect("replan warmup step");
+        suite.bench("train_step/s2ft_replan_recommit", || {
+            let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+            let replanned = trainer.maybe_replan(rt.as_ref(), &batch).expect("replan");
+            assert!(replanned, "replan_every=1 must replan each step");
+            trainer.train_step(&batch).expect("replan train step");
+        });
+        act_bytes_note("s2ft_replan_recommit", &trainer);
+        rt.evict(&format!("train_{model}_s2ft_{b}x{t}"));
     }
 
     // Concentrated selection: only the top layer's wo/wd train, so the

@@ -67,7 +67,8 @@ impl S2ftAdapter {
             if let (Some(heads), Some(perm)) =
                 (counts.get("wo"), perms.get(&format!("L{i}.head_perm")))
             {
-                let sel = sparsity::selected_units(perm.as_i32()?, *heads);
+                let hperm: Vec<usize> = perm.as_i32()?.iter().map(|&x| x as usize).collect();
+                let sel = sparsity::selected_units(&hperm, *heads);
                 delta.wo_rows = sparsity::expand_head_perm(&sel, hd);
                 delta.wo_delta = diff_rows(
                     base[&format!("L{i}.wo")].as_f32()?,
@@ -79,7 +80,8 @@ impl S2ftAdapter {
             if let (Some(chans), Some(perm)) =
                 (counts.get("wd"), perms.get(&format!("L{i}.chan_perm")))
             {
-                delta.wd_rows = sparsity::selected_units(perm.as_i32()?, *chans);
+                let cperm: Vec<usize> = perm.as_i32()?.iter().map(|&x| x as usize).collect();
+                delta.wd_rows = sparsity::selected_units(&cperm, *chans);
                 delta.wd_delta = diff_rows(
                     base[&format!("L{i}.wd")].as_f32()?,
                     merged[&format!("L{i}.wd")].as_f32()?,

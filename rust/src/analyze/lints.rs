@@ -21,10 +21,11 @@
 //!   `benches/*.rs` must match an entry in the committed
 //!   `benches/baseline/<target>.json` and vice versa, so no perf lane
 //!   silently escapes the CI regression gate.
-//! * [`PUB_DOC`] — non-test code in `src/serve/` and `src/adapter/`:
-//!   every `pub` item (fn, struct, enum, trait, const, …) must carry a
-//!   rustdoc comment, so the serving and adapter APIs documented in
-//!   `docs/serving.md` cannot grow undocumented surface. `pub use`
+//! * [`PUB_DOC`] — non-test code in `src/serve/`, `src/adapter/` and
+//!   `src/sparsity/`: every `pub` item (fn, struct, enum, trait, const,
+//!   …) must carry a rustdoc comment, so the serving, adapter and
+//!   selection-strategy APIs documented in `docs/serving.md` /
+//!   `docs/training.md` cannot grow undocumented surface. `pub use`
 //!   re-exports, `pub(crate)`-style restricted visibility and struct
 //!   fields are exempt.
 
@@ -42,7 +43,7 @@ pub const SAFETY: &str = "safety-comment";
 pub const NONDET: &str = "nondet";
 /// Bench lane without a committed baseline entry (or vice versa).
 pub const BENCH_BASELINE: &str = "bench-baseline";
-/// Undocumented `pub` item in the serving or adapter API.
+/// Undocumented `pub` item in the serving, adapter or sparsity API.
 pub const PUB_DOC: &str = "pub-doc";
 
 /// Every suppressible lint, for allow-annotation validation.
@@ -60,7 +61,9 @@ fn float_scope(rel: &str) -> bool {
 }
 
 fn pub_doc_scope(rel: &str) -> bool {
-    rel.starts_with("src/serve/") || rel.starts_with("src/adapter/")
+    rel.starts_with("src/serve/")
+        || rel.starts_with("src/adapter/")
+        || rel.starts_with("src/sparsity/")
 }
 
 fn nondet_scope(rel: &str) -> bool {
@@ -239,8 +242,9 @@ fn pub_doc_pass(rel: &str, lx: &Lexed, tests: &[(usize, usize)], out: &mut Vec<F
             .any(|cm| cm.doc && cm.end_line <= anchor && anchor - cm.end_line <= 1);
         if !covered {
             let msg = format!(
-                "`pub {kind}` without a rustdoc comment — the serving/adapter API \
-                 (src/serve/, src/adapter/) is documented surface; see docs/serving.md"
+                "`pub {kind}` without a rustdoc comment — the serving/adapter/sparsity \
+                 API (src/serve/, src/adapter/, src/sparsity/) is documented surface; \
+                 see docs/serving.md and docs/training.md"
             );
             out.push(Finding::new(PUB_DOC, rel, t.line, msg));
         }

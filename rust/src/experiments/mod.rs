@@ -8,6 +8,7 @@ pub mod common;
 mod fig2;
 mod fig4;
 mod fig5;
+mod selection;
 mod tables;
 mod tab4;
 mod tab5;
@@ -16,6 +17,7 @@ mod thm42;
 pub use fig2::run_fig2;
 pub use fig4::run_fig4;
 pub use fig5::run_fig5;
+pub use selection::run_selection;
 pub use tab4::run_tab4;
 pub use tab5::run_tab5;
 pub use tables::{run_tab1, run_tab2, run_tab3};
@@ -35,6 +37,7 @@ pub fn run(id: &str, artifacts: &str, quick: bool) -> Result<()> {
         "fig5" => run_fig5(artifacts, quick),
         "tab5" => run_tab5(artifacts, quick),
         "thm42" => run_thm42(quick),
+        "selection" => run_selection(artifacts, quick),
         "all" => {
             for id in ["thm42", "fig2", "tab1", "tab2", "tab3", "fig4", "tab4", "fig5", "tab5"] {
                 println!("\n################ experiment {id} ################");
@@ -42,6 +45,6 @@ pub fn run(id: &str, artifacts: &str, quick: bool) -> Result<()> {
             }
             Ok(())
         }
-        other => bail!("unknown experiment {other:?} (try fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all)"),
+        other => bail!("unknown experiment {other:?} (try fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|selection|all)"),
     }
 }

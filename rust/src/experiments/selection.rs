@@ -1,0 +1,82 @@
+//! Selection-strategy comparison (`repro experiment selection`): fine-tune
+//! the same task stream under each pluggable selection strategy — static
+//! S²FT, iterative drop/grow, and grad-norm warmup — and compare final
+//! eval loss, trainable-parameter budget, measured activation bytes, and
+//! replan activity. Not a paper figure: it exercises the dynamic
+//! re-selection pipeline (plan-epoch bumps, optimizer-moment carry-over)
+//! end-to-end on the existing task suite.
+
+use anyhow::Result;
+
+use crate::data::{finetune_examples, Tokenizer};
+use crate::runtime::open_backend;
+use crate::sparsity::strategy;
+use crate::train::{eval_loss, GenModel, Trainer};
+use crate::util::json::Json;
+
+use super::common::{batch_at, pretrained_cached, save_result};
+
+pub fn run_selection(artifacts: &str, quick: bool) -> Result<()> {
+    let rt = open_backend(artifacts)?;
+    if rt.platform() != "native" {
+        // the gradient probe and method-layout variants are native-only
+        println!("selection: requires the native backend (gradnorm probe); skipping");
+        return Ok(());
+    }
+    let (model, pre_steps, ft_steps, replan_every, warmup, n_eval) = if quick {
+        ("tiny", 30, 24, 8, 8, 24)
+    } else {
+        ("small", 800, 180, 30, 60, 96)
+    };
+    let base = pretrained_cached(&rt, model, pre_steps, 42)?;
+    let mm = rt.artifacts().model(model)?;
+    let (b, t) = mm.default_batch();
+    let method = mm.method("s2ft")?.clone();
+    let tk = Tokenizer;
+    let train_examples = finetune_examples("commonsense", 2000, 61);
+    let eval_examples = finetune_examples("commonsense", n_eval, 62);
+
+    let specs = [
+        ("static".to_string(), 0usize),
+        ("dropgrow".to_string(), replan_every),
+        (format!("warmup:{warmup}"), replan_every),
+    ];
+    println!("\n=== Selection strategies: {model}, {ft_steps} steps, replan every {replan_every}");
+    println!(
+        "{:<12}{:>11}{:>12}{:>12}{:>9}{:>7}",
+        "Strategy", "eval loss", "trainable", "act bytes", "replans", "shape"
+    );
+    let mut records = Vec::new();
+    for (spec, every) in &specs {
+        let strat = strategy::for_name(spec, &method.selection, method.select_small)?;
+        let label = strat.name().to_string();
+        let mut trainer =
+            Trainer::with_strategy(&rt, model, "s2ft", &base, 77, strat, *every, b, t)?;
+        for step in 0..ft_steps {
+            let batch = batch_at(&tk, &train_examples, step * b, b, t);
+            trainer.maybe_replan(&rt, &batch)?;
+            trainer.train_step(&batch)?;
+        }
+        let trainable = trainer.trainable_params();
+        let act_bytes = trainer.activation_bytes().unwrap_or(0);
+        let (replans, shape_replans) =
+            (trainer.metrics.replans, trainer.metrics.shape_changing_replans);
+        let gm = GenModel::new(&rt, model, trainer.merged_params(&rt)?)?;
+        let loss = eval_loss(&gm, &eval_examples)?;
+        println!(
+            "{:<12}{:>11.4}{:>12}{:>12}{:>9}{:>7}",
+            label, loss, trainable, act_bytes, replans, shape_replans
+        );
+        records.push(Json::obj(vec![
+            ("strategy", Json::str(label)),
+            ("spec", Json::str(spec.clone())),
+            ("eval_loss", Json::num(loss as f64)),
+            ("trainable_params", Json::num(trainable as f64)),
+            ("act_bytes", Json::num(act_bytes as f64)),
+            ("replans", Json::num(replans as f64)),
+            ("shape_changing_replans", Json::num(shape_replans as f64)),
+        ]));
+    }
+    save_result("selection", &Json::Arr(records));
+    Ok(())
+}

@@ -126,18 +126,28 @@ USAGE:
   repro pretrain --model M [--steps N] [--seed S] [--save DIR]
   repro train (--config FILE | --model M --method TAG) [--data SUITE]
               [--steps N] [--seed S] [--save DIR] [--init-from DIR]
+              [--strategy static|dropgrow|warmup[:W]] [--replan-every K]
   repro eval  --model M --weights DIR [--suite commonsense|arithmetic|instruct]
   repro serve --model M [--weights DIR] [--adapters K] [--requests N]
               [--workers W] [--max-batch B] [--max-resident R]
               [--adapter-dir DIR] [--stream]
   repro adapter extract|apply|info [--model M --method T --base DIR --ft DIR
               --adapter FILE --out PATH]
-  repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|all [--quick]
+  repro experiment fig2|tab1|tab2|tab3|fig4|tab4|fig5|tab5|thm42|selection|all
+              [--quick]
   repro bench-compare [--current FILE] [--baseline FILE] [--warn R] [--fail R]
   repro analyze [--root DIR]
 
 Methods: fullft lora dora spft lisa galore s2ft s2ft-pallas (+ experiment
 variants, see `repro info`). Artifacts default to ./artifacts.
+
+train --strategy routes s2ft unit selection through a pluggable
+SelectionStrategy (static = the prepare artifact's selection, bit-exact;
+dropgrow = drop lowest-magnitude / regrow highest-gradient units;
+warmup:W = dense-ish warmup, then commit top-gradient units at step W).
+--replan-every K sets the re-selection cadence; optimizer moments follow
+surviving units across replans. `repro experiment selection` compares
+the strategies end-to-end.
 
 serve scales to many more adapters than fit in memory: --max-resident R
 caps the decoded resident set (default 0 = unbounded, LRU spill past R)
@@ -242,14 +252,43 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.model, cfg.method, cfg.data, cfg.steps, b, t
     );
 
+    // --strategy static|dropgrow|warmup[:W] routes selection through a
+    // pluggable SelectionStrategy; --replan-every K lets it re-select
+    // mid-run (see docs/training.md "Selection strategies").
+    let strategy_flag = args.get("strategy").map(str::to_string);
+    let replan_every = args.usize_or("replan-every", 0);
+    let make_trainer = |calib: &data::Batch| -> Result<Trainer> {
+        match &strategy_flag {
+            Some(spec) => {
+                let mm = rt.artifacts().model(&cfg.model)?;
+                let m = mm.method(&cfg.method)?;
+                let strat =
+                    repro::sparsity::strategy::for_name(spec, &m.selection, m.select_small)?;
+                Trainer::with_strategy(
+                    rt.as_ref(),
+                    &cfg.model,
+                    &cfg.method,
+                    &base,
+                    cfg.seed,
+                    strat,
+                    replan_every,
+                    b,
+                    t,
+                )
+            }
+            None => Trainer::new(rt.as_ref(), &cfg.model, &cfg.method, &base, cfg.seed, calib),
+        }
+    };
+
     let mut trainer: Trainer;
     if cfg.data == "corpus" {
         let corpus = data::pretrain_corpus(cfg.seed, 400_000);
         let mut rng = Rng::seed(cfg.seed ^ 1);
         let calib = data::lm_batch(&tk, &corpus, &mut rng, b, t);
-        trainer = Trainer::new(rt.as_ref(), &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        trainer = make_trainer(&calib)?;
         for step in 0..cfg.steps {
             let batch = data::lm_batch(&tk, &corpus, &mut rng, b, t);
+            trainer.maybe_replan(rt.as_ref(), &batch)?;
             let loss = trainer.train_step(&batch)?;
             if step % cfg.log_every == 0 || step + 1 == cfg.steps {
                 println!(
@@ -262,9 +301,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         let examples = data::finetune_examples(&cfg.data, 4000, cfg.seed ^ 2);
         let calib = experiments::common::batch_at(&tk, &examples, 0, b, t);
-        trainer = Trainer::new(rt.as_ref(), &cfg.model, &cfg.method, &base, cfg.seed, &calib)?;
+        trainer = make_trainer(&calib)?;
         for step in 0..cfg.steps {
             let batch = experiments::common::batch_at(&tk, &examples, step * b, b, t);
+            trainer.maybe_replan(rt.as_ref(), &batch)?;
             let loss = trainer.train_step(&batch)?;
             if step % cfg.log_every == 0 || step + 1 == cfg.steps {
                 println!(
@@ -288,6 +328,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.state_bytes() as f64 / 1e6,
         trainer.opt_bytes() as f64 / 1e6,
     );
+    if trainer.metrics.replans > 0 {
+        println!(
+            "replans: {} committed ({} shape-changing), trainable now {} params",
+            trainer.metrics.replans,
+            trainer.metrics.shape_changing_replans,
+            trainer.trainable_params()
+        );
+    }
     if let Some(dir) = &cfg.save_to {
         let merged = trainer.merged_params(rt.as_ref())?;
         train::save_params(dir, &merged)?;

@@ -169,6 +169,30 @@ pub trait Executor: Send + Sync {
     /// Human-readable backend identifier.
     fn platform(&self) -> String;
 
+    /// Build (and cache, under a synthetic train-artifact name derived
+    /// from `tag`) a train executable for a *method-layout variant*: the
+    /// base method's hyperparameters with an explicit per-layer unit-count
+    /// budget, as committed mid-run by a dynamic selection strategy. The
+    /// executable is always rebuilt fresh — never served from cache — so a
+    /// reused tag can't resurrect a stale layout. Backends without
+    /// replanning support (AOT artifact sets are fixed at build time)
+    /// refuse.
+    fn load_train_variant(
+        &self,
+        _model: &str,
+        _tag: &str,
+        _base_method: &str,
+        _counts_per_layer: &[HashMap<String, usize>],
+        _b: usize,
+        _t: usize,
+    ) -> Result<Arc<dyn Executable>> {
+        bail!(
+            "backend {:?} cannot build method-layout variants; dynamic \
+             re-selection requires the native backend",
+            self.platform()
+        )
+    }
+
     /// KV-cached incremental-decode provider, if the backend supports
     /// stepping a model one token at a time (the native interpreter
     /// does). `None` means callers must fall back to full-sequence

@@ -211,6 +211,28 @@ pub fn s2ft_layout_per_layer(
     (trn, frz, perms)
 }
 
+/// A method-layout *variant* of an s2ft method: identical hyperparameters
+/// and selection semantics, but an explicit per-layer unit-count budget —
+/// the layout a dynamic selection strategy commits mid-run. The trainer
+/// registers the result under a per-plan-epoch tag (via
+/// `Executor::load_train_variant`) whenever a replan changes the
+/// trainable shapes.
+pub fn s2ft_method_variant(
+    mm: &ModelMeta,
+    base_meth: &MethodMeta,
+    counts_per_layer: &[HashMap<String, usize>],
+) -> MethodMeta {
+    let (trainable, frozen, perms) =
+        s2ft_layout_per_layer(&mm.dims, &mm.base_params, counts_per_layer);
+    let mut meth = base_meth.clone();
+    meth.trainable_params = trainable.iter().map(NamedShape::numel).sum();
+    meth.opt = trainable.clone();
+    meth.trainable = trainable;
+    meth.frozen = frozen;
+    meth.perms = perms;
+    meth
+}
+
 /// Split base-layout weights at the *identity* selection (`_t` = the
 /// leading rows/columns of each trainable tensor's base weight) for a
 /// hand-built layout, and zero the optimizer moments — the

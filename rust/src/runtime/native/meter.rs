@@ -19,6 +19,12 @@
 //! `TrainMetrics::to_json` into `repro experiment fig5`, next to the
 //! analytic state-bytes figure.
 //!
+//! Replan safety: a meter is constructed fresh per train-step call from
+//! the step's `CachePlan` walk — it holds no plan-derived state across
+//! calls, so a mid-run selection replan (plan-epoch bump, see
+//! `runtime::native::TrainPlans`) needs no meter invalidation; the next
+//! step's measurement reflects the new plan automatically.
+//!
 //! Accounting scope: this is an *activation* meter. `cache_total` /
 //! `per_layer` are exact (actual buffer lengths of everything the cache
 //! holds). The peak covers every named O(N·d)-and-larger activation or

@@ -83,6 +83,7 @@ impl Executor for NativeBackend {
             spec,
             kind,
             meta: self.artifacts.meta.clone(),
+            plans: Mutex::new(None),
         });
         self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
         Ok(exec)
@@ -94,6 +95,44 @@ impl Executor for NativeBackend {
 
     fn platform(&self) -> String {
         "native".to_string()
+    }
+
+    fn load_train_variant(
+        &self,
+        model: &str,
+        tag: &str,
+        base_method: &str,
+        counts_per_layer: &[HashMap<String, usize>],
+        b: usize,
+        t: usize,
+    ) -> Result<Arc<dyn Executable>> {
+        let mm = self.artifacts.model(model)?;
+        let base_meth = native_method(mm, base_method)?;
+        if base_meth.method != "s2ft" {
+            bail!("method {base_method:?} has no unit-count layout to vary");
+        }
+        let variant = builtin::s2ft_method_variant(mm, base_meth, counts_per_layer);
+        let mut meta = (*self.artifacts.meta).clone();
+        meta.models
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in meta"))?
+            .methods
+            .insert(tag.to_string(), variant);
+        let meta = Arc::new(meta);
+        let name = format!("train_{model}_{tag}_{b}x{t}");
+        let kind = Kind::Train { model: model.to_string(), method: tag.to_string(), b, t };
+        let spec = synthesize_spec(&meta.models[model], &kind);
+        let exec: Arc<dyn Executable> = Arc::new(NativeExecutable {
+            name: name.clone(),
+            spec,
+            kind,
+            meta,
+            plans: Mutex::new(None),
+        });
+        // Always overwrite: the cache entry exists only so `evict` works
+        // uniformly; serving a stale layout from it would be a bug.
+        self.cache.lock().unwrap().insert(name, exec.clone());
+        Ok(exec)
     }
 
     fn decoder(&self) -> Option<Arc<dyn super::DecoderProvider>> {
@@ -112,6 +151,9 @@ enum Kind {
     Prepare { model: String, method: String, b: usize, t: usize },
     Train { model: String, method: String, b: usize, t: usize },
     Merge { model: String, method: String },
+    /// Gradient-magnitude unit scores over a probe batch in base layout —
+    /// the measurement dynamic selection strategies replan from.
+    GradNorm { model: String, b: usize, t: usize },
 }
 
 fn parse_bt(s: &str) -> Option<(usize, usize)> {
@@ -143,6 +185,10 @@ impl Kind {
             ["merge", m, meth] => {
                 Kind::Merge { model: m.to_string(), method: meth.to_string() }
             }
+            ["gradnorm", m, bt] => {
+                let (b, t) = parse_bt(bt).context("bad BxT suffix")?;
+                Kind::GradNorm { model: m.to_string(), b, t }
+            }
             _ => bail!("unrecognized artifact name shape"),
         };
         Ok(kind)
@@ -155,7 +201,8 @@ impl Kind {
             | Kind::Eval { model, .. }
             | Kind::Prepare { model, .. }
             | Kind::Train { model, .. }
-            | Kind::Merge { model, .. } => model,
+            | Kind::Merge { model, .. }
+            | Kind::GradNorm { model, .. } => model,
         }
     }
 
@@ -283,6 +330,18 @@ fn synthesize_spec(mm: &ModelMeta, kind: &Kind) -> ArtifactMeta {
             inputs.extend(section(&m.perms, "i32"));
             (inputs, base)
         }
+        Kind::GradNorm { b, t, .. } => {
+            let mut inputs = base;
+            inputs.extend(batch_specs(*b, *t));
+            let l = mm.dims.n_layers;
+            (
+                inputs,
+                vec![
+                    ts("chan_grad_norms", vec![l, mm.dims.d_ff], "f32"),
+                    ts("head_grad_norms", vec![l, mm.dims.n_heads], "f32"),
+                ],
+            )
+        }
     };
     ArtifactMeta { file: "<native>".to_string(), inputs, outputs }
 }
@@ -293,6 +352,12 @@ struct NativeExecutable {
     spec: ArtifactMeta,
     kind: Kind,
     meta: Arc<Meta>,
+    /// Train-kind only: the plan bundle (gradient plan + cache-retention
+    /// plans), derived once from the method layout on first use. Plan
+    /// invalidation is by *plan epoch*: a replanning trainer evicts this
+    /// executable and loads a fresh one, so stale plans can never survive
+    /// a selection change.
+    plans: Mutex<Option<Arc<model::TrainPlans>>>,
 }
 
 impl Executable for NativeExecutable {
@@ -340,12 +405,24 @@ impl Executable for NativeExecutable {
             }
             Kind::Train { method, b, t, .. } => {
                 let meth = native_method(mm, method)?;
-                model::train_step(mm, meth, &named, *b, *t)?
+                let plans = {
+                    let mut guard = self.plans.lock().unwrap();
+                    match guard.as_ref() {
+                        Some(p) => p.clone(),
+                        None => {
+                            let p = Arc::new(model::TrainPlans::new(mm, meth));
+                            *guard = Some(p.clone());
+                            p
+                        }
+                    }
+                };
+                model::train_step(mm, meth, &plans, &named, *b, *t)?
             }
             Kind::Merge { method, .. } => {
                 let meth = native_method(mm, method)?;
                 model::merge(mm, meth, &named)?
             }
+            Kind::GradNorm { b, t, .. } => model::grad_unit_norms(mm, &named, *b, *t)?,
         };
         self.spec
             .outputs

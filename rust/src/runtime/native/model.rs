@@ -1019,11 +1019,37 @@ fn effective_weights<'a>(
     Ok((store, direct))
 }
 
+/// The plan-derived state a train executable caches across steps: the
+/// gradient plan plus both retention plans (partial, and the full-walk
+/// reference the `S2FT_FULL_BACKWARD` switch selects). Plans derive from
+/// the method layout's trainable *shapes* only, so they stay valid until
+/// the selection — and hence the layout — changes; the replanning trainer
+/// invalidates them by evicting and reloading the executable (a plan
+/// epoch bump), never by mutating them in place.
+pub struct TrainPlans {
+    plan: GradPlan,
+    partial: CachePlan,
+    full: CachePlan,
+}
+
+impl TrainPlans {
+    /// Derive the gradient plan and both cache-retention plans for a
+    /// method layout.
+    pub fn new(mm: &ModelMeta, meth: &MethodMeta) -> TrainPlans {
+        let plan = GradPlan::from_method(mm, meth);
+        let partial = CachePlan::training(&plan, mm, false);
+        let full = CachePlan::training(&plan, mm, true);
+        TrainPlans { plan, partial, full }
+    }
+}
+
 /// One AdamW step in method layout. Outputs `new.*`, `new_m.*`, `new_v.*`
-/// and `loss`, exactly like the AOT train artifacts.
+/// and `loss`, exactly like the AOT train artifacts. `plans` carries the
+/// cached plan bundle for the *current* plan epoch (see [`TrainPlans`]).
 pub fn train_step(
     mm: &ModelMeta,
     meth: &MethodMeta,
+    plans: &TrainPlans,
     named: &Named,
     b: usize,
     t: usize,
@@ -1054,10 +1080,10 @@ pub fn train_step(
         );
     }
 
-    let plan = GradPlan::from_method(mm, meth);
-    let cplan = CachePlan::training(&plan, mm, force_full_walk());
+    let plan = &plans.plan;
+    let cplan = if force_full_walk() { &plans.full } else { &plans.partial };
     let mut meter = ActivationMeter::new(mm.dims.n_layers);
-    let mut cache = forward(mm, &w, tokens, b, t, &cplan, &mut meter)?;
+    let mut cache = forward(mm, &w, tokens, b, t, cplan, &mut meter)?;
     let (loss, _, dlogits) =
         loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, true);
     let dlogits = dlogits.expect("gradient requested");
@@ -1065,7 +1091,7 @@ pub fn train_step(
     // the backward pass never reads the logits: free them before it runs
     meter.free(f32_bytes(cache.logits.len()));
     cache.logits = Vec::new();
-    let grads = backward(mm, &w, cache, &dlogits, tokens, &plan, &cplan, &mut meter, b, t)?;
+    let grads = backward(mm, &w, cache, &dlogits, tokens, plan, cplan, &mut meter, b, t)?;
     meter.free(f32_bytes(dlogits.len()));
     drop(dlogits);
 
@@ -1106,56 +1132,69 @@ pub fn train_step(
     Ok(out)
 }
 
+/// Gradient-magnitude unit scores for dynamic selection strategies: one
+/// full-plan forward/backward over a probe batch in *base* layout, then
+/// the S²FT unit score formulas applied to the weight *gradients* instead
+/// of the weights (dWo row-block norms per head; dWu col + dWg col + dWd
+/// row norms per FFN channel). Outputs `head_grad_norms` `[L, n_heads]`
+/// and `chan_grad_norms` `[L, d_ff]`.
+pub fn grad_unit_norms(
+    mm: &ModelMeta,
+    named: &Named,
+    b: usize,
+    t: usize,
+) -> Result<HashMap<String, Tensor>> {
+    let w = base_weight_map(mm, named)?;
+    let tokens = get(named, "tokens")?.as_i32()?;
+    let targets = get(named, "targets")?.as_i32()?;
+    let mask = getf(named, "loss_mask")?;
+
+    let plan = GradPlan { full: true, sel: vec![] };
+    let cplan = CachePlan::full_walk(mm);
+    let mut meter = ActivationMeter::new(mm.dims.n_layers);
+    let mut cache = forward(mm, &w, tokens, b, t, &cplan, &mut meter)?;
+    let (_, _, dlogits) =
+        loss_ncorrect_grad(&cache.logits, targets, mask, b * t, mm.dims.vocab, true);
+    let dlogits = dlogits.expect("gradient requested");
+    cache.logits = Vec::new();
+    let grads = backward(mm, &w, cache, &dlogits, tokens, &plan, &cplan, &mut meter, b, t)?;
+
+    let d = mm.dims.d_model;
+    let hd = mm.head_dim();
+    let ff = mm.dims.d_ff;
+    let nh = mm.dims.n_heads;
+    let l = mm.dims.n_layers;
+    let gradf = |name: String| -> Result<&Vec<f32>> {
+        grads.get(&name).ok_or_else(|| anyhow!("native: no gradient for {name:?}"))
+    };
+    let mut head = Vec::with_capacity(l * nh);
+    let mut chan = Vec::with_capacity(l * ff);
+    for i in 0..l {
+        head.extend(sparsity::strategy::head_unit_scores(
+            gradf(format!("L{i}.wo"))?,
+            d,
+            hd,
+            nh,
+        ));
+        chan.extend(sparsity::strategy::chan_unit_scores(
+            gradf(format!("L{i}.wu"))?,
+            gradf(format!("L{i}.wg"))?,
+            gradf(format!("L{i}.wd"))?,
+            d,
+            ff,
+        ));
+    }
+    let mut out = HashMap::new();
+    out.insert("head_grad_norms".to_string(), Tensor::f32(vec![l, nh], head));
+    out.insert("chan_grad_norms".to_string(), Tensor::f32(vec![l, ff], chan));
+    Ok(out)
+}
+
 // ---------------------------------------------------------------------------
 // Prepare: base layout -> method layout (trainable-first co-permutation)
 // ---------------------------------------------------------------------------
 
-fn permute_rows(w: &[f32], cols: usize, perm: &[usize]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(perm.len() * cols);
-    for &r in perm {
-        out.extend_from_slice(&w[r * cols..(r + 1) * cols]);
-    }
-    out
-}
-
-fn permute_cols(w: &[f32], rows: usize, cols: usize, perm: &[usize]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(rows * perm.len());
-    for r in 0..rows {
-        let row = &w[r * cols..(r + 1) * cols];
-        for &c in perm {
-            out.push(row[c]);
-        }
-    }
-    out
-}
-
-/// Unit selection for one coupled structure (strategies R and W).
-fn select_units(
-    meth: &MethodMeta,
-    total: usize,
-    count: usize,
-    scores: impl Fn() -> Vec<f32>,
-    rng: &mut Rng,
-) -> Result<Vec<usize>> {
-    if count >= total {
-        return Ok((0..total).collect());
-    }
-    match meth.selection.as_str() {
-        "r" => Ok(rng.choose(total, count)),
-        "w" => {
-            let sc = scores();
-            let mut idx: Vec<usize> = (0..total).collect();
-            idx.sort_by(|&a, &b| sc[a].partial_cmp(&sc[b]).unwrap_or(std::cmp::Ordering::Equal));
-            if !meth.select_small {
-                idx.reverse();
-            }
-            let mut sel = idx[..count].to_vec();
-            sel.sort_unstable();
-            Ok(sel)
-        }
-        other => bail!("native: unsupported selection strategy {other:?}"),
-    }
-}
+use crate::sparsity::{gather_cols as permute_cols, gather_rows as permute_rows};
 
 /// Split base params into (trainable, frozen, perms) — the S²FT
 /// trainable-first co-permutation, or a passthrough for full FT.
@@ -1184,25 +1223,16 @@ pub fn prepare(
     for s in &mm.base_params {
         staged.insert(s.name.clone(), get(named, &s.name)?.clone());
     }
-    let root = Rng::seed(seed ^ 0x52F7_1111);
+    let root = Rng::seed(seed ^ sparsity::strategy::SELECTION_STREAM);
     for i in 0..mm.dims.n_layers {
         if mha_count > 0 {
             let wo = getf(named, &format!("L{i}.wo"))?;
-            let sel = select_units(
-                meth,
+            let sel = sparsity::strategy::select_units(
+                &meth.selection,
+                meth.select_small,
                 mm.dims.n_heads,
                 mha_count,
-                || {
-                    (0..mm.dims.n_heads)
-                        .map(|h| {
-                            wo[h * hd * d..(h + 1) * hd * d]
-                                .iter()
-                                .map(|v| v * v)
-                                .sum::<f32>()
-                                .sqrt()
-                        })
-                        .collect()
-                },
+                || sparsity::strategy::head_unit_scores(wo, d, hd, mm.dims.n_heads),
                 &mut root.fold(2 * i as u64),
             )?;
             let hperm = sparsity::trainable_first_permutation(&sel, mm.dims.n_heads)?;
@@ -1230,25 +1260,12 @@ pub fn prepare(
             let wu = getf(named, &format!("L{i}.wu"))?;
             let wg = getf(named, &format!("L{i}.wg"))?;
             let wd = getf(named, &format!("L{i}.wd"))?;
-            let sel = select_units(
-                meth,
+            let sel = sparsity::strategy::select_units(
+                &meth.selection,
+                meth.select_small,
                 ff,
                 ffn_count,
-                || {
-                    (0..ff)
-                        .map(|c| {
-                            let col = |w: &[f32]| {
-                                (0..d).map(|r| w[r * ff + c] * w[r * ff + c]).sum::<f32>().sqrt()
-                            };
-                            let wd_row = wd[c * d..(c + 1) * d]
-                                .iter()
-                                .map(|v| v * v)
-                                .sum::<f32>()
-                                .sqrt();
-                            col(wu) + col(wg) + wd_row
-                        })
-                        .collect()
-                },
+                || sparsity::strategy::chan_unit_scores(wu, wg, wd, d, ff),
                 &mut root.fold(2 * i as u64 + 1),
             )?;
             let cperm = sparsity::trainable_first_permutation(&sel, ff)?;

@@ -6,15 +6,24 @@
 //! of wq/wk/wv and row block `h` of wo. The prepare artifact outputs
 //! trainable-first permutations (`L{i}.head_perm`, `L{i}.chan_perm`); this
 //! module interprets them for adapter extraction and fusion.
+//!
+//! [`strategy`] builds on these primitives to make the *selection* step
+//! itself pluggable (static S²FT vs. dynamic re-selection mid-run).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+/// Pluggable unit-selection strategies (static S²FT, drop/grow,
+/// grad-norm warmup) and the shared selection/score primitives.
+pub mod strategy;
+
 /// Mirror of python `selection.budget_to_counts`: per-projection trainable
 /// fractions -> integer unit counts. Head-grouped projections
 /// (wq/wk/wv/wo) count heads; channel projections (wu/wg/wd) count FFN
-/// channels. A positive fraction always yields at least one unit.
+/// channels. A positive fraction always yields at least one unit; fractions
+/// at or above 1.0 saturate at the unit total (`n_heads` / `d_ff`) so
+/// downstream selections can never index out of range.
 pub fn budget_to_counts(
     fractions: &HashMap<String, f64>,
     d_ff: usize,
@@ -27,7 +36,7 @@ pub fn budget_to_counts(
             _ => d_ff,
         };
         let c = if f > 0.0 {
-            ((f * total as f64).round() as usize).max(1)
+            ((f * total as f64).round() as usize).max(1).min(total)
         } else {
             0
         };
@@ -73,8 +82,15 @@ pub fn expand_head_perm(head_perm: &[usize], head_dim: usize) -> Vec<usize> {
 
 /// The selected unit ids: the first `count` entries of a trainable-first
 /// permutation (as produced by the prepare artifact).
-pub fn selected_units(perm: &[i32], count: usize) -> Vec<usize> {
-    perm[..count].iter().map(|&p| p as usize).collect()
+///
+/// Invariant: `perm` must be *trainable-first* — `perm[..count]` are the
+/// original unit indices chosen for training (in selection order) and
+/// `perm[count..]` the frozen remainder, exactly as built by
+/// [`trainable_first_permutation`]. The returned ids are therefore keyed by
+/// *original* unit index, not permuted position — the key the optimizer-state
+/// carry-over in replanning relies on.
+pub fn selected_units(perm: &[usize], count: usize) -> Vec<usize> {
+    perm[..count].to_vec()
 }
 
 /// Gather rows of a row-major `(rows, cols)` matrix at `idx`.
@@ -156,6 +172,29 @@ mod tests {
     #[test]
     fn head_expansion() {
         assert_eq!(expand_head_perm(&[2, 0], 2), vec![4, 5, 0, 1]);
+    }
+
+    #[test]
+    fn budget_counts_clamped_to_unit_total() {
+        // Regression: fractions > 1.0 used to produce counts exceeding
+        // n_heads / d_ff, yielding out-of-range selections downstream.
+        let mut fr = HashMap::new();
+        fr.insert("wo".to_string(), 1.5);
+        fr.insert("wd".to_string(), 7.25);
+        fr.insert("wu".to_string(), 1.0);
+        fr.insert("wq".to_string(), 0.0);
+        let counts = budget_to_counts(&fr, 16, 4);
+        assert_eq!(counts["wo"], 4);
+        assert_eq!(counts["wd"], 16);
+        assert_eq!(counts["wu"], 16);
+        assert_eq!(counts["wq"], 0);
+    }
+
+    #[test]
+    fn selected_units_trainable_prefix() {
+        let perm = trainable_first_permutation(&[3, 1], 5).unwrap();
+        assert_eq!(selected_units(&perm, 2), vec![3, 1]);
+        assert_eq!(selected_units(&perm, 0), Vec::<usize>::new());
     }
 
     #[test]

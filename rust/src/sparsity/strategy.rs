@@ -1,0 +1,591 @@
+//! Pluggable unit-selection strategies: the "selecting sparsely" step of
+//! S²FT (paper §3.1) as a first-class, swappable policy.
+//!
+//! The native `prepare` artifact and the [`crate::train::Trainer`] replan
+//! path both route through the helpers here ([`select_units`],
+//! [`head_unit_scores`], [`chan_unit_scores`], [`SELECTION_STREAM`]), so a
+//! [`StaticS2ft`] strategy driven host-side reproduces the artifact's
+//! selection bit-for-bit — the regression contract the refactor is pinned
+//! by. Dynamic strategies ([`IterativeDropGrow`], [`GradNormWarmup`])
+//! return a fresh [`LayerSelections`] mid-run; the trainer then rebuilds
+//! the co-permuted pool, remaps optimizer moments by *original unit
+//! index*, and bumps the plan epoch so every plan-derived cache downstream
+//! is rebuilt (see `rust/docs/training.md`).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Seed-stream tag for unit selection: `prepare` derives its selection
+/// RNG as `Rng::seed(seed ^ SELECTION_STREAM)`, then folds `2*i` (heads)
+/// and `2*i + 1` (channels) per layer `i`. Host-side strategies reuse the
+/// identical stream so static selections match the artifact bitwise.
+pub const SELECTION_STREAM: u64 = 0x52F7_1111;
+
+/// The trainable units chosen for one transformer layer: head ids for the
+/// coupled wq/wk/wv/wo structure and FFN channel ids for wu/wg/wd, both
+/// keyed by *original* (unpermuted) unit index.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LayerSelection {
+    /// Selected attention heads (original head indices, selection order).
+    pub heads: Vec<usize>,
+    /// Selected FFN channels (original channel indices, selection order).
+    pub channels: Vec<usize>,
+}
+
+/// Per-layer selections for the whole model (`len == n_layers`).
+pub type LayerSelections = Vec<LayerSelection>;
+
+/// Unit scores a strategy may consult. Magnitude scores are always
+/// populated (recomputed from the current merged weights at each replan);
+/// gradient scores are measured by the `gradnorm_M_BxT` probe artifact and
+/// present only when the strategy declared it needs them
+/// ([`SelectionStrategy::needs_grad_scores`]).
+#[derive(Debug, Clone, Default)]
+pub struct UnitScores {
+    /// Per layer: weight-magnitude score per head (the wo row-block L2
+    /// norm — same formula the static "w" selection uses).
+    pub head_mag: Vec<Vec<f32>>,
+    /// Per layer: weight-magnitude score per FFN channel (wu col + wg col
+    /// + wd row L2 norms).
+    pub chan_mag: Vec<Vec<f32>>,
+    /// Per layer: gradient-magnitude score per head, from a probe batch.
+    pub head_grad: Option<Vec<Vec<f32>>>,
+    /// Per layer: gradient-magnitude score per FFN channel.
+    pub chan_grad: Option<Vec<Vec<f32>>>,
+}
+
+/// Everything a strategy sees when (re)selecting: the step counter, the
+/// model geometry, the per-structure unit budget, the current selection
+/// (None before the first commit) and the scores.
+#[derive(Debug)]
+pub struct SelectionCtx<'a> {
+    /// 0-based optimizer step the upcoming train step will run at.
+    pub step: usize,
+    /// Transformer depth.
+    pub n_layers: usize,
+    /// Total attention heads per layer.
+    pub n_heads: usize,
+    /// Total FFN channels per layer.
+    pub d_ff: usize,
+    /// Budgeted trainable heads per layer (0 = MHA structure unbudgeted;
+    /// strategies must then select no heads).
+    pub mha_count: usize,
+    /// Budgeted trainable FFN channels per layer (0 = unbudgeted).
+    pub ffn_count: usize,
+    /// The run seed (same value `prepare` receives as its `seed` input).
+    pub seed: u64,
+    /// Unit scores (see [`UnitScores`]).
+    pub scores: &'a UnitScores,
+    /// The selection currently in effect, if any.
+    pub current: Option<&'a LayerSelections>,
+}
+
+/// A pluggable selection policy. The trainer drives it as:
+///
+/// 1. at step 0, [`SelectionStrategy::select`] must commit an initial
+///    [`LayerSelections`];
+/// 2. before each later step it asks [`SelectionStrategy::replan_due`];
+///    when due (and after measuring gradient scores if
+///    [`SelectionStrategy::needs_grad_scores`] says so) it calls
+///    [`SelectionStrategy::select`] again — `Some` commits the returned
+///    selection (a *re*-commit of an identical selection still rebuilds
+///    the pool/plans, which is exactly what the bit-identity proptest
+///    exercises), `None` leaves the current plan untouched.
+///
+/// Replan semantics for optimizer state: AdamW moments are keyed by
+/// original unit index — surviving units carry their moments over,
+/// dropped units' moments are discarded, grown units start at zero.
+pub trait SelectionStrategy: Send {
+    /// Short identifier (CLI `--strategy` value, experiment row label).
+    fn name(&self) -> &str;
+
+    /// Whether the upcoming [`SelectionStrategy::select`] call at `step`
+    /// needs measured gradient scores (`head_grad`/`chan_grad`). The probe
+    /// costs a full forward/backward, so default is `false`.
+    fn needs_grad_scores(&self, _step: usize) -> bool {
+        false
+    }
+
+    /// Whether to re-run selection before `step`. The default honors the
+    /// trainer's `--replan-every` cadence; strategies with an intrinsic
+    /// schedule (e.g. a warmup commit point) override it.
+    fn replan_due(&self, step: usize, replan_every: usize) -> bool {
+        replan_every > 0 && step > 0 && step % replan_every == 0
+    }
+
+    /// (Re)select trainable units. `Some` commits (even if identical to
+    /// the current selection); `None` keeps the current plan.
+    fn select(&mut self, ctx: &SelectionCtx) -> Result<Option<LayerSelections>>;
+}
+
+// ---------------------------------------------------------------------------
+// Shared selection math (used by the native prepare artifact too)
+// ---------------------------------------------------------------------------
+
+/// Unit selection for one coupled structure — the exact semantics of the
+/// prepare artifact's selection strategies: `"r"` draws `count` distinct
+/// units from the rng stream (ascending); `"w"` stably sorts units by
+/// score (ascending when `select_small`, else descending), takes `count`,
+/// and returns them ascending. `count >= total` selects every unit.
+/// `scores` is lazy: `"r"` never evaluates it.
+pub fn select_units(
+    selection: &str,
+    select_small: bool,
+    total: usize,
+    count: usize,
+    scores: impl Fn() -> Vec<f32>,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    if count >= total {
+        return Ok((0..total).collect());
+    }
+    match selection {
+        "r" => Ok(rng.choose(total, count)),
+        "w" => {
+            let sc = scores();
+            let mut idx: Vec<usize> = (0..total).collect();
+            idx.sort_by(|&a, &b| sc[a].partial_cmp(&sc[b]).unwrap_or(std::cmp::Ordering::Equal));
+            if !select_small {
+                idx.reverse();
+            }
+            let mut sel = idx[..count].to_vec();
+            sel.sort_unstable();
+            Ok(sel)
+        }
+        other => bail!("unsupported selection strategy {other:?} (expected \"r\" or \"w\")"),
+    }
+}
+
+/// Per-head weight score over a `(d_model, d_model)` wo matrix: the L2
+/// norm of head `h`'s row block (`head_dim` rows). Also applied to the
+/// wo *gradient* by the `gradnorm` probe — same formula, same bits.
+pub fn head_unit_scores(wo: &[f32], d_model: usize, head_dim: usize, n_heads: usize) -> Vec<f32> {
+    (0..n_heads)
+        .map(|h| {
+            wo[h * head_dim * d_model..(h + 1) * head_dim * d_model]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+/// Per-channel weight score over the coupled FFN structure: L2 norm of
+/// channel `c`'s wu column + wg column + wd row. wu/wg are
+/// `(d_model, d_ff)`, wd is `(d_ff, d_model)`, all row-major.
+pub fn chan_unit_scores(
+    wu: &[f32],
+    wg: &[f32],
+    wd: &[f32],
+    d_model: usize,
+    d_ff: usize,
+) -> Vec<f32> {
+    (0..d_ff)
+        .map(|c| {
+            let col = |w: &[f32]| {
+                (0..d_model)
+                    .map(|r| w[r * d_ff + c] * w[r * d_ff + c])
+                    .sum::<f32>()
+                    .sqrt()
+            };
+            let wd_row = wd[c * d_model..(c + 1) * d_model]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt();
+            col(wu) + col(wg) + wd_row
+        })
+        .collect()
+}
+
+/// The static S²FT selection for every layer: the prepare artifact's
+/// per-layer rng folds (`2*i` heads, `2*i + 1` channels) over the
+/// [`SELECTION_STREAM`] with weight-magnitude scores — bit-identical to
+/// what `prepare_M_m_BxT` computes for the same seed and weights.
+pub fn static_layer_selections(
+    selection: &str,
+    select_small: bool,
+    ctx: &SelectionCtx,
+) -> Result<LayerSelections> {
+    let root = Rng::seed(ctx.seed ^ SELECTION_STREAM);
+    let mut out = Vec::with_capacity(ctx.n_layers);
+    for i in 0..ctx.n_layers {
+        let mut sel = LayerSelection::default();
+        if ctx.mha_count > 0 {
+            sel.heads = select_units(
+                selection,
+                select_small,
+                ctx.n_heads,
+                ctx.mha_count,
+                || ctx.scores.head_mag[i].clone(),
+                &mut root.fold(2 * i as u64),
+            )?;
+        }
+        if ctx.ffn_count > 0 {
+            sel.channels = select_units(
+                selection,
+                select_small,
+                ctx.d_ff,
+                ctx.ffn_count,
+                || ctx.scores.chan_mag[i].clone(),
+                &mut root.fold(2 * i as u64 + 1),
+            )?;
+        }
+        out.push(sel);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Strategies
+// ---------------------------------------------------------------------------
+
+/// The paper's one-shot static selection behind the pluggable trait:
+/// selects once at step 0 (exactly as the prepare artifact would) and
+/// re-commits the *stored* selection verbatim whenever a replan is forced
+/// — so a forced replan provably changes nothing but the plan epoch.
+#[derive(Debug, Clone)]
+pub struct StaticS2ft {
+    selection: String,
+    select_small: bool,
+    committed: Option<LayerSelections>,
+}
+
+impl StaticS2ft {
+    /// `selection`/`select_small` as in the method meta (`"r"` or `"w"`).
+    pub fn new(selection: &str, select_small: bool) -> Self {
+        Self { selection: selection.to_string(), select_small, committed: None }
+    }
+}
+
+impl SelectionStrategy for StaticS2ft {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn select(&mut self, ctx: &SelectionCtx) -> Result<Option<LayerSelections>> {
+        if let Some(sel) = &self.committed {
+            // Forced replan: re-commit the step-0 selection unchanged.
+            return Ok(Some(sel.clone()));
+        }
+        let sel = static_layer_selections(&self.selection, self.select_small, ctx)?;
+        self.committed = Some(sel.clone());
+        Ok(Some(sel))
+    }
+}
+
+/// Ansell-style iterative drop/regrow (PAPERS.md, arXiv 2401.16405):
+/// starts from the static selection, then every replan drops the
+/// `drop_frac` lowest weight-magnitude selected units per structure and
+/// regrows the same number of currently-frozen units with the highest
+/// measured gradient magnitude. The trainable budget never changes.
+#[derive(Debug, Clone)]
+pub struct IterativeDropGrow {
+    selection: String,
+    select_small: bool,
+    drop_frac: f64,
+    started: bool,
+}
+
+impl IterativeDropGrow {
+    /// `drop_frac` is clamped into (0, 1]; the initial selection uses the
+    /// method's static `selection`/`select_small` semantics.
+    pub fn new(selection: &str, select_small: bool, drop_frac: f64) -> Self {
+        Self {
+            selection: selection.to_string(),
+            select_small,
+            drop_frac: drop_frac.clamp(1e-6, 1.0),
+            started: false,
+        }
+    }
+}
+
+/// Drop the `k` lowest-`mag` members of `cur`, regrow the `k` highest
+/// `grad` non-members; ties break toward the lower unit index, and the
+/// result is sorted ascending. Pure and deterministic.
+fn drop_grow_one(
+    cur: &[usize],
+    total: usize,
+    k: usize,
+    mag: &[f32],
+    grad: &[f32],
+) -> Vec<usize> {
+    let mut selected = vec![false; total];
+    for &u in cur {
+        selected[u] = true;
+    }
+    let avail = total - cur.len();
+    let k = k.min(cur.len()).min(avail);
+    if k == 0 {
+        let mut keep = cur.to_vec();
+        keep.sort_unstable();
+        return keep;
+    }
+    let mut members = cur.to_vec();
+    members.sort_by(|&a, &b| {
+        mag[a].partial_cmp(&mag[b]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut frozen: Vec<usize> = (0..total).filter(|&u| !selected[u]).collect();
+    frozen.sort_by(|&a, &b| {
+        grad[b].partial_cmp(&grad[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut next: Vec<usize> = members[k..].iter().chain(&frozen[..k]).copied().collect();
+    debug_assert_eq!(next.len(), cur.len());
+    next.sort_unstable();
+    next
+}
+
+impl SelectionStrategy for IterativeDropGrow {
+    fn name(&self) -> &str {
+        "dropgrow"
+    }
+
+    fn needs_grad_scores(&self, step: usize) -> bool {
+        step > 0
+    }
+
+    fn select(&mut self, ctx: &SelectionCtx) -> Result<Option<LayerSelections>> {
+        if !self.started {
+            self.started = true;
+            let sel = static_layer_selections(&self.selection, self.select_small, ctx)?;
+            return Ok(Some(sel));
+        }
+        let cur = match ctx.current {
+            Some(c) => c,
+            None => bail!("dropgrow: replan without a committed selection"),
+        };
+        let (Some(hg), Some(cg)) = (&ctx.scores.head_grad, &ctx.scores.chan_grad) else {
+            bail!("dropgrow: replan requires measured gradient scores");
+        };
+        let mut next = Vec::with_capacity(ctx.n_layers);
+        for i in 0..ctx.n_layers {
+            let mut sel = LayerSelection::default();
+            if ctx.mha_count > 0 {
+                let k = (self.drop_frac * cur[i].heads.len() as f64).ceil() as usize;
+                sel.heads = drop_grow_one(
+                    &cur[i].heads,
+                    ctx.n_heads,
+                    k,
+                    &ctx.scores.head_mag[i],
+                    &hg[i],
+                );
+            }
+            if ctx.ffn_count > 0 {
+                let k = (self.drop_frac * cur[i].channels.len() as f64).ceil() as usize;
+                sel.channels = drop_grow_one(
+                    &cur[i].channels,
+                    ctx.d_ff,
+                    k,
+                    &ctx.scores.chan_mag[i],
+                    &cg[i],
+                );
+            }
+            next.push(sel);
+        }
+        Ok(Some(next))
+    }
+}
+
+/// Dense-ish warmup, then commit: trains *all but one* unit per structure
+/// for `warmup` steps (the one left out keeps the frozen complement
+/// non-empty — a zero-sized `_f` tensor is unrepresentable), then at step
+/// `warmup` commits to the budgeted counts with the highest measured
+/// gradient norms. A shape-changing replan: the trainer loads a layout
+/// variant executable and shrinks the optimizer state, carrying moments
+/// for the surviving units.
+#[derive(Debug, Clone)]
+pub struct GradNormWarmup {
+    warmup: usize,
+    committed: bool,
+}
+
+impl GradNormWarmup {
+    /// Commit after `warmup` steps (minimum 1).
+    pub fn new(warmup: usize) -> Self {
+        Self { warmup: warmup.max(1), committed: false }
+    }
+}
+
+/// The `count` highest-`score` unit ids, ties toward the lower index,
+/// ascending.
+fn top_by_score(score: &[f32], count: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..score.len()).collect();
+    idx.sort_by(|&a, &b| {
+        score[b]
+            .partial_cmp(&score[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut sel = idx[..count.min(idx.len())].to_vec();
+    sel.sort_unstable();
+    sel
+}
+
+impl SelectionStrategy for GradNormWarmup {
+    fn name(&self) -> &str {
+        "warmup"
+    }
+
+    fn needs_grad_scores(&self, _step: usize) -> bool {
+        !self.committed
+    }
+
+    fn replan_due(&self, step: usize, _replan_every: usize) -> bool {
+        !self.committed && step == self.warmup
+    }
+
+    fn select(&mut self, ctx: &SelectionCtx) -> Result<Option<LayerSelections>> {
+        if ctx.step == 0 {
+            // Warmup phase: every unit but the last per structure.
+            let sel = LayerSelection {
+                heads: if ctx.mha_count > 0 { (0..ctx.n_heads - 1).collect() } else { vec![] },
+                channels: if ctx.ffn_count > 0 { (0..ctx.d_ff - 1).collect() } else { vec![] },
+            };
+            return Ok(Some(vec![sel; ctx.n_layers]));
+        }
+        if self.committed {
+            return Ok(None);
+        }
+        let (Some(hg), Some(cg)) = (&ctx.scores.head_grad, &ctx.scores.chan_grad) else {
+            bail!("warmup: the commit step requires measured gradient scores");
+        };
+        let mut next = Vec::with_capacity(ctx.n_layers);
+        for i in 0..ctx.n_layers {
+            let heads =
+                if ctx.mha_count > 0 { top_by_score(&hg[i], ctx.mha_count) } else { vec![] };
+            let channels =
+                if ctx.ffn_count > 0 { top_by_score(&cg[i], ctx.ffn_count) } else { vec![] };
+            next.push(LayerSelection { heads, channels });
+        }
+        self.committed = true;
+        Ok(Some(next))
+    }
+}
+
+/// Build a strategy from its CLI/experiment name (`static`, `dropgrow`,
+/// `warmup[:W]`), inheriting the static selection semantics from
+/// `selection`/`select_small` (the method meta's fields).
+pub fn for_name(
+    name: &str,
+    selection: &str,
+    select_small: bool,
+) -> Result<Box<dyn SelectionStrategy>> {
+    if let Some(w) = name.strip_prefix("warmup:") {
+        let w: usize = w.parse().map_err(|_| {
+            anyhow::anyhow!("bad warmup step count in strategy {name:?} (expected warmup:<steps>)")
+        })?;
+        return Ok(Box::new(GradNormWarmup::new(w)));
+    }
+    match name {
+        "static" => Ok(Box::new(StaticS2ft::new(selection, select_small))),
+        "dropgrow" => Ok(Box::new(IterativeDropGrow::new(selection, select_small, 0.3))),
+        "warmup" => Ok(Box::new(GradNormWarmup::new(8))),
+        other => bail!("unknown selection strategy {other:?} (static|dropgrow|warmup[:W])"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        scores: &'a UnitScores,
+        current: Option<&'a LayerSelections>,
+        step: usize,
+    ) -> SelectionCtx<'a> {
+        SelectionCtx {
+            step,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 8,
+            mha_count: 2,
+            ffn_count: 3,
+            seed: 7,
+            scores,
+            current,
+        }
+    }
+
+    fn mag_scores() -> UnitScores {
+        UnitScores {
+            head_mag: vec![vec![0.4, 0.1, 0.3, 0.2]; 2],
+            chan_mag: vec![vec![0.8, 0.1, 0.7, 0.2, 0.6, 0.3, 0.5, 0.4]; 2],
+            head_grad: None,
+            chan_grad: None,
+        }
+    }
+
+    #[test]
+    fn static_matches_prepare_stream() {
+        // same rng stream as prepare: seed ^ SELECTION_STREAM, fold(2i)/(2i+1)
+        let scores = mag_scores();
+        let c = ctx(&scores, None, 0);
+        let mut s = StaticS2ft::new("r", true);
+        let sel = s.select(&c).unwrap().unwrap();
+        let root = Rng::seed(7 ^ SELECTION_STREAM);
+        for (i, ls) in sel.iter().enumerate() {
+            assert_eq!(ls.heads, root.fold(2 * i as u64).choose(4, 2));
+            assert_eq!(ls.channels, root.fold(2 * i as u64 + 1).choose(8, 3));
+        }
+        // recommit returns the stored selection verbatim
+        let again = s.select(&ctx(&scores, Some(&sel), 5)).unwrap().unwrap();
+        assert_eq!(again, sel);
+    }
+
+    #[test]
+    fn static_w_selects_small_scores() {
+        let scores = mag_scores();
+        let c = ctx(&scores, None, 0);
+        let mut s = StaticS2ft::new("w", true);
+        let sel = s.select(&c).unwrap().unwrap();
+        // smallest head scores are units 1 (0.1) and 3 (0.2), ascending
+        assert_eq!(sel[0].heads, vec![1, 3]);
+        assert_eq!(sel[0].channels, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn drop_grow_swaps_lowest_mag_for_highest_grad() {
+        // cur = {1, 3}; mag: unit 1 = 0.1 (lowest) is dropped; frozen
+        // units {0, 2} regrow by grad: unit 2 wins.
+        let cur = vec![1, 3];
+        let mag = vec![0.4, 0.1, 0.3, 0.2];
+        let grad = vec![0.2, 0.0, 0.9, 0.0];
+        assert_eq!(drop_grow_one(&cur, 4, 1, &mag, &grad), vec![2, 3]);
+        // k = 0 keeps the selection
+        assert_eq!(drop_grow_one(&cur, 4, 0, &mag, &grad), vec![1, 3]);
+        // budget is preserved even when k exceeds the frozen pool
+        assert_eq!(drop_grow_one(&[0, 1, 2], 4, 3, &mag, &grad).len(), 3);
+    }
+
+    #[test]
+    fn warmup_commits_top_grad_units_once() {
+        let mut scores = mag_scores();
+        let mut s = GradNormWarmup::new(3);
+        assert!(s.replan_due(3, 0));
+        assert!(!s.replan_due(2, 0));
+        let c = ctx(&scores, None, 0);
+        let init = s.select(&c).unwrap().unwrap();
+        // dense-ish: all but the last unit per structure
+        assert_eq!(init[0].heads, vec![0, 1, 2]);
+        assert_eq!(init[0].channels.len(), 7);
+        scores.head_grad = Some(vec![vec![0.1, 0.9, 0.2, 0.8]; 2]);
+        scores.chan_grad = Some(vec![vec![0.1, 0.2, 0.9, 0.8, 0.7, 0.0, 0.0, 0.0]; 2]);
+        let c = ctx(&scores, Some(&init), 3);
+        let committed = s.select(&c).unwrap().unwrap();
+        assert_eq!(committed[0].heads, vec![1, 3]);
+        assert_eq!(committed[0].channels, vec![2, 3, 4]);
+        // after the commit the strategy never replans again
+        assert!(!s.replan_due(6, 3));
+        assert_eq!(s.select(&ctx(&scores, Some(&committed), 6)).unwrap(), None);
+    }
+
+    #[test]
+    fn factory_resolves_names() {
+        assert_eq!(for_name("static", "r", true).unwrap().name(), "static");
+        assert_eq!(for_name("dropgrow", "r", true).unwrap().name(), "dropgrow");
+        assert_eq!(for_name("warmup:5", "r", true).unwrap().name(), "warmup");
+        assert!(for_name("nope", "r", true).is_err());
+    }
+}

@@ -15,6 +15,14 @@ pub struct TrainMetrics {
     pub act_cache_bytes: Option<u64>,
     /// Measured peak live activation bytes of the most recent step.
     pub act_peak_bytes: Option<u64>,
+    /// Mid-run selection replans committed (dynamic strategies): every
+    /// count here was a pool rebuild + optimizer-moment remap + plan
+    /// epoch bump.
+    pub replans: usize,
+    /// Replans that changed the trainable layout shapes (and therefore
+    /// swapped in a method-layout variant executable), not just the
+    /// selected unit ids.
+    pub shape_changing_replans: usize,
 }
 
 impl TrainMetrics {
@@ -32,6 +40,15 @@ impl TrainMetrics {
     pub fn record_activation(&mut self, cache_bytes: u64, peak_bytes: u64) {
         self.act_cache_bytes = Some(cache_bytes);
         self.act_peak_bytes = Some(peak_bytes);
+    }
+
+    /// Record a committed mid-run replan (`shape_changed`: the trainable
+    /// layout shapes differ from the previous plan epoch).
+    pub fn record_replan(&mut self, shape_changed: bool) {
+        self.replans += 1;
+        if shape_changed {
+            self.shape_changing_replans += 1;
+        }
     }
 
     /// Steps whose recorded loss was not finite (divergence, masked-out
@@ -101,6 +118,13 @@ impl TrainMetrics {
         }
         if let Some(b) = self.act_peak_bytes {
             fields.push(("act_peak_bytes", Json::num(b as f64)));
+        }
+        if self.replans > 0 {
+            fields.push(("replans", Json::num(self.replans as f64)));
+            fields.push((
+                "shape_changing_replans",
+                Json::num(self.shape_changing_replans as f64),
+            ));
         }
         Json::obj(fields)
     }

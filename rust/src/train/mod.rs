@@ -5,6 +5,7 @@
 mod checkpoint;
 mod eval;
 mod metrics;
+mod replan;
 mod trainer;
 
 pub use checkpoint::{load_params, save_params};

@@ -1,0 +1,465 @@
+//! Host-side selection → pool pipeline for mid-run replanning.
+//!
+//! A dynamic [`crate::sparsity::strategy::SelectionStrategy`] commits a
+//! new [`LayerSelections`] while optimizer state already exists in the
+//! *old* method layout. This module supplies the pure, bit-exact pieces
+//! the [`super::Trainer`] composes at a replan:
+//!
+//! 1. [`merge_pool_to_base`] — invert the current co-permutation (host
+//!    mirror of the `merge_M_m` artifact; pure index gathers, so frozen
+//!    weights round-trip bit-identically),
+//! 2. [`unit_scores`] — weight-magnitude scores in base layout,
+//! 3. [`build_pool`] — re-apply the trainable-first co-permutation at the
+//!    *new* selection (host mirror of the `prepare_M_m_BxT` artifact's
+//!    permute/split step, minus the selection itself),
+//! 4. [`remap_unit_moments`] — carry AdamW moments across the change,
+//!    keyed by original unit index: survivors copy their block, dropped
+//!    units are discarded, grown units start at zero.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::native::builtin::{is_mha, is_row_split};
+use crate::runtime::{ModelMeta, Tensor};
+use crate::sparsity;
+use crate::sparsity::strategy::{self, LayerSelections, UnitScores};
+
+fn getf<'a>(pool: &'a HashMap<String, Tensor>, name: &str) -> Result<&'a [f32]> {
+    pool.get(name)
+        .ok_or_else(|| anyhow!("replan: missing tensor {name:?}"))?
+        .as_f32()
+}
+
+/// The per-structure unit budget of a projection count map: trainable
+/// heads (first MHA projection present) and FFN channels (first FFN
+/// projection present); 0 = that structure is unbudgeted.
+pub(super) fn structure_counts(counts: &HashMap<String, usize>) -> (usize, usize) {
+    let pick = |projs: &[&str]| projs.iter().find_map(|p| counts.get(*p)).copied().unwrap_or(0);
+    (pick(&["wq", "wk", "wv", "wo"]), pick(&["wu", "wg", "wd"]))
+}
+
+/// Weight-magnitude unit scores over base-layout params (the same
+/// formulas the static "w" selection and the gradnorm probe use).
+pub(super) fn unit_scores(mm: &ModelMeta, base: &HashMap<String, Tensor>) -> Result<UnitScores> {
+    let d = mm.dims.d_model;
+    let hd = mm.head_dim();
+    let ff = mm.dims.d_ff;
+    let mut head_mag = Vec::with_capacity(mm.dims.n_layers);
+    let mut chan_mag = Vec::with_capacity(mm.dims.n_layers);
+    for i in 0..mm.dims.n_layers {
+        let wo = getf(base, &format!("L{i}.wo"))?;
+        head_mag.push(strategy::head_unit_scores(wo, d, hd, mm.dims.n_heads));
+        let wu = getf(base, &format!("L{i}.wu"))?;
+        let wg = getf(base, &format!("L{i}.wg"))?;
+        let wd = getf(base, &format!("L{i}.wd"))?;
+        chan_mag.push(strategy::chan_unit_scores(wu, wg, wd, d, ff));
+    }
+    Ok(UnitScores { head_mag, chan_mag, head_grad: None, chan_grad: None })
+}
+
+/// Split an `[n_layers, units]` score tensor (gradnorm probe output) into
+/// per-layer rows.
+pub(super) fn score_rows(t: &Tensor) -> Result<Vec<Vec<f32>>> {
+    if t.shape.len() != 2 {
+        bail!("replan: score tensor must be 2-d, got {:?}", t.shape);
+    }
+    let (l, n) = (t.shape[0], t.shape[1]);
+    let v = t.as_f32()?;
+    Ok((0..l).map(|i| v[i * n..(i + 1) * n].to_vec()).collect())
+}
+
+/// Reject selections the method layout cannot represent: wrong layer
+/// count, selections for an unbudgeted structure, or a trainable count of
+/// 0 or the full unit total (either would make a `_t`/`_f` split tensor
+/// zero-sized, which the tensor layer cannot represent).
+pub(super) fn validate_selections(
+    mm: &ModelMeta,
+    mha_budgeted: bool,
+    ffn_budgeted: bool,
+    sels: &LayerSelections,
+) -> Result<()> {
+    if sels.len() != mm.dims.n_layers {
+        bail!("replan: {} layer selections for {} layers", sels.len(), mm.dims.n_layers);
+    }
+    for (i, s) in sels.iter().enumerate() {
+        if mha_budgeted {
+            if s.heads.is_empty() || s.heads.len() >= mm.dims.n_heads {
+                bail!(
+                    "replan: layer {i} selects {} of {} heads; need 1..={} \
+                     (an empty trainable or frozen split is unrepresentable)",
+                    s.heads.len(),
+                    mm.dims.n_heads,
+                    mm.dims.n_heads - 1
+                );
+            }
+        } else if !s.heads.is_empty() {
+            bail!("replan: layer {i} selects heads but the method budgets no MHA units");
+        }
+        if ffn_budgeted {
+            if s.channels.is_empty() || s.channels.len() >= mm.dims.d_ff {
+                bail!(
+                    "replan: layer {i} selects {} of {} channels; need 1..={}",
+                    s.channels.len(),
+                    mm.dims.d_ff,
+                    mm.dims.d_ff - 1
+                );
+            }
+        } else if !s.channels.is_empty() {
+            bail!("replan: layer {i} selects channels but the method budgets no FFN units");
+        }
+    }
+    Ok(())
+}
+
+/// Per-layer projection→unit-count maps for a selection (the shape of
+/// budget `Executor::load_train_variant` consumes). `base_counts` names
+/// the budgeted projections; the counts come from the selection.
+pub(super) fn counts_per_layer(
+    base_counts: &HashMap<String, usize>,
+    sels: &LayerSelections,
+) -> Vec<HashMap<String, usize>> {
+    sels.iter()
+        .map(|s| {
+            base_counts
+                .keys()
+                .map(|p| {
+                    let c = if is_mha(p) { s.heads.len() } else { s.channels.len() };
+                    (p.clone(), c)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Invert the current co-permutation and reassemble base-layout weights
+/// from a trainer pool — the host mirror of the `merge_M_m` artifact
+/// (same pure gathers, bit-identical output), but driven off pool keys so
+/// it works for any layout variant the replanner has committed.
+pub(super) fn merge_pool_to_base(
+    mm: &ModelMeta,
+    pool: &HashMap<String, Tensor>,
+    perms: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, Tensor>> {
+    let hd = mm.head_dim();
+    let mut out = HashMap::new();
+    for s in &mm.base_params {
+        if let Some(t) = pool.get(&s.name) {
+            out.insert(s.name.clone(), t.clone());
+        }
+    }
+    let unsplit = |name: &str, proj: &str| -> Result<Tensor> {
+        let t_name = format!("{name}_t");
+        if !pool.contains_key(&t_name) {
+            return pool
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("replan: missing tensor {name:?}"));
+        }
+        let tt = &pool[&t_name];
+        let ft = pool
+            .get(&format!("{name}_f"))
+            .ok_or_else(|| anyhow!("replan: missing tensor {name}_f"))?;
+        if is_row_split(proj) {
+            let cols = tt.shape[1];
+            let mut buf = tt.as_f32()?.to_vec();
+            buf.extend_from_slice(ft.as_f32()?);
+            Ok(Tensor::f32(vec![tt.shape[0] + ft.shape[0], cols], buf))
+        } else {
+            let rows = tt.shape[0];
+            let (ct, cf) = (tt.shape[1], ft.shape[1]);
+            let (tv, fv) = (tt.as_f32()?, ft.as_f32()?);
+            let mut buf = Vec::with_capacity(rows * (ct + cf));
+            for r in 0..rows {
+                buf.extend_from_slice(&tv[r * ct..(r + 1) * ct]);
+                buf.extend_from_slice(&fv[r * cf..(r + 1) * cf]);
+            }
+            Ok(Tensor::f32(vec![rows, ct + cf], buf))
+        }
+    };
+    for i in 0..mm.dims.n_layers {
+        if let Some(hp) = perms.get(&format!("L{i}.head_perm")) {
+            let hperm: Vec<usize> = hp.as_i32()?.iter().map(|&x| x as usize).collect();
+            let inv = sparsity::invert_permutation(&sparsity::expand_head_perm(&hperm, hd));
+            for p in ["wq", "wk", "wv", "wo"] {
+                let name = format!("L{i}.{p}");
+                let w = unsplit(&name, p)?;
+                let (rows, cols) = (w.shape[0], w.shape[1]);
+                let data = if is_row_split(p) {
+                    sparsity::gather_rows(w.as_f32()?, cols, &inv)
+                } else {
+                    sparsity::gather_cols(w.as_f32()?, rows, cols, &inv)
+                };
+                out.insert(name, Tensor::f32(vec![rows, cols], data));
+            }
+        }
+        if let Some(cp) = perms.get(&format!("L{i}.chan_perm")) {
+            let cperm: Vec<usize> = cp.as_i32()?.iter().map(|&x| x as usize).collect();
+            let inv = sparsity::invert_permutation(&cperm);
+            for p in ["wu", "wg", "wd"] {
+                let name = format!("L{i}.{p}");
+                let w = unsplit(&name, p)?;
+                let (rows, cols) = (w.shape[0], w.shape[1]);
+                let data = if is_row_split(p) {
+                    sparsity::gather_rows(w.as_f32()?, cols, &inv)
+                } else {
+                    sparsity::gather_cols(w.as_f32()?, rows, cols, &inv)
+                };
+                out.insert(name, Tensor::f32(vec![rows, cols], data));
+            }
+        }
+    }
+    for s in &mm.base_params {
+        if !out.contains_key(&s.name) {
+            bail!("replan: could not reassemble {:?}", s.name);
+        }
+    }
+    Ok(out)
+}
+
+/// Apply the trainable-first co-permutation at an explicit selection and
+/// split the budgeted projections — the host mirror of the prepare
+/// artifact's permute/split step (identical gathers and slicing, so for
+/// the same selection the result is bit-identical to `prepare`'s).
+/// Returns (weight pool with `_t`/`_f` splits, perm tensors).
+pub(super) fn build_pool(
+    mm: &ModelMeta,
+    base_counts: &HashMap<String, usize>,
+    sels: &LayerSelections,
+    base: &HashMap<String, Tensor>,
+) -> Result<(HashMap<String, Tensor>, HashMap<String, Tensor>)> {
+    let d = mm.dims.d_model;
+    let hd = mm.head_dim();
+    let ff = mm.dims.d_ff;
+    let mut staged: HashMap<String, Tensor> = HashMap::new();
+    for s in &mm.base_params {
+        staged.insert(
+            s.name.clone(),
+            base.get(&s.name)
+                .ok_or_else(|| anyhow!("replan: missing base param {:?}", s.name))?
+                .clone(),
+        );
+    }
+    let mut perms = HashMap::new();
+    for (i, sel) in sels.iter().enumerate().take(mm.dims.n_layers) {
+        if !sel.heads.is_empty() {
+            let hperm = sparsity::trainable_first_permutation(&sel.heads, mm.dims.n_heads)?;
+            let eperm = sparsity::expand_head_perm(&hperm, hd);
+            for p in ["wq", "wk", "wv"] {
+                let w = getf(base, &format!("L{i}.{p}"))?;
+                staged.insert(
+                    format!("L{i}.{p}"),
+                    Tensor::f32(vec![d, d], sparsity::gather_cols(w, d, d, &eperm)),
+                );
+            }
+            let wo = getf(base, &format!("L{i}.wo"))?;
+            staged.insert(
+                format!("L{i}.wo"),
+                Tensor::f32(vec![d, d], sparsity::gather_rows(wo, d, &eperm)),
+            );
+            perms.insert(
+                format!("L{i}.head_perm"),
+                Tensor::i32(vec![mm.dims.n_heads], hperm.iter().map(|&x| x as i32).collect()),
+            );
+        }
+        if !sel.channels.is_empty() {
+            let cperm = sparsity::trainable_first_permutation(&sel.channels, ff)?;
+            let wu = getf(base, &format!("L{i}.wu"))?;
+            let wg = getf(base, &format!("L{i}.wg"))?;
+            let wd = getf(base, &format!("L{i}.wd"))?;
+            staged.insert(
+                format!("L{i}.wu"),
+                Tensor::f32(vec![d, ff], sparsity::gather_cols(wu, d, ff, &cperm)),
+            );
+            staged.insert(
+                format!("L{i}.wg"),
+                Tensor::f32(vec![d, ff], sparsity::gather_cols(wg, d, ff, &cperm)),
+            );
+            staged.insert(
+                format!("L{i}.wd"),
+                Tensor::f32(vec![ff, d], sparsity::gather_rows(wd, d, &cperm)),
+            );
+            perms.insert(
+                format!("L{i}.chan_perm"),
+                Tensor::i32(vec![ff], cperm.iter().map(|&x| x as i32).collect()),
+            );
+        }
+        for p in base_counts.keys() {
+            let c = if is_mha(p) { sel.heads.len() } else { sel.channels.len() };
+            if c == 0 {
+                continue;
+            }
+            let name = format!("L{i}.{p}");
+            let w = staged
+                .remove(&name)
+                .ok_or_else(|| anyhow!("replan: missing staged {name:?}"))?;
+            let rows = if is_mha(p) { c * hd } else { c };
+            let (din, dout) = (w.shape[0], w.shape[1]);
+            let wv = w.as_f32()?;
+            if is_row_split(p) {
+                staged.insert(
+                    format!("{name}_t"),
+                    Tensor::f32(vec![rows, dout], wv[..rows * dout].to_vec()),
+                );
+                staged.insert(
+                    format!("{name}_f"),
+                    Tensor::f32(vec![din - rows, dout], wv[rows * dout..].to_vec()),
+                );
+            } else {
+                let all: Vec<usize> = (0..dout).collect();
+                let tv = sparsity::gather_cols(wv, din, dout, &all[..rows]);
+                let fv = sparsity::gather_cols(wv, din, dout, &all[rows..]);
+                staged.insert(format!("{name}_t"), Tensor::f32(vec![din, rows], tv));
+                staged.insert(format!("{name}_f"), Tensor::f32(vec![din, dout - rows], fv));
+            }
+        }
+    }
+    Ok((staged, perms))
+}
+
+/// Carry one optimizer-moment tensor across a selection change. Units are
+/// keyed by *original* unit index: a unit in both selections copies its
+/// block from its old slot (wherever the permutation had placed it),
+/// dropped units' blocks are discarded, grown units start at zero.
+/// `block` is the per-unit extent along the split axis (head_dim for head
+/// units, 1 for channels); `dim` the other axis; `row_split` picks which
+/// axis the units live on.
+pub(super) fn remap_unit_moments(
+    old_sel: &[usize],
+    new_sel: &[usize],
+    block: usize,
+    dim: usize,
+    row_split: bool,
+    old: &[f32],
+) -> Vec<f32> {
+    let pos: HashMap<usize, usize> = old_sel.iter().enumerate().map(|(k, &u)| (u, k)).collect();
+    if row_split {
+        let stride = block * dim;
+        let mut out = vec![0.0f32; new_sel.len() * stride];
+        for (kn, u) in new_sel.iter().enumerate() {
+            if let Some(&ko) = pos.get(u) {
+                out[kn * stride..(kn + 1) * stride]
+                    .copy_from_slice(&old[ko * stride..(ko + 1) * stride]);
+            }
+        }
+        out
+    } else {
+        let (co, cn) = (old_sel.len() * block, new_sel.len() * block);
+        let mut out = vec![0.0f32; dim * cn];
+        for (kn, u) in new_sel.iter().enumerate() {
+            if let Some(&ko) = pos.get(u) {
+                for r in 0..dim {
+                    out[r * cn + kn * block..r * cn + (kn + 1) * block]
+                        .copy_from_slice(&old[r * co + ko * block..r * co + (ko + 1) * block]);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::builtin::builtin_meta;
+    use crate::sparsity::strategy::LayerSelection;
+    use crate::util::rng::Rng;
+
+    fn random_base(mm: &ModelMeta, seed: u64) -> HashMap<String, Tensor> {
+        let mut rng = Rng::seed(seed);
+        mm.base_params
+            .iter()
+            .map(|s| {
+                let data: Vec<f32> = (0..s.numel()).map(|_| rng.normal_f32()).collect();
+                (s.name.clone(), Tensor::f32(s.shape.clone(), data))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_then_merge_roundtrips_bitwise() {
+        let meta = builtin_meta();
+        let mm = &meta.models["tiny"];
+        let base = random_base(mm, 11);
+        let counts: HashMap<String, usize> =
+            [("wo".to_string(), 2), ("wd".to_string(), 5)].into_iter().collect();
+        let sels: LayerSelections = (0..mm.dims.n_layers)
+            .map(|i| LayerSelection {
+                heads: vec![(i + 1) % mm.dims.n_heads, (i + 3) % mm.dims.n_heads],
+                channels: vec![0, 7, 3, 11, 40],
+            })
+            .collect();
+        let (pool, perms) = build_pool(mm, &counts, &sels, &base).unwrap();
+        assert!(pool.contains_key("L0.wo_t"));
+        assert_eq!(pool["L0.wo_t"].shape, vec![2 * mm.head_dim(), mm.dims.d_model]);
+        assert_eq!(pool["L1.wd_t"].shape, vec![5, mm.dims.d_model]);
+        let merged = merge_pool_to_base(mm, &pool, &perms).unwrap();
+        for s in &mm.base_params {
+            let a = base[&s.name].as_f32().unwrap();
+            let b = merged[&s.name].as_f32().unwrap();
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                a.iter().map(|x| x.to_bits()).collect(),
+                b.iter().map(|x| x.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb, "{} did not round-trip", s.name);
+        }
+    }
+
+    #[test]
+    fn moment_remap_keys_by_original_unit() {
+        // old selection [4, 1], new [1, 6]: unit 1 survives (old slot 1 ->
+        // new slot 0), unit 4 is dropped, unit 6 grows in at zero.
+        let old = vec![
+            1.0, 2.0, // unit 4's row
+            3.0, 4.0, // unit 1's row
+        ];
+        let out = remap_unit_moments(&[4, 1], &[1, 6], 1, 2, true, &old);
+        assert_eq!(out, vec![3.0, 4.0, 0.0, 0.0]);
+        // column-split layout, block 2: unit blocks move whole
+        let old_c = vec![
+            10.0, 11.0, 20.0, 21.0, // row 0: unit 4 cols, unit 1 cols
+            12.0, 13.0, 22.0, 23.0, // row 1
+        ];
+        let out_c = remap_unit_moments(&[4, 1], &[1, 6], 2, 2, false, &old_c);
+        assert_eq!(out_c, vec![20.0, 21.0, 0.0, 0.0, 22.0, 23.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn validation_rejects_unrepresentable_selections() {
+        let meta = builtin_meta();
+        let mm = &meta.models["tiny"];
+        let full: LayerSelections = (0..mm.dims.n_layers)
+            .map(|_| LayerSelection {
+                heads: (0..mm.dims.n_heads).collect(),
+                channels: vec![1],
+            })
+            .collect();
+        assert!(validate_selections(mm, true, true, &full).is_err());
+        let empty: LayerSelections = (0..mm.dims.n_layers)
+            .map(|_| LayerSelection { heads: vec![], channels: vec![1] })
+            .collect();
+        assert!(validate_selections(mm, true, true, &empty).is_err());
+        let ok: LayerSelections = (0..mm.dims.n_layers)
+            .map(|_| LayerSelection { heads: vec![2], channels: vec![1, 5] })
+            .collect();
+        assert!(validate_selections(mm, true, true, &ok).is_ok());
+        assert!(validate_selections(mm, false, true, &ok).is_err());
+    }
+
+    #[test]
+    fn counts_follow_selection_sizes() {
+        let counts: HashMap<String, usize> =
+            [("wo".to_string(), 2), ("wd".to_string(), 5)].into_iter().collect();
+        let sels = vec![
+            LayerSelection { heads: vec![1], channels: vec![2, 3] },
+            LayerSelection { heads: vec![0, 2, 3], channels: vec![4] },
+        ];
+        let per = counts_per_layer(&counts, &sels);
+        assert_eq!(per[0]["wo"], 1);
+        assert_eq!(per[0]["wd"], 2);
+        assert_eq!(per[1]["wo"], 3);
+        assert_eq!(per[1]["wd"], 1);
+        let (mha, ffn) = structure_counts(&counts);
+        assert_eq!((mha, ffn), (2, 5));
+    }
+}

@@ -1,14 +1,37 @@
 //! The Trainer: prepare -> step* -> merge lifecycle for one fine-tuning run.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::Batch;
+use crate::runtime::native::builtin::{is_mha, is_row_split};
 use crate::runtime::{Executable, Executor, Tensor};
+use crate::sparsity::strategy::{LayerSelections, SelectionCtx, SelectionStrategy};
 use crate::util::rng::Rng;
 
 use super::metrics::TrainMetrics;
+use super::replan;
+
+/// State of a dynamic selection run (None for classic prepare-artifact
+/// runs): the strategy, its committed selection, and the bookkeeping
+/// needed to rebuild the plan pipeline when the selection changes.
+struct DynSelection {
+    strategy: Box<dyn SelectionStrategy>,
+    /// Replan cadence in steps (strategy-interpreted; 0 = never).
+    replan_every: usize,
+    /// The committed per-layer selection the current pool was built from.
+    selections: LayerSelections,
+    /// The base method's budgeted projections and their static counts.
+    base_counts: HashMap<String, usize>,
+    mha_count: usize,
+    ffn_count: usize,
+    seed: u64,
+    /// Bumped on every committed replan; plan-derived executable state is
+    /// keyed to it (evict + reload, never mutated in place).
+    plan_epoch: usize,
+}
 
 /// Read a scalar byte-count output (i32 from the native backend, but be
 /// liberal in what we accept from other executables).
@@ -30,7 +53,7 @@ pub struct Trainer {
     pub method: String,
     pub b: usize,
     pub t: usize,
-    train_exe: std::sync::Arc<dyn Executable>,
+    train_exe: Arc<dyn Executable>,
     /// tensor pool holding trainable + frozen + m.* + v.* (+aux names)
     pool: HashMap<String, Tensor>,
     /// perm outputs of prepare (s2ft only)
@@ -42,6 +65,8 @@ pub struct Trainer {
     /// LISA freezes layers randomly per step; others leave aux constant.
     is_lisa: bool,
     is_galore: bool,
+    /// Dynamic selection state ([`Trainer::with_strategy`] runs only).
+    dyn_sel: Option<DynSelection>,
 }
 
 impl Trainer {
@@ -123,7 +148,221 @@ impl Trainer {
             rng: Rng::seed(seed ^ 0x5113),
             is_lisa: method_meta.method == "lisa",
             is_galore: method_meta.method == "galore",
+            dyn_sel: None,
         })
+    }
+
+    /// Prepare a run whose selection is owned by a
+    /// [`SelectionStrategy`] instead of the prepare artifact. The
+    /// strategy's step-0 selection is committed host-side (for
+    /// [`crate::sparsity::strategy::StaticS2ft`] this reproduces the
+    /// prepare artifact's pool bit-for-bit); call
+    /// [`Trainer::maybe_replan`] before each step to let the strategy
+    /// re-select mid-run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_strategy(
+        rt: &dyn Executor,
+        model: &str,
+        method: &str,
+        base_params: &HashMap<String, Tensor>,
+        seed: u64,
+        mut strategy: Box<dyn SelectionStrategy>,
+        replan_every: usize,
+        b: usize,
+        t: usize,
+    ) -> Result<Self> {
+        let mm = rt.artifacts().model(model)?;
+        let method_meta = mm.method(method)?.clone();
+        if method_meta.method != "s2ft" {
+            bail!(
+                "selection strategies drive unit-level (head/channel) budgets; \
+                 method {method:?} is {:?}, not s2ft",
+                method_meta.method
+            );
+        }
+        let n_layers = mm.dims.n_layers;
+        let base_counts = crate::adapter::s2ft_counts(mm, &method_meta);
+        let (mha_count, ffn_count) = replan::structure_counts(&base_counts);
+
+        let scores = replan::unit_scores(mm, base_params)?;
+        let ctx = SelectionCtx {
+            step: 0,
+            n_layers,
+            n_heads: mm.dims.n_heads,
+            d_ff: mm.dims.d_ff,
+            mha_count,
+            ffn_count,
+            seed,
+            scores: &scores,
+            current: None,
+        };
+        let selections = strategy.select(&ctx)?.ok_or_else(|| {
+            anyhow!("strategy {:?} produced no initial selection", strategy.name())
+        })?;
+        replan::validate_selections(mm, mha_count > 0, ffn_count > 0, &selections)?;
+
+        let (mut pool, perms) = replan::build_pool(mm, &base_counts, &selections, base_params)?;
+        // zero optimizer moments, one pair per trainable (`_t`) split
+        let trainable: Vec<(String, Vec<usize>)> = pool
+            .iter()
+            .filter(|(k, _)| k.ends_with("_t"))
+            .map(|(k, v)| (k.clone(), v.shape.clone()))
+            .collect();
+        for (name, shape) in trainable {
+            pool.insert(format!("m.{name}"), Tensor::zeros(shape.clone()));
+            pool.insert(format!("v.{name}"), Tensor::zeros(shape));
+        }
+
+        let counts = replan::counts_per_layer(&base_counts, &selections);
+        let train_exe = if counts.iter().all(|c| *c == base_counts) {
+            rt.load(&format!("train_{model}_{method}_{b}x{t}"))?
+        } else {
+            rt.load_train_variant(model, &format!("{method}-v0"), method, &counts, b, t)?
+        };
+
+        Ok(Self {
+            model: model.to_string(),
+            method: method.to_string(),
+            b,
+            t,
+            train_exe,
+            pool,
+            perms,
+            step: 0,
+            metrics: TrainMetrics::new(),
+            n_layers,
+            rng: Rng::seed(seed ^ 0x5113),
+            is_lisa: false,
+            is_galore: false,
+            dyn_sel: Some(DynSelection {
+                strategy,
+                replan_every,
+                selections,
+                base_counts,
+                mha_count,
+                ffn_count,
+                seed,
+                plan_epoch: 0,
+            }),
+        })
+    }
+
+    /// Give the selection strategy a chance to re-select before the next
+    /// step. Returns `true` when a replan was committed: the pool was
+    /// merged back to base layout, re-permuted and re-split at the new
+    /// selection, optimizer moments were carried over keyed by original
+    /// unit index (survivors keep their blocks, grown units start at
+    /// zero), and the executable's plan-derived caches were invalidated
+    /// by a plan-epoch bump (evict + reload). `probe` feeds the gradient
+    /// probe for strategies that score by gradient magnitude; any train
+    /// batch at the run's `(b, t)` shape works.
+    pub fn maybe_replan(&mut self, rt: &dyn Executor, probe: &Batch) -> Result<bool> {
+        let (due, needs_grad) = match &self.dyn_sel {
+            Some(ds) => (
+                ds.strategy.replan_due(self.step, ds.replan_every),
+                ds.strategy.needs_grad_scores(self.step),
+            ),
+            None => return Ok(false),
+        };
+        if !due {
+            return Ok(false);
+        }
+        let mm = rt.artifacts().model(&self.model)?;
+        let base = replan::merge_pool_to_base(mm, &self.pool, &self.perms)?;
+        let mut scores = replan::unit_scores(mm, &base)?;
+        if needs_grad {
+            let gn = rt.load(&format!("gradnorm_{}_{}x{}", self.model, self.b, self.t))?;
+            let mut pin = base.clone();
+            pin.insert("tokens".into(), probe.tokens.clone());
+            pin.insert("targets".into(), probe.targets.clone());
+            pin.insert("loss_mask".into(), probe.loss_mask.clone());
+            let out = gn.run_named(&pin)?;
+            let grab = |name: &str| -> Result<Vec<Vec<f32>>> {
+                replan::score_rows(
+                    out.get(name)
+                        .ok_or_else(|| anyhow!("gradnorm probe emitted no {name:?}"))?,
+                )
+            };
+            scores.head_grad = Some(grab("head_grad_norms")?);
+            scores.chan_grad = Some(grab("chan_grad_norms")?);
+        }
+
+        let ds = self.dyn_sel.as_mut().expect("checked above");
+        let ctx = SelectionCtx {
+            step: self.step,
+            n_layers: self.n_layers,
+            n_heads: mm.dims.n_heads,
+            d_ff: mm.dims.d_ff,
+            mha_count: ds.mha_count,
+            ffn_count: ds.ffn_count,
+            seed: ds.seed,
+            scores: &scores,
+            current: Some(&ds.selections),
+        };
+        let new_sel = match ds.strategy.select(&ctx)? {
+            Some(s) => s,
+            None => return Ok(false),
+        };
+        replan::validate_selections(mm, ds.mha_count > 0, ds.ffn_count > 0, &new_sel)?;
+
+        let old_sel = std::mem::replace(&mut ds.selections, new_sel.clone());
+        let new_counts = replan::counts_per_layer(&ds.base_counts, &new_sel);
+        let shape_changed = replan::counts_per_layer(&ds.base_counts, &old_sel) != new_counts;
+
+        // rebuild the weight pool at the new selection ...
+        let (mut new_pool, new_perms) = replan::build_pool(mm, &ds.base_counts, &new_sel, &base)?;
+        // ... and carry the optimizer moments across, keyed by original
+        // unit index (never by permuted position).
+        let hd = mm.head_dim();
+        for p in ds.base_counts.keys() {
+            for i in 0..self.n_layers {
+                let name = format!("L{i}.{p}");
+                let (old_units, new_units, block) = if is_mha(p) {
+                    (&old_sel[i].heads, &new_sel[i].heads, hd)
+                } else {
+                    (&old_sel[i].channels, &new_sel[i].channels, 1)
+                };
+                let shape = new_pool
+                    .get(&format!("{name}_t"))
+                    .ok_or_else(|| anyhow!("replan: missing rebuilt {name}_t"))?
+                    .shape
+                    .clone();
+                let dim = if is_row_split(p) { shape[1] } else { shape[0] };
+                for kind in ["m", "v"] {
+                    let key = format!("{kind}.{name}_t");
+                    let old_t = self
+                        .pool
+                        .get(&key)
+                        .ok_or_else(|| anyhow!("replan: missing moment {key:?}"))?;
+                    let data = replan::remap_unit_moments(
+                        old_units,
+                        new_units,
+                        block,
+                        dim,
+                        is_row_split(p),
+                        old_t.as_f32()?,
+                    );
+                    new_pool.insert(key, Tensor::f32(shape.clone(), data));
+                }
+            }
+        }
+
+        // plan-epoch bump: plan-derived executable state (GradPlan /
+        // CachePlans) is never patched in place — evict and reload.
+        ds.plan_epoch += 1;
+        rt.evict(self.train_exe.name());
+        let standard = format!("train_{}_{}_{}x{}", self.model, self.method, self.b, self.t);
+        self.train_exe = if new_counts.iter().all(|c| *c == ds.base_counts) {
+            rt.evict(&standard);
+            rt.load(&standard)?
+        } else {
+            let tag = format!("{}-v{}", self.method, ds.plan_epoch);
+            rt.load_train_variant(&self.model, &tag, &self.method, &new_counts, self.b, self.t)?
+        };
+        self.pool = new_pool;
+        self.perms = new_perms;
+        self.metrics.record_replan(shape_changed);
+        Ok(true)
     }
 
     /// Run one optimizer step; returns the loss.
@@ -192,13 +431,46 @@ impl Trainer {
     }
 
     /// Merge back into base layout (for eval / serving / adapter diffing).
+    ///
+    /// Dynamic-selection runs merge host-side: the merge artifact's spec
+    /// is fixed to the base method's split shapes, which a replanned
+    /// layout variant no longer matches. The host merge performs the
+    /// same pure gathers, so for an unreplanned run the two paths agree
+    /// bit-for-bit.
     pub fn merged_params(&self, rt: &dyn Executor) -> Result<HashMap<String, Tensor>> {
+        if self.dyn_sel.is_some() {
+            let mm = rt.artifacts().model(&self.model)?;
+            return replan::merge_pool_to_base(mm, &self.pool, &self.perms);
+        }
         let merge = rt.load(&format!("merge_{}_{}", self.model, self.method))?;
         let mut pin = self.pool.clone();
         for (k, v) in &self.perms {
             pin.insert(k.clone(), v.clone());
         }
         merge.run_named(&pin)
+    }
+
+    /// Trainable parameter count of the *current* layout, measured from
+    /// the optimizer-moment mirror (which tracks the trainable set
+    /// exactly). Varies across replans for shape-changing strategies.
+    pub fn trainable_params(&self) -> usize {
+        self.pool
+            .iter()
+            .filter(|(k, _)| k.starts_with("m."))
+            .map(|(_, t)| t.numel())
+            .sum()
+    }
+
+    /// The committed per-layer selections of a dynamic run (`None` for
+    /// prepare-artifact runs).
+    pub fn selections(&self) -> Option<&LayerSelections> {
+        self.dyn_sel.as_ref().map(|d| &d.selections)
+    }
+
+    /// Plan epoch: number of committed replans so far (0 for static and
+    /// prepare-artifact runs).
+    pub fn plan_epoch(&self) -> usize {
+        self.dyn_sel.as_ref().map_or(0, |d| d.plan_epoch)
     }
 
     /// Bytes of live training state (trainable+frozen+opt), the Fig 5

@@ -207,7 +207,8 @@ fn prop_expand_head_perm_block_structure() {
 }
 
 /// budget_to_counts: positive fractions always yield >=1 unit, never more
-/// than the structure size; zero fractions yield zero.
+/// than the structure size — including fractions above 1.0, which clamp
+/// to the unit total instead of overflowing it; zero fractions yield zero.
 #[test]
 fn prop_budget_to_counts_bounds() {
     for case in 0..CASES {
@@ -216,7 +217,15 @@ fn prop_budget_to_counts_bounds() {
         let heads = 1 + rng.below(16);
         let mut fractions = HashMap::new();
         for p in ["wo", "wq", "wd", "wu"] {
-            fractions.insert(p.to_string(), if rng.bool(0.3) { 0.0 } else { rng.f64() });
+            // mix zero, in-range, and over-budget (>1.0) fractions
+            let f = if rng.bool(0.3) {
+                0.0
+            } else if rng.bool(0.25) {
+                1.0 + rng.f64() * 9.0
+            } else {
+                rng.f64()
+            };
+            fractions.insert(p.to_string(), f);
         }
         let counts = sparsity::budget_to_counts(&fractions, d_ff, heads);
         for (p, &c) in &counts {
@@ -224,6 +233,9 @@ fn prop_budget_to_counts_bounds() {
             let f = fractions[p];
             if f > 0.0 {
                 assert!((1..=total).contains(&c), "case {case}: {p} f={f} c={c}");
+                if f >= 1.0 {
+                    assert_eq!(c, total, "case {case}: {p} f={f} must clamp to total");
+                }
             } else {
                 assert_eq!(c, 0, "case {case}: {p}");
             }
@@ -1150,5 +1162,99 @@ fn prop_paged_decode_bit_identical_to_contiguous() {
             paged.retire(r);
         }
         assert_eq!(paged.pool_usage().used_bytes, 0, "case {case}: blocks leaked");
+    }
+}
+
+/// Dynamic-replan identity (selection-strategy pipeline): a StaticS2ft
+/// run with forced replan-every-K — the strategy re-commits the *same*
+/// selection, so each replan merges the pool to base layout, rebuilds it,
+/// carries every optimizer moment, and evicts/reloads the executable —
+/// must be bit-identical to the same run with replanning disabled:
+/// per-step losses, trainable weights, optimizer moments, measured
+/// `act_bytes`, and the merged params all agree exactly.
+#[test]
+fn prop_static_replan_recommit_bit_identical() {
+    use repro::data::{lm_batch, pretrain_corpus};
+    use repro::sparsity::strategy;
+    use repro::train::Trainer;
+
+    let nb = NativeBackend::builtin();
+    let mm = nb.artifacts().model("tiny").unwrap().clone();
+    let meth = mm.method("s2ft").unwrap().clone();
+    let (b, t) = mm.default_batch();
+    let init = nb.load("init_tiny").unwrap();
+    let outs = init.run(&[Tensor::scalar_i32(3)]).unwrap();
+    let base: HashMap<String, Tensor> =
+        init.spec().outputs.iter().map(|s| s.name.clone()).zip(outs).collect();
+    let tk = Tokenizer;
+    let corpus = pretrain_corpus(5, 60_000);
+
+    for (case, &(seed, every, steps)) in
+        [(5u64, 2usize, 5usize), (6, 3, 7), (7, 1, 4)].iter().enumerate()
+    {
+        // one pre-generated batch stream shared by both runs
+        let mut rng = Rng::seed(31 + case as u64);
+        let batches: Vec<_> = (0..steps).map(|_| lm_batch(&tk, &corpus, &mut rng, b, t)).collect();
+        let run = |replan_every: usize| -> Trainer {
+            let strat =
+                strategy::for_name("static", &meth.selection, meth.select_small).unwrap();
+            let mut tr =
+                Trainer::with_strategy(&nb, "tiny", "s2ft", &base, seed, strat, replan_every, b, t)
+                    .unwrap();
+            for batch in &batches {
+                tr.maybe_replan(&nb, batch).unwrap();
+                tr.train_step(batch).unwrap();
+            }
+            tr
+        };
+        let plain = run(0);
+        let replanned = run(every);
+        assert_eq!(plain.metrics.replans, 0, "case {case}");
+        assert!(
+            replanned.metrics.replans > 0,
+            "case {case}: every={every} never replanned in {steps} steps"
+        );
+        assert_eq!(
+            replanned.metrics.shape_changing_replans, 0,
+            "case {case}: identical re-commit must not change layout shapes"
+        );
+        // losses bit-identical step by step
+        for (s, (a, r)) in plain.metrics.losses.iter().zip(&replanned.metrics.losses).enumerate() {
+            assert_eq!(a.to_bits(), r.to_bits(), "case {case} step {s}: loss drifted");
+        }
+        // measured activation bytes identical (same plan after rebuild)
+        assert_eq!(
+            plain.activation_bytes(),
+            replanned.activation_bytes(),
+            "case {case}: act_bytes drifted"
+        );
+        // trainable weights + carried optimizer moments bit-identical
+        for i in 0..mm.dims.n_layers {
+            for p in ["wo", "wd"] {
+                for key in [
+                    format!("L{i}.{p}_t"),
+                    format!("m.L{i}.{p}_t"),
+                    format!("v.L{i}.{p}_t"),
+                ] {
+                    let a = plain.tensor(&key).unwrap().as_f32().unwrap();
+                    let r = replanned.tensor(&key).unwrap().as_f32().unwrap();
+                    assert!(
+                        a.iter().zip(r).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "case {case}: {key} drifted across re-commits"
+                    );
+                }
+            }
+        }
+        // merged params bit-identical (host merge path both sides)
+        let ma = plain.merged_params(&nb).unwrap();
+        let mr = replanned.merged_params(&nb).unwrap();
+        for (k, v) in &ma {
+            let a = v.as_f32().unwrap();
+            let r = mr[k].as_f32().unwrap();
+            assert!(
+                a.iter().zip(r).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "case {case}: merged {k} drifted"
+            );
+        }
     }
 }

@@ -142,6 +142,75 @@ fn generate_is_deterministic_and_bounded(rt: &dyn Executor) {
     assert!(a.iter().all(|s| s.len() <= 5));
 }
 
+/// Tentpole regression: routing the static S²FT selection through the
+/// `SelectionStrategy` trait ([`Trainer::with_strategy`] + host-side pool
+/// build) is bit-identical to the pre-refactor prepare-artifact path —
+/// same selection stream, same permutations, same per-step losses, same
+/// measured act_bytes, same merged weights.
+fn static_strategy_matches_prepare_path_bitwise(rt: &dyn Executor) {
+    use repro::sparsity::strategy;
+
+    let base = base_params(rt, 7);
+    let mm = rt.artifacts().model("tiny").unwrap();
+    let meth = mm.method("s2ft").unwrap().clone();
+    let (b, t) = mm.default_batch();
+    let n_layers = mm.dims.n_layers;
+    let tk = Tokenizer;
+    let corpus = pretrain_corpus(1, 50_000);
+    let mut rng = Rng::seed(9);
+    let calib = lm_batch(&tk, &corpus, &mut rng, b, t);
+    let batches: Vec<_> = (0..4).map(|_| lm_batch(&tk, &corpus, &mut rng, b, t)).collect();
+
+    let mut classic = Trainer::new(rt, "tiny", "s2ft", &base, 5, &calib).unwrap();
+    let strat = strategy::for_name("static", &meth.selection, meth.select_small).unwrap();
+    let mut routed =
+        Trainer::with_strategy(rt, "tiny", "s2ft", &base, 5, strat, 0, b, t).unwrap();
+
+    // identical permutations => identical selection stream
+    for i in 0..n_layers {
+        for name in [format!("L{i}.head_perm"), format!("L{i}.chan_perm")] {
+            assert_eq!(
+                classic.perms[&name].as_i32().unwrap(),
+                routed.perms[&name].as_i32().unwrap(),
+                "{name} differs between prepare path and StaticS2ft"
+            );
+        }
+    }
+    for batch in &batches {
+        let l1 = classic.train_step(batch).unwrap();
+        let l2 = routed.train_step(batch).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "loss trajectory drifted");
+    }
+    assert_eq!(classic.activation_bytes(), routed.activation_bytes());
+    assert_eq!(classic.trainable_params(), routed.trainable_params());
+    // trainable weights + moments (the updated state) bit-identical
+    for i in 0..n_layers {
+        for p in ["wo", "wd"] {
+            for key in
+                [format!("L{i}.{p}_t"), format!("m.L{i}.{p}_t"), format!("v.L{i}.{p}_t")]
+            {
+                let a = classic.tensor(&key).unwrap().as_f32().unwrap();
+                let b = routed.tensor(&key).unwrap().as_f32().unwrap();
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{key} drifted between prepare path and StaticS2ft"
+                );
+            }
+        }
+    }
+    // merged params bit-identical (merge artifact vs host merge)
+    let m1 = classic.merged_params(rt).unwrap();
+    let m2 = routed.merged_params(rt).unwrap();
+    for (k, v) in &m1 {
+        let a = v.as_f32().unwrap();
+        let b = m2[k].as_f32().unwrap();
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "merged {k} drifted between merge artifact and host merge"
+        );
+    }
+}
+
 fn opt_state_sizes_reflect_method_memory_story(rt: &dyn Executor) {
     let (full, _) = train_n(rt, "fullft", 1);
     let (s2ft, _) = train_n(rt, "s2ft", 1);
@@ -192,6 +261,61 @@ mod native {
         super::opt_state_sizes_reflect_method_memory_story(&backend());
     }
 
+    #[test]
+    fn static_strategy_matches_prepare_path_bitwise() {
+        super::static_strategy_matches_prepare_path_bitwise(&backend());
+    }
+
+    /// A shape-changing strategy (grad-norm warmup commits a narrower
+    /// layout than its dense-ish start) swaps in a method-layout variant
+    /// executable and keeps training: the end-to-end dynamic path.
+    #[test]
+    fn warmup_strategy_commits_and_keeps_training() {
+        use repro::data::{lm_batch, pretrain_corpus};
+        use repro::sparsity::strategy;
+
+        let rt = backend();
+        let base = super::base_params(&rt, 7);
+        let mm = rt.artifacts().model("tiny").unwrap();
+        let meth = mm.method("s2ft").unwrap().clone();
+        let (b, t) = mm.default_batch();
+        let tk = Tokenizer;
+        let corpus = pretrain_corpus(1, 50_000);
+        let mut rng = Rng::seed(9);
+
+        let strat = strategy::for_name("warmup:2", &meth.selection, meth.select_small).unwrap();
+        let mut tr = Trainer::with_strategy(&rt, "tiny", "s2ft", &base, 5, strat, 0, b, t).unwrap();
+        let warm_trainable = tr.trainable_params();
+        for _ in 0..5 {
+            let batch = lm_batch(&tk, &corpus, &mut rng, b, t);
+            tr.maybe_replan(&rt, &batch).unwrap();
+            tr.train_step(&batch).unwrap();
+        }
+        assert_eq!(tr.metrics.replans, 1, "warmup must commit exactly once");
+        assert_eq!(tr.metrics.shape_changing_replans, 1);
+        assert_eq!(tr.plan_epoch(), 1);
+        // warmup starts dense-ish (total-1 units) and commits the base
+        // method's budget => trainable count must shrink
+        assert!(
+            tr.trainable_params() < warm_trainable,
+            "commit must shrink the trainable set ({warm_trainable} -> {})",
+            tr.trainable_params()
+        );
+        assert!(tr.metrics.last_loss().is_finite());
+        // post-commit selections carry the budgeted counts
+        let sels = tr.selections().unwrap();
+        let counts = s2ft_counts(mm, &meth);
+        for s in sels {
+            assert_eq!(s.heads.len(), counts.get("wo").copied().unwrap_or(0));
+            assert_eq!(s.channels.len(), counts.get("wd").copied().unwrap_or(0));
+        }
+        // merged params stay base-shaped after the variant swap
+        let merged = tr.merged_params(&rt).unwrap();
+        for s in &mm.base_params {
+            assert_eq!(merged[&s.name].shape, s.shape, "{} shape", s.name);
+        }
+    }
+
     /// Acceptance invariant (paper §3.3): one S²FT train step moves ONLY
     /// the selected trainable-first rows of wo/wd; every frozen row of the
     /// merged weights is *bit-identical* to the base weights, and eval
@@ -209,8 +333,13 @@ mod native {
         let mut changed_rows = 0usize;
         for i in 0..mm.dims.n_layers {
             // wo: selected heads -> element rows through the head perm
-            let hp = trainer.perms[&format!("L{i}.head_perm")].as_i32().unwrap();
-            let sel = sparsity::selected_units(hp, counts["wo"]);
+            let hp: Vec<usize> = trainer.perms[&format!("L{i}.head_perm")]
+                .as_i32()
+                .unwrap()
+                .iter()
+                .map(|&x| x as usize)
+                .collect();
+            let sel = sparsity::selected_units(&hp, counts["wo"]);
             let sel_rows: std::collections::HashSet<usize> =
                 sparsity::expand_head_perm(&sel, hd).into_iter().collect();
             let wb = base[&format!("L{i}.wo")].as_f32().unwrap();
@@ -229,9 +358,14 @@ mod native {
                 }
             }
             // wd: selected channels are rows directly
-            let cp = trainer.perms[&format!("L{i}.chan_perm")].as_i32().unwrap();
+            let cp: Vec<usize> = trainer.perms[&format!("L{i}.chan_perm")]
+                .as_i32()
+                .unwrap()
+                .iter()
+                .map(|&x| x as usize)
+                .collect();
             let sel_wd: std::collections::HashSet<usize> =
-                sparsity::selected_units(cp, counts["wd"]).into_iter().collect();
+                sparsity::selected_units(&cp, counts["wd"]).into_iter().collect();
             let wb = base[&format!("L{i}.wd")].as_f32().unwrap();
             let wm = merged[&format!("L{i}.wd")].as_f32().unwrap();
             for r in 0..mm.dims.d_ff {
